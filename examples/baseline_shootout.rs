@@ -1,0 +1,81 @@
+//! Baseline shootout: every §4 agent on one workload, one table.
+//!
+//! Runs EA (artifact-free), Greedy-DP and random search side by side on a
+//! chosen workload and prints final speedups plus the compiler reference
+//! (1.0 by definition) — a fast, no-artifact mini-version of Figure 4.
+//!
+//! Run: `cargo run --release --example baseline_shootout -- [--workload r50] [--steps 800]`
+
+use std::sync::Arc;
+
+use egrl::agents::{GreedyDp, MappingAgent, RandomSearch};
+use egrl::bench_harness::Table;
+use egrl::cli::Cli;
+use egrl::config::EgrlConfig;
+use egrl::coordinator::{Mode, Trainer};
+use egrl::env::MappingEnv;
+use egrl::metrics::RunLog;
+use egrl::utils::Rng;
+use egrl::workloads::Workload;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cli = Cli::parse(std::iter::once("run".to_string()).chain(args))?;
+    let workload = Workload::parse(cli.get_or("workload", "resnet50"))?;
+    let steps = cli.get_u64("steps", 800)?;
+    let seed = cli.get_u64("seed", 0)?;
+
+    let mut table = Table::new(&["agent", "final speedup", "iterations", "valid best found"]);
+    table.row(&["compiler".into(), "1.00 (reference)".into(), "-".into(), "yes".into()]);
+
+    // EA (population of Boltzmann chromosomes — no artifacts needed).
+    {
+        let env = Arc::new(MappingEnv::nnpi(workload.build(), seed));
+        let cfg = EgrlConfig { seed, total_steps: steps, ..Default::default() };
+        let mut trainer = Trainer::new(env, cfg, Mode::EaOnly, None)?;
+        let mut log = RunLog::new(workload.name(), "ea", seed);
+        let res = trainer.run(&mut log)?;
+        table.row(&[
+            "ea".into(),
+            format!("{:.3}", res.best_speedup),
+            format!("{}", res.iterations),
+            (res.best_speedup > 0.0).to_string(),
+        ]);
+    }
+
+    // Greedy-DP.
+    {
+        let env = MappingEnv::nnpi(workload.build(), seed);
+        let mut agent = GreedyDp::default();
+        let mut rng = Rng::new(seed);
+        let mut log = RunLog::new(workload.name(), agent.name(), seed);
+        let best = agent.run(&env, steps, &mut rng, &mut log);
+        let rect = env.compiler.rectify(&env.graph, &env.liveness, &best);
+        table.row(&[
+            "greedy-dp".into(),
+            format!("{:.3}", env.true_speedup(&rect.map)),
+            format!("{}", env.iterations()),
+            "yes".into(),
+        ]);
+    }
+
+    // Random search.
+    {
+        let env = MappingEnv::nnpi(workload.build(), seed);
+        let mut agent = RandomSearch::default();
+        let mut rng = Rng::new(seed);
+        let mut log = RunLog::new(workload.name(), agent.name(), seed);
+        agent.run(&env, steps, &mut rng, &mut log);
+        table.row(&[
+            "random".into(),
+            format!("{:.3}", log.final_speedup()),
+            format!("{}", env.iterations()),
+            (log.final_speedup() > 0.0).to_string(),
+        ]);
+    }
+
+    println!("\nbaseline shootout on {} ({} iterations each):\n", workload.name(), steps);
+    table.print();
+    println!("\n(Fig. 4 shape check: EA > 1.0 > greedy-dp on small budgets; random ~ 0.)");
+    Ok(())
+}

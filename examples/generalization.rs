@@ -1,0 +1,67 @@
+//! Zero-shot generalization (paper §5.1 / Figure 5).
+//!
+//! Trains the EGRL GNN policy on one workload, then evaluates the PG
+//! actor's mapping on the other two workloads *without fine-tuning*. The
+//! same flat parameter vector drives every graph-size artifact variant —
+//! the transfer mechanism behind Figure 5.
+//!
+//! Requires artifacts. Run:
+//! `cargo run --release --example generalization -- [--train r50] [--steps 200]`
+
+use std::sync::Arc;
+
+use egrl::bench_harness::Table;
+use egrl::cli::Cli;
+use egrl::config::EgrlConfig;
+use egrl::coordinator::{Mode, Trainer};
+use egrl::env::MappingEnv;
+use egrl::gnn::PolicyRunner;
+use egrl::metrics::RunLog;
+use egrl::runtime::Runtime;
+use egrl::utils::Rng;
+use egrl::workloads::Workload;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cli = Cli::parse(std::iter::once("run".to_string()).chain(args))?;
+    let train_on = Workload::parse(cli.get_or("train", "resnet50"))?;
+    let steps = cli.get_u64("steps", 200)?;
+    let seed = cli.get_u64("seed", 0)?;
+
+    let rt = Runtime::open(Runtime::default_dir())
+        .map_err(|e| anyhow::anyhow!("artifacts required (`make artifacts`): {e}"))?;
+
+    println!("[gen] training EGRL on {} for {steps} iterations ...", train_on.name());
+    let env = Arc::new(MappingEnv::nnpi(train_on.build(), seed));
+    let cfg = EgrlConfig { seed, total_steps: steps, update_every: 21, ..Default::default() };
+    let mut trainer = Trainer::new(env, cfg, Mode::Egrl, Some(&rt))?;
+    let mut log = RunLog::new(train_on.name(), "egrl", seed);
+    let res = trainer.run(&mut log)?;
+    println!("[gen] source-task speedup: {:.3}", res.best_speedup);
+
+    let actor = trainer
+        .pg_actor_params()
+        .expect("EGRL mode has a PG actor")
+        .to_vec();
+
+    let mut table = Table::new(&["eval workload", "zero-shot speedup", "note"]);
+    let mut rng = Rng::new(seed ^ 0xF16_5);
+    for target in Workload::all() {
+        let tenv = MappingEnv::nnpi(target.build(), seed + 100);
+        let runner = PolicyRunner::for_env(&rt, &tenv)?;
+        let probs = runner.probs(&actor)?;
+        let map = runner.greedy_map(&probs);
+        let speedup = tenv.eval_speedup(&map, &mut rng);
+        let note = if target == train_on { "(training workload)" } else { "zero-shot" };
+        table.row(&[
+            target.name().into(),
+            format!("{speedup:.3}"),
+            note.into(),
+        ]);
+    }
+    println!();
+    table.print();
+    println!("\n(paper Fig. 5: policies transfer 'decently' without fine-tuning —");
+    println!(" expect the zero-shot rows to be positive and within ~2× of source.)");
+    Ok(())
+}

@@ -1,0 +1,53 @@
+//! Quickstart: the smallest end-to-end use of the public API.
+//!
+//! Builds the ResNet-50 workload graph, stands up the NNP-I-class
+//! environment (which runs the native-compiler baseline), trains a short
+//! EA-only agent (artifact-free — no AOT build needed), and reports the
+//! speedup over the compiler together with the §5.2.1 placement
+//! statistics.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use std::sync::Arc;
+
+use egrl::config::EgrlConfig;
+use egrl::coordinator::{Mode, Trainer};
+use egrl::env::MappingEnv;
+use egrl::metrics::RunLog;
+use egrl::viz::analysis;
+use egrl::workloads::Workload;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Build a workload graph (Table-1 features, 57 operational nodes).
+    let graph = Workload::ResNet50.build();
+    println!(
+        "workload: {} — {} nodes, {:.1} MB weights, action space 3^{}",
+        graph.name,
+        graph.len(),
+        graph.total_weight_bytes() as f64 / (1 << 20) as f64,
+        2 * graph.len()
+    );
+
+    // 2. Stand up the environment. Constructing it runs the native
+    //    compiler heuristic and measures the baseline latency.
+    let env = Arc::new(MappingEnv::nnpi(graph, /*seed=*/ 1));
+    println!("compiler baseline latency: {:.1} µs", env.compiler_latency_s * 1e6);
+
+    // 3. Train a small EA agent for 600 simulated inference runs.
+    let cfg = EgrlConfig { seed: 1, total_steps: 600, ..Default::default() };
+    let mut trainer = Trainer::new(env.clone(), cfg, Mode::EaOnly, None)?;
+    let mut log = RunLog::new("resnet50", "ea-quickstart", 1);
+    let result = trainer.run(&mut log)?;
+
+    // 4. Report.
+    println!(
+        "after {} iterations: best speedup vs compiler = {:.3}×",
+        result.iterations, result.best_speedup
+    );
+    println!("\nplacement statistics (paper §5.2.1):");
+    println!(
+        "{}",
+        analysis::render_comparison(&env.graph, &env.compiler_map, &result.best_map)
+    );
+    Ok(())
+}

@@ -1,0 +1,107 @@
+//! Mapping-space visualization (paper §5.2 / Figure 6 + Figure 7).
+//!
+//! Collects mapping snapshots from an EA training run in two phases —
+//! *compiler-competitive* (speedup ≈ 1) and *best* (top speedups) — then:
+//!   * computes the Jaccard distance matrix over one-hot encodings,
+//!   * embeds it in 2-D with classical MDS (the offline UMAP substitute),
+//!   * scores cluster separability with the silhouette coefficient,
+//!   * writes the embedding to CSV for plotting,
+//!   * prints the Figure-7 transition matrix and mapping strips.
+//!
+//! Run: `cargo run --release --example visualize_mappings -- [--workload r50]`
+
+use std::sync::Arc;
+
+use egrl::cli::Cli;
+use egrl::config::EgrlConfig;
+use egrl::coordinator::{Mode, Trainer};
+use egrl::env::MappingEnv;
+use egrl::mapping::MemoryMap;
+use egrl::metrics::RunLog;
+use egrl::utils::Rng;
+use egrl::viz::{analysis, embed, transition};
+use egrl::workloads::Workload;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cli = Cli::parse(std::iter::once("run".to_string()).chain(args))?;
+    let workload = Workload::parse(cli.get_or("workload", "resnet50"))?;
+    let seed = cli.get_u64("seed", 0)?;
+    let out_csv = cli.get_or("out", "/tmp/egrl_fig6.csv").to_string();
+
+    // Collect mappings along an EA run.
+    let env = Arc::new(MappingEnv::nnpi(workload.build(), seed));
+    let cfg = EgrlConfig { seed, total_steps: 1500, ..Default::default() };
+    let mut trainer = Trainer::new(env.clone(), cfg, Mode::EaOnly, None)?;
+    let mut log = RunLog::new(workload.name(), "ea", seed);
+
+    let mut competitive: Vec<MemoryMap> = Vec::new(); // speedup ~ 1
+    let mut best: Vec<MemoryMap> = Vec::new(); // top phase
+    let mut rng = Rng::new(seed ^ 0xC0FFEE);
+    while env.iterations() < 1500 {
+        trainer.generation()?;
+        // Snapshot the current best map into the phase buckets.
+        let map = trainer.best_map().clone();
+        let s = env.eval_speedup(&map, &mut rng);
+        if (0.9..1.1).contains(&s) && competitive.len() < 24 {
+            competitive.push(map);
+        } else if s > 1.15 && best.len() < 24 {
+            best.push(map);
+        }
+    }
+    let _ = trainer.run(&mut log);
+    println!(
+        "collected {} compiler-competitive and {} best mappings",
+        competitive.len(),
+        best.len()
+    );
+    anyhow::ensure!(
+        competitive.len() >= 4 && best.len() >= 4,
+        "not enough snapshots collected; try another seed"
+    );
+
+    // Figure 6: Jaccard distances → MDS embedding + silhouette.
+    let mut maps = competitive.clone();
+    maps.extend(best.iter().cloned());
+    maps.push(env.compiler_map.clone()); // the red-arrow point
+    let labels: Vec<usize> = (0..maps.len())
+        .map(|i| if i < competitive.len() { 0 } else { 1 })
+        .collect();
+    let d = embed::distance_matrix(&maps);
+    let coords = embed::mds_2d(&d, maps.len());
+    // Silhouette over the two phases (compiler point joins phase 0 — the
+    // paper observes it lands inside the competitive cluster).
+    let sil = embed::silhouette(&d, maps.len(), &labels);
+    println!("silhouette(compiler-competitive vs best) = {sil:.3}  (> 0 ⇒ separable)");
+
+    let mut csv = String::from("x,y,phase\n");
+    for (i, (x, y)) in coords.iter().enumerate() {
+        let phase = if i == maps.len() - 1 {
+            "compiler"
+        } else if labels[i] == 0 {
+            "competitive"
+        } else {
+            "best"
+        };
+        csv.push_str(&format!("{x},{y},{phase}\n"));
+    }
+    std::fs::write(&out_csv, csv)?;
+    println!("MDS embedding written to {out_csv}");
+
+    // Figure 7: transition matrix + strips + §5.2.1 stats.
+    let best_map = trainer.best_map();
+    println!("\ntransition matrix (compiler → EA best):");
+    println!(
+        "{}",
+        transition::render_matrix(&transition::transition_matrix(
+            &env.graph,
+            &env.compiler_map,
+            best_map
+        ))
+    );
+    println!("mapping strips:");
+    print!("{}", transition::render_strips(&env.graph, &env.compiler_map, "compiler"));
+    print!("{}", transition::render_strips(&env.graph, best_map, "agent"));
+    println!("\n{}", analysis::render_comparison(&env.graph, &env.compiler_map, best_map));
+    Ok(())
+}

@@ -1,0 +1,221 @@
+"""AOT pipeline: lower the L2/L1 stack to HLO-text artifacts + manifest.
+
+Emits, for each graph-size variant N in SIZES:
+
+  artifacts/policy_fwd_<N>.hlo.txt   policy_forward (rollout hot path)
+  artifacts/sac_update_<N>.hlo.txt   full SAC gradient step (B = 24)
+
+plus
+
+  artifacts/actor_init.bin           Glorot-initialized flat actor params
+  artifacts/critic_init.bin          flat twin-critic params
+  artifacts/manifest.json            shapes, sizes, hyperparams, and a
+                                     smoke-test vector the Rust runtime
+                                     verifies at load time.
+
+Interchange format is **HLO text**, not serialized HloModuleProto: jax
+>= 0.5 emits 64-bit instruction ids that the xla crate's xla_extension
+0.5.1 rejects; the text parser reassigns ids (see /opt/xla-example).
+
+Graph-size variants exist because HLO is fixed-shape: the Rust runtime
+picks the smallest variant that fits the workload (57 -> 64, 108 -> 128,
+376 -> 384). Parameter shapes are N-independent, so one parameter vector
+works with every variant — this is what makes the Figure-5 zero-shot
+transfer runs possible.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model, sac
+
+# Graph-size variants: smallest >= each paper workload (57, 108, 376).
+SIZES = (64, 128, 384)
+# SAC minibatch (Table 2).
+BATCH = 24
+# Param-init seed (fixed: artifacts must be reproducible).
+INIT_SEED = 20210317
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring).
+
+    `print_large_constants=True` is load-bearing: the default printer
+    elides array literals as `constant({...})`, which xla_extension
+    0.5.1's text parser silently reads as zeros — turning e.g. the
+    feature-normalization divisor into 0 and the whole forward pass into
+    NaNs. (Scalar constants are unaffected, which is why small probes
+    round-trip fine.)"""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(True)
+
+
+def lower_policy_fwd(n: int) -> str:
+    f32 = jnp.float32
+    spec = lambda shape: jax.ShapeDtypeStruct(shape, f32)  # noqa: E731
+
+    def fn(actor_flat, feats, adj, mask):
+        return (model.policy_forward(actor_flat, feats, adj, mask),)
+
+    lowered = jax.jit(fn).lower(
+        spec((model.ACTOR_SIZE,)),
+        spec((n, model.FEATURE_DIM)),
+        spec((n, n)),
+        spec((n,)),
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_boltzmann(n: int) -> str:
+    """Lower the L1 Boltzmann-decode kernel standalone. Used by the Rust
+    integration tests to cross-check the native Rust chromosome decode
+    against the Pallas kernel through the whole AOT+PJRT path."""
+    from .kernels.boltzmann import boltzmann_probs
+    f32 = jnp.float32
+
+    def fn(priors, temps):
+        return (boltzmann_probs(priors, temps),)
+
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((n, model.SUBACTIONS, model.CHOICES), f32),
+        jax.ShapeDtypeStruct((n, model.SUBACTIONS), f32),
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_sac_update(n: int) -> str:
+    f32 = jnp.float32
+    spec = lambda shape: jax.ShapeDtypeStruct(shape, f32)  # noqa: E731
+    p, q = model.ACTOR_SIZE, model.CRITIC_SIZE
+
+    def fn(actor, am, av, critic, cm, cv, t, feats, adj, mask, act, rew):
+        return sac.sac_update(actor, am, av, critic, cm, cv, t,
+                              feats, adj, mask, act, rew)
+
+    lowered = jax.jit(fn).lower(
+        spec((p,)), spec((p,)), spec((p,)),
+        spec((q,)), spec((q,)), spec((q,)),
+        spec((1,)),
+        spec((BATCH, n, model.FEATURE_DIM)),
+        spec((BATCH, n, n)),
+        spec((BATCH, n)),
+        spec((BATCH, n, model.SUBACTIONS, model.CHOICES)),
+        spec((BATCH,)),
+    )
+    return to_hlo_text(lowered)
+
+
+def smoke_vector(actor_flat, n: int):
+    """Deterministic policy output on a canonical input — the Rust runtime
+    re-computes this through the compiled artifact at load time and
+    asserts bitwise-tolerant agreement (integration contract)."""
+    feats = jnp.ones((n, model.FEATURE_DIM), jnp.float32) * 0.5
+    # Ring adjacency with self-loops, first half of nodes "real".
+    adj = jnp.eye(n, dtype=jnp.float32) * 0.5
+    idx = jnp.arange(n)
+    adj = adj.at[idx, (idx + 1) % n].set(0.25)
+    adj = adj.at[(idx + 1) % n, idx].set(0.25)
+    mask = (jnp.arange(n) < n // 2).astype(jnp.float32)
+    probs = model.policy_forward(actor_flat, feats, adj, mask)
+    flat = np.asarray(probs).reshape(-1)
+    return {
+        "n": n,
+        "first8": [float(x) for x in flat[:8]],
+        "sum": float(flat.sum()),
+    }
+
+
+def emit_size(n: int, out_dir: str) -> None:
+    """Lower both artifacts for one graph-size variant."""
+    pf = f"policy_fwd_{n}.hlo.txt"
+    su = f"sac_update_{n}.hlo.txt"
+    print(f"[aot] lowering policy_forward N={n} ...", flush=True)
+    with open(os.path.join(out_dir, pf), "w") as f:
+        f.write(lower_policy_fwd(n))
+    print(f"[aot] lowering sac_update N={n} B={BATCH} ...", flush=True)
+    with open(os.path.join(out_dir, su), "w") as f:
+        f.write(lower_sac_update(n))
+    bz = f"boltzmann_{n}.hlo.txt"
+    with open(os.path.join(out_dir, bz), "w") as f:
+        f.write(lower_boltzmann(n))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--sizes", default=",".join(map(str, SIZES)),
+                    help="comma-separated graph-size variants")
+    ap.add_argument("--only", type=int, default=None,
+                    help="internal: lower a single size variant and exit")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    if args.only is not None:
+        emit_size(args.only, args.out)
+        return
+
+    sizes = [int(s) for s in args.sizes.split(",")]
+    actor0 = model.init_actor(INIT_SEED)
+    critic0 = model.init_critic(INIT_SEED)
+    np.asarray(actor0, dtype=np.float32).tofile(os.path.join(args.out, "actor_init.bin"))
+    np.asarray(critic0, dtype=np.float32).tofile(os.path.join(args.out, "critic_init.bin"))
+
+    artifacts = {}
+    for n in sizes:
+        # Each size variant is lowered in a fresh subprocess: on this
+        # jax/jaxlib pair, a vmap+grad lowering poisons a process-global
+        # lowering cache such that later `argsort` lowerings fail with
+        # `GatherDimensionNumbers ... operand_batching_dims`. Process
+        # isolation sidesteps the skew; artifacts are byte-identical to
+        # single-process output when the bug is absent.
+        import subprocess
+        import sys
+        subprocess.run(
+            [sys.executable, "-m", "compile.aot", "--only", str(n), "--out", args.out],
+            check=True,
+        )
+        artifacts[str(n)] = {
+            "policy_fwd": f"policy_fwd_{n}.hlo.txt",
+            "sac_update": f"sac_update_{n}.hlo.txt",
+            "boltzmann": f"boltzmann_{n}.hlo.txt",
+        }
+
+    manifest = {
+        "version": 1,
+        "feature_dim": model.FEATURE_DIM,
+        "hidden": model.HIDDEN,
+        "heads": model.HEADS,
+        "num_layers": model.NUM_LAYERS,
+        "subactions": model.SUBACTIONS,
+        "choices": model.CHOICES,
+        "pool_ratio": model.POOL_RATIO,
+        "actor_size": int(model.ACTOR_SIZE),
+        "critic_size": int(model.CRITIC_SIZE),
+        "batch": BATCH,
+        "sizes": sizes,
+        "alpha": sac.ALPHA,
+        "actor_lr": sac.ACTOR_LR,
+        "critic_lr": sac.CRITIC_LR,
+        "noise_clip": sac.NOISE_CLIP,
+        "init_seed": INIT_SEED,
+        "artifacts": artifacts,
+        "actor_init": "actor_init.bin",
+        "critic_init": "critic_init.bin",
+        "smoke": smoke_vector(actor0, min(sizes)),
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"[aot] wrote manifest + {2 * len(sizes)} HLO artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

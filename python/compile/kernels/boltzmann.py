@@ -1,0 +1,64 @@
+"""Layer-1 Pallas kernel: batched Boltzmann-softmax head (paper Appendix E).
+
+Maps per-node priors P and temperatures T to action probabilities
+
+    probs[n, k, c] = softmax_c(priors[n, k, c] / max(T[n, k], T_FLOOR))
+
+for every node n and sub-action k simultaneously. This is the
+chromosome-decode step of the Boltzmann policies in the EA population: the
+L3 coordinator evaluates thousands of chromosome decodes per generation,
+and the fused kernel form keeps the whole decode a single VMEM-resident
+pass (priors tile + temperature tile in, probability tile out) instead of
+three HBM round-trips (divide, exp, normalize).
+
+The temperature floor matches the Rust-side decode
+(`utils::math::boltzmann_softmax`): evolved temperatures can collapse to
+~0 and must degrade to argmax, not NaN.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Must equal the Rust T floor (rust/src/utils/math.rs).
+TEMP_FLOOR = 1e-3
+
+
+def _boltzmann_kernel(priors_ref, temps_ref, out_ref):
+    """priors_ref: [BN, K, C]; temps_ref: [BN, K]; out_ref: [BN, K, C]."""
+    t = jnp.maximum(temps_ref[...], TEMP_FLOOR)[..., None]
+    z = priors_ref[...] / t
+    z = z - jnp.max(z, axis=-1, keepdims=True)
+    e = jnp.exp(z)
+    out_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def boltzmann_probs(priors, temps, *, block_nodes=None):
+    """Decode Boltzmann chromosome parameters into action probabilities.
+
+    Args:
+      priors: [N, K, C] prior preference per node / sub-action / choice.
+      temps:  [N, K] temperature per node / sub-action.
+      block_nodes: node-tile size; must divide N. Default min(128, N).
+
+    Returns:
+      [N, K, C] probabilities summing to 1 over the last axis.
+    """
+    n, k, c = priors.shape
+    assert temps.shape == (n, k), (temps.shape, (n, k))
+    bn = block_nodes or min(128, n)
+    assert n % bn == 0, f"block_nodes {bn} must divide N {n}"
+    return pl.pallas_call(
+        _boltzmann_kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, k, c), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bn, k), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, k, c), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, k, c), priors.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls.
+    )(priors, temps)
+
+
+boltzmann_probs_jit = jax.jit(boltzmann_probs)

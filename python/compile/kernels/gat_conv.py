@@ -1,0 +1,160 @@
+"""Layer-1 Pallas kernel: fused masked-attention graph aggregation.
+
+This is the compute hot-spot of the Graph U-Net policy: the O(N^2 * D)
+attention + aggregation step of a GAT convolution. The feature projection
+``h = x @ w`` stays an XLA matmul (MXU-friendly as-is); what benefits from
+fusion is the chain
+
+    scores -> leaky-relu -> neighbourhood-masked softmax -> attn @ h
+
+which naive XLA materializes as several N x N intermediates in HBM. The
+kernel tiles over *row blocks* of the adjacency: each grid step holds one
+[BR, N] adjacency tile, the full [N, Dh] projected features, and the
+per-row/per-column score vectors in VMEM, produces the [BR, Dh] output
+tile, and never writes an N x N intermediate back to HBM.
+
+Hardware adaptation (DESIGN.md section "Hardware-Adaptation"): the paper's
+target is an inference chip, not a GPU, so there is no warp-level mapping
+to port. On TPU the natural formulation is exactly this BlockSpec: the
+row-tile of attention scores is a [BR, N] VMEM scratch, the aggregation is
+an MXU matmul, and HBM traffic is one pass over `adj` plus one broadcast
+of `h` per row block. `interpret=True` everywhere — the CPU PJRT plugin
+cannot execute Mosaic custom-calls (see /opt/xla-example/README.md).
+
+VMEM footprint per grid step at N=384, Dh=16, BR=64 (f32):
+adj tile 64*384*4 = 96 KiB, h 384*16*4 = 24 KiB, scores 64*384*4 = 96 KiB,
+out 64*16*4 = 4 KiB  ->  ~220 KiB  <<  16 MiB VMEM.  MXU work per step is a
+(64x384)@(384x16) matmul = 86%-utilizable 128x128 tiling after padding.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Negative-slope of the GAT leaky-relu.
+LEAKY_SLOPE = 0.2
+# Additive mask value for non-edges (finite to keep softmax NaN-free on
+# all-padding rows).
+NEG_INF = -1e9
+
+
+def _attention_kernel(h_ref, adj_ref, s_src_ref, s_dst_ref, out_ref):
+    """One row-block of masked attention + aggregation.
+
+    h_ref:     [N, Dh]   projected node features (full, broadcast)
+    adj_ref:   [BR, N]   adjacency row tile (normalized weights; 0 = no edge)
+    s_src_ref: [BR, 1]   per-row source scores  (h_i . a_src)
+    s_dst_ref: [N, 1]    per-column destination scores (h_j . a_dst)
+    out_ref:   [BR, Dh]  aggregated output tile
+    """
+    adj = adj_ref[...]
+    s_src = s_src_ref[...]  # [BR, 1]
+    s_dst = s_dst_ref[...]  # [N, 1]
+    # Raw attention logits e_ij = leaky_relu(s_src_i + s_dst_j).
+    e = s_src + s_dst.T  # [BR, N]
+    e = jnp.where(e >= 0.0, e, LEAKY_SLOPE * e)
+    # Mask non-edges, softmax over the neighbourhood (columns).
+    e = jnp.where(adj > 0.0, e, NEG_INF)
+    e_max = jnp.max(e, axis=1, keepdims=True)
+    w = jnp.exp(e - e_max)
+    w = jnp.where(adj > 0.0, w, 0.0)
+    denom = jnp.sum(w, axis=1, keepdims=True)
+    attn = w / jnp.maximum(denom, 1e-12)
+    # Rows with no neighbours (padding) produce all-zero attention.
+    out_ref[...] = attn @ h_ref[...]
+
+
+def attention_aggregate_ref(h, adj, a_src, a_dst):
+    """Pure-jnp oracle of the fused kernel (also the autodiff rule's
+    forward model — see `attention_aggregate`). Kept here so ref.py and
+    the custom_vjp share one definition."""
+    s_src = h @ a_src
+    s_dst = h @ a_dst
+    e = s_src[:, None] + s_dst[None, :]
+    e = jnp.where(e >= 0.0, e, LEAKY_SLOPE * e)
+    e = jnp.where(adj > 0.0, e, NEG_INF)
+    e = e - jnp.max(e, axis=1, keepdims=True)
+    w = jnp.exp(e)
+    w = jnp.where(adj > 0.0, w, 0.0)
+    denom = jnp.maximum(jnp.sum(w, axis=1, keepdims=True), 1e-12)
+    attn = w / denom
+    return attn @ h
+
+
+def attention_aggregate(h, adj, a_src, a_dst, *, block_rows=None):
+    """Fused GAT attention + aggregation via Pallas.
+
+    Args:
+      h:     [N, Dh] projected node features.
+      adj:   [N, N] normalized adjacency (0 entries = no edge; self-loops
+             expected on real nodes).
+      a_src: [Dh] source attention vector.
+      a_dst: [Dh] destination attention vector.
+      block_rows: row-tile size; must divide N. Default: min(64, N).
+
+    Returns:
+      [N, Dh] aggregated features; all-zero rows where a node has no
+      neighbours (padding rows).
+    """
+    n, dh = h.shape
+    assert adj.shape == (n, n), (adj.shape, n)
+    br = block_rows or min(64, n)
+    assert n % br == 0, f"block_rows {br} must divide N {n}"
+    # Score vectors are tiny matmuls; compute outside the kernel.
+    s_src = (h @ a_src).reshape(n, 1)
+    s_dst = (h @ a_dst).reshape(n, 1)
+    grid = (n // br,)
+    return pl.pallas_call(
+        _attention_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, dh), lambda i: (0, 0)),   # h: broadcast
+            pl.BlockSpec((br, n), lambda i: (i, 0)),   # adj: row tiles
+            pl.BlockSpec((br, 1), lambda i: (i, 0)),   # s_src: row tiles
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),    # s_dst: broadcast
+        ],
+        out_specs=pl.BlockSpec((br, dh), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, dh), h.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls.
+    )(h, adj, s_src, s_dst)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def attention_aggregate_jit(h, adj, a_src, a_dst, block_rows=None):
+    """Jitted wrapper (used by tests)."""
+    return attention_aggregate(h, adj, a_src, a_dst, block_rows=block_rows)
+
+
+# ---- differentiable wrapper ---------------------------------------------------
+#
+# Interpret-mode pallas_call has no reverse-mode autodiff rule, but the SAC
+# update differentiates through the GNN trunk. custom_vjp keeps the Pallas
+# kernel on the *forward* pass of every artifact (policy_fwd and
+# sac_update) while the backward pass is generated from the pure-jnp
+# oracle — mathematically identical by the kernel-vs-ref allclose tests.
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def attention_aggregate_ad(h, adj, a_src, a_dst, block_rows=None):
+    """Differentiable fused attention-aggregate (Pallas forward)."""
+    return attention_aggregate(h, adj, a_src, a_dst, block_rows=block_rows)
+
+
+def _ad_fwd(h, adj, a_src, a_dst, block_rows):
+    out = attention_aggregate(h, adj, a_src, a_dst, block_rows=block_rows)
+    return out, (h, adj, a_src, a_dst)
+
+
+def _ad_bwd(block_rows, residuals, g):
+    h, adj, a_src, a_dst = residuals
+    _, vjp = jax.vjp(
+        lambda h_, asrc_, adst_: attention_aggregate_ref(h_, adj, asrc_, adst_),
+        h, a_src, a_dst,
+    )
+    dh, dasrc, dadst = vjp(g)
+    # The adjacency is data, never a learnable parameter: zero cotangent.
+    return dh, jnp.zeros_like(adj), dasrc, dadst
+
+
+attention_aggregate_ad.defvjp(_ad_fwd, _ad_bwd)

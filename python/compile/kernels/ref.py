@@ -1,0 +1,23 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references: straightforward jax.numpy
+implementations of the same math with no tiling or fusion. pytest +
+hypothesis sweep shapes/values and assert allclose between kernel and
+oracle (python/tests/test_kernels.py).
+"""
+
+import jax.numpy as jnp
+
+from .gat_conv import attention_aggregate_ref  # single source of truth
+from .boltzmann import TEMP_FLOOR
+
+__all__ = ["attention_aggregate_ref", "boltzmann_ref"]
+
+
+def boltzmann_ref(priors, temps):
+    """Reference Boltzmann softmax. See boltzmann.py / paper Appendix E."""
+    t = jnp.maximum(temps, TEMP_FLOOR)[..., None]
+    z = priors / t
+    z = z - jnp.max(z, axis=-1, keepdims=True)
+    e = jnp.exp(z)
+    return e / jnp.sum(e, axis=-1, keepdims=True)

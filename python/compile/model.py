@@ -1,0 +1,268 @@
+"""Layer-2 JAX model: the Graph U-Net policy and twin-Q critic.
+
+Architecture (paper §3.2 "GNN Policy", hyperparameters Table 2 adapted to
+the CPU build budget — see DESIGN.md):
+
+  input proj (Table-1 features -> HIDDEN)
+  -> GAT conv 1 (4 heads, fused Pallas attention)            [encoder]
+  -> top-k gated pooling (k = N/4, Gao & Ji 2019)            [down]
+  -> GAT conv 2 on the pooled graph                          [bottleneck]
+  -> unpool (scatter) + skip connection                      [up]
+  -> GAT conv 3 -> GAT conv 4                                [decoder]
+  -> per-node action head: logits [N, 2 sub-actions, 3 memories]
+
+Parameters travel as ONE flat f32 vector: the Rust coordinator owns the
+genome (EA mutation/crossover operate on the raw vector) and the AOT
+artifacts split it internally via `unflatten`. The same vector works for
+every graph-size variant of the artifacts because no parameter shape
+depends on N.
+
+Everything here is build-time only; `aot.py` lowers `policy_forward` and
+`sac.sac_update` to HLO text that rust/src/runtime executes via PJRT.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.gat_conv import attention_aggregate_ad, attention_aggregate_ref
+
+# ---- dimensions (mirrored in artifacts/manifest.json) -----------------------
+
+FEATURE_DIM = 19   # Table-1 node features (rust graph::features::DIM)
+HIDDEN = 64        # trunk width
+HEADS = 4          # attention heads (Table 2)
+HEAD_DIM = HIDDEN // HEADS
+NUM_LAYERS = 4     # GNN depth (Table 2)
+SUBACTIONS = 2     # weight + activation placement per node
+CHOICES = 3        # DRAM / LLC / SRAM
+POOL_RATIO = 4     # top-k pooling keeps N / POOL_RATIO nodes
+
+
+# Per-feature normalization constants (divisors), in Table-1 order as
+# emitted by rust/src/graph/features.rs. Raw features span 0..~400 (spatial
+# dims, look-ahead counts) and 0..~25 (log2-scaled byte sizes); dividing by
+# plausible maxima keeps the trunk well-conditioned so the DRAM-biased
+# output head dominates the initial policy (Table 2: initial action=DRAM).
+FEATURE_SCALE = (
+    12.0,   # op_id
+    25.0,   # weight_size (log2)
+    400.0,  # ifm_x
+    256.0,  # ifm_y
+    13.0,   # ifm_z (log2)
+    400.0,  # ofm_x
+    256.0,  # ofm_y
+    13.0,   # ofm_z (log2)
+    25.0,   # ifm_size (log2)
+    25.0,   # ofm_size (log2)
+    400.0,  # n_ops_left
+    28.0,   # n_w_left (log2)
+    32.0,   # groups
+    8.0,    # kernel_x
+    8.0,    # kernel_y
+    4.0,    # stride
+    4.0,    # pad
+    2.0,    # dilation
+    1.0,    # batch
+)
+
+
+def pool_k(n: int) -> int:
+    """Pooled node count for an N-node artifact."""
+    return max(1, n // POOL_RATIO)
+
+
+def _block_rows(n: int) -> int:
+    """Largest row-tile <= 64 that divides n (Pallas grid constraint)."""
+    for c in (64, 48, 32, 16, 8, 4, 2, 1):
+        if n % c == 0:
+            return c
+    return 1
+
+
+# ---- parameter spec ----------------------------------------------------------
+
+def trunk_spec(out_dim: int):
+    """(name, shape) list for one GNN trunk with an `out_dim`-wide head."""
+    spec = [("w_in", (FEATURE_DIM, HIDDEN)), ("b_in", (HIDDEN,))]
+    for l in range(NUM_LAYERS):
+        for h in range(HEADS):
+            spec += [
+                (f"l{l}h{h}_w", (HIDDEN, HEAD_DIM)),
+                (f"l{l}h{h}_asrc", (HEAD_DIM,)),
+                (f"l{l}h{h}_adst", (HEAD_DIM,)),
+            ]
+    spec += [
+        ("pool_p", (HIDDEN,)),
+        ("w_out", (HIDDEN, out_dim)),
+        ("b_out", (out_dim,)),
+    ]
+    return spec
+
+
+ACTOR_SPEC = trunk_spec(SUBACTIONS * CHOICES)
+ACTOR_SIZE = sum(int(jnp.prod(jnp.array(s))) for _, s in ACTOR_SPEC)
+# Twin critic: two independent trunks, each emitting per-choice Q values.
+CRITIC_HALF_SIZE = ACTOR_SIZE
+CRITIC_SIZE = 2 * CRITIC_HALF_SIZE
+
+
+def unflatten(flat, spec):
+    """Split a flat vector into the named parameter dict of `spec`."""
+    params = {}
+    off = 0
+    for name, shape in spec:
+        size = 1
+        for d in shape:
+            size *= d
+        params[name] = flat[off:off + size].reshape(shape)
+        off += size
+    return params
+
+
+def flatten(params, spec):
+    """Inverse of `unflatten`."""
+    return jnp.concatenate([params[name].reshape(-1) for name, _ in spec])
+
+
+def init_trunk(key, spec):
+    """Glorot-uniform matrices, zero biases, small-normal attention vecs.
+
+    The output-head bias is initialized to favour choice 0 (DRAM): the
+    paper's Table 2 sets the *initial mapping action* to DRAM, which is
+    the only placement guaranteed valid — a fresh policy therefore starts
+    in the positive-reward regime instead of the -ε cliff.
+    """
+    params = {}
+    for name, shape in spec:
+        key, sub = jax.random.split(key)
+        if len(shape) == 2:
+            fan_in, fan_out = shape
+            lim = (6.0 / (fan_in + fan_out)) ** 0.5
+            w = jax.random.uniform(sub, shape, jnp.float32, -lim, lim)
+            # Small head scale: initial logits are dominated by the DRAM
+            # bias below, giving a high-entropy, DRAM-leaning start.
+            params[name] = w * 0.1 if name == "w_out" else w
+        elif name == "b_out":
+            # Logit bias toward index 0 (DRAM) for every sub-action.
+            b = jnp.zeros(shape, jnp.float32)
+            params[name] = b.at[0::CHOICES].set(2.5)
+        elif name.startswith("b_"):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            params[name] = 0.1 * jax.random.normal(sub, shape, jnp.float32)
+    return params
+
+
+# ---- trunk forward -----------------------------------------------------------
+
+def gat_layer(p, layer, h, adj, use_kernel=True):
+    """One 4-head GAT convolution with residual + relu."""
+    n = h.shape[0]
+    heads = []
+    for head in range(HEADS):
+        w = p[f"l{layer}h{head}_w"]
+        proj = h @ w  # [N, HEAD_DIM] — XLA matmul feeding the fused kernel
+        if use_kernel:
+            # Pallas forward + oracle-derived backward (custom_vjp).
+            out = attention_aggregate_ad(proj, adj, p[f"l{layer}h{head}_asrc"],
+                                         p[f"l{layer}h{head}_adst"],
+                                         _block_rows(n))
+        else:
+            out = attention_aggregate_ref(proj, adj, p[f"l{layer}h{head}_asrc"],
+                                          p[f"l{layer}h{head}_adst"])
+        heads.append(out)
+    return jax.nn.relu(h + jnp.concatenate(heads, axis=1))
+
+
+def trunk_forward(p, feats, adj, mask, use_kernel=True):
+    """Graph U-Net trunk: feats [N,F], adj [N,N], mask [N] -> [N, HIDDEN]."""
+    n = feats.shape[0]
+    k = pool_k(n)
+    # Normalize raw Table-1 features and bound the input embedding: keeps
+    # trunk magnitudes O(1) so the DRAM logit bias controls the initial
+    # policy and gradients stay well-scaled.
+    feats_n = feats / jnp.asarray(FEATURE_SCALE, feats.dtype)[None, :]
+    h = jnp.tanh(feats_n @ p["w_in"] + p["b_in"]) * mask[:, None]
+    # Encoder.
+    h1 = gat_layer(p, 0, h, adj, use_kernel)
+    # Top-k gated pooling (Gao & Ji 2019): padding rows score -inf.
+    #
+    # Formulated sort- and gather-free: `lax.top_k` lowers to a `topk`
+    # HLO instruction the runtime's xla_extension 0.5.1 parser rejects,
+    # and argsort's gather breaks under vmap on this jax/jaxlib pair.
+    # Instead: compute each node's rank by pairwise comparison (O(N²)
+    # predicates — noise next to the N²·D attention matmuls) and select
+    # with a one-hot [k, N] matrix, turning pool/unpool into matmuls —
+    # which is also how the selection maps onto the MXU on real TPUs.
+    pvec = p["pool_p"]
+    scores = h1 @ (pvec / (jnp.linalg.norm(pvec) + 1e-8))
+    scores = jnp.where(mask > 0.0, scores, -1e9)
+    idx = jnp.arange(n)
+    greater = jnp.sum(scores[None, :] > scores[:, None], axis=1)
+    ties = jnp.sum(
+        (scores[None, :] == scores[:, None]) & (idx[None, :] < idx[:, None]), axis=1)
+    rank = greater + ties  # 0 = best node, ties broken by index
+    sel = (rank[None, :] == jnp.arange(k)[:, None]).astype(h1.dtype)  # [k, N]
+    gate = jax.nn.sigmoid(scores) * mask  # gradient path (selection is 0-grad)
+    hp = sel @ (h1 * gate[:, None])
+    adj_p = sel @ adj @ sel.T
+    # Bottleneck conv on the pooled graph.
+    h2 = gat_layer(p, 1, hp, adj_p, use_kernel)
+    # Unpool: scatter back (transpose of the selection) + skip connection.
+    h_up = sel.T @ h2 + h1
+    # Decoder.
+    h3 = gat_layer(p, 2, h_up, adj, use_kernel)
+    h4 = gat_layer(p, 3, h3, adj, use_kernel)
+    return h4 * mask[:, None]
+
+
+def head_logits(p, trunk_out):
+    """Per-node action logits [N, SUBACTIONS, CHOICES]."""
+    n = trunk_out.shape[0]
+    logits = trunk_out @ p["w_out"] + p["b_out"]
+    return logits.reshape(n, SUBACTIONS, CHOICES)
+
+
+# ---- public entry points -----------------------------------------------------
+
+def policy_forward(actor_flat, feats, adj, mask, use_kernel=True):
+    """Action probabilities [N, 2, 3] of the GNN policy.
+
+    This is the function lowered to `policy_fwd_<N>.hlo.txt`; the Rust
+    coordinator samples / argmaxes the returned distribution and also uses
+    it as the Boltzmann-chromosome seeding posterior (Algorithm 2 line 18).
+    """
+    p = unflatten(actor_flat, ACTOR_SPEC)
+    t = trunk_forward(p, feats, adj, mask, use_kernel)
+    logits = head_logits(p, t)
+    return jax.nn.softmax(logits, axis=-1)
+
+
+def policy_log_probs(actor_flat, feats, adj, mask, use_kernel=True):
+    """Log-probabilities (numerically stable log-softmax) [N, 2, 3]."""
+    p = unflatten(actor_flat, ACTOR_SPEC)
+    t = trunk_forward(p, feats, adj, mask, use_kernel)
+    logits = head_logits(p, t)
+    return jax.nn.log_softmax(logits, axis=-1)
+
+
+def critic_forward(critic_flat, feats, adj, mask, use_kernel=True):
+    """Twin Q values, each [N, 2, 3] (per node / sub-action / choice)."""
+    q1p = unflatten(critic_flat[:CRITIC_HALF_SIZE], ACTOR_SPEC)
+    q2p = unflatten(critic_flat[CRITIC_HALF_SIZE:], ACTOR_SPEC)
+    t1 = trunk_forward(q1p, feats, adj, mask, use_kernel)
+    t2 = trunk_forward(q2p, feats, adj, mask, use_kernel)
+    return head_logits(q1p, t1), head_logits(q2p, t2)
+
+
+def init_actor(seed: int):
+    """Flat actor parameter vector."""
+    return flatten(init_trunk(jax.random.PRNGKey(seed), ACTOR_SPEC), ACTOR_SPEC)
+
+
+def init_critic(seed: int):
+    """Flat twin-critic parameter vector."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed ^ 0x5AC))
+    a = flatten(init_trunk(k1, ACTOR_SPEC), ACTOR_SPEC)
+    b = flatten(init_trunk(k2, ACTOR_SPEC), ACTOR_SPEC)
+    return jnp.concatenate([a, b])

@@ -1,0 +1,139 @@
+"""Layer-2: the full SAC-discrete update step (paper Appendix D) as one
+jitted function, AOT-lowered so the Rust coordinator can run gradient
+steps through PJRT with no Python in the loop.
+
+Modifications from vanilla SAC, following Appendix D:
+
+* **Multi-discrete factorized policy** — the joint action is one choice of
+  3 memories per (node, sub-action); entropy and the actor objective are
+  computed per factor and averaged over nodes/sub-actions (masked to real
+  nodes).
+* **Twin Q with min** (Fujimoto et al. 2018) — `critic_forward` returns
+  two per-choice Q heads; the actor objective uses their minimum.
+* **Noisy one-hot behavioral actions** — the Bellman regression target
+  uses the behavior action's one-hot smoothed with clipped Gaussian noise.
+  The noise tensor is an *input* (the Rust side draws it from its seeded
+  RNG) so the artifact stays deterministic.
+* **Single-step episodes** (Table 2: 1 step/episode) — the episode ends
+  after one mapping, so the bootstrap term `γ min Q'(s')` vanishes and the
+  regression target is the reward itself. Target networks are therefore
+  inert and omitted from the artifact; `tau` remains in the Rust config
+  for the multi-step ablation documented in DESIGN.md.
+
+Optimizer: Adam, maintained functionally — (m, v, t) ride along as inputs
+and outputs of the artifact, owned by the Rust side between calls.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import model
+
+# Adam hyper-parameters (Table 2: lr = 1e-3 for both actor and critic).
+ACTOR_LR = 1e-3
+CRITIC_LR = 1e-3
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+# Entropy coefficient alpha (Table 2: 0.05).
+ALPHA = 0.05
+# Behavioral-action smoothing noise clip (Appendix D).
+NOISE_CLIP = 0.3
+
+
+def adam_step(flat, grad, m, v, t, lr):
+    """One functional Adam update; returns (flat', m', v')."""
+    m = ADAM_B1 * m + (1.0 - ADAM_B1) * grad
+    v = ADAM_B2 * v + (1.0 - ADAM_B2) * grad * grad
+    mhat = m / (1.0 - ADAM_B1 ** t)
+    vhat = v / (1.0 - ADAM_B2 ** t)
+    return flat - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS), m, v
+
+
+def masked_mean(x, mask):
+    """Mean over (N, K) of x counting only real nodes. x:[B,N,K] mask:[B,N]."""
+    w = jnp.broadcast_to(mask[:, :, None], x.shape)
+    return jnp.sum(x * w, axis=(1, 2)) / jnp.maximum(jnp.sum(w, axis=(1, 2)), 1e-8)
+
+
+def critic_loss_fn(critic_flat, feats, adj, mask, act_onehot, rewards, use_kernel=True):
+    """MSE of both Q heads against the terminal target (= reward)."""
+    def q_of(sample_feats, sample_adj, sample_mask, sample_act):
+        q1, q2 = model.critic_forward(critic_flat, sample_feats, sample_adj,
+                                      sample_mask, use_kernel)
+        # Select the behavioral action's Q via the (noisy) one-hot.
+        q1_sel = jnp.sum(q1 * sample_act, axis=-1)  # [N, K]
+        q2_sel = jnp.sum(q2 * sample_act, axis=-1)
+        return q1_sel, q2_sel
+
+    q1_sel, q2_sel = jax.vmap(q_of)(feats, adj, mask, act_onehot)  # [B, N, K]
+    q1_pred = masked_mean(q1_sel, mask)  # [B]
+    q2_pred = masked_mean(q2_sel, mask)
+    # Single-step episodes: y = r (see module docstring).
+    y = rewards
+    loss = jnp.mean((y - q1_pred) ** 2 + (y - q2_pred) ** 2)
+    return loss, (jnp.mean(q1_pred), loss)
+
+
+def actor_loss_fn(actor_flat, critic_flat, feats, adj, mask, use_kernel=True):
+    """SAC-discrete actor objective: E[ π · (α log π − min Q) ]."""
+    def per_sample(sample_feats, sample_adj, sample_mask):
+        p = model.unflatten(actor_flat, model.ACTOR_SPEC)
+        t = model.trunk_forward(p, sample_feats, sample_adj, sample_mask, use_kernel)
+        logits = model.head_logits(p, t)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        probs = jnp.exp(logp)
+        q1, q2 = model.critic_forward(
+            jax.lax.stop_gradient(critic_flat), sample_feats, sample_adj,
+            sample_mask, use_kernel)
+        qmin = jax.lax.stop_gradient(jnp.minimum(q1, q2))
+        inner = jnp.sum(probs * (ALPHA * logp - qmin), axis=-1)  # [N, K]
+        ent = -jnp.sum(probs * logp, axis=-1)  # [N, K]
+        return inner, ent
+
+    inner, ent = jax.vmap(per_sample)(feats, adj, mask)  # [B, N, K]
+    loss = jnp.mean(masked_mean(inner, mask))
+    entropy = jnp.mean(masked_mean(ent, mask))
+    return loss, entropy
+
+
+def sac_update(actor_flat, actor_m, actor_v,
+               critic_flat, critic_m, critic_v,
+               t_step,
+               feats, adj, mask, act_onehot_noisy, rewards,
+               use_kernel=True):
+    """One full SAC gradient step.
+
+    Inputs (all f32):
+      actor_flat/m/v:   [P]        actor params + Adam state
+      critic_flat/m/v:  [2P]       twin-critic params + Adam state
+      t_step:           [1]        Adam step count (>= 1)
+      feats:            [B, N, F]  Table-1 features
+      adj:              [B, N, N]  normalized adjacency
+      mask:             [B, N]     real-node mask
+      act_onehot_noisy: [B, N, 2, 3] noisy one-hot behavioral actions
+      rewards:          [B]
+
+    Returns:
+      (actor', actor_m', actor_v', critic', critic_m', critic_v',
+       metrics[4] = [critic_loss, actor_loss, entropy, mean_q])
+    """
+    t = t_step[0]
+    # ---- critic step ----
+    (closs, (mean_q, _)), cgrad = jax.value_and_grad(critic_loss_fn, has_aux=True)(
+        critic_flat, feats, adj, mask, act_onehot_noisy, rewards, use_kernel)
+    critic_new, cm, cv = adam_step(critic_flat, cgrad, critic_m, critic_v, t, CRITIC_LR)
+    # ---- actor step (against the updated critic) ----
+    (aloss, entropy), agrad = jax.value_and_grad(actor_loss_fn, has_aux=True)(
+        actor_flat, critic_new, feats, adj, mask, use_kernel)
+    actor_new, am, av = adam_step(actor_flat, agrad, actor_m, actor_v, t, ACTOR_LR)
+    metrics = jnp.stack([closs, aloss, entropy, mean_q])
+    return actor_new, am, av, critic_new, cm, cv, metrics
+
+
+def make_noisy_onehot(key, actions, clip=NOISE_CLIP):
+    """Test helper replicating the Rust-side noisy one-hot: one_hot(a) +
+    clipped Gaussian noise (Appendix D). actions: int [B, N, K]."""
+    onehot = jax.nn.one_hot(actions, model.CHOICES, dtype=jnp.float32)
+    noise = jnp.clip(0.1 * jax.random.normal(key, onehot.shape), -clip, clip)
+    return onehot + noise

@@ -1,0 +1,143 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles, swept with
+hypothesis over shapes and values. This is the core correctness signal of
+the compile path — the AOT artifacts embed these kernels."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.gat_conv import (
+    attention_aggregate,
+    attention_aggregate_ad,
+    attention_aggregate_ref,
+)
+from compile.kernels.boltzmann import boltzmann_probs, TEMP_FLOOR
+from compile.kernels.ref import boltzmann_ref
+
+
+def rand(key, shape, lo=-2.0, hi=2.0):
+    return jax.random.uniform(jax.random.PRNGKey(key), shape, jnp.float32, lo, hi)
+
+
+def ring_adj(n, extra_edges=()):
+    adj = np.eye(n, dtype=np.float32) * 0.5
+    for i in range(n):
+        adj[i, (i + 1) % n] = 0.3
+        adj[(i + 1) % n, i] = 0.3
+    for (i, j) in extra_edges:
+        adj[i % n, j % n] = 0.2
+    return jnp.asarray(adj)
+
+
+class TestAttentionAggregate:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.sampled_from([4, 8, 16, 64]),
+        dh=st.sampled_from([4, 16, 32]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref_random_inputs(self, n, dh, seed):
+        h = rand(seed, (n, dh))
+        adj = ring_adj(n)
+        a_src = rand(seed + 1, (dh,))
+        a_dst = rand(seed + 2, (dh,))
+        out = attention_aggregate(h, adj, a_src, a_dst)
+        ref = attention_aggregate_ref(h, adj, a_src, a_dst)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=10, deadline=None)
+    @given(br=st.sampled_from([1, 2, 4, 8, 16]), seed=st.integers(0, 100))
+    def test_block_size_invariance(self, br, seed):
+        n, dh = 16, 8
+        h = rand(seed, (n, dh))
+        adj = ring_adj(n)
+        a_src, a_dst = rand(seed + 1, (dh,)), rand(seed + 2, (dh,))
+        out = attention_aggregate(h, adj, a_src, a_dst, block_rows=br)
+        ref = attention_aggregate(h, adj, a_src, a_dst, block_rows=n)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-6)
+
+    def test_isolated_rows_produce_zeros(self):
+        # Rows with no adjacency entries (padding) must output zeros.
+        n, dh = 8, 4
+        h = rand(0, (n, dh))
+        adj = np.zeros((n, n), np.float32)
+        adj[:4, :4] = np.asarray(ring_adj(4))
+        out = attention_aggregate(h, jnp.asarray(adj), rand(1, (dh,)), rand(2, (dh,)))
+        np.testing.assert_allclose(np.asarray(out[4:]), 0.0, atol=1e-7)
+        assert np.abs(np.asarray(out[:4])).sum() > 0
+
+    def test_attention_rows_are_convex_combinations(self):
+        # With a_src = a_dst = 0, attention is uniform over neighbours:
+        # output = mean of neighbour features.
+        n, dh = 6, 3
+        h = jnp.ones((n, dh))
+        adj = ring_adj(n)
+        out = attention_aggregate(h, adj, jnp.zeros(dh), jnp.zeros(dh))
+        np.testing.assert_allclose(np.asarray(out), 1.0, rtol=1e-5)
+
+    def test_rejects_bad_block_rows(self):
+        h = rand(0, (6, 4))
+        with pytest.raises(AssertionError):
+            attention_aggregate(h, ring_adj(6), rand(1, (4,)), rand(2, (4,)), block_rows=4)
+
+    def test_custom_vjp_grads_match_ref_grads(self):
+        n, dh = 8, 4
+        h = rand(3, (n, dh))
+        adj = ring_adj(n)
+        a_src, a_dst = rand(4, (dh,)), rand(5, (dh,))
+
+        def loss_kernel(h, a_src, a_dst):
+            return jnp.sum(attention_aggregate_ad(h, adj, a_src, a_dst, None) ** 2)
+
+        def loss_ref(h, a_src, a_dst):
+            return jnp.sum(attention_aggregate_ref(h, adj, a_src, a_dst) ** 2)
+
+        gk = jax.grad(loss_kernel, argnums=(0, 1, 2))(h, a_src, a_dst)
+        gr = jax.grad(loss_ref, argnums=(0, 1, 2))(h, a_src, a_dst)
+        for a, b in zip(gk, gr):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+
+
+class TestBoltzmann:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.sampled_from([4, 16, 128]),
+        k=st.sampled_from([1, 2]),
+        c=st.sampled_from([2, 3, 5]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref(self, n, k, c, seed):
+        priors = rand(seed, (n, k, c), -3.0, 3.0)
+        temps = rand(seed + 1, (n, k), 0.0, 5.0)
+        out = boltzmann_probs(priors, temps)
+        ref = boltzmann_ref(priors, temps)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-6)
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**16), temp=st.floats(0.0, 10.0))
+    def test_rows_are_probability_simplices(self, seed, temp):
+        priors = rand(seed, (8, 2, 3), -5.0, 5.0)
+        temps = jnp.full((8, 2), jnp.float32(temp))
+        p = np.asarray(boltzmann_probs(priors, temps))
+        assert (p >= 0).all()
+        np.testing.assert_allclose(p.sum(-1), 1.0, rtol=1e-5)
+
+    def test_low_temperature_is_argmax(self):
+        priors = jnp.asarray([[[0.1, 0.9, 0.2]]], jnp.float32)
+        temps = jnp.full((1, 1), TEMP_FLOOR)
+        p = np.asarray(boltzmann_probs(priors, temps))
+        assert p[0, 0, 1] > 0.99
+
+    def test_high_temperature_is_uniform(self):
+        priors = jnp.asarray([[[0.1, 0.9, 0.2]]], jnp.float32)
+        temps = jnp.full((1, 1), 1e3)
+        p = np.asarray(boltzmann_probs(priors, temps))
+        np.testing.assert_allclose(p, 1.0 / 3.0, atol=1e-3)
+
+    def test_zero_temperature_no_nan(self):
+        priors = rand(0, (4, 2, 3))
+        temps = jnp.zeros((4, 2))
+        p = np.asarray(boltzmann_probs(priors, temps))
+        assert np.isfinite(p).all()

@@ -1,0 +1,130 @@
+"""L2 contract tests: Graph U-Net policy/critic shapes, masking, parameter
+flattening, pooling behaviour, and determinism."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+def ring_adj(n):
+    adj = np.eye(n, dtype=np.float32) * 0.5
+    for i in range(n):
+        adj[i, (i + 1) % n] = 0.3
+        adj[(i + 1) % n, i] = 0.3
+    return jnp.asarray(adj)
+
+
+@pytest.fixture(scope="module")
+def actor():
+    return model.init_actor(7)
+
+
+@pytest.fixture(scope="module")
+def critic():
+    return model.init_critic(7)
+
+
+class TestParams:
+    def test_sizes_consistent_with_spec(self):
+        total = sum(int(np.prod(s)) for _, s in model.ACTOR_SPEC)
+        assert model.ACTOR_SIZE == total
+        assert model.CRITIC_SIZE == 2 * model.ACTOR_SIZE
+
+    def test_flatten_unflatten_roundtrip(self, actor):
+        p = model.unflatten(actor, model.ACTOR_SPEC)
+        back = model.flatten(p, model.ACTOR_SPEC)
+        np.testing.assert_array_equal(np.asarray(actor), np.asarray(back))
+
+    def test_init_deterministic(self):
+        a = model.init_actor(3)
+        b = model.init_actor(3)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        c = model.init_actor(4)
+        assert np.abs(np.asarray(a) - np.asarray(c)).max() > 0
+
+    def test_spec_matches_table2_architecture(self):
+        # Depth 4, 4 attention heads (paper Table 2).
+        assert model.NUM_LAYERS == 4
+        assert model.HEADS == 4
+        names = [n for n, _ in model.ACTOR_SPEC]
+        assert "l3h3_w" in names and "pool_p" in names
+
+
+class TestPolicyForward:
+    def test_output_shape_and_simplex(self, actor):
+        n = 16
+        probs = model.policy_forward(
+            actor, jnp.ones((n, model.FEATURE_DIM)), ring_adj(n), jnp.ones(n))
+        assert probs.shape == (n, model.SUBACTIONS, model.CHOICES)
+        p = np.asarray(probs)
+        assert (p >= 0).all()
+        np.testing.assert_allclose(p.sum(-1), 1.0, rtol=1e-5)
+
+    def test_kernel_and_ref_paths_agree(self, actor):
+        n = 16
+        feats = jax.random.uniform(jax.random.PRNGKey(0), (n, model.FEATURE_DIM))
+        adj, mask = ring_adj(n), jnp.ones(n)
+        a = model.policy_forward(actor, feats, adj, mask, use_kernel=True)
+        b = model.policy_forward(actor, feats, adj, mask, use_kernel=False)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+
+    def test_padding_contents_do_not_leak_into_real_nodes(self, actor):
+        # Within a fixed artifact size N the *contents* of padded rows
+        # (features beyond the mask) must not influence real-node outputs.
+        # (Cross-N invariance is NOT expected: the U-Net's pooled size k
+        # scales with the artifact size — see DESIGN.md.)
+        n = 16
+        adj = np.zeros((n, n), np.float32)
+        adj[:8, :8] = np.asarray(ring_adj(8))
+        mask = jnp.asarray((np.arange(n) < 8).astype(np.float32))
+        feats_a = jax.random.uniform(jax.random.PRNGKey(1), (n, model.FEATURE_DIM))
+        # Same real rows, garbage in the padded rows.
+        feats_b = feats_a.at[8:].set(
+            1e3 * jax.random.normal(jax.random.PRNGKey(2), (8, model.FEATURE_DIM)))
+        out_a = model.policy_forward(actor, feats_a, jnp.asarray(adj), mask)
+        out_b = model.policy_forward(actor, feats_b, jnp.asarray(adj), mask)
+        np.testing.assert_allclose(
+            np.asarray(out_a[:8]), np.asarray(out_b[:8]), rtol=1e-5, atol=1e-6)
+
+    def test_log_probs_consistent(self, actor):
+        n = 8
+        feats = jnp.ones((n, model.FEATURE_DIM)) * 0.2
+        adj, mask = ring_adj(n), jnp.ones(n)
+        lp = model.policy_log_probs(actor, feats, adj, mask)
+        p = model.policy_forward(actor, feats, adj, mask)
+        np.testing.assert_allclose(np.exp(np.asarray(lp)), np.asarray(p), rtol=1e-5)
+
+
+class TestCritic:
+    def test_twin_heads_differ(self, critic):
+        n = 8
+        feats = jnp.ones((n, model.FEATURE_DIM)) * 0.1
+        q1, q2 = model.critic_forward(critic, feats, ring_adj(n), jnp.ones(n))
+        assert q1.shape == (n, 2, 3)
+        assert np.abs(np.asarray(q1) - np.asarray(q2)).max() > 1e-4
+
+
+class TestPooling:
+    def test_pool_k(self):
+        assert model.pool_k(64) == 16
+        assert model.pool_k(128) == 32
+        assert model.pool_k(384) == 96
+
+    def test_block_rows_divides(self):
+        for n in (16, 64, 96, 128, 384):
+            br = model._block_rows(n)
+            assert n % br == 0 and br <= 64
+
+    def test_graphs_smaller_than_k_still_work(self, actor):
+        # 64-node artifact with only 10 real nodes (< k=16): padded slots
+        # score -inf, gate ~ 0, must not produce NaNs.
+        n = 64
+        feats = jnp.ones((n, model.FEATURE_DIM)) * 0.3
+        adj = np.zeros((n, n), np.float32)
+        adj[:10, :10] = np.asarray(ring_adj(10))
+        mask = jnp.asarray((np.arange(n) < 10).astype(np.float32))
+        probs = model.policy_forward(actor, feats, jnp.asarray(adj), mask)
+        assert np.isfinite(np.asarray(probs)).all()

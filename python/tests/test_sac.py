@@ -1,0 +1,136 @@
+"""SAC update-step tests: losses behave, Adam math is correct, and the
+update actually learns on a synthetic single-step batch."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model, sac
+
+
+N = 16
+B = 4
+
+
+def batch(seed=0):
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    feats = jax.random.uniform(k1, (B, N, model.FEATURE_DIM))
+    adj = jnp.tile((jnp.eye(N) * 0.5 + jnp.roll(jnp.eye(N), 1, 1) * 0.3)[None], (B, 1, 1))
+    mask = jnp.ones((B, N))
+    actions = jax.random.randint(k2, (B, N, model.SUBACTIONS), 0, model.CHOICES)
+    noisy = sac.make_noisy_onehot(k3, actions)
+    rewards = jnp.asarray([1.0, 0.5, -0.3, 2.0])
+    return feats, adj, mask, noisy, rewards
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_actor(11), model.init_critic(11)
+
+
+class TestAdam:
+    def test_first_step_is_lr_sized(self):
+        flat = jnp.zeros(4)
+        grad = jnp.asarray([1.0, -1.0, 2.0, 0.0])
+        new, m, v = sac.adam_step(flat, grad, jnp.zeros(4), jnp.zeros(4), 1.0, 1e-3)
+        # With bias correction, |step| ~= lr * sign(grad) on step 1.
+        np.testing.assert_allclose(
+            np.asarray(new), [-1e-3, 1e-3, -1e-3, 0.0], atol=1e-6)
+
+    def test_state_accumulates(self):
+        flat = jnp.zeros(2)
+        g = jnp.asarray([1.0, 1.0])
+        _, m, v = sac.adam_step(flat, g, jnp.zeros(2), jnp.zeros(2), 1.0, 1e-3)
+        assert np.allclose(np.asarray(m), 0.1)
+        assert np.allclose(np.asarray(v), 0.001)
+
+
+class TestMaskedMean:
+    def test_ignores_padded_nodes(self):
+        x = jnp.ones((1, 4, 2))
+        x = x.at[0, 2:].set(100.0)
+        mask = jnp.asarray([[1.0, 1.0, 0.0, 0.0]])
+        out = sac.masked_mean(x, mask)
+        np.testing.assert_allclose(np.asarray(out), [1.0])
+
+
+class TestLosses:
+    def test_critic_loss_positive_and_finite(self, params):
+        _, critic = params
+        feats, adj, mask, noisy, rewards = batch()
+        loss, (mean_q, _) = sac.critic_loss_fn(critic, feats, adj, mask, noisy, rewards)
+        assert np.isfinite(float(loss)) and float(loss) >= 0.0
+        assert np.isfinite(float(mean_q))
+
+    def test_actor_loss_finite_entropy_bounded(self, params):
+        actor, critic = params
+        feats, adj, mask, _, _ = batch()
+        loss, ent = sac.actor_loss_fn(actor, critic, feats, adj, mask)
+        assert np.isfinite(float(loss))
+        # Entropy of 3-way categorical is in [0, ln 3].
+        assert 0.0 <= float(ent) <= np.log(3.0) + 1e-5
+
+
+class TestUpdate:
+    def test_learns_reward_on_fixed_batch(self, params):
+        actor, critic = params
+        feats, adj, mask, noisy, rewards = batch()
+        a, am, av = actor, jnp.zeros_like(actor), jnp.zeros_like(actor)
+        c, cm, cv = critic, jnp.zeros_like(critic), jnp.zeros_like(critic)
+        f = jax.jit(sac.sac_update)
+        first_loss = None
+        for t in range(1, 31):
+            a, am, av, c, cm, cv, metrics = f(
+                a, am, av, c, cm, cv, jnp.asarray([float(t)]),
+                feats, adj, mask, noisy, rewards)
+            if first_loss is None:
+                first_loss = float(metrics[0])
+        final_loss = float(metrics[0])
+        # The small-scale head init makes early critic fitting gentle;
+        # require a solid (but not aggressive) decrease over 30 steps.
+        assert final_loss < first_loss * 0.85, f"{first_loss} -> {final_loss}"
+        # Params actually moved.
+        assert float(jnp.abs(a - actor).max()) > 1e-5
+        assert float(jnp.abs(c - critic).max()) > 1e-5
+
+    def test_metrics_shape(self, params):
+        actor, critic = params
+        feats, adj, mask, noisy, rewards = batch()
+        out = sac.sac_update(
+            actor, jnp.zeros_like(actor), jnp.zeros_like(actor),
+            critic, jnp.zeros_like(critic), jnp.zeros_like(critic),
+            jnp.asarray([1.0]), feats, adj, mask, noisy, rewards)
+        assert out[6].shape == (4,)
+        assert np.isfinite(np.asarray(out[6])).all()
+
+    def test_mask_isolates_padding(self, params):
+        # Padded-node *contents* must not influence the losses: same batch
+        # with garbage features/actions in masked-out rows gives the same
+        # metrics. (The artifact size N itself is architectural — cross-N
+        # equality is not expected; see DESIGN.md.)
+        actor, critic = params
+        feats, adj, mask, noisy, rewards = batch()
+        # Mask out the last 4 nodes of every sample; zero their adjacency.
+        mask = mask.at[:, -4:].set(0.0)
+        adj = adj.at[:, -4:, :].set(0.0).at[:, :, -4:].set(0.0)
+        feats2 = feats.at[:, -4:].set(123.0)
+        noisy2 = noisy.at[:, -4:].set(7.0)
+        z = jnp.zeros_like
+        out1 = sac.sac_update(actor, z(actor), z(actor), critic, z(critic), z(critic),
+                              jnp.asarray([1.0]), feats, adj, mask, noisy, rewards)
+        out2 = sac.sac_update(actor, z(actor), z(actor), critic, z(critic), z(critic),
+                              jnp.asarray([1.0]), feats2, adj, mask, noisy2, rewards)
+        np.testing.assert_allclose(np.asarray(out1[6]), np.asarray(out2[6]),
+                                   rtol=1e-4, atol=1e-5)
+
+
+class TestNoisyOnehot:
+    def test_centered_on_onehot_and_clipped(self):
+        actions = jnp.zeros((2, 8, 2), jnp.int32)
+        noisy = sac.make_noisy_onehot(jax.random.PRNGKey(0), actions)
+        onehot = jax.nn.one_hot(actions, model.CHOICES)
+        delta = np.asarray(noisy - onehot)
+        assert np.abs(delta).max() <= sac.NOISE_CLIP + 1e-6
+        assert np.abs(delta).max() > 0.0

@@ -1,0 +1,159 @@
+//! Figure 4 reproduction: final speedup vs. the native compiler for
+//! EGRL / EA / PG / Greedy-DP on ResNet-50, ResNet-101 and BERT,
+//! mean ± std over seeds, with the paper's reported numbers alongside.
+//!
+//! Default budgets are scaled down for the single-core bench image
+//! (the paper's full 4000-iteration × 5-seed protocol is
+//! `EGRL_BENCH_STEPS=4000 EGRL_BENCH_SEEDS=5 cargo bench --bench fig4_speedup`,
+//! and `egrl train --agent ... --steps 4000` reproduces single runs).
+//! EGRL/PG rows need `artifacts/`; without them the bench prints the
+//! artifact-free subset (EA, Greedy-DP) and says so.
+//!
+//! Expected *shape* (DESIGN.md §4): EGRL ≥ EA > compiler(1.0) everywhere;
+//! Greedy-DP beats the compiler only on ResNet-101 and collapses on BERT;
+//! PG alone stays below 1.
+
+use std::sync::Arc;
+
+use egrl::agents::{GreedyDp, MappingAgent};
+use egrl::bench_harness::{pm, Table};
+use egrl::config::EgrlConfig;
+use egrl::coordinator::{Mode, Trainer};
+use egrl::env::MappingEnv;
+use egrl::metrics::{RunLog, SeedAggregate};
+use egrl::runtime::Runtime;
+use egrl::utils::Rng;
+use egrl::workloads::Workload;
+
+/// Paper Figure-4 final speedups: (workload, agent) → value.
+fn paper_value(w: Workload, agent: &str) -> f64 {
+    match (w, agent) {
+        (Workload::ResNet50, "egrl") => 1.28,
+        (Workload::ResNet50, "ea") => 1.06,
+        (Workload::ResNet50, "pg") => 0.29,
+        (Workload::ResNet50, "greedy-dp") => 0.72,
+        (Workload::ResNet101, "egrl") => 1.78,
+        (Workload::ResNet101, "ea") => 1.47,
+        (Workload::ResNet101, "pg") => 0.23,
+        (Workload::ResNet101, "greedy-dp") => 1.27,
+        (Workload::Bert, "egrl") => 1.66,
+        (Workload::Bert, "ea") => 1.64,
+        (Workload::Bert, "pg") => 0.21,
+        (Workload::Bert, "greedy-dp") => 0.67,
+        _ => f64::NAN,
+    }
+}
+
+fn env_u64(key: &str, default: u64) -> u64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let steps = env_u64("EGRL_BENCH_STEPS", 700);
+    let seeds = env_u64("EGRL_BENCH_SEEDS", 3);
+    // PG-path budgets are smaller: each SAC update costs seconds of CPU.
+    let pg_steps = env_u64("EGRL_BENCH_PG_STEPS", 250.min(steps));
+    let pg_seeds = env_u64("EGRL_BENCH_PG_SEEDS", 1.min(seeds));
+
+    let runtime = {
+        let dir = Runtime::default_dir();
+        if dir.join("manifest.json").exists() {
+            Some(Runtime::open(dir)?)
+        } else {
+            eprintln!("fig4: artifacts missing — EGRL/PG rows skipped (run `make artifacts`)");
+            None
+        }
+    };
+
+    let mut table = Table::new(&[
+        "workload", "agent", "measured speedup", "paper", "iters/seed", "seeds",
+    ]);
+
+    for w in Workload::all() {
+        // --- EA: the paper's ablation = the EGRL population without PG,
+        // i.e. the MIXED GNN+Boltzmann population (fraction 0.2). With
+        // artifacts present we run exactly that; without them we fall
+        // back to an all-Boltzmann population (much weaker — noted).
+        let runs: Vec<RunLog> = (0..seeds)
+            .map(|s| {
+                let env = Arc::new(MappingEnv::nnpi(w.build(), s));
+                let cfg = EgrlConfig { seed: s, total_steps: steps, ..Default::default() };
+                let mut t = Trainer::new(env, cfg, Mode::EaOnly, runtime.as_ref()).unwrap();
+                let mut log = RunLog::new(w.name(), "ea", s);
+                t.run(&mut log).unwrap();
+                log
+            })
+            .collect();
+        let agg = SeedAggregate::from_runs(&runs);
+        table.row(&[
+            w.name().into(),
+            "ea".into(),
+            pm(agg.summary.mean, agg.summary.std),
+            format!("{:.2}", paper_value(w, "ea")),
+            steps.to_string(),
+            seeds.to_string(),
+        ]);
+
+        // --- Greedy-DP ------------------------------------------------------
+        let runs: Vec<RunLog> = (0..seeds)
+            .map(|s| {
+                let env = MappingEnv::nnpi(w.build(), s);
+                let mut agent = GreedyDp::default();
+                let mut rng = Rng::new(s);
+                let mut log = RunLog::new(w.name(), "greedy-dp", s);
+                agent.run(&env, steps, &mut rng, &mut log);
+                log
+            })
+            .collect();
+        let agg = SeedAggregate::from_runs(&runs);
+        table.row(&[
+            w.name().into(),
+            "greedy-dp".into(),
+            pm(agg.summary.mean, agg.summary.std),
+            format!("{:.2}", paper_value(w, "greedy-dp")),
+            steps.to_string(),
+            seeds.to_string(),
+        ]);
+
+        // --- EGRL + PG (need artifacts) --------------------------------------
+        if let (Some(rt), true) = (&runtime, pg_seeds > 0) {
+            // Sparser SAC updates on the big artifact keep wall-clock sane.
+            let update_every = if w == Workload::Bert { 84 } else { 21 };
+            for (mode, name) in [(Mode::Egrl, "egrl"), (Mode::PgOnly, "pg")] {
+                let runs: Vec<RunLog> = (0..pg_seeds)
+                    .map(|s| {
+                        let env = Arc::new(MappingEnv::nnpi(w.build(), s));
+                        let cfg = EgrlConfig {
+                            seed: s,
+                            total_steps: pg_steps,
+                            update_every,
+                            pg_rollouts: if mode == Mode::PgOnly { 4 } else { 1 },
+                            ..Default::default()
+                        };
+                        let mut t = Trainer::new(env, cfg, mode, Some(rt)).unwrap();
+                        let mut log = RunLog::new(w.name(), name, s);
+                        t.run(&mut log).unwrap();
+                        log
+                    })
+                    .collect();
+                let agg = SeedAggregate::from_runs(&runs);
+                table.row(&[
+                    w.name().into(),
+                    name.into(),
+                    pm(agg.summary.mean, agg.summary.std),
+                    format!("{:.2}", paper_value(w, name)),
+                    pg_steps.to_string(),
+                    pg_seeds.to_string(),
+                ]);
+            }
+        }
+    }
+
+    println!("\n=== Figure 4: speedup vs native compiler (>1 beats it) ===\n");
+    table.print();
+    println!(
+        "\nnote: measured at {steps} iterations (paper: 4000) on the simulated \
+         NNP-I — compare the ORDERING and who-beats-the-compiler, not absolutes."
+    );
+    Ok(())
+}

@@ -1,0 +1,114 @@
+//! Figure 6 reproduction: separability of compiler-competitive vs best
+//! mappings in mapping space (Jaccard metric over one-hot encodings).
+//!
+//! The paper shows a UMAP scatter; offline we compute the same distance
+//! structure and report (a) a classical-MDS 2-D embedding summary and
+//! (b) the silhouette coefficient — a quantitative version of the
+//! figure's separability claim — plus where the compiler's own map falls
+//! (the paper's red arrow: inside the competitive cluster).
+
+use std::sync::Arc;
+
+use egrl::bench_harness::Table;
+use egrl::config::EgrlConfig;
+use egrl::coordinator::{Mode, Trainer};
+use egrl::env::MappingEnv;
+use egrl::mapping::MemoryMap;
+use egrl::metrics::RunLog;
+use egrl::runtime::Runtime;
+use egrl::utils::Rng;
+use egrl::viz::embed;
+use egrl::workloads::Workload;
+
+fn env_u64(key: &str, default: u64) -> u64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let steps = env_u64("EGRL_BENCH_STEPS", 1500);
+    let runtime = {
+        let dir = Runtime::default_dir();
+        if dir.join("manifest.json").exists() { Some(Runtime::open(dir)?) } else { None }
+    };
+    let mut table = Table::new(&[
+        "workload",
+        "competitive",
+        "best",
+        "silhouette",
+        "compiler→competitive d̄",
+        "compiler→best d̄",
+    ]);
+
+    for w in Workload::all() {
+        let env = Arc::new(MappingEnv::nnpi(w.build(), 21));
+        let cfg = EgrlConfig { seed: 21, total_steps: steps, ..Default::default() };
+        let mut trainer = Trainer::new(env.clone(), cfg, Mode::EaOnly, runtime.as_ref())?;
+        let mut rng = Rng::new(210);
+        // Snapshot the running best each generation; label post hoc so
+        // the "best" phase adapts to how far this run actually got
+        // (the paper's two phases are ~1.0 and the run's peak).
+        let mut snaps: Vec<(MemoryMap, f64)> = Vec::new();
+        while env.iterations() < steps {
+            trainer.generation()?;
+            let map = trainer.best_map().clone();
+            let s = env.eval_speedup(&map, &mut rng);
+            snaps.push((map, s));
+        }
+        let mut log = RunLog::new(w.name(), "ea", 21);
+        let _ = trainer.run(&mut log);
+        let peak = snaps.iter().map(|(_, s)| *s).fold(0.0, f64::max);
+        let mut competitive: Vec<MemoryMap> = Vec::new();
+        let mut best: Vec<MemoryMap> = Vec::new();
+        for (map, s) in snaps {
+            if (s - 1.0).abs() <= 0.04 && competitive.len() < 20 {
+                competitive.push(map);
+            } else if s >= (peak - 0.015).max(1.015) && best.len() < 20 {
+                best.push(map);
+            }
+        }
+        if competitive.len() < 4 || best.len() < 4 {
+            table.row(&[
+                w.name().into(),
+                competitive.len().to_string(),
+                best.len().to_string(),
+                "n/a (too few snapshots)".into(),
+                "-".into(),
+                "-".into(),
+            ]);
+            continue;
+        }
+
+        let mut maps = competitive.clone();
+        maps.extend(best.iter().cloned());
+        let n = maps.len();
+        let labels: Vec<usize> = (0..n).map(|i| usize::from(i >= competitive.len())).collect();
+        let d = embed::distance_matrix(&maps);
+        let sil = embed::silhouette(&d, n, &labels);
+        // MDS exists mostly for plotting; compute it to exercise the path.
+        let _coords = embed::mds_2d(&d, n);
+
+        // Compiler map's mean Jaccard distance to each phase — the red
+        // arrow lands in the competitive cluster iff d̄_comp < d̄_best.
+        let cmap = &env.compiler_map;
+        let mean_d = |phase: &[MemoryMap]| -> f64 {
+            phase.iter().map(|m| cmap.jaccard_distance(m)).sum::<f64>() / phase.len() as f64
+        };
+        table.row(&[
+            w.name().into(),
+            competitive.len().to_string(),
+            best.len().to_string(),
+            format!("{sil:.3}"),
+            format!("{:.3}", mean_d(&competitive)),
+            format!("{:.3}", mean_d(&best)),
+        ]);
+    }
+
+    println!("\n=== Figure 6: mapping-space separability (Jaccard metric) ===\n");
+    table.print();
+    println!(
+        "\npaper claims to check: silhouette > 0 (phases separable) and \
+         compiler→competitive d̄ < compiler→best d̄ (the compiler's map \
+         falls in the competitive cluster)."
+    );
+    Ok(())
+}

@@ -1,0 +1,134 @@
+//! Performance benchmark of every hot path (EXPERIMENTS.md §Perf).
+//!
+//! L3 (native Rust): environment step (rectify + liveness-aware capacity
+//! accounting + latency model), its components, Boltzmann decode/sample,
+//! EA generation machinery, Jaccard/MDS analysis.
+//!
+//! Runtime path (with artifacts): policy_fwd execution per size variant
+//! and one sac_update step — the PJRT-side costs that bound EGRL's
+//! wall-clock on this host.
+
+use egrl::bench_harness::Bench;
+use egrl::ea::BoltzmannChromosome;
+use egrl::env::MappingEnv;
+use egrl::gnn::PolicyRunner;
+use egrl::mapping::MemoryMap;
+use egrl::rl::{SacLearner, Transition};
+use egrl::runtime::Runtime;
+use egrl::sim::compiler::CompilerWorkspace;
+use egrl::sim::liveness::Liveness;
+use egrl::utils::Rng;
+use egrl::viz::embed;
+use egrl::workloads::Workload;
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::new(7);
+
+    // ---- L3: environment step throughput per workload ---------------------
+    let mut b = Bench::new("L3 simulator hot path");
+    for w in Workload::all() {
+        let env = MappingEnv::nnpi(w.build(), 1);
+        let n = env.num_nodes();
+        let mut ws = CompilerWorkspace::default();
+        // A mixed map that exercises spilling.
+        let actions: Vec<[usize; 2]> = (0..n).map(|i| [i % 3, (i + 1) % 3]).collect();
+        let map = MemoryMap::from_actions(&actions);
+        let mut local_rng = rng.fork();
+        // BEFORE (perf pass): fresh workspace each step — the naive
+        // allocating path a first implementation uses.
+        b.measure_throughput(
+            &format!("env.step alloc ({} nodes, {})", n, w.name()),
+            1.0,
+            200,
+            0.5,
+            || {
+                std::hint::black_box(env.step(&map, &mut local_rng));
+            },
+        );
+        // AFTER: workspace-reusing hot path (CompilerWorkspace).
+        b.measure_throughput(
+            &format!("env.step reuse ({} nodes, {})", n, w.name()),
+            1.0,
+            200,
+            0.5,
+            || {
+                std::hint::black_box(env.step_with(&map, &mut local_rng, &mut ws));
+            },
+        );
+    }
+
+    // ---- L3 components ------------------------------------------------------
+    let env = MappingEnv::nnpi(Workload::Bert.build(), 2);
+    let n = env.num_nodes();
+    let map = env.compiler_map.clone();
+    let mut ws = CompilerWorkspace::default();
+    b.measure("rectify only (bert)", 200, 0.5, || {
+        std::hint::black_box(env.compiler.rectify_with(&env.graph, &env.liveness, &map, &mut ws));
+    });
+    b.measure("latency model only (bert)", 200, 0.5, || {
+        std::hint::black_box(env.latency.latency(&env.graph, &map));
+    });
+    b.measure("liveness analysis (bert)", 200, 0.5, || {
+        std::hint::black_box(Liveness::analyze(&env.graph));
+    });
+    b.measure("feature extraction (bert)", 200, 0.5, || {
+        std::hint::black_box(env.graph.feature_matrix());
+    });
+
+    // ---- EA machinery -------------------------------------------------------
+    let chrom = BoltzmannChromosome::random(n, 1.0, &mut rng);
+    let mut local_rng = rng.fork();
+    b.measure_throughput("boltzmann decode+sample (bert nodes)", n as f64, 200, 0.5, || {
+        std::hint::black_box(chrom.sample_map(&mut local_rng));
+    });
+    let maps: Vec<MemoryMap> = (0..24)
+        .map(|_| {
+            let actions: Vec<[usize; 2]> =
+                (0..57).map(|_| [local_rng.below(3), local_rng.below(3)]).collect();
+            MemoryMap::from_actions(&actions)
+        })
+        .collect();
+    b.measure("jaccard distance matrix (24 maps)", 50, 0.3, || {
+        std::hint::black_box(embed::distance_matrix(&maps));
+    });
+    let d = embed::distance_matrix(&maps);
+    b.measure("MDS 2-D embedding (24 maps)", 20, 0.3, || {
+        std::hint::black_box(embed::mds_2d(&d, maps.len()));
+    });
+
+    // ---- runtime path (artifacts) ---------------------------------------------
+    let dir = Runtime::default_dir();
+    if dir.join("manifest.json").exists() {
+        let rt = Runtime::open(dir)?;
+        let mut rb = Bench::new("PJRT runtime path");
+        for w in Workload::all() {
+            let env = MappingEnv::nnpi(w.build(), 3);
+            let runner = PolicyRunner::for_env(&rt, &env)?;
+            let params = rt.actor_init()?;
+            rb.measure(
+                &format!("policy_fwd execute (N={})", runner.n_artifact),
+                10,
+                1.0,
+                || {
+                    std::hint::black_box(runner.probs(&params).unwrap());
+                },
+            );
+        }
+        // One SAC step on the smallest variant (the big ones differ only
+        // in the N² term; compiling all three costs minutes).
+        let env = MappingEnv::nnpi(Workload::ResNet50.build(), 4);
+        let mut sac = SacLearner::new(&rt, &env)?;
+        let tr = Transition { actions: vec![[0, 0]; env.num_nodes()], reward: 1.0 };
+        let batch: Vec<&Transition> = (0..sac.batch_size()).map(|_| &tr).collect();
+        let mut local_rng = rng.fork();
+        rb.measure("sac_update execute (N=64, B=24)", 3, 2.0, || {
+            std::hint::black_box(sac.update(&batch, &mut local_rng).unwrap());
+        });
+    } else {
+        println!("\n(PJRT runtime benches skipped: artifacts missing)");
+    }
+
+    println!("\nperf targets (DESIGN.md §8): env.step ≥ 50k/s on ResNet-50-sized graphs;");
+    println!("the simulator must never be the bottleneck relative to artifact execution.");
+    Ok(())
+}

@@ -1,0 +1,124 @@
+//! Greedy Dynamic Programming baseline (paper §4).
+//!
+//! Assumes conditional independence of per-node decisions: sweeps the
+//! nodes in order and, for each node, tries all 9 (weight-memory ×
+//! activation-memory) combinations while holding every other node's
+//! mapping fixed, keeping the combination with the best reward. After the
+//! last node it circles back to the first for further passes until the
+//! iteration budget runs out — each trial costs one environment iteration
+//! (one "inference"), exactly as the paper accounts for it.
+
+use super::{BestTracker, MappingAgent};
+use crate::env::MappingEnv;
+use crate::mapping::{MemKind, MemoryMap};
+use crate::metrics::RunLog;
+use crate::utils::Rng;
+
+/// The Greedy-DP agent. Starts from the paper's initial action (all-DRAM).
+pub struct GreedyDp {
+    /// Log a curve point every `log_every` iterations.
+    pub log_every: u64,
+}
+
+impl Default for GreedyDp {
+    fn default() -> Self {
+        GreedyDp { log_every: 50 }
+    }
+}
+
+impl MappingAgent for GreedyDp {
+    fn name(&self) -> &'static str {
+        "greedy-dp"
+    }
+
+    fn run(
+        &mut self,
+        env: &MappingEnv,
+        budget: u64,
+        rng: &mut Rng,
+        log: &mut RunLog,
+    ) -> MemoryMap {
+        let n = env.num_nodes();
+        let mut current = MemoryMap::all_dram(n);
+        let mut current_reward = f64::NEG_INFINITY;
+        let mut tracker = BestTracker::new(n);
+        let start = env.iterations();
+        let mut next_log = self.log_every;
+        'outer: loop {
+            let mut improved_any = false;
+            for node in 0..n {
+                let mut best_local = (current.placements[node], current_reward);
+                for w in MemKind::ALL {
+                    for a in MemKind::ALL {
+                        if env.iterations() - start >= budget {
+                            break 'outer;
+                        }
+                        let mut candidate = current.clone();
+                        candidate.placements[node].weight = w;
+                        candidate.placements[node].activation = a;
+                        let out = env.step(&candidate, rng);
+                        tracker.consider(&candidate, out.speedup);
+                        if out.reward > best_local.1 {
+                            best_local = (candidate.placements[node], out.reward);
+                        }
+                        let used = env.iterations() - start;
+                        if used >= next_log {
+                            log.push(used, tracker.best_speedup);
+                            next_log += self.log_every;
+                        }
+                    }
+                }
+                if best_local.1 > current_reward {
+                    current.placements[node] = best_local.0;
+                    current_reward = best_local.1;
+                    improved_any = true;
+                }
+            }
+            if !improved_any {
+                // Converged: a full pass changed nothing. Spend remaining
+                // budget confirming (the paper keeps iterating; re-running
+                // converged passes adds nothing under a noiseless argmax,
+                // so we stop and leave the curve flat).
+                break;
+            }
+        }
+        log.push(env.iterations() - start, tracker.best_speedup);
+        tracker.best_map
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::Workload;
+
+    #[test]
+    fn greedy_dp_improves_over_all_dram() {
+        let env = MappingEnv::nnpi(Workload::ResNet50.build(), 3);
+        let all_dram_speedup =
+            env.true_speedup(&crate::mapping::MemoryMap::all_dram(env.num_nodes()));
+        let mut agent = GreedyDp::default();
+        let mut rng = Rng::new(3);
+        // ~2.3 passes over 57 nodes × 9 combos.
+        let budget = 1200;
+        let mut log = RunLog::new("resnet50", agent.name(), 3);
+        let best = agent.run(&env, budget, &mut rng, &mut log);
+        let s = env.true_speedup(&env.compiler.rectify(&env.graph, &env.liveness, &best).map);
+        // Paper Fig. 4: Greedy-DP lands *below* the compiler on ResNet-50
+        // (0.72) but far above the all-DRAM start.
+        assert!(s > all_dram_speedup, "greedy-dp {s} <= all-dram {all_dram_speedup}");
+        assert!(s > 0.5, "greedy-dp speedup {s}");
+        assert!(log.final_speedup() > 0.0);
+        assert!(env.iterations() <= budget + 1);
+    }
+
+    #[test]
+    fn respects_budget() {
+        let env = MappingEnv::nnpi(Workload::ResNet50.build(), 4);
+        let mut agent = GreedyDp::default();
+        let mut rng = Rng::new(4);
+        let mut log = RunLog::new("resnet50", agent.name(), 4);
+        agent.run(&env, 100, &mut rng, &mut log);
+        assert!(env.iterations() <= 100);
+    }
+}

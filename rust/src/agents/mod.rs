@@ -1,0 +1,74 @@
+//! Search-baseline agents from the paper's §4 (non-population methods):
+//! Greedy-DP and random search, sharing the [`MappingAgent`] interface the
+//! benchmark harness drives. (EGRL / EA-only / PG-only are run through
+//! [`crate::coordinator`], which produces the same [`RunLog`] curves.)
+
+pub mod greedy_dp;
+pub mod random_search;
+
+use crate::env::MappingEnv;
+use crate::mapping::MemoryMap;
+use crate::metrics::RunLog;
+use crate::utils::Rng;
+
+pub use greedy_dp::GreedyDp;
+pub use random_search::RandomSearch;
+
+/// A search agent that optimizes a memory map against an environment
+/// within an iteration budget.
+pub trait MappingAgent {
+    fn name(&self) -> &'static str;
+
+    /// Run until `budget` env iterations are consumed; log the best-so-far
+    /// curve into `log` and return the best map found.
+    fn run(
+        &mut self,
+        env: &MappingEnv,
+        budget: u64,
+        rng: &mut Rng,
+        log: &mut RunLog,
+    ) -> MemoryMap;
+}
+
+/// Track-best helper shared by the simple agents: evaluates an outcome
+/// and updates (best_map, best_measured) when a valid map improves.
+pub(crate) struct BestTracker {
+    pub best_map: MemoryMap,
+    pub best_speedup: f64,
+}
+
+impl BestTracker {
+    pub fn new(n: usize) -> BestTracker {
+        BestTracker { best_map: MemoryMap::all_dram(n), best_speedup: 0.0 }
+    }
+
+    /// Returns true when this outcome improved the best.
+    pub fn consider(&mut self, map: &MemoryMap, speedup: Option<f64>) -> bool {
+        if let Some(s) = speedup {
+            if s > self.best_speedup {
+                self.best_speedup = s;
+                self.best_map = map.clone();
+                return true;
+            }
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapping::MemKind;
+
+    #[test]
+    fn tracker_keeps_best_valid() {
+        let mut t = BestTracker::new(3);
+        let a = MemoryMap::constant(3, MemKind::Llc);
+        assert!(t.consider(&a, Some(1.2)));
+        let b = MemoryMap::constant(3, MemKind::Sram);
+        assert!(!t.consider(&b, Some(1.1)));
+        assert!(!t.consider(&b, None));
+        assert_eq!(t.best_map, a);
+        assert_eq!(t.best_speedup, 1.2);
+    }
+}

@@ -1,0 +1,140 @@
+//! Criterion-substitute benchmark harness (criterion is not vendored in
+//! the offline image — DESIGN.md §2).
+//!
+//! Provides the two things the paper-reproduction benches need:
+//! * [`Bench`] — named timing measurements with warmup and a formatted
+//!   report (for the perf_hotpath bench);
+//! * [`Table`] — aligned experiment tables printed row-by-row (one table
+//!   per paper figure), with the paper's reference values alongside the
+//!   measured ones.
+
+use crate::utils::timer::{bench_loop, BenchResult};
+
+/// A named group of timing measurements.
+pub struct Bench {
+    name: String,
+    results: Vec<(String, BenchResult)>,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Bench {
+        println!("\n== bench: {name} ==");
+        Bench { name: name.to_string(), results: Vec::new() }
+    }
+
+    /// Measure a closure (warmup + timed iterations).
+    pub fn measure<F: FnMut()>(&mut self, label: &str, min_iters: u64, min_time_s: f64, f: F) {
+        let r = bench_loop(f, min_iters, min_time_s);
+        println!("  {label:<44} {r}");
+        self.results.push((label.to_string(), r));
+    }
+
+    /// Throughput report entry (items/second given per-iteration count).
+    pub fn measure_throughput<F: FnMut()>(
+        &mut self,
+        label: &str,
+        items_per_iter: f64,
+        min_iters: u64,
+        min_time_s: f64,
+        f: F,
+    ) {
+        let r = bench_loop(f, min_iters, min_time_s);
+        let tput = items_per_iter * r.throughput_per_s();
+        println!("  {label:<44} {r}   [{tput:>12.0} items/s]");
+        self.results.push((label.to_string(), r));
+    }
+
+    pub fn results(&self) -> &[(String, BenchResult)] {
+        &self.results
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+/// Aligned experiment table.
+pub struct Table {
+    headers: Vec<String>,
+    widths: Vec<usize>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        let widths = headers.iter().map(|h| h.len().max(10)).collect();
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            widths,
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        for (i, c) in cells.iter().enumerate() {
+            self.widths[i] = self.widths[i].max(c.len());
+        }
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Print the full table.
+    pub fn print(&self) {
+        let line = |cells: &[String], widths: &[usize]| {
+            let mut s = String::new();
+            for (c, w) in cells.iter().zip(widths) {
+                s.push_str(&format!("{c:<width$}  ", width = w));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers, &self.widths);
+        let total: usize = self.widths.iter().sum::<usize>() + 2 * self.widths.len();
+        println!("{}", "-".repeat(total));
+        for r in &self.rows {
+            line(r, &self.widths);
+        }
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.rows.len()
+    }
+}
+
+/// Format a mean ± std pair.
+pub fn pm(mean: f64, std: f64) -> String {
+    format!("{mean:.2} ± {std:.2}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_records_results() {
+        let mut b = Bench::new("test");
+        let mut x = 0u64;
+        b.measure("noop", 5, 0.0, || x += 1);
+        assert_eq!(b.results().len(), 1);
+        assert!(b.results()[0].1.iters >= 5);
+    }
+
+    #[test]
+    fn table_tracks_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["x".into(), "y".into()]);
+        assert_eq!(t.num_rows(), 1);
+        t.print();
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(&["a"]);
+        t.row(&["x".into(), "y".into()]);
+    }
+
+    #[test]
+    fn pm_formats() {
+        assert_eq!(pm(1.284, 0.056), "1.28 ± 0.06");
+    }
+}

@@ -1,0 +1,160 @@
+//! Hand-rolled CLI argument parsing (clap is not vendored offline).
+//!
+//! Grammar: `egrl <subcommand> [--flag value]... [--bool-flag]...`
+//! with `--set key=value` repeatable config overrides.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Cli {
+    pub subcommand: String,
+    flags: BTreeMap<String, Vec<String>>,
+}
+
+impl Cli {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> anyhow::Result<Cli> {
+        let mut it = args.into_iter().peekable();
+        let subcommand = it.next().unwrap_or_else(|| "help".to_string());
+        anyhow::ensure!(
+            !subcommand.starts_with("--"),
+            "expected a subcommand before flags, got '{subcommand}'"
+        );
+        let mut flags: BTreeMap<String, Vec<String>> = BTreeMap::new();
+        while let Some(arg) = it.next() {
+            let name = arg
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow::anyhow!("expected --flag, got '{arg}'"))?
+                .to_string();
+            anyhow::ensure!(!name.is_empty(), "empty flag name");
+            // A flag's value is the next token unless it is another flag.
+            let value = match it.peek() {
+                Some(next) if !next.starts_with("--") => it.next().unwrap(),
+                _ => String::from("true"),
+            };
+            flags.entry(name).or_default().push(value);
+        }
+        Ok(Cli { subcommand, flags })
+    }
+
+    pub fn parse_env() -> anyhow::Result<Cli> {
+        Cli::parse(std::env::args().skip(1))
+    }
+
+    /// Last value of a flag.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    /// All values of a repeatable flag.
+    pub fn get_all(&self, name: &str) -> &[String] {
+        self.flags.get(name).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> anyhow::Result<u64> {
+        match self.get(name) {
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{name}: bad integer '{v}'")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        matches!(self.get(name), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Apply `--set key=value` overrides to a config.
+    pub fn apply_overrides(&self, cfg: &mut crate::config::EgrlConfig) -> anyhow::Result<()> {
+        for kv in self.get_all("set") {
+            let (k, v) = kv
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("--set expects key=value, got '{kv}'"))?;
+            cfg.set(k.trim(), v.trim())?;
+        }
+        if let Some(path) = self.get("config") {
+            cfg.load_overrides(path)?;
+        }
+        Ok(())
+    }
+}
+
+/// Usage text for the launcher.
+pub const USAGE: &str = "\
+egrl — Evolutionary Graph RL for memory placement (ICLR'21 reproduction)
+
+USAGE:
+  egrl <SUBCOMMAND> [FLAGS]
+
+SUBCOMMANDS:
+  train      Train an agent on a workload
+             --workload resnet50|resnet101|bert   (default resnet50)
+             --agent egrl|ea|pg|greedy-dp|random  (default egrl)
+             --steps N        iteration budget    (default 4000)
+             --seed N                              (default 0)
+             --artifacts DIR  AOT artifacts        (default artifacts/)
+             --no-artifacts   EA with Boltzmann-only population
+             --out FILE       write CSV curve
+             --set key=value  config override (repeatable)
+             --config FILE    key=value config file
+  compile    Run the native-compiler baseline and print its mapping stats
+             --workload ...
+  smoke      Verify artifacts against the manifest smoke vector
+  info       Print workload statistics
+  help       This text
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli(s: &str) -> Cli {
+        Cli::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let c = cli("train --workload bert --steps 100 --verbose");
+        assert_eq!(c.subcommand, "train");
+        assert_eq!(c.get("workload"), Some("bert"));
+        assert_eq!(c.get_u64("steps", 0).unwrap(), 100);
+        assert!(c.get_bool("verbose"));
+        assert!(!c.get_bool("quiet"));
+    }
+
+    #[test]
+    fn repeatable_set_flags() {
+        let c = cli("train --set a=1 --set b=2");
+        assert_eq!(c.get_all("set"), &["a=1".to_string(), "b=2".to_string()]);
+    }
+
+    #[test]
+    fn apply_overrides_to_config() {
+        let c = cli("train --set pop_size=8 --set alpha=0.2");
+        let mut cfg = crate::config::EgrlConfig::default();
+        c.apply_overrides(&mut cfg).unwrap();
+        assert_eq!(cfg.pop_size, 8);
+        assert_eq!(cfg.alpha, 0.2);
+    }
+
+    #[test]
+    fn rejects_flag_as_subcommand() {
+        assert!(Cli::parse(["--oops".to_string()]).is_err());
+    }
+
+    #[test]
+    fn defaults_for_missing_flags() {
+        let c = cli("train");
+        assert_eq!(c.get_or("workload", "resnet50"), "resnet50");
+        assert_eq!(c.get_u64("steps", 4000).unwrap(), 4000);
+    }
+
+    #[test]
+    fn bad_integer_is_error() {
+        let c = cli("train --steps abc");
+        assert!(c.get_u64("steps", 0).is_err());
+    }
+}

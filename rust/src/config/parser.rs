@@ -1,0 +1,69 @@
+//! Minimal `key = value` config-file parser (TOML subset): one pair per
+//! line, `#` comments, blank lines and `[section]` headers ignored
+//! (sections exist purely for human organization), values taken verbatim
+//! with surrounding quotes stripped.
+
+/// Parse config text into ordered key/value pairs.
+pub fn parse_kv(text: &str) -> anyhow::Result<Vec<(String, String)>> {
+    let mut out = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() || (line.starts_with('[') && line.ends_with(']')) {
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("config line {}: expected 'key = value', got '{raw}'", lineno + 1))?;
+        let key = k.trim();
+        let mut val = v.trim();
+        if val.len() >= 2
+            && ((val.starts_with('"') && val.ends_with('"'))
+                || (val.starts_with('\'') && val.ends_with('\'')))
+        {
+            val = &val[1..val.len() - 1];
+        }
+        anyhow::ensure!(!key.is_empty(), "config line {}: empty key", lineno + 1);
+        out.push((key.to_string(), val.to_string()));
+    }
+    Ok(out)
+}
+
+/// Remove a trailing `#` comment (no `#` inside quoted values supported —
+/// the config schema has no string values that contain '#').
+fn strip_comment(line: &str) -> &str {
+    match line.find('#') {
+        Some(i) => &line[..i],
+        None => line,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_pairs_comments_sections() {
+        let text = "# run config\n[trainer]\npop_size = 20\nalpha = 0.05 # entropy\n\nname = \"egrl\"\n";
+        let kv = parse_kv(text).unwrap();
+        assert_eq!(
+            kv,
+            vec![
+                ("pop_size".to_string(), "20".to_string()),
+                ("alpha".to_string(), "0.05".to_string()),
+                ("name".to_string(), "egrl".to_string()),
+            ]
+        );
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(parse_kv("just words\n").is_err());
+        assert!(parse_kv("= novalue\n").is_err());
+    }
+
+    #[test]
+    fn strips_single_quotes() {
+        let kv = parse_kv("w = 'bert'\n").unwrap();
+        assert_eq!(kv[0].1, "bert");
+    }
+}

@@ -1,0 +1,390 @@
+//! The EGRL trainer (paper Algorithm 2, Figure 2).
+//!
+//! One [`Trainer`] owns: the environment, the mixed EA population, the
+//! shared replay buffer, the SAC learner (PG) and the PJRT policy runner.
+//! Per generation it
+//!
+//! 1. rolls out every population member (+ one noisy PG rollout), storing
+//!    every transition in the shared replay buffer;
+//! 2. ranks by fitness, preserves elites, rebuilds the rest via
+//!    tournament selection, crossover (with GNN→Boltzmann posterior
+//!    seeding across encodings) and Gaussian mutation;
+//! 3. runs SAC gradient steps through the AOT artifact (one per env step,
+//!    Table 2) on minibatches sampled from the shared buffer;
+//! 4. periodically migrates the PG actor into the population, replacing
+//!    the weakest member.
+//!
+//! The same struct also drives the paper's ablation baselines: **EA-only**
+//! (no PG learner, no migration) and **PG-only** (no population).
+
+use std::sync::Arc;
+
+use crate::config::EgrlConfig;
+use crate::ea::population::{EvolveParams, Genome, Population};
+use crate::env::MappingEnv;
+use crate::gnn::PolicyRunner;
+use crate::mapping::MemoryMap;
+use crate::metrics::RunLog;
+use crate::rl::{Replay, SacLearner, Transition};
+use crate::runtime::Runtime;
+use crate::utils::Rng;
+
+/// Which of the paper's agents to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    /// Full EGRL: EA population + PG learner + shared replay + migration.
+    Egrl,
+    /// Evolution only (PG ablated) — the paper's "EA" agent.
+    EaOnly,
+    /// Policy gradient only (EA ablated) — the paper's "PG" agent.
+    PgOnly,
+}
+
+impl Mode {
+    pub fn name(self) -> &'static str {
+        match self {
+            Mode::Egrl => "egrl",
+            Mode::EaOnly => "ea",
+            Mode::PgOnly => "pg",
+        }
+    }
+
+    pub fn uses_population(self) -> bool {
+        !matches!(self, Mode::PgOnly)
+    }
+
+    pub fn uses_pg(self) -> bool {
+        !matches!(self, Mode::EaOnly)
+    }
+}
+
+/// Result of a training run.
+#[derive(Clone, Debug)]
+pub struct TrainResult {
+    pub best_map: MemoryMap,
+    /// Noise-free speedup of the best map vs. the native compiler.
+    pub best_speedup: f64,
+    pub iterations: u64,
+}
+
+/// The EGRL trainer.
+pub struct Trainer {
+    pub env: Arc<MappingEnv>,
+    pub cfg: EgrlConfig,
+    pub mode: Mode,
+    runner: Option<PolicyRunner>,
+    sac: Option<SacLearner>,
+    pop: Population,
+    replay: Replay,
+    rng: Rng,
+    best_map: MemoryMap,
+    best_measured: f64,
+    generations: u64,
+}
+
+impl Trainer {
+    /// Build a trainer.
+    ///
+    /// `runtime == None` is supported for artifact-free operation (pure
+    /// simulator tests and fast benches): the population then consists
+    /// entirely of Boltzmann chromosomes and PG is unavailable (EGRL/PG
+    /// modes require a runtime).
+    pub fn new(
+        env: Arc<MappingEnv>,
+        cfg: EgrlConfig,
+        mode: Mode,
+        runtime: Option<&Runtime>,
+    ) -> anyhow::Result<Trainer> {
+        let mut rng = Rng::new(cfg.seed);
+        let (runner, sac, gnn_seed) = match runtime {
+            Some(rt) => {
+                let runner = PolicyRunner::for_env(rt, &env)?;
+                let sac = if mode.uses_pg() { Some(SacLearner::new(rt, &env)?) } else { None };
+                let seed = rt.actor_init()?;
+                (Some(runner), sac, Some(seed))
+            }
+            None => {
+                anyhow::ensure!(
+                    mode == Mode::EaOnly,
+                    "mode {:?} needs the AOT runtime (artifacts/)",
+                    mode
+                );
+                (None, None, None)
+            }
+        };
+        let n = env.num_nodes();
+        let pop = if mode.uses_population() {
+            let n_boltzmann = if gnn_seed.is_some() {
+                cfg.boltzmann_count().min(cfg.pop_size)
+            } else {
+                cfg.pop_size // artifact-free: all Boltzmann
+            };
+            Population::init(
+                cfg.pop_size,
+                n_boltzmann,
+                n,
+                cfg.boltzmann_init_temp,
+                gnn_seed.as_deref(),
+                &mut rng,
+            )
+        } else {
+            Population { members: Vec::new() }
+        };
+        let replay = Replay::new(cfg.replay_capacity);
+        Ok(Trainer {
+            best_map: MemoryMap::all_dram(n),
+            env,
+            cfg,
+            mode,
+            runner,
+            sac,
+            pop,
+            replay,
+            rng,
+            best_measured: 0.0,
+            generations: 0,
+        })
+    }
+
+    /// Number of generations executed.
+    pub fn generations(&self) -> u64 {
+        self.generations
+    }
+
+    /// Read access to the current population (diagnostics / Fig-6 dumps).
+    pub fn population(&self) -> &Population {
+        &self.pop
+    }
+
+    /// Current PG actor parameters (for the Fig-5 generalization runs).
+    pub fn pg_actor_params(&self) -> Option<&[f32]> {
+        self.sac.as_ref().map(|s| s.actor_params())
+    }
+
+    /// Best map found so far.
+    pub fn best_map(&self) -> &MemoryMap {
+        &self.best_map
+    }
+
+    /// Roll out one genome: decode → env.step → replay push. Returns the
+    /// (noisy) fitness.
+    fn rollout_genome(&mut self, idx: usize) -> anyhow::Result<f64> {
+        let map = match &self.pop.members[idx].genome {
+            Genome::Gnn(params) => {
+                let runner = self.runner.as_ref().expect("GNN member without runtime");
+                let probs = runner.probs(params)?;
+                // EA GNN members act greedily; exploration lives in their
+                // weight-space mutations (Appendix C "Mixed Exploration").
+                runner.greedy_map(&probs)
+            }
+            Genome::Boltzmann(bz) => bz.sample_map(&mut self.rng),
+        };
+        let out = self.env.step(&map, &mut self.rng);
+        self.replay.push(Transition::from_map(&map, out.reward));
+        if let Some(s) = out.speedup {
+            if s > self.best_measured {
+                self.best_measured = s;
+                self.best_map = out.rectified.clone();
+            }
+        }
+        Ok(out.reward)
+    }
+
+    /// One noisy PG-actor rollout (action-space exploration).
+    fn rollout_pg(&mut self) -> anyhow::Result<()> {
+        let (runner, sac) = match (&self.runner, &self.sac) {
+            (Some(r), Some(s)) => (r, s),
+            _ => return Ok(()),
+        };
+        let probs = runner.probs(sac.actor_params())?;
+        let map = runner.noisy_sample_map(&probs, 0.1, &mut self.rng);
+        let out = self.env.step(&map, &mut self.rng);
+        self.replay.push(Transition::from_map(&map, out.reward));
+        if let Some(s) = out.speedup {
+            if s > self.best_measured {
+                self.best_measured = s;
+                self.best_map = out.rectified.clone();
+            }
+        }
+        Ok(())
+    }
+
+    /// One full generation. Returns env steps consumed.
+    pub fn generation(&mut self) -> anyhow::Result<u64> {
+        let start = self.env.iterations();
+        // --- rollouts ------------------------------------------------------
+        if self.mode.uses_population() {
+            for i in 0..self.pop.len() {
+                let fit = self.rollout_genome(i)?;
+                self.pop.members[i].fitness = fit;
+            }
+        }
+        if self.mode.uses_pg() {
+            for _ in 0..self.cfg.pg_rollouts.max(1) {
+                self.rollout_pg()?;
+            }
+        }
+        let steps = self.env.iterations() - start;
+        // --- evolution -------------------------------------------------------
+        if self.mode.uses_population() {
+            let params = EvolveParams {
+                elites: self.cfg.elites,
+                mut_prob: self.cfg.mut_prob,
+                mut_std: self.cfg.mut_std as f32,
+                mut_frac: self.cfg.mut_frac,
+                tournament: 3,
+            };
+            let runner = self.runner.as_ref();
+            let mut posterior =
+                |g: &[f32]| -> Option<Vec<f32>> { runner.and_then(|r| r.probs(g).ok()) };
+            // Split-borrow dance: rng lives in self, population too.
+            let mut rng = self.rng.fork();
+            self.pop.evolve(params, &mut rng, &mut posterior);
+        }
+        // --- policy-gradient updates ----------------------------------------
+        if let Some(sac) = self.sac.as_mut() {
+            let b = sac.batch_size();
+            if self.replay.total_pushed() >= b as u64 {
+                let ups = steps as usize * self.cfg.grad_steps_per_env_step
+                    / self.cfg.update_every.max(1);
+                for _ in 0..ups {
+                    let batch = self.replay.sample(b, &mut self.rng);
+                    sac.update(&batch, &mut self.rng)?;
+                }
+            }
+            // --- migration (Algorithm 2 line 38) ----------------------------
+            if self.mode == Mode::Egrl
+                && self.generations % self.cfg.migration_period.max(1) as u64 == 0
+                && !self.pop.is_empty()
+            {
+                let params = sac.actor_params().to_vec();
+                self.pop.migrate_pg(&params);
+            }
+        }
+        self.generations += 1;
+        Ok(steps)
+    }
+
+    /// Train until the configured iteration budget is exhausted,
+    /// logging the best-so-far (noise-free) speedup per generation.
+    pub fn run(&mut self, log: &mut RunLog) -> anyhow::Result<TrainResult> {
+        while self.env.iterations() < self.cfg.total_steps {
+            self.generation()?;
+            let true_speedup = self.current_best_true_speedup();
+            log.push(self.env.iterations(), true_speedup);
+            if let Some(sac) = &self.sac {
+                log.sac_curve.push((
+                    self.env.iterations(),
+                    sac.last_metrics.critic_loss,
+                    sac.last_metrics.entropy,
+                ));
+            }
+        }
+        Ok(TrainResult {
+            best_map: self.best_map.clone(),
+            best_speedup: self.current_best_true_speedup(),
+            iterations: self.env.iterations(),
+        })
+    }
+
+    /// Noise-free speedup of the current best map (0 until a valid map
+    /// has been found).
+    pub fn current_best_true_speedup(&self) -> f64 {
+        if self.best_measured == 0.0 {
+            return 0.0;
+        }
+        self.env.true_speedup(&self.best_map)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::Workload;
+
+    fn quick_cfg(steps: u64, seed: u64) -> EgrlConfig {
+        EgrlConfig {
+            seed,
+            total_steps: steps,
+            pop_size: 10,
+            elites: 2,
+            noise_std: 0.02,
+            ..Default::default()
+        }
+    }
+
+    /// Artifact-free EA-only trainer (all-Boltzmann population) — the
+    /// pure-Rust integration path, fast enough for unit tests.
+    fn ea_trainer(steps: u64, seed: u64) -> Trainer {
+        let env = Arc::new(MappingEnv::nnpi(Workload::ResNet50.build(), seed));
+        Trainer::new(env, quick_cfg(steps, seed), Mode::EaOnly, None).unwrap()
+    }
+
+    #[test]
+    fn ea_only_without_artifacts_trains() {
+        let mut t = ea_trainer(300, 1);
+        let mut log = RunLog::new("resnet50", "ea", 1);
+        let res = t.run(&mut log).unwrap();
+        assert!(res.iterations >= 300);
+        assert!(res.best_speedup > 0.0, "never found a valid map");
+        assert!(t.generations() >= 20);
+    }
+
+    #[test]
+    fn ea_beats_random_search_on_resnet50() {
+        let mut t = ea_trainer(800, 2);
+        let mut log = RunLog::new("resnet50", "ea", 2);
+        let res = t.run(&mut log).unwrap();
+
+        let env = MappingEnv::nnpi(Workload::ResNet50.build(), 2);
+        let mut rs = crate::agents::RandomSearch::default();
+        let mut rng = Rng::new(2);
+        let mut rlog = RunLog::new("resnet50", "random", 2);
+        use crate::agents::MappingAgent;
+        rs.run(&env, 800, &mut rng, &mut rlog);
+        assert!(
+            res.best_speedup >= rlog.final_speedup(),
+            "EA {} < random {}",
+            res.best_speedup,
+            rlog.final_speedup()
+        );
+    }
+
+    #[test]
+    fn best_curve_is_monotone() {
+        let mut t = ea_trainer(400, 3);
+        let mut log = RunLog::new("resnet50", "ea", 3);
+        t.run(&mut log).unwrap();
+        let mut prev = 0.0;
+        for p in &log.points {
+            assert!(p.best_speedup + 1e-9 >= prev, "curve decreased");
+            prev = p.best_speedup;
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let run = |seed| {
+            let mut t = ea_trainer(200, seed);
+            let mut log = RunLog::new("resnet50", "ea", seed);
+            t.run(&mut log).unwrap().best_speedup
+        };
+        assert_eq!(run(7), run(7));
+        // And different seeds explore differently (almost surely).
+        assert_ne!(run(7), run(8));
+    }
+
+    #[test]
+    fn pg_mode_requires_runtime() {
+        let env = Arc::new(MappingEnv::nnpi(Workload::ResNet50.build(), 5));
+        assert!(Trainer::new(env, quick_cfg(10, 5), Mode::PgOnly, None).is_err());
+    }
+
+    #[test]
+    fn replay_grows_with_rollouts() {
+        let mut t = ea_trainer(100, 6);
+        let mut log = RunLog::new("resnet50", "ea", 6);
+        t.run(&mut log).unwrap();
+        assert!(t.replay.len() >= 100);
+    }
+}

@@ -1,0 +1,236 @@
+//! Boltzmann chromosome (paper §3.2 and Appendix E).
+//!
+//! A fast, stateless policy encoding: for every node and sub-action the
+//! chromosome stores a prior preference vector `P` over the three memory
+//! choices and a temperature `T`. Decoding samples each decision from
+//! `softmax(P / T)`. The temperature is *learned per node by evolution*,
+//! so different mapping decisions can sit at different
+//! exploration/exploitation trade-offs simultaneously — the property the
+//! paper credits for the improved sample-efficiency of the EA.
+//!
+//! The L1 Pallas kernel `kernels/boltzmann.py` implements the identical
+//! decode (same temperature floor) for the artifact path; this Rust decode
+//! is the population hot path (thousands of decodes per generation), and
+//! the two are cross-checked in the integration tests.
+
+use crate::mapping::MemoryMap;
+use crate::utils::math::boltzmann_softmax;
+use crate::utils::Rng;
+
+/// Per-node priors + temperatures for both sub-actions.
+#[derive(Clone, Debug)]
+pub struct BoltzmannChromosome {
+    /// Number of graph nodes.
+    pub n: usize,
+    /// Priors, `[n * 2 * 3]` (node-major, then sub-action, then choice).
+    pub priors: Vec<f32>,
+    /// Temperatures, `[n * 2]`.
+    pub temps: Vec<f32>,
+}
+
+impl BoltzmannChromosome {
+    /// Random chromosome: small-noise priors biased toward DRAM (choice
+    /// 0) at the configured initial temperature. The DRAM bias implements
+    /// Table 2's *initial mapping action = DRAM*: all-DRAM is the one
+    /// always-valid placement, so fresh chromosomes start inside the
+    /// positive-reward region and evolution explores upward from there
+    /// instead of having to first escape the -ε invalid cliff.
+    pub fn random(n: usize, init_temp: f32, rng: &mut Rng) -> BoltzmannChromosome {
+        BoltzmannChromosome {
+            n,
+            priors: (0..n * 6)
+                .map(|i| {
+                    let dram_bias = if i % 3 == 0 { 0.8 } else { 0.0 };
+                    dram_bias + (rng.normal() as f32) * 0.6
+                })
+                .collect(),
+            temps: (0..n * 2)
+                .map(|_| init_temp * ((rng.normal() as f32) * 0.1).exp())
+                .collect(),
+        }
+    }
+
+    /// Decode to per-decision probability vectors `[n * 2 * 3]`.
+    pub fn decode(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.n * 6);
+        for i in 0..self.n * 2 {
+            let p = boltzmann_softmax(&self.priors[i * 3..i * 3 + 3], self.temps[i]);
+            out.extend_from_slice(&p);
+        }
+        out
+    }
+
+    /// Sample a complete memory map.
+    pub fn sample_map(&self, rng: &mut Rng) -> MemoryMap {
+        let mut actions = Vec::with_capacity(self.n);
+        for node in 0..self.n {
+            let mut pair = [0usize; 2];
+            for (k, slot) in pair.iter_mut().enumerate() {
+                let i = node * 2 + k;
+                let p = boltzmann_softmax(&self.priors[i * 3..i * 3 + 3], self.temps[i]);
+                *slot = rng.categorical(&p);
+            }
+            actions.push(pair);
+        }
+        MemoryMap::from_actions(&actions)
+    }
+
+    /// Gaussian mutation: perturb a fraction of priors additively and the
+    /// corresponding temperatures multiplicatively (log-space noise keeps
+    /// them positive).
+    pub fn mutate(&mut self, std: f32, frac: f64, rng: &mut Rng) {
+        // Priors live on a logit scale of O(1): amplify the configured
+        // (GNN-weight-scale) σ so single mutations can actually flip a
+        // decision's argmax rather than only nudging it.
+        let prior_std = 4.0 * std;
+        for p in self.priors.iter_mut() {
+            if rng.chance(frac) {
+                *p += (rng.normal() as f32) * prior_std;
+            }
+        }
+        for t in self.temps.iter_mut() {
+            if rng.chance(frac) {
+                *t = (*t * ((rng.normal() as f32) * std).exp()).clamp(1e-3, 100.0);
+            }
+        }
+    }
+
+    /// Single-point crossover on node boundaries (Algorithm 2 line 15).
+    pub fn crossover(&self, other: &BoltzmannChromosome, rng: &mut Rng) -> BoltzmannChromosome {
+        assert_eq!(self.n, other.n);
+        let cut = rng.range(1, self.n.max(2));
+        let mut child = self.clone();
+        child.priors[cut * 6..].copy_from_slice(&other.priors[cut * 6..]);
+        child.temps[cut * 2..].copy_from_slice(&other.temps[cut * 2..]);
+        child
+    }
+
+    /// Seed the prior from a GNN policy's posterior probabilities
+    /// (Algorithm 2 lines 17–18 / Figure 2 "seed prior"): the chromosome
+    /// bootstraps from gradient-learned knowledge while keeping its own
+    /// temperatures, i.e. its own exploration schedule.
+    pub fn seed_from_posterior(&mut self, probs: &[f32]) {
+        assert!(probs.len() >= self.n * 6, "posterior shorter than chromosome");
+        // Use the probabilities directly as priors: softmax(p/T) at T=1
+        // reproduces the posterior's ranking with mild flattening, and
+        // low evolved temperatures sharpen toward its argmax.
+        self.priors[..self.n * 6].copy_from_slice(&probs[..self.n * 6]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::check;
+
+    #[test]
+    fn decode_produces_simplices() {
+        let mut rng = Rng::new(1);
+        let c = BoltzmannChromosome::random(10, 1.0, &mut rng);
+        let probs = c.decode();
+        assert_eq!(probs.len(), 60);
+        for chunk in probs.chunks(3) {
+            let s: f32 = chunk.iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+            assert!(chunk.iter().all(|&p| p >= 0.0));
+        }
+    }
+
+    #[test]
+    fn prop_decode_simplex_for_arbitrary_params() {
+        check(
+            "boltzmann decode valid for arbitrary priors/temps",
+            100,
+            |g| {
+                let n = g.usize_in(1, 30);
+                let mut c = BoltzmannChromosome::random(n, 1.0, g.rng());
+                for p in c.priors.iter_mut() {
+                    *p = g.f32_in(-50.0, 50.0);
+                }
+                for t in c.temps.iter_mut() {
+                    *t = g.f32_in(0.0, 20.0);
+                }
+                (n, c)
+            },
+            |_, c| {
+                c.decode().chunks(3).all(|ch| {
+                    let s: f32 = ch.iter().sum();
+                    ch.iter().all(|p| p.is_finite() && *p >= 0.0) && (s - 1.0).abs() < 1e-4
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn low_temperature_exploits_prior() {
+        let mut rng = Rng::new(2);
+        let mut c = BoltzmannChromosome::random(1, 1.0, &mut rng);
+        c.priors = vec![0.0, 5.0, 0.0, 5.0, 0.0, 0.0];
+        c.temps = vec![0.01, 0.01];
+        let counts = (0..200).fold([0usize; 2], |mut acc, _| {
+            let m = c.sample_map(&mut rng);
+            if m.placements[0].weight.index() == 1 {
+                acc[0] += 1;
+            }
+            if m.placements[0].activation.index() == 0 {
+                acc[1] += 1;
+            }
+            acc
+        });
+        assert_eq!(counts, [200, 200]);
+    }
+
+    #[test]
+    fn high_temperature_explores() {
+        let mut rng = Rng::new(3);
+        let mut c = BoltzmannChromosome::random(1, 1.0, &mut rng);
+        c.priors = vec![0.0, 5.0, 0.0, 0.0, 0.0, 0.0];
+        c.temps = vec![100.0, 100.0];
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..300 {
+            seen.insert(c.sample_map(&mut rng).placements[0].weight.index());
+        }
+        assert_eq!(seen.len(), 3, "high T should visit all choices");
+    }
+
+    #[test]
+    fn crossover_prefix_suffix_structure() {
+        let mut rng = Rng::new(4);
+        let a = BoltzmannChromosome::random(8, 1.0, &mut rng);
+        let b = BoltzmannChromosome::random(8, 1.0, &mut rng);
+        let child = a.crossover(&b, &mut rng);
+        // Every gene comes from one of the parents.
+        for i in 0..child.priors.len() {
+            assert!(child.priors[i] == a.priors[i] || child.priors[i] == b.priors[i]);
+        }
+        // Prefix from a, suffix from b.
+        assert_eq!(child.priors[0], a.priors[0]);
+        assert_eq!(*child.priors.last().unwrap(), *b.priors.last().unwrap());
+    }
+
+    #[test]
+    fn mutation_keeps_temps_positive() {
+        let mut rng = Rng::new(5);
+        let mut c = BoltzmannChromosome::random(20, 1.0, &mut rng);
+        for _ in 0..50 {
+            c.mutate(2.0, 0.9, &mut rng);
+        }
+        assert!(c.temps.iter().all(|&t| t >= 1e-3 && t.is_finite()));
+    }
+
+    #[test]
+    fn seeding_adopts_posterior_ranking() {
+        let mut rng = Rng::new(6);
+        let mut c = BoltzmannChromosome::random(2, 0.05, &mut rng);
+        // Posterior strongly prefers SRAM (index 2) everywhere.
+        let probs: Vec<f32> = (0..12)
+            .map(|i| if i % 3 == 2 { 0.9 } else { 0.05 })
+            .collect();
+        c.seed_from_posterior(&probs);
+        let m = c.sample_map(&mut rng);
+        assert!(m
+            .placements
+            .iter()
+            .all(|p| p.weight.index() == 2 && p.activation.index() == 2));
+    }
+}

@@ -1,0 +1,8 @@
+//! Evolutionary half of EGRL: the mixed population of GNN and Boltzmann
+//! chromosomes, with selection, crossover and mutation per Algorithm 2.
+
+pub mod boltzmann;
+pub mod population;
+
+pub use boltzmann::BoltzmannChromosome;
+pub use population::{Genome, Individual, Population};

@@ -1,0 +1,323 @@
+//! Mixed evolutionary population (Algorithm 2).
+//!
+//! Holds GNN genomes (flat parameter vectors) and Boltzmann chromosomes
+//! side by side. Each generation: rank by fitness, keep `e` elites
+//! unchanged, rebuild the rest from tournament-selected parents via
+//! crossover (single-point within an encoding; GNN→Boltzmann *seeding*
+//! across encodings, lines 14–19) and Gaussian mutation.
+
+use super::boltzmann::BoltzmannChromosome;
+use crate::gnn::perturb_params;
+use crate::utils::Rng;
+
+/// A population member's policy encoding.
+#[derive(Clone, Debug)]
+pub enum Genome {
+    /// Flat GNN parameter vector (decoded by the policy_fwd artifact).
+    Gnn(Vec<f32>),
+    /// Direct Boltzmann mapping-distribution encoding.
+    Boltzmann(BoltzmannChromosome),
+}
+
+impl Genome {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Genome::Gnn(_) => "gnn",
+            Genome::Boltzmann(_) => "boltzmann",
+        }
+    }
+}
+
+/// Genome + last-evaluated fitness.
+#[derive(Clone, Debug)]
+pub struct Individual {
+    pub genome: Genome,
+    pub fitness: f64,
+}
+
+/// EA hyperparameters needed by `evolve` (a slice of EgrlConfig).
+#[derive(Clone, Copy, Debug)]
+pub struct EvolveParams {
+    pub elites: usize,
+    pub mut_prob: f64,
+    pub mut_std: f32,
+    pub mut_frac: f64,
+    pub tournament: usize,
+}
+
+/// The population container.
+pub struct Population {
+    pub members: Vec<Individual>,
+}
+
+impl Population {
+    /// Initialize a mixed population: `n_boltzmann` Boltzmann chromosomes
+    /// and the rest GNN genomes perturbed from `gnn_seed` (when provided;
+    /// an all-Boltzmann population needs no artifact at all).
+    pub fn init(
+        pop_size: usize,
+        n_boltzmann: usize,
+        nodes: usize,
+        init_temp: f32,
+        gnn_seed: Option<&[f32]>,
+        rng: &mut Rng,
+    ) -> Population {
+        assert!(n_boltzmann <= pop_size);
+        let n_gnn = pop_size - n_boltzmann;
+        assert!(n_gnn == 0 || gnn_seed.is_some(), "GNN members need seed params");
+        let mut members = Vec::with_capacity(pop_size);
+        for i in 0..n_gnn {
+            let seed = gnn_seed.unwrap();
+            // First GNN member keeps the AOT init; others are diversified.
+            let params = if i == 0 {
+                seed.to_vec()
+            } else {
+                perturb_params(seed, 0.05, 0.5, rng)
+            };
+            members.push(Individual { genome: Genome::Gnn(params), fitness: f64::NEG_INFINITY });
+        }
+        for _ in 0..n_boltzmann {
+            members.push(Individual {
+                genome: Genome::Boltzmann(BoltzmannChromosome::random(nodes, init_temp, rng)),
+                fitness: f64::NEG_INFINITY,
+            });
+        }
+        Population { members }
+    }
+
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    /// Indices sorted by fitness, best first.
+    pub fn ranking(&self) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..self.members.len()).collect();
+        idx.sort_by(|&a, &b| {
+            self.members[b]
+                .fitness
+                .partial_cmp(&self.members[a].fitness)
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        idx
+    }
+
+    /// The best individual (by last fitness).
+    pub fn best(&self) -> &Individual {
+        &self.members[self.ranking()[0]]
+    }
+
+    /// Index of the worst individual (migration target).
+    pub fn worst_index(&self) -> usize {
+        *self.ranking().last().expect("non-empty population")
+    }
+
+    /// Tournament selection: best of `k` random members.
+    fn tournament(&self, k: usize, rng: &mut Rng) -> usize {
+        let mut best = rng.below(self.members.len());
+        for _ in 1..k {
+            let c = rng.below(self.members.len());
+            if self.members[c].fitness > self.members[best].fitness {
+                best = c;
+            }
+        }
+        best
+    }
+
+    /// One generation of evolution. `posterior` decodes a GNN genome into
+    /// action probabilities — used when a cross-encoding pair is selected,
+    /// to seed the Boltzmann child's prior from the GNN parent
+    /// (Algorithm 2 lines 14–19). It may fail (e.g. artifact-less test
+    /// populations); seeding is skipped in that case.
+    pub fn evolve(
+        &mut self,
+        p: EvolveParams,
+        rng: &mut Rng,
+        posterior: &mut dyn FnMut(&[f32]) -> Option<Vec<f32>>,
+    ) {
+        let ranking = self.ranking();
+        let e = p.elites.min(self.members.len());
+        let mut next: Vec<Individual> = ranking[..e]
+            .iter()
+            .map(|&i| self.members[i].clone())
+            .collect();
+        while next.len() < self.members.len() {
+            let a = self.tournament(p.tournament, rng);
+            let b = self.tournament(p.tournament, rng);
+            let child_genome = match (&self.members[a].genome, &self.members[b].genome) {
+                (Genome::Gnn(ga), Genome::Gnn(gb)) => {
+                    Genome::Gnn(single_point_crossover(ga, gb, rng))
+                }
+                (Genome::Boltzmann(ba), Genome::Boltzmann(bb)) => {
+                    Genome::Boltzmann(ba.crossover(bb, rng))
+                }
+                // Cross-encoding: seed the Boltzmann prior from the GNN
+                // posterior (direct information transfer, Figure 2).
+                (Genome::Gnn(g), Genome::Boltzmann(bz))
+                | (Genome::Boltzmann(bz), Genome::Gnn(g)) => {
+                    let mut child = bz.clone();
+                    if let Some(probs) = posterior(g) {
+                        child.seed_from_posterior(&probs);
+                    }
+                    Genome::Boltzmann(child)
+                }
+            };
+            let mut child = Individual { genome: child_genome, fitness: f64::NEG_INFINITY };
+            if rng.chance(p.mut_prob) {
+                match &mut child.genome {
+                    Genome::Gnn(g) => *g = perturb_params(g, p.mut_std, p.mut_frac, rng),
+                    Genome::Boltzmann(bz) => bz.mutate(p.mut_std, p.mut_frac, rng),
+                }
+            }
+            next.push(child);
+        }
+        self.members = next;
+    }
+
+    /// Migration (Algorithm 2 line 38): overwrite the weakest member with
+    /// the PG actor's parameters.
+    pub fn migrate_pg(&mut self, pg_params: &[f32]) {
+        let w = self.worst_index();
+        self.members[w] =
+            Individual { genome: Genome::Gnn(pg_params.to_vec()), fitness: f64::NEG_INFINITY };
+    }
+}
+
+/// Single-point crossover of two flat parameter vectors.
+pub fn single_point_crossover(a: &[f32], b: &[f32], rng: &mut Rng) -> Vec<f32> {
+    assert_eq!(a.len(), b.len());
+    let cut = rng.range(1, a.len().max(2));
+    let mut child = a.to_vec();
+    child[cut..].copy_from_slice(&b[cut..]);
+    child
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn boltzmann_pop(size: usize, rng: &mut Rng) -> Population {
+        Population::init(size, size, 6, 1.0, None, rng)
+    }
+
+    fn no_posterior(_: &[f32]) -> Option<Vec<f32>> {
+        None
+    }
+
+    #[test]
+    fn init_mixed_counts() {
+        let mut rng = Rng::new(1);
+        let seed = vec![0.5f32; 100];
+        let pop = Population::init(10, 3, 4, 1.0, Some(&seed), &mut rng);
+        let gnn = pop.members.iter().filter(|m| m.genome.kind() == "gnn").count();
+        assert_eq!(gnn, 7);
+        assert_eq!(pop.len(), 10);
+        // First GNN member is the unperturbed seed.
+        if let Genome::Gnn(g) = &pop.members[0].genome {
+            assert_eq!(g, &seed);
+        } else {
+            panic!("expected gnn first");
+        }
+    }
+
+    #[test]
+    fn ranking_sorts_descending() {
+        let mut rng = Rng::new(2);
+        let mut pop = boltzmann_pop(5, &mut rng);
+        for (i, m) in pop.members.iter_mut().enumerate() {
+            m.fitness = i as f64;
+        }
+        assert_eq!(pop.ranking(), vec![4, 3, 2, 1, 0]);
+        assert_eq!(pop.best().fitness, 4.0);
+        assert_eq!(pop.worst_index(), 0);
+    }
+
+    #[test]
+    fn elites_survive_evolution() {
+        let mut rng = Rng::new(3);
+        let mut pop = boltzmann_pop(8, &mut rng);
+        for (i, m) in pop.members.iter_mut().enumerate() {
+            m.fitness = i as f64;
+        }
+        let best_before = match &pop.members[7].genome {
+            Genome::Boltzmann(b) => b.priors.clone(),
+            _ => unreachable!(),
+        };
+        let p = EvolveParams { elites: 2, mut_prob: 1.0, mut_std: 0.5, mut_frac: 0.5, tournament: 3 };
+        pop.evolve(p, &mut rng, &mut no_posterior);
+        assert_eq!(pop.len(), 8);
+        // Elite 0 of the new population is the previous best, unmutated.
+        match &pop.members[0].genome {
+            Genome::Boltzmann(b) => assert_eq!(b.priors, best_before),
+            _ => panic!("elite type changed"),
+        }
+    }
+
+    #[test]
+    fn population_size_preserved_many_generations() {
+        let mut rng = Rng::new(4);
+        let seed = vec![0.1f32; 64];
+        let mut pop = Population::init(12, 4, 5, 1.0, Some(&seed), &mut rng);
+        let p = EvolveParams { elites: 3, mut_prob: 0.9, mut_std: 0.1, mut_frac: 0.2, tournament: 3 };
+        for gen in 0..20 {
+            for (i, m) in pop.members.iter_mut().enumerate() {
+                m.fitness = ((i + gen) % 7) as f64;
+            }
+            pop.evolve(p, &mut rng, &mut no_posterior);
+            assert_eq!(pop.len(), 12);
+        }
+    }
+
+    #[test]
+    fn crossover_genes_come_from_parents() {
+        let mut rng = Rng::new(5);
+        let a = vec![1.0f32; 50];
+        let b = vec![2.0f32; 50];
+        let c = single_point_crossover(&a, &b, &mut rng);
+        assert!(c.iter().all(|&x| x == 1.0 || x == 2.0));
+        assert!(c.contains(&1.0) && c.contains(&2.0));
+    }
+
+    #[test]
+    fn migration_replaces_worst() {
+        let mut rng = Rng::new(6);
+        let seed = vec![0.0f32; 32];
+        let mut pop = Population::init(4, 2, 3, 1.0, Some(&seed), &mut rng);
+        for (i, m) in pop.members.iter_mut().enumerate() {
+            m.fitness = i as f64;
+        }
+        let pg = vec![9.0f32; 32];
+        pop.migrate_pg(&pg);
+        match &pop.members[0].genome {
+            Genome::Gnn(g) => assert_eq!(g, &pg),
+            _ => panic!("worst not replaced by PG actor"),
+        }
+    }
+
+    #[test]
+    fn cross_encoding_seeding_invoked() {
+        let mut rng = Rng::new(7);
+        let seed = vec![0.5f32; 16];
+        let mut pop = Population::init(6, 3, 4, 1.0, Some(&seed), &mut rng);
+        for (i, m) in pop.members.iter_mut().enumerate() {
+            m.fitness = i as f64;
+        }
+        let mut calls = 0usize;
+        let p = EvolveParams { elites: 1, mut_prob: 0.0, mut_std: 0.1, mut_frac: 0.1, tournament: 2 };
+        let mut posterior = |_: &[f32]| {
+            calls += 1;
+            Some(vec![1.0 / 3.0; 4 * 6])
+        };
+        // Evolve several times; with mixed parents, seeding must occur.
+        for _ in 0..10 {
+            pop.evolve(p, &mut rng, &mut posterior);
+            for (i, m) in pop.members.iter_mut().enumerate() {
+                m.fitness = i as f64;
+            }
+        }
+        assert!(calls > 0, "cross-encoding path never hit");
+    }
+}

@@ -1,0 +1,262 @@
+//! The MDP environment (paper Algorithm 1).
+//!
+//! One episode is one step (Table 2: steps-per-episode = 1): the agent
+//! proposes a complete memory map for the workload graph; the compiler
+//! rectifies it; if the map was invalid the reward is `-ε` (re-assigned
+//! bytes ratio) and **no inference runs**; if valid, the simulator measures
+//! noisy end-to-end latency and the reward is the compiler-normalized
+//! reciprocal latency (the speedup), times the reward-scale multiplier.
+//!
+//! The environment is shared read-only across rollout workers; the
+//! iteration counter (the paper's x-axis — "an inference process in the
+//! physical hardware", counted population-cumulatively) is atomic.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::graph::Graph;
+use crate::mapping::MemoryMap;
+use crate::sim::compiler::{Compiler, CompilerWorkspace};
+use crate::sim::liveness::Liveness;
+use crate::sim::noise::NoiseModel;
+use crate::sim::spec::ChipSpec;
+use crate::sim::LatencyModel;
+use crate::utils::Rng;
+
+/// Reward/measurement configuration of the environment.
+#[derive(Clone, Debug)]
+pub struct EnvConfig {
+    /// Multiplier on the positive (valid-map) reward. Paper Table 2: 5.
+    pub reward_scale: f64,
+    /// Magnitude of the invalid-map penalty (reward = -scale · ε).
+    /// Paper Table 2: reward for invalid mapping = -1.
+    pub invalid_scale: f64,
+    /// Relative std of latency measurement noise.
+    pub noise_std: f64,
+    /// Number of measurements averaged when evaluating a final speedup.
+    pub eval_measurements: usize,
+}
+
+impl Default for EnvConfig {
+    fn default() -> Self {
+        EnvConfig { reward_scale: 5.0, invalid_scale: 1.0, noise_std: 0.02, eval_measurements: 8 }
+    }
+}
+
+/// Outcome of one environment step.
+#[derive(Clone, Debug)]
+pub struct StepOutcome {
+    /// The compiler-rectified (always executable) map `M_C`.
+    pub rectified: MemoryMap,
+    /// Re-assigned-bytes ratio; 0 ⇔ the proposal was valid.
+    pub epsilon: f64,
+    /// Scalar training reward.
+    pub reward: f64,
+    /// Whether the proposal was executable as-is.
+    pub valid: bool,
+    /// Noisy measured latency — `None` for invalid proposals (the paper
+    /// does not run inference on rectified-from-invalid maps).
+    pub measured_latency_s: Option<f64>,
+    /// Measured speedup vs. the native compiler (`None` when invalid).
+    pub speedup: Option<f64>,
+}
+
+/// The memory-mapping environment for one workload on one chip.
+pub struct MappingEnv {
+    pub graph: Graph,
+    pub liveness: Liveness,
+    pub compiler: Compiler,
+    pub latency: LatencyModel,
+    pub noise: NoiseModel,
+    pub config: EnvConfig,
+    /// The native compiler's own mapping (the baseline).
+    pub compiler_map: MemoryMap,
+    /// Reference latency of the compiler map (mean of several noisy
+    /// measurements at construction — "the baseline run").
+    pub compiler_latency_s: f64,
+    iterations: AtomicU64,
+}
+
+impl MappingEnv {
+    /// Build the environment: runs the native compiler once and measures
+    /// its latency as the normalizing baseline.
+    pub fn new(graph: Graph, chip: ChipSpec, config: EnvConfig, seed: u64) -> MappingEnv {
+        let liveness = Liveness::analyze(&graph);
+        let compiler = Compiler::new(chip.clone());
+        let latency = LatencyModel::new(chip);
+        let noise = NoiseModel::new(config.noise_std);
+        let compiler_map = compiler.heuristic_map(&graph, &liveness);
+        let mut rng = Rng::new(seed ^ 0xBA5E11);
+        let true_base = latency.latency(&graph, &compiler_map);
+        let compiler_latency_s =
+            noise.measure_mean(true_base, config.eval_measurements.max(1), &mut rng);
+        MappingEnv {
+            graph,
+            liveness,
+            compiler,
+            latency,
+            noise,
+            config,
+            compiler_map,
+            compiler_latency_s,
+            iterations: AtomicU64::new(0),
+        }
+    }
+
+    /// Convenience constructor with default config and the NNP-I chip.
+    pub fn nnpi(graph: Graph, seed: u64) -> MappingEnv {
+        MappingEnv::new(graph, ChipSpec::nnpi(), EnvConfig::default(), seed)
+    }
+
+    /// Number of nodes in the workload.
+    pub fn num_nodes(&self) -> usize {
+        self.graph.len()
+    }
+
+    /// Environment iterations consumed so far (population-cumulative).
+    pub fn iterations(&self) -> u64 {
+        self.iterations.load(Ordering::Relaxed)
+    }
+
+    /// One Algorithm-1 step. Thread-safe: takes `&self` plus a caller
+    /// rng; increments the shared iteration counter.
+    pub fn step(&self, proposal: &MemoryMap, rng: &mut Rng) -> StepOutcome {
+        let mut ws = CompilerWorkspace::default();
+        self.step_with(proposal, rng, &mut ws)
+    }
+
+    /// Allocation-reusing variant of [`Self::step`] for the hot loop.
+    pub fn step_with(
+        &self,
+        proposal: &MemoryMap,
+        rng: &mut Rng,
+        ws: &mut CompilerWorkspace,
+    ) -> StepOutcome {
+        self.iterations.fetch_add(1, Ordering::Relaxed);
+        let r = self.compiler.rectify_with(&self.graph, &self.liveness, proposal, ws);
+        if !r.valid() {
+            // Invalid: no inference executed; negative reward ∝ ε.
+            let reward = -self.config.invalid_scale * r.epsilon;
+            return StepOutcome {
+                rectified: r.map,
+                epsilon: r.epsilon,
+                reward,
+                valid: false,
+                measured_latency_s: None,
+                speedup: None,
+            };
+        }
+        let true_latency = self.latency.latency(&self.graph, &r.map);
+        let measured = self.noise.measure(true_latency, rng);
+        let speedup = self.compiler_latency_s / measured;
+        StepOutcome {
+            rectified: r.map,
+            epsilon: 0.0,
+            reward: self.config.reward_scale * speedup,
+            valid: true,
+            measured_latency_s: Some(measured),
+            speedup: Some(speedup),
+        }
+    }
+
+    /// Noise-free speedup of a map (for reporting figures; panics on
+    /// invalid maps — evaluate only rectified maps).
+    pub fn true_speedup(&self, map: &MemoryMap) -> f64 {
+        assert!(
+            self.compiler.is_valid(&self.graph, &self.liveness, map),
+            "true_speedup on invalid map"
+        );
+        let true_base = self.latency.latency(&self.graph, &self.compiler_map);
+        true_base / self.latency.latency(&self.graph, map)
+    }
+
+    /// Evaluate a (possibly invalid) proposal the way the paper reports
+    /// final numbers: rectify, then average several noisy measurements.
+    pub fn eval_speedup(&self, proposal: &MemoryMap, rng: &mut Rng) -> f64 {
+        let r = self.compiler.rectify(&self.graph, &self.liveness, proposal);
+        let true_latency = self.latency.latency(&self.graph, &r.map);
+        let measured = self.noise.measure_mean(true_latency, self.config.eval_measurements, rng);
+        self.compiler_latency_s / measured
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapping::MemKind;
+    use crate::workloads::Workload;
+
+    fn env() -> MappingEnv {
+        MappingEnv::nnpi(Workload::ResNet50.build(), 7)
+    }
+
+    #[test]
+    fn compiler_map_scores_speedup_near_one() {
+        let e = env();
+        let mut rng = Rng::new(1);
+        let out = e.step(&e.compiler_map.clone(), &mut rng);
+        assert!(out.valid);
+        let s = out.speedup.unwrap();
+        assert!((0.9..1.1).contains(&s), "compiler self-speedup {s}");
+        assert!(out.reward > 0.0);
+    }
+
+    #[test]
+    fn invalid_map_negative_reward_no_inference() {
+        let e = env();
+        let mut rng = Rng::new(2);
+        let bad = MemoryMap::constant(e.num_nodes(), MemKind::Sram);
+        let out = e.step(&bad, &mut rng);
+        assert!(!out.valid);
+        assert!(out.reward < 0.0);
+        assert!(out.reward >= -1.0, "penalty bounded by invalid scale");
+        assert!(out.measured_latency_s.is_none());
+        assert!(out.speedup.is_none());
+        assert!((out.reward + out.epsilon).abs() < 1e-12);
+    }
+
+    #[test]
+    fn iterations_count_steps() {
+        let e = env();
+        let mut rng = Rng::new(3);
+        assert_eq!(e.iterations(), 0);
+        for _ in 0..5 {
+            e.step(&e.compiler_map.clone(), &mut rng);
+        }
+        assert_eq!(e.iterations(), 5);
+    }
+
+    #[test]
+    fn all_dram_is_valid_but_slow() {
+        let e = env();
+        let mut rng = Rng::new(4);
+        let out = e.step(&MemoryMap::all_dram(e.num_nodes()), &mut rng);
+        assert!(out.valid);
+        assert!(out.speedup.unwrap() < 1.0, "all-DRAM should underperform the compiler");
+    }
+
+    #[test]
+    fn true_speedup_of_compiler_map_is_exactly_one() {
+        let e = env();
+        let m = e.compiler_map.clone();
+        assert!((e.true_speedup(&m) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reward_scale_applied() {
+        let cfg = EnvConfig { reward_scale: 5.0, noise_std: 0.0, ..Default::default() };
+        let e = MappingEnv::new(Workload::ResNet50.build(), ChipSpec::nnpi(), cfg, 7);
+        let mut rng = Rng::new(5);
+        let out = e.step(&e.compiler_map.clone(), &mut rng);
+        assert!((out.reward - 5.0).abs() < 1e-9, "reward {}", out.reward);
+    }
+
+    #[test]
+    fn eval_speedup_handles_invalid_proposals() {
+        let e = env();
+        let mut rng = Rng::new(6);
+        let bad = MemoryMap::constant(e.num_nodes(), MemKind::Sram);
+        let s = e.eval_speedup(&bad, &mut rng);
+        // Rectified map executes; speedup is finite and positive.
+        assert!(s.is_finite() && s > 0.0);
+    }
+}

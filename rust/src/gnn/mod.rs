@@ -1,0 +1,160 @@
+//! GNN policy handling on the Rust side.
+//!
+//! A GNN policy *genome* is the flat f32 parameter vector defined by the
+//! L2 model (`python/compile/model.py`); evolution mutates and crosses it
+//! as a raw gene string, and [`PolicyRunner`] evaluates it by executing
+//! the AOT `policy_fwd_<N>` artifact through PJRT. The environment's
+//! feature matrix / adjacency / mask are constants per workload, so their
+//! literals are built once at runner construction and reused every call —
+//! the per-rollout cost is one parameter upload + one execute.
+
+use std::sync::Arc;
+
+use crate::env::MappingEnv;
+use crate::graph::features;
+use crate::mapping::MemoryMap;
+use crate::runtime::{literal_f32, literal_to_f32, Executable, Runtime};
+use crate::utils::math::clamp;
+use crate::utils::Rng;
+
+/// Evaluates GNN parameter vectors against one workload environment.
+pub struct PolicyRunner {
+    exe: Arc<Executable>,
+    /// Artifact (padded) node count.
+    pub n_artifact: usize,
+    /// Real node count of the workload.
+    pub n_real: usize,
+    /// Expected parameter vector length.
+    pub param_len: usize,
+    feats: xla::Literal,
+    adj: xla::Literal,
+    mask: xla::Literal,
+}
+
+impl PolicyRunner {
+    /// Build a runner for `env`, selecting the smallest artifact variant
+    /// that fits the workload.
+    pub fn for_env(rt: &Runtime, env: &MappingEnv) -> anyhow::Result<PolicyRunner> {
+        let n_real = env.num_nodes();
+        let n_artifact = rt.manifest.size_for(n_real)?;
+        let exe = rt.policy_fwd(n_real)?;
+        let f = rt.manifest.feature_dim;
+        let feats_v = features::padded_feature_matrix(&env.graph, n_artifact);
+        let adj_v = env.graph.normalized_adjacency(n_artifact);
+        let mask_v = env.graph.node_mask(n_artifact);
+        Ok(PolicyRunner {
+            exe,
+            n_artifact,
+            n_real,
+            param_len: rt.manifest.actor_size,
+            feats: literal_f32(&feats_v, &[n_artifact, f]),
+            adj: literal_f32(&adj_v, &[n_artifact, n_artifact]),
+            mask: literal_f32(&mask_v, &[n_artifact]),
+        })
+    }
+
+    /// Action probabilities `[n_artifact * 2 * 3]` for a parameter vector.
+    /// Only the first `n_real` node rows are meaningful. The workload
+    /// constants (features/adjacency/mask) are cached literals passed by
+    /// reference — the per-call upload is just the parameter vector.
+    pub fn probs(&self, params: &[f32]) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(params.len() == self.param_len, "param length mismatch");
+        let params_lit = literal_f32(params, &[params.len()]);
+        let out = self
+            .exe
+            .run_refs(&[&params_lit, &self.feats, &self.adj, &self.mask])?;
+        literal_to_f32(&out[0])
+    }
+
+    /// Greedy (argmax) memory map from policy probabilities.
+    pub fn greedy_map(&self, probs: &[f32]) -> MemoryMap {
+        self.map_from_probs(probs, None)
+    }
+
+    /// Stochastic map sampled from the policy distribution.
+    pub fn sample_map(&self, probs: &[f32], rng: &mut Rng) -> MemoryMap {
+        self.map_from_probs(probs, Some(rng))
+    }
+
+    /// Action-space-noise exploration for the PG actor (paper Appendix C
+    /// "Mixed Exploration"): perturb the probabilities with clipped
+    /// Gaussian noise, renormalize, then sample.
+    pub fn noisy_sample_map(&self, probs: &[f32], noise_std: f32, rng: &mut Rng) -> MemoryMap {
+        let mut actions = Vec::with_capacity(self.n_real);
+        for node in 0..self.n_real {
+            let mut pair = [0usize; 2];
+            for (k, slot) in pair.iter_mut().enumerate() {
+                let base = (node * 2 + k) * 3;
+                let mut p = [0f32; 3];
+                let mut z = 0f32;
+                for c in 0..3 {
+                    let noisy =
+                        clamp(probs[base + c] + (rng.normal() as f32) * noise_std, 0.0, 10.0);
+                    p[c] = noisy.max(1e-6);
+                    z += p[c];
+                }
+                for x in p.iter_mut() {
+                    *x /= z;
+                }
+                *slot = rng.categorical(&p);
+            }
+            actions.push(pair);
+        }
+        MemoryMap::from_actions(&actions)
+    }
+
+    fn map_from_probs(&self, probs: &[f32], mut rng: Option<&mut Rng>) -> MemoryMap {
+        assert!(probs.len() >= self.n_real * 6);
+        let mut actions = Vec::with_capacity(self.n_real);
+        for node in 0..self.n_real {
+            let mut pair = [0usize; 2];
+            for (k, slot) in pair.iter_mut().enumerate() {
+                let base = (node * 2 + k) * 3;
+                let p = &probs[base..base + 3];
+                *slot = match rng.as_deref_mut() {
+                    Some(r) => r.categorical(p),
+                    None => crate::utils::math::argmax(p),
+                };
+            }
+            actions.push(pair);
+        }
+        MemoryMap::from_actions(&actions)
+    }
+}
+
+/// Gaussian perturbation of a parameter vector — used both to diversify
+/// the initial EA population from the AOT init and as the GNN mutation
+/// operator (weight-space exploration).
+pub fn perturb_params(params: &[f32], std: f32, frac: f64, rng: &mut Rng) -> Vec<f32> {
+    params
+        .iter()
+        .map(|&w| {
+            if rng.chance(frac) {
+                w + (rng.normal() as f32) * std
+            } else {
+                w
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perturb_changes_roughly_frac_genes() {
+        let params = vec![0f32; 10_000];
+        let mut rng = Rng::new(5);
+        let out = perturb_params(&params, 0.1, 0.3, &mut rng);
+        let changed = out.iter().filter(|&&x| x != 0.0).count();
+        assert!((2500..3500).contains(&changed), "changed={changed}");
+    }
+
+    #[test]
+    fn perturb_zero_frac_is_identity() {
+        let params = vec![1.5f32; 100];
+        let mut rng = Rng::new(6);
+        assert_eq!(perturb_params(&params, 0.1, 0.0, &mut rng), params);
+    }
+}

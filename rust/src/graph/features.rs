@@ -1,0 +1,164 @@
+//! Table-1 node-feature extraction.
+//!
+//! Produces, for every node, exactly the 19 features of the paper's
+//! Appendix A Table 1 (op id, tensor geometry, byte sizes, look-ahead
+//! totals, convolution parameters, batch size). Byte- and count-valued
+//! features are `log2(1+x)` scaled: tensor sizes in the benchmark
+//! workloads span ~6 orders of magnitude and raw values would saturate the
+//! GNN input layer. Dimension-valued features are passed through raw (they
+//! are small integers).
+
+use super::{Graph, Node};
+use crate::utils::math::log2_1p;
+
+/// Number of features per node — the L2 model's input width. Must match
+/// `FEATURE_DIM` in `python/compile/model.py` (checked at runtime against
+/// artifacts/manifest.json).
+pub const DIM: usize = 19;
+
+/// Feature names in emission order; index i of a row corresponds to
+/// `NAMES[i]`. Mirrors Table 1 of the paper.
+pub const NAMES: [&str; DIM] = [
+    "op_id",
+    "weight_size",
+    "ifm_x",
+    "ifm_y",
+    "ifm_z",
+    "ofm_x",
+    "ofm_y",
+    "ofm_z",
+    "ifm_size",
+    "ofm_size",
+    "n_ops_left",
+    "n_w_left",
+    "groups",
+    "kernel_x",
+    "kernel_y",
+    "stride",
+    "pad",
+    "dilation",
+    "batch",
+];
+
+/// Extract the feature row for node `i` of `g`.
+///
+/// `n_ops_left` / `n_w_left` are "summary information about future layers"
+/// (Table 1): the number of ops after this node in topological position,
+/// and the total weight bytes from this node (inclusive) to the end.
+pub fn node_features(g: &Graph, i: usize, ops_left: usize, w_left: u64) -> [f32; DIM] {
+    let n: &Node = &g.nodes[i];
+    [
+        n.op.id() as f32,
+        log2_1p(n.weight_bytes as f64),
+        n.ifm.x as f32,
+        n.ifm.y as f32,
+        log2_1p(n.ifm.z as f64),
+        n.ofm.x as f32,
+        n.ofm.y as f32,
+        log2_1p(n.ofm.z as f64),
+        log2_1p(n.ifm.volume() as f64),
+        log2_1p(n.ofm.volume() as f64),
+        ops_left as f32,
+        log2_1p(w_left as f64),
+        n.conv.groups as f32,
+        n.conv.kernel_x as f32,
+        n.conv.kernel_y as f32,
+        n.conv.stride as f32,
+        n.conv.pad as f32,
+        n.conv.dilation as f32,
+        n.batch as f32,
+    ]
+}
+
+/// Row-major `[g.len(), DIM]` feature matrix in node-index order.
+pub fn feature_matrix(g: &Graph) -> Vec<f32> {
+    let order = g.topo_order();
+    // Position of each node in the topological order.
+    let mut pos = vec![0usize; g.len()];
+    for (p, &i) in order.iter().enumerate() {
+        pos[i] = p;
+    }
+    // Suffix weight sums over the topological order.
+    let mut w_suffix = vec![0u64; g.len() + 1];
+    for p in (0..g.len()).rev() {
+        w_suffix[p] = w_suffix[p + 1] + g.nodes[order[p]].weight_bytes;
+    }
+    let mut out = Vec::with_capacity(g.len() * DIM);
+    for i in 0..g.len() {
+        let p = pos[i];
+        let ops_left = g.len() - 1 - p;
+        let row = node_features(g, i, ops_left, w_suffix[p]);
+        out.extend_from_slice(&row);
+    }
+    out
+}
+
+/// Feature matrix padded with zero rows to `n_max` nodes — the fixed-shape
+/// tensor fed to the AOT-compiled GNN.
+pub fn padded_feature_matrix(g: &Graph, n_max: usize) -> Vec<f32> {
+    assert!(g.len() <= n_max);
+    let mut m = feature_matrix(g);
+    m.resize(n_max * DIM, 0.0);
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::node::test_node;
+    use crate::graph::Graph;
+
+    fn chain3() -> Graph {
+        let nodes = (0..3).map(|i| test_node(i, 100 * (i as u64 + 1), 10)).collect();
+        Graph::new("c3", nodes, vec![(0, 1), (1, 2)]).unwrap()
+    }
+
+    #[test]
+    fn dim_matches_table1() {
+        // Table 1 lists exactly 19 node features.
+        assert_eq!(DIM, 19);
+        assert_eq!(NAMES.len(), DIM);
+    }
+
+    #[test]
+    fn features_table1_schema_order() {
+        // Spot-check the emission order against Table 1.
+        assert_eq!(NAMES[0], "op_id");
+        assert_eq!(NAMES[1], "weight_size");
+        assert_eq!(NAMES[10], "n_ops_left");
+        assert_eq!(NAMES[11], "n_w_left");
+        assert_eq!(NAMES[18], "batch");
+    }
+
+    #[test]
+    fn lookahead_features_decrease_along_chain() {
+        let g = chain3();
+        let m = feature_matrix(&g);
+        let ops_left = |i: usize| m[i * DIM + 10];
+        assert_eq!(ops_left(0), 2.0);
+        assert_eq!(ops_left(1), 1.0);
+        assert_eq!(ops_left(2), 0.0);
+        // n_w_left includes the node itself and shrinks monotonically.
+        let w_left = |i: usize| m[i * DIM + 11];
+        assert!(w_left(0) > w_left(1));
+        assert!(w_left(1) > w_left(2));
+        // First node sees the total: log2(1 + 100+200+300).
+        assert!((w_left(0) - (1.0f64 + 600.0).log2() as f32).abs() < 1e-6);
+    }
+
+    #[test]
+    fn padded_matrix_zero_rows() {
+        let g = chain3();
+        let m = padded_feature_matrix(&g, 5);
+        assert_eq!(m.len(), 5 * DIM);
+        assert!(m[3 * DIM..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn byte_features_log_scaled() {
+        let g = chain3();
+        let m = feature_matrix(&g);
+        // weight_size of node 0 is log2(1+100), not 100.
+        assert!((m[1] - (101f64).log2() as f32).abs() < 1e-6);
+    }
+}

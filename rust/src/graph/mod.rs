@@ -1,0 +1,200 @@
+//! Computational-graph intermediate representation.
+//!
+//! A DL inference workload is a directed acyclic graph whose nodes are
+//! operational layers (conv, matmul, pooling, …) and whose edges express
+//! tensor data-flow (paper §3.1). All outgoing edges of a node carry the
+//! same output tensor, so tensor information lives on the source node and
+//! the edges are featureless — exactly the encoding used by the paper.
+//!
+//! Submodules:
+//! * [`node`] — the op/node model with shapes, byte sizes and MAC counts;
+//! * [`features`] — the Table-1 node-feature extraction used as GNN input;
+//! * [`topo`] — topological ordering, reachability and DAG validation.
+
+pub mod node;
+pub mod features;
+pub mod topo;
+
+pub use node::{Node, OpKind, TensorShape};
+
+/// A directed acyclic computational graph.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    /// Human-readable workload name ("resnet50", "bert-base", …).
+    pub name: String,
+    /// Nodes in construction order (which builders keep topological).
+    pub nodes: Vec<Node>,
+    /// Directed edges `(src, dst)` by node index.
+    pub edges: Vec<(usize, usize)>,
+    /// Predecessor adjacency, indexed by node.
+    preds: Vec<Vec<usize>>,
+    /// Successor adjacency, indexed by node.
+    succs: Vec<Vec<usize>>,
+}
+
+impl Graph {
+    /// Build a graph from nodes and edges, validating indices and acyclicity.
+    pub fn new(name: impl Into<String>, nodes: Vec<Node>, edges: Vec<(usize, usize)>) -> anyhow::Result<Graph> {
+        let n = nodes.len();
+        let mut preds = vec![Vec::new(); n];
+        let mut succs = vec![Vec::new(); n];
+        for &(s, d) in &edges {
+            anyhow::ensure!(s < n && d < n, "edge ({s},{d}) out of bounds (n={n})");
+            anyhow::ensure!(s != d, "self-loop on node {s}");
+            preds[d].push(s);
+            succs[s].push(d);
+        }
+        let g = Graph { name: name.into(), nodes, edges, preds, succs };
+        anyhow::ensure!(topo::is_dag(&g), "graph '{}' contains a cycle", g.name);
+        Ok(g)
+    }
+
+    /// Number of nodes.
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Predecessor indices of `i`.
+    pub fn preds(&self, i: usize) -> &[usize] {
+        &self.preds[i]
+    }
+
+    /// Successor indices of `i`.
+    pub fn succs(&self, i: usize) -> &[usize] {
+        &self.succs[i]
+    }
+
+    /// A valid topological order of the node indices.
+    pub fn topo_order(&self) -> Vec<usize> {
+        topo::topo_order(self)
+    }
+
+    /// Sum of weight bytes over all nodes.
+    pub fn total_weight_bytes(&self) -> u64 {
+        self.nodes.iter().map(|n| n.weight_bytes).sum()
+    }
+
+    /// Sum of output-activation bytes over all nodes.
+    pub fn total_activation_bytes(&self) -> u64 {
+        self.nodes.iter().map(|n| n.ofm_bytes()).sum()
+    }
+
+    /// Sum of multiply-accumulate operations over all nodes.
+    pub fn total_macs(&self) -> u64 {
+        self.nodes.iter().map(|n| n.macs).sum()
+    }
+
+    /// Per-node Table-1 feature matrix, row-major `[len(), features::DIM]`.
+    pub fn feature_matrix(&self) -> Vec<f32> {
+        features::feature_matrix(self)
+    }
+
+    /// Dense symmetric-normalized adjacency (with self-loops) padded to
+    /// `n_max` — the message-passing operator consumed by the L2 GNN.
+    /// Row-major `[n_max, n_max]`.
+    pub fn normalized_adjacency(&self, n_max: usize) -> Vec<f32> {
+        assert!(self.len() <= n_max, "graph larger than padding size");
+        let n = self.len();
+        let mut a = vec![0f32; n_max * n_max];
+        // Treat message passing as bidirectional (paper's Graph U-Net uses
+        // bidirectional graph convolutions) and add self-loops.
+        let mut deg = vec![1f32; n];
+        for &(s, d) in &self.edges {
+            deg[s] += 1.0;
+            deg[d] += 1.0;
+        }
+        for i in 0..n {
+            a[i * n_max + i] = 1.0 / deg[i];
+        }
+        for &(s, d) in &self.edges {
+            let w = 1.0 / (deg[s].sqrt() * deg[d].sqrt());
+            a[s * n_max + d] = w;
+            a[d * n_max + s] = w;
+        }
+        a
+    }
+
+    /// Padding mask: 1.0 for real nodes, 0.0 for padded slots.
+    pub fn node_mask(&self, n_max: usize) -> Vec<f32> {
+        let mut m = vec![0f32; n_max];
+        for slot in m.iter_mut().take(self.len()) {
+            *slot = 1.0;
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::node::test_node;
+
+    fn diamond() -> Graph {
+        // 0 -> 1 -> 3, 0 -> 2 -> 3
+        let nodes = (0..4).map(|i| test_node(i, 1024, 4096)).collect();
+        Graph::new("diamond", nodes, vec![(0, 1), (0, 2), (1, 3), (2, 3)]).unwrap()
+    }
+
+    #[test]
+    fn adjacency_built() {
+        let g = diamond();
+        assert_eq!(g.preds(3), &[1, 2]);
+        assert_eq!(g.succs(0), &[1, 2]);
+        assert_eq!(g.len(), 4);
+    }
+
+    #[test]
+    fn rejects_cycles() {
+        let nodes = (0..2).map(|i| test_node(i, 0, 0)).collect();
+        assert!(Graph::new("cyc", nodes, vec![(0, 1), (1, 0)]).is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_bounds_edges() {
+        let nodes = vec![test_node(0, 0, 0)];
+        assert!(Graph::new("oob", nodes, vec![(0, 5)]).is_err());
+    }
+
+    #[test]
+    fn rejects_self_loops() {
+        let nodes = vec![test_node(0, 0, 0)];
+        assert!(Graph::new("self", nodes, vec![(0, 0)]).is_err());
+    }
+
+    #[test]
+    fn totals_accumulate() {
+        let g = diamond();
+        assert_eq!(g.total_weight_bytes(), 4 * 1024);
+        assert!(g.total_activation_bytes() > 0);
+    }
+
+    #[test]
+    fn normalized_adjacency_symmetric_padded() {
+        let g = diamond();
+        let n_max = 8;
+        let a = g.normalized_adjacency(n_max);
+        for i in 0..n_max {
+            for j in 0..n_max {
+                let d = (a[i * n_max + j] - a[j * n_max + i]).abs();
+                assert!(d < 1e-6);
+            }
+        }
+        // Padding rows are all zero.
+        for i in 4..8 {
+            assert!(a[i * n_max..(i + 1) * n_max].iter().all(|&x| x == 0.0));
+        }
+        // Self-loops present on real nodes.
+        assert!(a[0] > 0.0);
+    }
+
+    #[test]
+    fn node_mask_marks_real_nodes() {
+        let g = diamond();
+        let m = g.node_mask(6);
+        assert_eq!(m, vec![1.0, 1.0, 1.0, 1.0, 0.0, 0.0]);
+    }
+}

@@ -1,0 +1,211 @@
+//! Node (operational layer) model: op kind, tensor shapes, byte sizes and
+//! MAC counts. Byte sizes drive the memory-placement problem; MAC counts
+//! drive the compute half of the simulator's roofline latency model.
+
+/// Operation kinds found in the three benchmark workloads. The numeric
+/// discriminant doubles as the `op_id` node feature of Table 1.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    /// Graph input placeholder (image / token embeddings).
+    Input,
+    /// 2-D convolution (possibly grouped / strided / dilated).
+    Conv,
+    /// Fully-connected / matrix multiplication.
+    MatMul,
+    /// Max or average pooling.
+    Pool,
+    /// Elementwise addition (residual connections).
+    EltwiseAdd,
+    /// Activation (ReLU / GELU).
+    Activation,
+    /// Batch normalization (folded scale-shift at inference).
+    BatchNorm,
+    /// Layer normalization.
+    LayerNorm,
+    /// Softmax (attention probabilities / classifier head).
+    Softmax,
+    /// Embedding lookup table.
+    Embedding,
+    /// Global average pool + flatten.
+    GlobalPool,
+    /// Concatenation.
+    Concat,
+    /// Reshape / transpose (head split-merge in attention). Zero-weight,
+    /// data-movement-only op — present as a separate node in the compiler
+    /// IR granularity used for the BERT workload.
+    Reshape,
+}
+
+impl OpKind {
+    /// Stable small-integer id used as the `op_id` feature (Table 1).
+    pub fn id(self) -> u32 {
+        match self {
+            OpKind::Input => 0,
+            OpKind::Conv => 1,
+            OpKind::MatMul => 2,
+            OpKind::Pool => 3,
+            OpKind::EltwiseAdd => 4,
+            OpKind::Activation => 5,
+            OpKind::BatchNorm => 6,
+            OpKind::LayerNorm => 7,
+            OpKind::Softmax => 8,
+            OpKind::Embedding => 9,
+            OpKind::GlobalPool => 10,
+            OpKind::Concat => 11,
+            OpKind::Reshape => 12,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OpKind::Input => "input",
+            OpKind::Conv => "conv",
+            OpKind::MatMul => "matmul",
+            OpKind::Pool => "pool",
+            OpKind::EltwiseAdd => "add",
+            OpKind::Activation => "act",
+            OpKind::BatchNorm => "bn",
+            OpKind::LayerNorm => "ln",
+            OpKind::Softmax => "softmax",
+            OpKind::Embedding => "embed",
+            OpKind::GlobalPool => "gpool",
+            OpKind::Concat => "concat",
+            OpKind::Reshape => "reshape",
+        }
+    }
+}
+
+/// 3-D feature-map shape `(x, y, z)` = (width, height, channels). For
+/// sequence models, `x` is sequence length, `y` is 1 and `z` is hidden size
+/// — the same flattening the paper applies to feed BERT through Table 1's
+/// convolution-oriented feature schema.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TensorShape {
+    pub x: u32,
+    pub y: u32,
+    pub z: u32,
+}
+
+impl TensorShape {
+    pub fn new(x: u32, y: u32, z: u32) -> Self {
+        TensorShape { x, y, z }
+    }
+
+    /// Total element count.
+    pub fn volume(&self) -> u64 {
+        self.x as u64 * self.y as u64 * self.z as u64
+    }
+}
+
+/// Convolution-specific parameters (Table 1: set to 0 for non-conv ops).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ConvParams {
+    pub groups: u32,
+    pub kernel_x: u32,
+    pub kernel_y: u32,
+    pub stride: u32,
+    pub pad: u32,
+    pub dilation: u32,
+}
+
+/// One operational layer of a workload.
+#[derive(Clone, Debug)]
+pub struct Node {
+    /// Index within the graph (mirrors position in `Graph::nodes`).
+    pub id: usize,
+    /// Layer name, e.g. `"layer2.0.conv1"`.
+    pub name: String,
+    pub op: OpKind,
+    /// Byte size of the weight tensor (0 if the op has no weights).
+    pub weight_bytes: u64,
+    /// Input feature-map shape (largest input for multi-input ops).
+    pub ifm: TensorShape,
+    /// Output feature-map shape.
+    pub ofm: TensorShape,
+    /// Convolution parameters (zeroed for non-conv ops, per Table 1).
+    pub conv: ConvParams,
+    /// Inference batch size (1 for every paper experiment).
+    pub batch: u32,
+    /// Multiply-accumulate count of the op — drives compute latency.
+    pub macs: u64,
+    /// Bytes per activation element (1 = int8, the NNP-I inference dtype).
+    pub act_elem_bytes: u32,
+}
+
+impl Node {
+    /// Byte size of the output activation tensor.
+    pub fn ofm_bytes(&self) -> u64 {
+        self.ofm.volume() * self.act_elem_bytes as u64 * self.batch as u64
+    }
+
+    /// Byte size of the input activation tensor.
+    pub fn ifm_bytes(&self) -> u64 {
+        self.ifm.volume() * self.act_elem_bytes as u64 * self.batch as u64
+    }
+
+    /// Whether this op owns a weight tensor that needs placing.
+    pub fn has_weights(&self) -> bool {
+        self.weight_bytes > 0
+    }
+}
+
+/// Construct a minimal node for tests.
+#[doc(hidden)]
+pub fn test_node(id: usize, weight_bytes: u64, ofm_elems: u64) -> Node {
+    Node {
+        id,
+        name: format!("n{id}"),
+        op: if weight_bytes > 0 { OpKind::Conv } else { OpKind::Activation },
+        weight_bytes,
+        ifm: TensorShape::new(ofm_elems.max(1) as u32, 1, 1),
+        ofm: TensorShape::new(ofm_elems.max(1) as u32, 1, 1),
+        conv: ConvParams::default(),
+        batch: 1,
+        macs: weight_bytes * 10,
+        act_elem_bytes: 1,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn op_ids_unique() {
+        let all = [
+            OpKind::Input,
+            OpKind::Conv,
+            OpKind::MatMul,
+            OpKind::Pool,
+            OpKind::EltwiseAdd,
+            OpKind::Activation,
+            OpKind::BatchNorm,
+            OpKind::LayerNorm,
+            OpKind::Softmax,
+            OpKind::Embedding,
+            OpKind::GlobalPool,
+            OpKind::Concat,
+            OpKind::Reshape,
+        ];
+        let mut ids: Vec<u32> = all.iter().map(|o| o.id()).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), all.len());
+    }
+
+    #[test]
+    fn shape_volume() {
+        assert_eq!(TensorShape::new(7, 7, 2048).volume(), 7 * 7 * 2048);
+    }
+
+    #[test]
+    fn byte_sizes_scale_with_batch_and_dtype() {
+        let mut n = test_node(0, 100, 50);
+        assert_eq!(n.ofm_bytes(), 50);
+        n.batch = 4;
+        assert_eq!(n.ofm_bytes(), 200);
+        n.act_elem_bytes = 2;
+        assert_eq!(n.ofm_bytes(), 400);
+        assert!(n.has_weights());
+    }
+}

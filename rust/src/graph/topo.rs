@@ -1,0 +1,125 @@
+//! Topological ordering and DAG validation (Kahn's algorithm).
+
+use super::Graph;
+
+/// True iff the graph has no directed cycle.
+pub fn is_dag(g: &Graph) -> bool {
+    topo_order_internal(g).is_some()
+}
+
+/// A topological order of node indices. Panics if the graph is cyclic
+/// (construction via [`Graph::new`] guarantees acyclicity).
+pub fn topo_order(g: &Graph) -> Vec<usize> {
+    topo_order_internal(g).expect("Graph::new validated acyclicity")
+}
+
+fn topo_order_internal(g: &Graph) -> Option<Vec<usize>> {
+    let n = g.len();
+    let mut indeg = vec![0usize; n];
+    for &(_, d) in &g.edges {
+        indeg[d] += 1;
+    }
+    // Use a FIFO seeded in index order so builders that emit nodes in
+    // topological order get the identity permutation back — keeps mapping
+    // visualizations (Fig. 7 strips) aligned with network depth.
+    let mut queue: std::collections::VecDeque<usize> =
+        (0..n).filter(|&i| indeg[i] == 0).collect();
+    let mut order = Vec::with_capacity(n);
+    while let Some(u) = queue.pop_front() {
+        order.push(u);
+        for &v in g.succs(u) {
+            indeg[v] -= 1;
+            if indeg[v] == 0 {
+                queue.push_back(v);
+            }
+        }
+    }
+    if order.len() == n {
+        Some(order)
+    } else {
+        None
+    }
+}
+
+/// Longest path length (in edges) from any source to each node — "depth".
+/// Used by synthetic workload generation and by the latency model's
+/// critical-path accounting.
+pub fn depths(g: &Graph) -> Vec<usize> {
+    let order = topo_order(g);
+    let mut depth = vec![0usize; g.len()];
+    for &u in &order {
+        for &v in g.succs(u) {
+            depth[v] = depth[v].max(depth[u] + 1);
+        }
+    }
+    depth
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::graph::node::test_node;
+    use crate::graph::Graph;
+    use crate::testing::prop::{check, Gen};
+
+    fn chain(n: usize) -> Graph {
+        let nodes = (0..n).map(|i| test_node(i, 10, 10)).collect();
+        let edges = (0..n.saturating_sub(1)).map(|i| (i, i + 1)).collect();
+        Graph::new("chain", nodes, edges).unwrap()
+    }
+
+    #[test]
+    fn chain_order_is_identity() {
+        let g = chain(10);
+        assert_eq!(g.topo_order(), (0..10).collect::<Vec<_>>());
+        assert_eq!(super::depths(&g), (0..10).collect::<Vec<_>>());
+    }
+
+    /// Generate a random DAG by only allowing edges low -> high index.
+    fn random_dag(g: &mut Gen) -> Graph {
+        let n = g.usize_in(2, 40);
+        let nodes = (0..n).map(|i| test_node(i, 10, 10)).collect();
+        let mut edges = Vec::new();
+        for d in 1..n {
+            // Each node gets 1..=3 predecessors among earlier nodes.
+            let k = g.usize_in(1, 3.min(d));
+            let mut seen = std::collections::HashSet::new();
+            for _ in 0..k {
+                let s = g.usize_in(0, d - 1);
+                if seen.insert(s) {
+                    edges.push((s, d));
+                }
+            }
+        }
+        Graph::new("rand", nodes, edges).unwrap()
+    }
+
+    #[test]
+    fn prop_topo_order_is_linear_extension() {
+        check(
+            "topo order respects all edges",
+            150,
+            |g| (0usize, random_dag(g)),
+            |_, g| {
+                let order = g.topo_order();
+                let mut pos = vec![0usize; g.len()];
+                for (p, &i) in order.iter().enumerate() {
+                    pos[i] = p;
+                }
+                g.edges.iter().all(|&(s, d)| pos[s] < pos[d])
+            },
+        );
+    }
+
+    #[test]
+    fn prop_depths_monotone_along_edges() {
+        check(
+            "child depth exceeds parent depth",
+            150,
+            |g| (0usize, random_dag(g)),
+            |_, g| {
+                let d = super::depths(g);
+                g.edges.iter().all(|&(s, t)| d[t] > d[s])
+            },
+        );
+    }
+}

@@ -1,0 +1,53 @@
+//! # EGRL — Evolutionary Graph Reinforcement Learning for Memory Placement
+//!
+//! A production-quality reproduction of *"Optimizing Memory Placement using
+//! Evolutionary Graph Reinforcement Learning"* (ICLR 2021) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the coordinator: the EGRL trainer (mixed
+//!   evolutionary population + SAC-discrete policy-gradient learner with a
+//!   shared replay buffer), the NNP-I-class chip simulator that provides the
+//!   latency reward, workload graph builders (ResNet-50 / ResNet-101 /
+//!   BERT-base), every baseline agent from the paper, the benchmark harness
+//!   that regenerates every figure, and the CLI launcher.
+//! * **Layer 2 (python/compile/model.py, sac.py)** — the Graph U-Net policy
+//!   and the full SAC update step written in JAX and AOT-lowered to HLO text.
+//! * **Layer 1 (python/compile/kernels/)** — Pallas kernels for the fused
+//!   graph-attention convolution and the Boltzmann-softmax head, verified
+//!   against pure-jnp oracles.
+//!
+//! Python never runs at training/serving time: `rust/src/runtime` loads the
+//! HLO artifacts through the PJRT C API (the `xla` crate) and executes them
+//! from the hot loop.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index,
+//! and `EXPERIMENTS.md` for reproduction results.
+
+pub mod utils;
+pub mod testing;
+pub mod graph;
+pub mod workloads;
+pub mod mapping;
+pub mod sim;
+pub mod env;
+pub mod config;
+pub mod gnn;
+pub mod runtime;
+pub mod rl;
+pub mod ea;
+pub mod agents;
+pub mod coordinator;
+pub mod metrics;
+pub mod viz;
+pub mod cli;
+pub mod bench_harness;
+
+/// Crate version string (mirrors Cargo.toml).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");
+
+/// Number of memory levels on the modelled chip (DRAM, LLC, SRAM).
+pub const NUM_MEMORIES: usize = 3;
+
+/// Sub-actions per graph node: one mapping decision for the weight tensor,
+/// one for the output-activation tensor (paper §3.1).
+pub const SUBACTIONS_PER_NODE: usize = 2;

@@ -1,0 +1,193 @@
+//! `egrl` — the launcher binary.
+//!
+//! Subcommands: `train` (any of the paper's agents on any workload),
+//! `compile` (native-compiler baseline inspection), `smoke` (verify AOT
+//! artifacts against the Python-recorded contract), `info` (workload
+//! statistics). See `egrl help`.
+
+use std::sync::Arc;
+
+use egrl::agents::{GreedyDp, MappingAgent, RandomSearch};
+use egrl::cli::{Cli, USAGE};
+use egrl::config::EgrlConfig;
+use egrl::coordinator::{Mode, Trainer};
+use egrl::env::MappingEnv;
+use egrl::metrics::RunLog;
+use egrl::runtime::Runtime;
+use egrl::sim::spec::ChipSpec;
+use egrl::utils::Rng;
+use egrl::viz::{analysis, transition};
+use egrl::workloads::Workload;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> anyhow::Result<()> {
+    let cli = Cli::parse_env()?;
+    match cli.subcommand.as_str() {
+        "train" => cmd_train(&cli),
+        "compile" => cmd_compile(&cli),
+        "smoke" => cmd_smoke(&cli),
+        "info" => cmd_info(&cli),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            print!("{USAGE}");
+            anyhow::bail!("unknown subcommand '{other}'")
+        }
+    }
+}
+
+fn open_runtime(cli: &Cli) -> anyhow::Result<Option<Runtime>> {
+    if cli.get_bool("no-artifacts") {
+        return Ok(None);
+    }
+    let dir = cli
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(Runtime::default_dir);
+    if !dir.join("manifest.json").exists() {
+        eprintln!(
+            "note: no artifacts at {} — running artifact-free (EA/Boltzmann only); \
+             run `make artifacts` for the full stack",
+            dir.display()
+        );
+        return Ok(None);
+    }
+    Ok(Some(Runtime::open(dir)?))
+}
+
+fn cmd_train(cli: &Cli) -> anyhow::Result<()> {
+    let workload = Workload::parse(cli.get_or("workload", "resnet50"))?;
+    let agent = cli.get_or("agent", "egrl").to_string();
+    let mut cfg = EgrlConfig::default();
+    cfg.total_steps = cli.get_u64("steps", cfg.total_steps)?;
+    cfg.seed = cli.get_u64("seed", 0)?;
+    cli.apply_overrides(&mut cfg)?;
+
+    let env = Arc::new(MappingEnv::new(
+        workload.build(),
+        ChipSpec::nnpi(),
+        cfg.env_config(),
+        cfg.seed,
+    ));
+    println!(
+        "workload {} ({} nodes)  compiler latency {:.1} µs  budget {} iterations",
+        workload.name(),
+        env.num_nodes(),
+        env.compiler_latency_s * 1e6,
+        cfg.total_steps
+    );
+    let mut log = RunLog::new(workload.name(), &agent, cfg.seed);
+
+    let (best_map, best_speedup) = match agent.as_str() {
+        "egrl" | "ea" | "pg" => {
+            let mode = match agent.as_str() {
+                "egrl" => Mode::Egrl,
+                "ea" => Mode::EaOnly,
+                _ => Mode::PgOnly,
+            };
+            let runtime = open_runtime(cli)?;
+            if runtime.is_none() && mode != Mode::EaOnly {
+                anyhow::bail!("agent '{agent}' needs AOT artifacts (run `make artifacts`)");
+            }
+            let mut trainer = Trainer::new(env.clone(), cfg, mode, runtime.as_ref())?;
+            let res = trainer.run(&mut log)?;
+            println!(
+                "generations: {}  iterations: {}",
+                trainer.generations(),
+                res.iterations
+            );
+            (res.best_map, res.best_speedup)
+        }
+        "greedy-dp" => {
+            let mut a = GreedyDp::default();
+            let mut rng = Rng::new(cfg.seed);
+            let m = a.run(&env, cfg.total_steps, &mut rng, &mut log);
+            let r = env.compiler.rectify(&env.graph, &env.liveness, &m);
+            let s = env.true_speedup(&r.map);
+            (r.map, s)
+        }
+        "random" => {
+            let mut a = RandomSearch::default();
+            let mut rng = Rng::new(cfg.seed);
+            let m = a.run(&env, cfg.total_steps, &mut rng, &mut log);
+            let r = env.compiler.rectify(&env.graph, &env.liveness, &m);
+            let s = env.true_speedup(&r.map);
+            (r.map, s)
+        }
+        other => anyhow::bail!("unknown agent '{other}'"),
+    };
+
+    println!("final speedup vs compiler: {best_speedup:.3}");
+    println!("\n{}", analysis::render_comparison(&env.graph, &env.compiler_map, &best_map));
+    println!("memory-shift transition matrix (compiler → agent):");
+    println!(
+        "{}",
+        transition::render_matrix(&transition::transition_matrix(
+            &env.graph,
+            &env.compiler_map,
+            &best_map
+        ))
+    );
+    if let Some(path) = cli.get("out") {
+        std::fs::write(path, log.to_csv())?;
+        println!("curve written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_compile(cli: &Cli) -> anyhow::Result<()> {
+    let workload = Workload::parse(cli.get_or("workload", "resnet50"))?;
+    let env = MappingEnv::nnpi(workload.build(), 0);
+    println!(
+        "{}: {} nodes, {:.1} MB weights, {:.1} MB activations, {:.2} GMACs",
+        workload.name(),
+        env.num_nodes(),
+        env.graph.total_weight_bytes() as f64 / (1 << 20) as f64,
+        env.graph.total_activation_bytes() as f64 / (1 << 20) as f64,
+        env.graph.total_macs() as f64 / 1e9
+    );
+    println!("compiler latency: {:.1} µs", env.compiler_latency_s * 1e6);
+    let all_dram = egrl::mapping::MemoryMap::all_dram(env.num_nodes());
+    println!("all-DRAM speedup: {:.3}", env.true_speedup(&all_dram));
+    println!("\ncompiler mapping strips:");
+    print!("{}", transition::render_strips(&env.graph, &env.compiler_map, "compiler"));
+    Ok(())
+}
+
+fn cmd_smoke(cli: &Cli) -> anyhow::Result<()> {
+    let rt = open_runtime(cli)?
+        .ok_or_else(|| anyhow::anyhow!("smoke requires artifacts (run `make artifacts`)"))?;
+    rt.verify_smoke()?;
+    println!(
+        "smoke OK: policy artifact reproduces the Python-recorded vector \
+         (sizes {:?}, actor {} params)",
+        rt.manifest.sizes, rt.manifest.actor_size
+    );
+    Ok(())
+}
+
+fn cmd_info(cli: &Cli) -> anyhow::Result<()> {
+    let _ = cli;
+    for w in Workload::all() {
+        let g = w.build();
+        println!(
+            "{:<10} nodes {:>4}  edges {:>4}  weights {:>7.1} MB  acts {:>7.1} MB  macs {:>6.2} G  action-space 3^{}",
+            w.name(),
+            g.len(),
+            g.edges.len(),
+            g.total_weight_bytes() as f64 / (1 << 20) as f64,
+            g.total_activation_bytes() as f64 / (1 << 20) as f64,
+            g.total_macs() as f64 / 1e9,
+            2 * g.len()
+        );
+    }
+    Ok(())
+}

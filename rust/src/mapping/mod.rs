@@ -1,0 +1,312 @@
+//! Memory-map representation: the agent's action.
+//!
+//! A [`MemoryMap`] assigns, for every node of a workload graph, a memory
+//! unit to the node's weight tensor and a memory unit to its output
+//! activation tensor — the paper's two sub-actions per node (§3.1). The
+//! module also provides the one-hot categorical encoding and Jaccard
+//! distance used by the Figure-6 mapping-space analysis.
+
+use crate::graph::Graph;
+
+/// One of the three on-chip memory units of the modelled NNP-I.
+/// Ordinals double as action indices (0 = DRAM, 1 = LLC, 2 = SRAM) and are
+/// ordered slow/large → fast/small.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum MemKind {
+    Dram = 0,
+    Llc = 1,
+    Sram = 2,
+}
+
+impl MemKind {
+    pub const ALL: [MemKind; 3] = [MemKind::Dram, MemKind::Llc, MemKind::Sram];
+
+    pub fn from_index(i: usize) -> MemKind {
+        match i {
+            0 => MemKind::Dram,
+            1 => MemKind::Llc,
+            2 => MemKind::Sram,
+            _ => panic!("invalid memory index {i}"),
+        }
+    }
+
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            MemKind::Dram => "DRAM",
+            MemKind::Llc => "LLC",
+            MemKind::Sram => "SRAM",
+        }
+    }
+
+    /// The next larger/slower level to spill to (DRAM spills nowhere).
+    pub fn spill_target(self) -> Option<MemKind> {
+        match self {
+            MemKind::Sram => Some(MemKind::Llc),
+            MemKind::Llc => Some(MemKind::Dram),
+            MemKind::Dram => None,
+        }
+    }
+}
+
+/// Which tensor of a node a sub-action addresses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TensorClass {
+    Weight = 0,
+    Activation = 1,
+}
+
+/// Per-node placement decision.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct NodePlacement {
+    pub weight: MemKind,
+    pub activation: MemKind,
+}
+
+/// A complete mapping of a workload's tensors to memories.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MemoryMap {
+    pub placements: Vec<NodePlacement>,
+}
+
+impl MemoryMap {
+    /// The paper's initial mapping action: everything in DRAM (Table 2).
+    pub fn all_dram(n: usize) -> MemoryMap {
+        MemoryMap {
+            placements: vec![
+                NodePlacement { weight: MemKind::Dram, activation: MemKind::Dram };
+                n
+            ],
+        }
+    }
+
+    /// Uniform constant map (used by tests and ablations).
+    pub fn constant(n: usize, mem: MemKind) -> MemoryMap {
+        MemoryMap {
+            placements: vec![NodePlacement { weight: mem, activation: mem }; n],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.placements.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.placements.is_empty()
+    }
+
+    /// Build from flat action indices `[n, 2]` (weight, activation) as
+    /// produced by the GNN policy head.
+    pub fn from_actions(actions: &[[usize; 2]]) -> MemoryMap {
+        MemoryMap {
+            placements: actions
+                .iter()
+                .map(|&[w, a]| NodePlacement {
+                    weight: MemKind::from_index(w),
+                    activation: MemKind::from_index(a),
+                })
+                .collect(),
+        }
+    }
+
+    /// Flat action indices `[n, 2]`.
+    pub fn to_actions(&self) -> Vec<[usize; 2]> {
+        self.placements
+            .iter()
+            .map(|p| [p.weight.index(), p.activation.index()])
+            .collect()
+    }
+
+    /// One-hot categorical encoding, `2 * 3` entries per node — the Fig-6
+    /// representation ("one-hot categorical expression concatenated across
+    /// all nodes").
+    pub fn one_hot(&self) -> Vec<u8> {
+        let mut v = vec![0u8; self.len() * 6];
+        for (i, p) in self.placements.iter().enumerate() {
+            v[i * 6 + p.weight.index()] = 1;
+            v[i * 6 + 3 + p.activation.index()] = 1;
+        }
+        v
+    }
+
+    /// Decode from one-hot (inverse of [`Self::one_hot`]).
+    pub fn from_one_hot(bits: &[u8]) -> anyhow::Result<MemoryMap> {
+        anyhow::ensure!(bits.len() % 6 == 0, "one-hot length not divisible by 6");
+        let mut placements = Vec::with_capacity(bits.len() / 6);
+        for chunk in bits.chunks(6) {
+            let w = chunk[..3].iter().position(|&b| b == 1).ok_or_else(|| anyhow::anyhow!("no weight bit"))?;
+            let a = chunk[3..].iter().position(|&b| b == 1).ok_or_else(|| anyhow::anyhow!("no act bit"))?;
+            placements.push(NodePlacement { weight: MemKind::from_index(w), activation: MemKind::from_index(a) });
+        }
+        Ok(MemoryMap { placements })
+    }
+
+    /// Jaccard distance between two maps' one-hot encodings — the metric
+    /// the paper feeds to UMAP for Figure 6.
+    pub fn jaccard_distance(&self, other: &MemoryMap) -> f64 {
+        assert_eq!(self.len(), other.len(), "maps over different graphs");
+        let a = self.one_hot();
+        let b = other.one_hot();
+        let mut inter = 0usize;
+        let mut union = 0usize;
+        for (&x, &y) in a.iter().zip(&b) {
+            inter += (x & y) as usize;
+            union += (x | y) as usize;
+        }
+        if union == 0 {
+            0.0
+        } else {
+            1.0 - inter as f64 / union as f64
+        }
+    }
+
+    /// Fraction of decisions that differ between two maps.
+    pub fn hamming(&self, other: &MemoryMap) -> f64 {
+        assert_eq!(self.len(), other.len());
+        let mut diff = 0usize;
+        for (p, q) in self.placements.iter().zip(&other.placements) {
+            if p.weight != q.weight {
+                diff += 1;
+            }
+            if p.activation != q.activation {
+                diff += 1;
+            }
+        }
+        diff as f64 / (2 * self.len()) as f64
+    }
+
+    /// Total bytes this map places in each memory, split by tensor class.
+    /// Indexed `[mem][class]` with class 0 = weights, 1 = activations.
+    pub fn bytes_by_memory(&self, g: &Graph) -> [[u64; 2]; 3] {
+        let mut out = [[0u64; 2]; 3];
+        for (i, p) in self.placements.iter().enumerate() {
+            out[p.weight.index()][0] += g.nodes[i].weight_bytes;
+            out[p.activation.index()][1] += g.nodes[i].ofm_bytes();
+        }
+        out
+    }
+
+    /// Contiguity score: fraction of edges whose endpoint activations live
+    /// in the same memory — the §5.2.1 "contiguity" statistic.
+    pub fn contiguity(&self, g: &Graph) -> f64 {
+        if g.edges.is_empty() {
+            return 1.0;
+        }
+        let same = g
+            .edges
+            .iter()
+            .filter(|&&(s, d)| self.placements[s].activation == self.placements[d].activation)
+            .count();
+        same as f64 / g.edges.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::node::test_node;
+    use crate::testing::prop::{check, Gen};
+
+    fn random_map(g: &mut Gen, n: usize) -> MemoryMap {
+        let actions: Vec<[usize; 2]> = (0..n)
+            .map(|_| [g.usize_in(0, 2), g.usize_in(0, 2)])
+            .collect();
+        MemoryMap::from_actions(&actions)
+    }
+
+    #[test]
+    fn all_dram_is_initial_action() {
+        let m = MemoryMap::all_dram(3);
+        assert!(m.placements.iter().all(|p| p.weight == MemKind::Dram && p.activation == MemKind::Dram));
+    }
+
+    #[test]
+    fn prop_one_hot_roundtrip() {
+        check(
+            "one-hot roundtrip",
+            200,
+            |g| {
+                let n = g.usize_in(1, 50);
+                (random_map(g, n), ())
+            },
+            |m, _| MemoryMap::from_one_hot(&m.one_hot()).unwrap() == *m,
+        );
+    }
+
+    #[test]
+    fn prop_actions_roundtrip() {
+        check(
+            "actions roundtrip",
+            200,
+            |g| {
+                let n = g.usize_in(1, 50);
+                (random_map(g, n), ())
+            },
+            |m, _| MemoryMap::from_actions(&m.to_actions()) == *m,
+        );
+    }
+
+    #[test]
+    fn jaccard_identity_is_zero() {
+        let mut g = Gen::new(1);
+        let m = random_map(&mut g, 20);
+        assert_eq!(m.jaccard_distance(&m), 0.0);
+    }
+
+    #[test]
+    fn prop_jaccard_symmetric_and_bounded() {
+        check(
+            "jaccard symmetric/bounded",
+            100,
+            |g| {
+                let n = g.usize_in(1, 30);
+                ((random_map(g, n), random_map(g, n)), ())
+            },
+            |(a, b), _| {
+                let d1 = a.jaccard_distance(b);
+                let d2 = b.jaccard_distance(a);
+                (d1 - d2).abs() < 1e-12 && (0.0..=1.0).contains(&d1)
+            },
+        );
+    }
+
+    #[test]
+    fn disjoint_maps_have_distance_one() {
+        let a = MemoryMap::constant(5, MemKind::Dram);
+        let b = MemoryMap::constant(5, MemKind::Sram);
+        assert!((a.jaccard_distance(&b) - 1.0).abs() < 1e-12);
+        assert!((a.hamming(&b) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bytes_by_memory_accumulates() {
+        let nodes = vec![test_node(0, 100, 10), test_node(1, 50, 20)];
+        let g = crate::graph::Graph::new("t", nodes, vec![(0, 1)]).unwrap();
+        let mut m = MemoryMap::constant(2, MemKind::Llc);
+        m.placements[1].weight = MemKind::Sram;
+        let b = m.bytes_by_memory(&g);
+        assert_eq!(b[MemKind::Llc.index()][0], 100);
+        assert_eq!(b[MemKind::Sram.index()][0], 50);
+        assert_eq!(b[MemKind::Llc.index()][1], 30);
+    }
+
+    #[test]
+    fn contiguity_counts_same_memory_edges() {
+        let nodes = (0..3).map(|i| test_node(i, 0, 10)).collect();
+        let g = crate::graph::Graph::new("t", nodes, vec![(0, 1), (1, 2)]).unwrap();
+        let mut m = MemoryMap::constant(3, MemKind::Sram);
+        assert_eq!(m.contiguity(&g), 1.0);
+        m.placements[1].activation = MemKind::Dram;
+        assert_eq!(m.contiguity(&g), 0.0);
+    }
+
+    #[test]
+    fn spill_targets_ordered() {
+        assert_eq!(MemKind::Sram.spill_target(), Some(MemKind::Llc));
+        assert_eq!(MemKind::Llc.spill_target(), Some(MemKind::Dram));
+        assert_eq!(MemKind::Dram.spill_target(), None);
+    }
+}

@@ -1,0 +1,134 @@
+//! Run logging and cross-seed aggregation — the data behind every figure.
+
+use crate::utils::json::Json;
+use crate::utils::stats::Summary;
+
+/// One point on a training curve: iterations consumed (the paper's
+/// x-axis — population-cumulative inference count) and the best true
+/// speedup found so far.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LogPoint {
+    pub iteration: u64,
+    pub best_speedup: f64,
+}
+
+/// Training-curve log for a single run.
+#[derive(Clone, Debug, Default)]
+pub struct RunLog {
+    pub workload: String,
+    pub agent: String,
+    pub seed: u64,
+    pub points: Vec<LogPoint>,
+    /// Auxiliary SAC metrics per generation (if PG active).
+    pub sac_curve: Vec<(u64, f32, f32)>, // (iteration, critic_loss, entropy)
+}
+
+impl RunLog {
+    pub fn new(workload: &str, agent: &str, seed: u64) -> RunLog {
+        RunLog { workload: workload.into(), agent: agent.into(), seed, ..Default::default() }
+    }
+
+    /// Record the running best at an iteration count.
+    pub fn push(&mut self, iteration: u64, best_speedup: f64) {
+        self.points.push(LogPoint { iteration, best_speedup });
+    }
+
+    /// Final best speedup (0 when nothing valid was ever found — the
+    /// paper's convention for invalid-only agents).
+    pub fn final_speedup(&self) -> f64 {
+        self.points.last().map(|p| p.best_speedup).unwrap_or(0.0)
+    }
+
+    /// Best speedup at or before a given iteration budget.
+    pub fn speedup_at(&self, iteration: u64) -> f64 {
+        self.points
+            .iter()
+            .take_while(|p| p.iteration <= iteration)
+            .last()
+            .map(|p| p.best_speedup)
+            .unwrap_or(0.0)
+    }
+
+    /// CSV rows (`iteration,best_speedup`).
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("iteration,best_speedup\n");
+        for p in &self.points {
+            s.push_str(&format!("{},{}\n", p.iteration, p.best_speedup));
+        }
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("workload", Json::str(self.workload.clone())),
+            ("agent", Json::str(self.agent.clone())),
+            ("seed", Json::Num(self.seed as f64)),
+            (
+                "points",
+                Json::arr(self.points.iter().map(|p| {
+                    Json::arr([Json::Num(p.iteration as f64), Json::Num(p.best_speedup)])
+                })),
+            ),
+        ])
+    }
+}
+
+/// Mean ± std of final speedups over seeds (one Figure-4 bar).
+#[derive(Clone, Debug)]
+pub struct SeedAggregate {
+    pub workload: String,
+    pub agent: String,
+    pub summary: Summary,
+}
+
+impl SeedAggregate {
+    pub fn from_runs(runs: &[RunLog]) -> SeedAggregate {
+        assert!(!runs.is_empty());
+        let finals: Vec<f64> = runs.iter().map(|r| r.final_speedup()).collect();
+        SeedAggregate {
+            workload: runs[0].workload.clone(),
+            agent: runs[0].agent.clone(),
+            summary: Summary::of(&finals),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn final_and_at_iteration() {
+        let mut log = RunLog::new("resnet50", "egrl", 0);
+        log.push(10, 0.8);
+        log.push(50, 1.1);
+        log.push(200, 1.3);
+        assert_eq!(log.final_speedup(), 1.3);
+        assert_eq!(log.speedup_at(60), 1.1);
+        assert_eq!(log.speedup_at(5), 0.0);
+    }
+
+    #[test]
+    fn empty_log_reports_zero() {
+        let log = RunLog::new("bert", "pg", 1);
+        assert_eq!(log.final_speedup(), 0.0);
+    }
+
+    #[test]
+    fn csv_format() {
+        let mut log = RunLog::new("r50", "ea", 0);
+        log.push(1, 1.0);
+        assert_eq!(log.to_csv(), "iteration,best_speedup\n1,1\n");
+    }
+
+    #[test]
+    fn aggregate_over_seeds() {
+        let mut a = RunLog::new("r50", "egrl", 0);
+        a.push(100, 1.2);
+        let mut b = RunLog::new("r50", "egrl", 1);
+        b.push(100, 1.4);
+        let agg = SeedAggregate::from_runs(&[a, b]);
+        assert!((agg.summary.mean - 1.3).abs() < 1e-12);
+        assert_eq!(agg.summary.n, 2);
+    }
+}

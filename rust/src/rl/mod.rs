@@ -1,0 +1,13 @@
+//! Policy-gradient side of EGRL: the shared replay buffer and the Rust
+//! driver of the AOT SAC-update artifact.
+//!
+//! * [`replay`] — cyclic buffer holding every interaction from every
+//!   population member (the key CERL information-sharing mechanism);
+//! * [`sac`]   — owns the actor/critic parameter vectors + Adam state and
+//!   runs gradient steps by executing `sac_update_<N>.hlo.txt` via PJRT.
+
+pub mod replay;
+pub mod sac;
+
+pub use replay::{Replay, Transition};
+pub use sac::SacLearner;

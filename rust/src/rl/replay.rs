@@ -1,0 +1,128 @@
+//! Shared cyclic replay buffer (paper Appendix C "Shared Replay Buffer").
+//!
+//! Every rollout by every individual — GNN chromosome, Boltzmann
+//! chromosome, or the noisy PG actor — stores its transition here; the SAC
+//! learner samples minibatches from it. Because episodes are single-step
+//! and the state (the workload graph) is a constant of the environment,
+//! a transition is just `(actions, reward)`; the learner pairs it with
+//! the cached per-workload state tensors when it builds a batch.
+
+use crate::mapping::MemoryMap;
+use crate::utils::Rng;
+
+/// One single-step episode.
+#[derive(Clone, Debug)]
+pub struct Transition {
+    /// Per-node `[weight_mem, act_mem]` action indices (0/1/2).
+    pub actions: Vec<[u8; 2]>,
+    /// Scalar reward (Algorithm 1: speedup-scaled or -ε).
+    pub reward: f32,
+}
+
+impl Transition {
+    pub fn from_map(map: &MemoryMap, reward: f64) -> Transition {
+        Transition {
+            actions: map
+                .to_actions()
+                .iter()
+                .map(|&[w, a]| [w as u8, a as u8])
+                .collect(),
+            reward: reward as f32,
+        }
+    }
+}
+
+/// Fixed-capacity cyclic buffer.
+pub struct Replay {
+    buf: Vec<Transition>,
+    capacity: usize,
+    next: usize,
+    total_pushed: u64,
+}
+
+impl Replay {
+    pub fn new(capacity: usize) -> Replay {
+        assert!(capacity > 0);
+        Replay { buf: Vec::with_capacity(capacity.min(4096)), capacity, next: 0, total_pushed: 0 }
+    }
+
+    pub fn push(&mut self, t: Transition) {
+        self.total_pushed += 1;
+        if self.buf.len() < self.capacity {
+            self.buf.push(t);
+        } else {
+            self.buf[self.next] = t;
+            self.next = (self.next + 1) % self.capacity;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn total_pushed(&self) -> u64 {
+        self.total_pushed
+    }
+
+    /// Sample `k` transitions uniformly with replacement (with replacement
+    /// so minibatches are well-defined even when the buffer is small early
+    /// in training).
+    pub fn sample<'a>(&'a self, k: usize, rng: &mut Rng) -> Vec<&'a Transition> {
+        assert!(!self.buf.is_empty(), "sampling from empty replay");
+        (0..k).map(|_| &self.buf[rng.below(self.buf.len())]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapping::{MemKind, MemoryMap};
+
+    fn t(reward: f32) -> Transition {
+        Transition { actions: vec![[0, 1], [2, 0]], reward }
+    }
+
+    #[test]
+    fn wraps_at_capacity() {
+        let mut r = Replay::new(3);
+        for i in 0..5 {
+            r.push(t(i as f32));
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.total_pushed(), 5);
+        // Oldest two (0, 1) evicted.
+        let rewards: Vec<f32> = r.buf.iter().map(|x| x.reward).collect();
+        assert!(rewards.contains(&2.0) && rewards.contains(&3.0) && rewards.contains(&4.0));
+    }
+
+    #[test]
+    fn sample_returns_k_items() {
+        let mut r = Replay::new(10);
+        r.push(t(1.0));
+        let mut rng = Rng::new(1);
+        let batch = r.sample(24, &mut rng);
+        assert_eq!(batch.len(), 24);
+        assert!(batch.iter().all(|x| x.reward == 1.0));
+    }
+
+    #[test]
+    fn from_map_encodes_actions() {
+        let mut m = MemoryMap::all_dram(2);
+        m.placements[1].weight = MemKind::Sram;
+        let tr = Transition::from_map(&m, -0.25);
+        assert_eq!(tr.actions, vec![[0, 0], [2, 0]]);
+        assert_eq!(tr.reward, -0.25);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty replay")]
+    fn sampling_empty_panics() {
+        let r = Replay::new(4);
+        let mut rng = Rng::new(2);
+        let _ = r.sample(1, &mut rng);
+    }
+}

@@ -1,0 +1,190 @@
+//! Rust driver of the AOT SAC-update artifact.
+//!
+//! Owns the functional optimizer state — actor/critic parameter vectors,
+//! Adam first/second moments and the step counter — and advances it by
+//! executing `sac_update_<N>.hlo.txt` on the PJRT CPU client. The batch
+//! state tensors (features / adjacency / mask tiled to the artifact batch
+//! size) are workload constants built once; per update the driver uploads
+//! only the noisy one-hot actions and rewards.
+
+use std::sync::Arc;
+
+use crate::env::MappingEnv;
+use crate::graph::features;
+use crate::runtime::{literal_f32, literal_to_f32, Executable, Runtime};
+use crate::utils::math::clamp;
+use crate::utils::Rng;
+use super::replay::Transition;
+
+/// Metrics emitted by one SAC step (mirrors the artifact's output order).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SacMetrics {
+    pub critic_loss: f32,
+    pub actor_loss: f32,
+    pub entropy: f32,
+    pub mean_q: f32,
+}
+
+/// The PG learner.
+pub struct SacLearner {
+    exe: Arc<Executable>,
+    /// Flat actor parameters (the migrating policy).
+    actor: Vec<f32>,
+    actor_m: Vec<f32>,
+    actor_v: Vec<f32>,
+    critic: Vec<f32>,
+    critic_m: Vec<f32>,
+    critic_v: Vec<f32>,
+    /// Adam step counter (starts at 1 on the first update).
+    t: u64,
+    /// Artifact node count / real node count / batch / feature dim.
+    n_art: usize,
+    n_real: usize,
+    batch: usize,
+    noise_clip: f32,
+    /// Cached batch-constant literals.
+    feats_b: xla::Literal,
+    adj_b: xla::Literal,
+    mask_b: xla::Literal,
+    /// Scratch for the action tensor (avoids per-update allocation).
+    act_scratch: Vec<f32>,
+    rew_scratch: Vec<f32>,
+    pub last_metrics: SacMetrics,
+    pub updates_done: u64,
+}
+
+impl SacLearner {
+    /// Build a learner for `env`, loading the matching artifact variant
+    /// and initial parameters from the AOT pipeline.
+    pub fn new(rt: &Runtime, env: &MappingEnv) -> anyhow::Result<SacLearner> {
+        let n_real = env.num_nodes();
+        let n_art = rt.manifest.size_for(n_real)?;
+        let exe = rt.sac_update(n_real)?;
+        let b = rt.manifest.batch;
+        let f = rt.manifest.feature_dim;
+        let actor = rt.actor_init()?;
+        let critic = rt.critic_init()?;
+        // Tile the workload constants across the batch dimension.
+        let feats1 = features::padded_feature_matrix(&env.graph, n_art);
+        let adj1 = env.graph.normalized_adjacency(n_art);
+        let mask1 = env.graph.node_mask(n_art);
+        let tile = |v: &[f32]| -> Vec<f32> {
+            let mut out = Vec::with_capacity(v.len() * b);
+            for _ in 0..b {
+                out.extend_from_slice(v);
+            }
+            out
+        };
+        let (p, q) = (actor.len(), critic.len());
+        Ok(SacLearner {
+            exe,
+            actor_m: vec![0.0; p],
+            actor_v: vec![0.0; p],
+            critic_m: vec![0.0; q],
+            critic_v: vec![0.0; q],
+            actor,
+            critic,
+            t: 0,
+            n_art,
+            n_real,
+            batch: b,
+            noise_clip: rt.manifest.noise_clip as f32,
+            feats_b: literal_f32(&tile(&feats1), &[b, n_art, f]),
+            adj_b: literal_f32(&tile(&adj1), &[b, n_art, n_art]),
+            mask_b: literal_f32(&tile(&mask1), &[b, n_art]),
+            act_scratch: vec![0.0; b * n_art * 2 * 3],
+            rew_scratch: vec![0.0; b],
+            last_metrics: SacMetrics::default(),
+            updates_done: 0,
+        })
+    }
+
+    /// Current actor parameter vector (for rollouts and EA migration).
+    pub fn actor_params(&self) -> &[f32] {
+        &self.actor
+    }
+
+    /// Artifact batch size.
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    /// One gradient step on a replay minibatch.
+    ///
+    /// Builds the noisy one-hot behavioral-action tensor (Appendix D:
+    /// `one_hot(a) + clip(N(0, 0.1σ), ±c)`) on the Rust side — the
+    /// artifact is deterministic, randomness comes in through the data.
+    pub fn update(&mut self, minibatch: &[&Transition], rng: &mut Rng) -> anyhow::Result<SacMetrics> {
+        anyhow::ensure!(minibatch.len() == self.batch, "minibatch must match artifact batch");
+        self.t += 1;
+        let (n_art, n_real) = (self.n_art, self.n_real);
+        self.act_scratch.iter_mut().for_each(|x| *x = 0.0);
+        for (bi, tr) in minibatch.iter().enumerate() {
+            debug_assert_eq!(tr.actions.len(), n_real);
+            let base_b = bi * n_art * 6;
+            for (node, &[wa, aa]) in tr.actions.iter().enumerate() {
+                for (k, a) in [wa, aa].into_iter().enumerate() {
+                    let base = base_b + (node * 2 + k) * 3;
+                    for c in 0..3 {
+                        let onehot = if c == a as usize { 1.0 } else { 0.0 };
+                        let noise =
+                            clamp((rng.normal() as f32) * 0.1, -self.noise_clip, self.noise_clip);
+                        self.act_scratch[base + c] = onehot + noise;
+                    }
+                }
+            }
+            self.rew_scratch[bi] = tr.reward;
+        }
+        let t_lit = literal_f32(&[self.t as f32], &[1]);
+        let act_lit = literal_f32(&self.act_scratch, &[self.batch, n_art, 2, 3]);
+        let rew_lit = literal_f32(&self.rew_scratch, &[self.batch]);
+        let actor_lit = literal_f32(&self.actor, &[self.actor.len()]);
+        let am_lit = literal_f32(&self.actor_m, &[self.actor.len()]);
+        let av_lit = literal_f32(&self.actor_v, &[self.actor.len()]);
+        let critic_lit = literal_f32(&self.critic, &[self.critic.len()]);
+        let cm_lit = literal_f32(&self.critic_m, &[self.critic.len()]);
+        let cv_lit = literal_f32(&self.critic_v, &[self.critic.len()]);
+        let out = self.exe.run_refs(&[
+            &actor_lit, &am_lit, &av_lit, &critic_lit, &cm_lit, &cv_lit, &t_lit,
+            &self.feats_b, &self.adj_b, &self.mask_b, &act_lit, &rew_lit,
+        ])?;
+        anyhow::ensure!(out.len() == 7, "sac_update returned {} outputs", out.len());
+        self.actor = literal_to_f32(&out[0])?;
+        self.actor_m = literal_to_f32(&out[1])?;
+        self.actor_v = literal_to_f32(&out[2])?;
+        self.critic = literal_to_f32(&out[3])?;
+        self.critic_m = literal_to_f32(&out[4])?;
+        self.critic_v = literal_to_f32(&out[5])?;
+        let m = literal_to_f32(&out[6])?;
+        anyhow::ensure!(m.len() == 4, "bad metrics length");
+        self.last_metrics = SacMetrics {
+            critic_loss: m[0],
+            actor_loss: m[1],
+            entropy: m[2],
+            mean_q: m[3],
+        };
+        self.updates_done += 1;
+        anyhow::ensure!(
+            self.last_metrics.critic_loss.is_finite(),
+            "SAC diverged: critic loss {}",
+            self.last_metrics.critic_loss
+        );
+        Ok(self.last_metrics)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // SacLearner is exercised end-to-end in rust/tests/integration.rs
+    // (requires built artifacts); unit coverage here is limited to pieces
+    // that do not need a PJRT client.
+    use crate::utils::math::clamp;
+
+    #[test]
+    fn noise_clip_bounds() {
+        for x in [-10.0f32, -0.2, 0.0, 0.2, 10.0] {
+            let c = clamp(x, -0.3, 0.3);
+            assert!((-0.3..=0.3).contains(&c));
+        }
+    }
+}

@@ -1,0 +1,204 @@
+//! Typed view of `artifacts/manifest.json` — the AOT shape contract
+//! between the Python compile path and the Rust coordinator.
+
+use crate::utils::json::parse;
+use std::path::Path;
+
+/// Smoke-test vector recorded by aot.py (see Runtime::verify_smoke).
+#[derive(Clone, Debug)]
+pub struct Smoke {
+    pub n: usize,
+    pub first8: Vec<f32>,
+    pub sum: f32,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub feature_dim: usize,
+    pub hidden: usize,
+    pub heads: usize,
+    pub num_layers: usize,
+    pub subactions: usize,
+    pub choices: usize,
+    pub actor_size: usize,
+    pub critic_size: usize,
+    pub batch: usize,
+    /// Graph-size variants, ascending.
+    pub sizes: Vec<usize>,
+    pub alpha: f64,
+    pub noise_clip: f64,
+    pub actor_init: String,
+    pub critic_init: String,
+    /// size → (policy_fwd file, sac_update file, optional boltzmann file)
+    artifacts: Vec<(usize, String, String, Option<String>)>,
+    pub smoke: Smoke,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> anyhow::Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        Manifest::parse_str(&text)
+    }
+
+    pub fn parse_str(text: &str) -> anyhow::Result<Manifest> {
+        let j = parse(text)?;
+        let usz = |k: &str| -> anyhow::Result<usize> {
+            j.require(k)?.as_usize().ok_or_else(|| anyhow::anyhow!("'{k}' not a number"))
+        };
+        let flt = |k: &str| -> anyhow::Result<f64> {
+            j.require(k)?.as_f64().ok_or_else(|| anyhow::anyhow!("'{k}' not a number"))
+        };
+        let str_of = |k: &str| -> anyhow::Result<String> {
+            Ok(j.require(k)?
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("'{k}' not a string"))?
+                .to_string())
+        };
+        let mut sizes: Vec<usize> = j
+            .require("sizes")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("'sizes' not an array"))?
+            .iter()
+            .filter_map(|v| v.as_usize())
+            .collect();
+        sizes.sort_unstable();
+        let arts = j.require("artifacts")?;
+        let mut artifacts = Vec::new();
+        for &n in &sizes {
+            let entry = arts.require(&n.to_string())?;
+            let pf = entry.require("policy_fwd")?.as_str().unwrap_or_default().to_string();
+            let su = entry.require("sac_update")?.as_str().unwrap_or_default().to_string();
+            let bz = entry
+                .get("boltzmann")
+                .and_then(|v| v.as_str())
+                .map(|s| s.to_string());
+            artifacts.push((n, pf, su, bz));
+        }
+        let smoke_j = j.require("smoke")?;
+        let smoke = Smoke {
+            n: smoke_j.require("n")?.as_usize().unwrap_or(0),
+            first8: smoke_j
+                .require("first8")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|v| v.as_f64().map(|x| x as f32))
+                .collect(),
+            sum: smoke_j.require("sum")?.as_f64().unwrap_or(0.0) as f32,
+        };
+        let m = Manifest {
+            feature_dim: usz("feature_dim")?,
+            hidden: usz("hidden")?,
+            heads: usz("heads")?,
+            num_layers: usz("num_layers")?,
+            subactions: usz("subactions")?,
+            choices: usz("choices")?,
+            actor_size: usz("actor_size")?,
+            critic_size: usz("critic_size")?,
+            batch: usz("batch")?,
+            sizes,
+            alpha: flt("alpha")?,
+            noise_clip: flt("noise_clip")?,
+            actor_init: str_of("actor_init")?,
+            critic_init: str_of("critic_init")?,
+            artifacts,
+            smoke,
+        };
+        // Cross-checks against the L3 compile-time constants.
+        anyhow::ensure!(
+            m.feature_dim == crate::graph::features::DIM,
+            "manifest feature_dim {} != rust graph::features::DIM {}",
+            m.feature_dim,
+            crate::graph::features::DIM
+        );
+        anyhow::ensure!(m.subactions == crate::SUBACTIONS_PER_NODE, "subactions mismatch");
+        anyhow::ensure!(m.choices == crate::NUM_MEMORIES, "choices mismatch");
+        anyhow::ensure!(m.critic_size == 2 * m.actor_size, "twin critic size mismatch");
+        Ok(m)
+    }
+
+    /// Smallest artifact size that fits a graph of `n` nodes.
+    pub fn size_for(&self, n: usize) -> anyhow::Result<usize> {
+        self.sizes
+            .iter()
+            .copied()
+            .find(|&s| s >= n)
+            .ok_or_else(|| anyhow::anyhow!("no artifact size fits graph of {n} nodes (max {:?})", self.sizes.last()))
+    }
+
+    fn entry(&self, n: usize) -> anyhow::Result<&(usize, String, String, Option<String>)> {
+        let s = self.size_for(n)?;
+        Ok(self
+            .artifacts
+            .iter()
+            .find(|(sz, ..)| *sz == s)
+            .expect("size came from artifacts"))
+    }
+
+    pub fn policy_fwd_file(&self, n: usize) -> anyhow::Result<String> {
+        Ok(self.entry(n)?.1.clone())
+    }
+
+    pub fn sac_update_file(&self, n: usize) -> anyhow::Result<String> {
+        Ok(self.entry(n)?.2.clone())
+    }
+
+    /// Standalone Boltzmann-decode kernel artifact (optional; used by the
+    /// L1↔L3 cross-check in the integration tests).
+    pub fn boltzmann_file(&self, n: usize) -> anyhow::Result<Option<String>> {
+        Ok(self.entry(n)?.3.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "feature_dim": 19, "hidden": 64, "heads": 4, "num_layers": 4,
+      "subactions": 2, "choices": 3, "actor_size": 18630,
+      "critic_size": 37260, "batch": 24, "sizes": [64, 128, 384],
+      "alpha": 0.05, "actor_lr": 0.001, "critic_lr": 0.001,
+      "noise_clip": 0.3, "init_seed": 1, "pool_ratio": 4, "version": 1,
+      "actor_init": "actor_init.bin", "critic_init": "critic_init.bin",
+      "artifacts": {
+        "64": {"policy_fwd": "p64", "sac_update": "s64"},
+        "128": {"policy_fwd": "p128", "sac_update": "s128"},
+        "384": {"policy_fwd": "p384", "sac_update": "s384"}
+      },
+      "smoke": {"n": 64, "first8": [0.1, 0.2], "sum": 12.5}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse_str(SAMPLE).unwrap();
+        assert_eq!(m.sizes, vec![64, 128, 384]);
+        assert_eq!(m.actor_size, 18630);
+        assert_eq!(m.smoke.n, 64);
+    }
+
+    #[test]
+    fn size_selection_picks_smallest_fit() {
+        let m = Manifest::parse_str(SAMPLE).unwrap();
+        assert_eq!(m.size_for(57).unwrap(), 64);
+        assert_eq!(m.size_for(64).unwrap(), 64);
+        assert_eq!(m.size_for(65).unwrap(), 128);
+        assert_eq!(m.size_for(376).unwrap(), 384);
+        assert!(m.size_for(1000).is_err());
+    }
+
+    #[test]
+    fn artifact_files_resolve() {
+        let m = Manifest::parse_str(SAMPLE).unwrap();
+        assert_eq!(m.policy_fwd_file(108).unwrap(), "p128");
+        assert_eq!(m.sac_update_file(376).unwrap(), "s384");
+    }
+
+    #[test]
+    fn rejects_feature_dim_mismatch() {
+        let bad = SAMPLE.replace("\"feature_dim\": 19", "\"feature_dim\": 7");
+        assert!(Manifest::parse_str(&bad).is_err());
+    }
+}

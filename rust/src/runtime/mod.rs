@@ -1,0 +1,236 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the training hot loop.
+//!
+//! Python never runs here — the interchange is `artifacts/*.hlo.txt`
+//! (HLO **text**, because the crate's xla_extension 0.5.1 rejects jax≥0.5
+//! serialized protos with 64-bit instruction ids) plus raw little-endian
+//! f32 parameter files and `manifest.json`.
+//!
+//! * [`manifest`] — typed view of manifest.json (shape contract);
+//! * [`Runtime`] — PJRT CPU client + artifact compilation cache;
+//! * [`Executable`] — one compiled computation with a `run` that
+//!   tuple-unwraps outputs.
+
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+pub use manifest::Manifest;
+
+/// Create an f32 literal of the given dimensions from host data.
+pub fn literal_f32(data: &[f32], dims: &[usize]) -> xla::Literal {
+    let n: usize = dims.iter().product();
+    assert_eq!(data.len(), n, "literal data/shape mismatch");
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, dims, bytes)
+        .expect("f32 literal construction")
+}
+
+/// Copy an f32 literal back into a host vector.
+pub fn literal_to_f32(lit: &xla::Literal) -> anyhow::Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("literal read: {e:?}"))
+}
+
+/// One compiled HLO computation.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Artifact file name, for error messages.
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns the decomposed output tuple.
+    /// (aot.py lowers everything with `return_tuple=True`.)
+    pub fn run(&self, inputs: &[xla::Literal]) -> anyhow::Result<Vec<xla::Literal>> {
+        self.finish(self.exe.execute::<xla::Literal>(inputs))
+    }
+
+    /// Borrowed-input variant: callers keep ownership of cached literals
+    /// (the hot path reuses the workload's feature/adjacency constants).
+    pub fn run_refs(&self, inputs: &[&xla::Literal]) -> anyhow::Result<Vec<xla::Literal>> {
+        self.finish(self.exe.execute::<&xla::Literal>(inputs))
+    }
+
+    fn finish(
+        &self,
+        result: Result<Vec<Vec<xla::PjRtBuffer>>, xla::Error>,
+    ) -> anyhow::Result<Vec<xla::Literal>> {
+        let result = result.map_err(|e| anyhow::anyhow!("{}: execute: {e:?}", self.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("{}: readback: {e:?}", self.name))?;
+        lit.to_tuple().map_err(|e| anyhow::anyhow!("{}: tuple: {e:?}", self.name))
+    }
+}
+
+/// PJRT CPU client plus a cache of compiled artifacts.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: std::sync::Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (reads + validates manifest.json).
+    pub fn open(dir: impl AsRef<Path>) -> anyhow::Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Runtime { client, dir, manifest, cache: std::sync::Mutex::new(HashMap::new()) })
+    }
+
+    /// Default artifact location relative to the repo root, overridable
+    /// via `EGRL_ARTIFACTS`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("EGRL_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// Compile (or fetch from cache) an artifact by file name.
+    pub fn load(&self, file: &str) -> anyhow::Result<std::sync::Arc<Executable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(file) {
+            return Ok(exe.clone());
+        }
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("{file}: parse HLO text: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("{file}: XLA compile: {e:?}"))?;
+        let exe = std::sync::Arc::new(Executable { exe, name: file.to_string() });
+        self.cache.lock().unwrap().insert(file.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// The policy-forward executable for graph-size variant `n`.
+    pub fn policy_fwd(&self, n: usize) -> anyhow::Result<std::sync::Arc<Executable>> {
+        self.load(&self.manifest.policy_fwd_file(n)?)
+    }
+
+    /// The SAC-update executable for graph-size variant `n`.
+    pub fn sac_update(&self, n: usize) -> anyhow::Result<std::sync::Arc<Executable>> {
+        self.load(&self.manifest.sac_update_file(n)?)
+    }
+
+    /// Read a raw little-endian f32 parameter file from the artifact dir.
+    pub fn read_params(&self, file: &str) -> anyhow::Result<Vec<f32>> {
+        let bytes = std::fs::read(self.dir.join(file))
+            .map_err(|e| anyhow::anyhow!("{file}: {e}"))?;
+        anyhow::ensure!(bytes.len() % 4 == 0, "{file}: not f32-aligned");
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Initial actor parameters (Glorot init from the AOT pipeline).
+    pub fn actor_init(&self) -> anyhow::Result<Vec<f32>> {
+        let v = self.read_params(&self.manifest.actor_init)?;
+        anyhow::ensure!(v.len() == self.manifest.actor_size, "actor_init size mismatch");
+        Ok(v)
+    }
+
+    /// Initial twin-critic parameters.
+    pub fn critic_init(&self) -> anyhow::Result<Vec<f32>> {
+        let v = self.read_params(&self.manifest.critic_init)?;
+        anyhow::ensure!(v.len() == self.manifest.critic_size, "critic_init size mismatch");
+        Ok(v)
+    }
+
+    /// Verify the policy artifact against the manifest's smoke vector:
+    /// re-run the canonical input through the compiled executable and
+    /// compare outputs. This is the Python↔Rust integration contract.
+    pub fn verify_smoke(&self) -> anyhow::Result<()> {
+        let smoke = &self.manifest.smoke;
+        let n = smoke.n;
+        let exe = self.policy_fwd(n)?;
+        let actor = self.actor_init()?;
+        let f = self.manifest.feature_dim;
+        let feats = vec![0.5f32; n * f];
+        // Ring adjacency with self-loops — mirrors aot.smoke_vector.
+        let mut adj = vec![0f32; n * n];
+        for i in 0..n {
+            adj[i * n + i] = 0.5;
+            adj[i * n + (i + 1) % n] = 0.25;
+            adj[((i + 1) % n) * n + i] = 0.25;
+        }
+        let mask: Vec<f32> = (0..n).map(|i| if i < n / 2 { 1.0 } else { 0.0 }).collect();
+        let out = exe.run(&[
+            literal_f32(&actor, &[actor.len()]),
+            literal_f32(&feats, &[n, f]),
+            literal_f32(&adj, &[n, n]),
+            literal_f32(&mask, &[n]),
+        ])?;
+        let probs = literal_to_f32(&out[0])?;
+        anyhow::ensure!(probs.len() == n * 2 * 3, "smoke: bad output size");
+        for (i, (&got, &want)) in probs.iter().zip(&smoke.first8).enumerate() {
+            anyhow::ensure!(
+                (got - want).abs() < 1e-4 * (1.0 + want.abs()),
+                "smoke mismatch at {i}: rust={got} python={want}"
+            );
+        }
+        let sum: f32 = probs.iter().sum();
+        anyhow::ensure!(
+            (sum - smoke.sum).abs() < 1e-2 * (1.0 + smoke.sum.abs()),
+            "smoke sum mismatch: rust={sum} python={}",
+            smoke.sum
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_available() -> bool {
+        Runtime::default_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let data = vec![1.0f32, -2.5, 3.25, 0.0, 7.0, 9.5];
+        let lit = literal_f32(&data, &[2, 3]);
+        assert_eq!(literal_to_f32(&lit).unwrap(), data);
+        assert_eq!(lit.element_count(), 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch")]
+    fn literal_shape_mismatch_panics() {
+        literal_f32(&[1.0, 2.0], &[3]);
+    }
+
+    #[test]
+    fn smoke_contract_python_to_rust() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::open(Runtime::default_dir()).unwrap();
+        rt.verify_smoke().unwrap();
+    }
+
+    #[test]
+    fn init_params_load() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::open(Runtime::default_dir()).unwrap();
+        let a = rt.actor_init().unwrap();
+        let c = rt.critic_init().unwrap();
+        assert_eq!(c.len(), 2 * a.len());
+        assert!(a.iter().all(|x| x.is_finite()));
+    }
+}

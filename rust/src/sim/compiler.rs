@@ -1,0 +1,418 @@
+//! The native-compiler substitute: validity semantics, rectification and
+//! the heuristic baseline mapper.
+//!
+//! Three roles, mirroring the real NNP-I toolchain's part in the paper:
+//!
+//! 1. **Rectification** (Algorithm 1, line 6): the agent's proposed map may
+//!    violate memory-capacity constraints; the compiler produces the
+//!    closest executable map by spilling over-capacity tensors to the next
+//!    larger/slower level, and reports the *re-assigned-bytes ratio* ε that
+//!    drives the negative reward (line 12).
+//! 2. **Validity checking**: a map is valid iff rectification is the
+//!    identity (ε = 0).
+//! 3. **The heuristic baseline** (§4 Baseline): a sequential greedy mapper
+//!    with hand-tuned size thresholds — reasonable, capacity-aware, but
+//!    blind to compute-boundedness and to downstream demand, which is the
+//!    headroom the learning agents exploit.
+
+use crate::graph::Graph;
+use crate::mapping::{MemKind, MemoryMap};
+use super::liveness::Liveness;
+use super::spec::ChipSpec;
+
+/// Result of compiling (rectifying) an agent-proposed map.
+#[derive(Clone, Debug)]
+pub struct RectifyOutcome {
+    /// The executable map (== input map iff the input was valid).
+    pub map: MemoryMap,
+    /// Re-assigned-bytes ratio ε ∈ [0, 1]; 0 means the input was valid.
+    pub epsilon: f64,
+    /// Bytes the compiler had to move.
+    pub reassigned_bytes: u64,
+    /// Total tensor bytes in the workload.
+    pub total_bytes: u64,
+}
+
+impl RectifyOutcome {
+    /// Was the proposed map executable as-is?
+    pub fn valid(&self) -> bool {
+        self.reassigned_bytes == 0
+    }
+}
+
+/// The compiler model. Stateless apart from the chip spec; reusable
+/// scratch buffers live in [`CompilerWorkspace`] for the hot path.
+#[derive(Clone, Debug)]
+pub struct Compiler {
+    pub chip: ChipSpec,
+}
+
+/// Reusable scratch state for rectification — avoids per-call allocation
+/// in the trainer's hot loop (thousands of rectifications per generation).
+#[derive(Default)]
+pub struct CompilerWorkspace {
+    /// Live activation bytes currently resident per memory.
+    act_used: [u64; 3],
+    /// Weight bytes resident per memory.
+    w_used: [u64; 3],
+    /// Per-node final activation memory while walking.
+    act_mem: Vec<MemKind>,
+    /// Node indices whose activation dies at step s, grouped by step.
+    death_row: Vec<Vec<usize>>,
+}
+
+impl Compiler {
+    pub fn new(chip: ChipSpec) -> Compiler {
+        Compiler { chip }
+    }
+
+    /// Rectify `proposed` into an executable map. See module docs.
+    pub fn rectify(&self, g: &Graph, lv: &Liveness, proposed: &MemoryMap) -> RectifyOutcome {
+        let mut ws = CompilerWorkspace::default();
+        self.rectify_with(g, lv, proposed, &mut ws)
+    }
+
+    /// Allocation-reusing variant of [`Self::rectify`].
+    pub fn rectify_with(
+        &self,
+        g: &Graph,
+        lv: &Liveness,
+        proposed: &MemoryMap,
+        ws: &mut CompilerWorkspace,
+    ) -> RectifyOutcome {
+        assert_eq!(proposed.len(), g.len(), "map size != graph size");
+        let n = g.len();
+        ws.act_used = [0; 3];
+        ws.w_used = [0; 3];
+        ws.act_mem.clear();
+        ws.act_mem.resize(n, MemKind::Dram);
+        if ws.death_row.len() < n {
+            ws.death_row.resize_with(n, Vec::new);
+        }
+        for dr in ws.death_row.iter_mut().take(n) {
+            dr.clear();
+        }
+        for i in 0..n {
+            ws.death_row[lv.last_use[i]].push(i);
+        }
+
+        let mut out = proposed.clone();
+        let mut reassigned: u64 = 0;
+        let mut total: u64 = 0;
+
+        // Phase 1 — weights (resident for the whole run), topo order.
+        for &i in &lv.order {
+            let w = g.nodes[i].weight_bytes;
+            if w == 0 {
+                continue;
+            }
+            total += w;
+            let want = proposed.placements[i].weight;
+            let got = self.fit_weight(want, w, &ws.w_used);
+            ws.w_used[got.index()] += w;
+            if got != want {
+                reassigned += w;
+                out.placements[i].weight = got;
+            }
+        }
+
+        // Phase 2 — activations, simulated over the execution order with
+        // weight residency already committed.
+        for (s, &i) in lv.order.iter().enumerate() {
+            let a = g.nodes[i].ofm_bytes();
+            total += a;
+            let want = proposed.placements[i].activation;
+            let got = self.fit_act(want, a, &ws.w_used, &ws.act_used);
+            ws.act_used[got.index()] += a;
+            ws.act_mem[i] = got;
+            if got != want {
+                reassigned += a;
+                out.placements[i].activation = got;
+            }
+            // Retire activations whose last consumer just executed.
+            for &dead in &ws.death_row[s] {
+                ws.act_used[ws.act_mem[dead].index()] -= g.nodes[dead].ofm_bytes();
+            }
+        }
+
+        let epsilon = if total == 0 { 0.0 } else { reassigned as f64 / total as f64 };
+        RectifyOutcome { map: out, epsilon, reassigned_bytes: reassigned, total_bytes: total }
+    }
+
+    /// First memory at or below `want` (toward DRAM) where `bytes` of
+    /// weights fit alongside already-resident weights.
+    fn fit_weight(&self, want: MemKind, bytes: u64, w_used: &[u64; 3]) -> MemKind {
+        let mut m = want;
+        loop {
+            let cap = self.chip.mem(m).capacity;
+            if w_used[m.index()] + bytes <= cap {
+                return m;
+            }
+            match m.spill_target() {
+                Some(next) => m = next,
+                None => return MemKind::Dram, // DRAM modelled as never full
+            }
+        }
+    }
+
+    /// First memory at or below `want` where `bytes` of activation fit in
+    /// the capacity left over after weights and live activations.
+    fn fit_act(&self, want: MemKind, bytes: u64, w_used: &[u64; 3], act_used: &[u64; 3]) -> MemKind {
+        let mut m = want;
+        loop {
+            let cap = self.chip.mem(m).capacity;
+            if w_used[m.index()] + act_used[m.index()] + bytes <= cap {
+                return m;
+            }
+            match m.spill_target() {
+                Some(next) => m = next,
+                None => return MemKind::Dram,
+            }
+        }
+    }
+
+    /// Validity = rectification is the identity.
+    pub fn is_valid(&self, g: &Graph, lv: &Liveness, map: &MemoryMap) -> bool {
+        self.rectify(g, lv, map).valid()
+    }
+
+    /// The native compiler's own mapping: sequential greedy with size
+    /// thresholds (§4 Baseline). Processes nodes in execution order; for
+    /// each node places the weight (small → fastest memory that fits, with
+    /// hand-tuned byte ceilings) then the activation (fastest that fits).
+    pub fn heuristic_map(&self, g: &Graph, lv: &Liveness) -> MemoryMap {
+        /// Weights above this never go to SRAM (hand-tuned rule).
+        const SRAM_W_CEIL: u64 = 128 << 10;
+        /// Weights above this never go to LLC.
+        const LLC_W_CEIL: u64 = 4 << 20;
+
+        let n = g.len();
+        let mut w_used = [0u64; 3];
+        let mut act_used = [0u64; 3];
+        let mut act_mem = vec![MemKind::Dram; n];
+        let mut death_row: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for i in 0..n {
+            death_row[lv.last_use[i]].push(i);
+        }
+        let mut map = MemoryMap::all_dram(n);
+
+        let fits = |m: MemKind, bytes: u64, w_used: &[u64; 3], act_used: &[u64; 3]| {
+            w_used[m.index()] + act_used[m.index()] + bytes <= self.chip.mem(m).capacity
+        };
+
+        for (s, &i) in lv.order.iter().enumerate() {
+            let node = &g.nodes[i];
+            // Weight rule: byte ceilings + first-fit downward.
+            let w = node.weight_bytes;
+            if w > 0 {
+                let want = if w <= SRAM_W_CEIL && fits(MemKind::Sram, w, &w_used, &act_used) {
+                    MemKind::Sram
+                } else if w <= LLC_W_CEIL && fits(MemKind::Llc, w, &w_used, &act_used) {
+                    MemKind::Llc
+                } else {
+                    MemKind::Dram
+                };
+                w_used[want.index()] += w;
+                map.placements[i].weight = want;
+            }
+            // Activation rule: fastest level with room right now.
+            let a = node.ofm_bytes();
+            let want = if fits(MemKind::Sram, a, &w_used, &act_used) {
+                MemKind::Sram
+            } else if fits(MemKind::Llc, a, &w_used, &act_used) {
+                MemKind::Llc
+            } else {
+                MemKind::Dram
+            };
+            act_used[want.index()] += a;
+            act_mem[i] = want;
+            map.placements[i].activation = want;
+            for &dead in &death_row[s] {
+                act_used[act_mem[dead].index()] -= g.nodes[dead].ofm_bytes();
+            }
+        }
+        map
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::node::test_node;
+    use crate::graph::Graph;
+    use crate::testing::prop::check;
+    use crate::workloads::Workload;
+
+    fn chain(n: usize, w: u64, a: u64) -> Graph {
+        let nodes = (0..n).map(|i| test_node(i, w, a)).collect();
+        let edges = (0..n - 1).map(|i| (i, i + 1)).collect();
+        Graph::new("chain", nodes, edges).unwrap()
+    }
+
+    fn tiny_compiler() -> Compiler {
+        Compiler::new(ChipSpec::tiny())
+    }
+
+    #[test]
+    fn valid_map_passes_through() {
+        let g = chain(4, 100, 50);
+        let lv = Liveness::analyze(&g);
+        let c = tiny_compiler();
+        let m = MemoryMap::all_dram(4);
+        let r = c.rectify(&g, &lv, &m);
+        assert!(r.valid());
+        assert_eq!(r.map, m);
+        assert_eq!(r.epsilon, 0.0);
+    }
+
+    #[test]
+    fn oversized_weights_spill_downward() {
+        // tiny chip: SRAM = 1 KB. Two 800-byte weights → second spills.
+        let g = chain(2, 800, 10);
+        let lv = Liveness::analyze(&g);
+        let c = tiny_compiler();
+        let m = MemoryMap::constant(2, MemKind::Sram);
+        let r = c.rectify(&g, &lv, &m);
+        assert!(!r.valid());
+        assert_eq!(r.map.placements[0].weight, MemKind::Sram);
+        assert_eq!(r.map.placements[1].weight, MemKind::Llc);
+        assert!(r.epsilon > 0.0);
+    }
+
+    #[test]
+    fn spill_cascades_to_dram() {
+        // SRAM 1 KB, LLC 4 KB; weight of 8 KB fits only in DRAM.
+        let g = chain(2, 8 << 10, 1);
+        let lv = Liveness::analyze(&g);
+        let c = tiny_compiler();
+        let m = MemoryMap::constant(2, MemKind::Sram);
+        let r = c.rectify(&g, &lv, &m);
+        assert_eq!(r.map.placements[0].weight, MemKind::Dram);
+        assert_eq!(r.map.placements[1].weight, MemKind::Dram);
+    }
+
+    #[test]
+    fn liveness_frees_activation_capacity() {
+        // SRAM 1 KB; chain of 600-byte activations with no weights: at any
+        // step only producer+consumer are live (1200 > 1024 → the consumer
+        // spills, but after death the next one fits again).
+        let g = chain(4, 0, 600);
+        let lv = Liveness::analyze(&g);
+        let c = tiny_compiler();
+        let m = MemoryMap::constant(4, MemKind::Sram);
+        let r = c.rectify(&g, &lv, &m);
+        // Node 0 fits; node 1 overlaps node 0 (600+600 > 1024) → spills;
+        // node 2 overlaps node 1 (now in LLC) so SRAM has room → fits.
+        assert_eq!(r.map.placements[0].activation, MemKind::Sram);
+        assert_eq!(r.map.placements[1].activation, MemKind::Llc);
+        assert_eq!(r.map.placements[2].activation, MemKind::Sram);
+    }
+
+    #[test]
+    fn epsilon_is_byte_ratio() {
+        let g = chain(2, 800, 0);
+        let lv = Liveness::analyze(&g);
+        let c = tiny_compiler();
+        let m = MemoryMap::constant(2, MemKind::Sram);
+        let r = c.rectify(&g, &lv, &m);
+        // Activations have |ofm| >= 1 elem (test_node min); weights 800+800.
+        assert!(r.reassigned_bytes >= 800);
+        assert!((r.epsilon - r.reassigned_bytes as f64 / r.total_bytes as f64).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prop_rectified_maps_are_valid_fixed_point() {
+        let c = tiny_compiler();
+        check(
+            "rectify is idempotent and yields valid maps",
+            80,
+            |gen| {
+                let n = gen.usize_in(2, 30);
+                let w = gen.usize_in(0, 2000) as u64;
+                let a = gen.usize_in(1, 1500) as u64;
+                let g = chain(n, w, a);
+                let actions: Vec<[usize; 2]> =
+                    (0..n).map(|_| [gen.usize_in(0, 2), gen.usize_in(0, 2)]).collect();
+                ((g, MemoryMap::from_actions(&actions)), ())
+            },
+            |(g, m), _| {
+                let lv = Liveness::analyze(g);
+                let r = c.rectify(g, &lv, m);
+                let r2 = c.rectify(g, &lv, &r.map);
+                r2.valid() && r2.map == r.map
+            },
+        );
+    }
+
+    #[test]
+    fn prop_epsilon_zero_iff_unchanged() {
+        let c = tiny_compiler();
+        check(
+            "ε = 0 ⇔ map unchanged",
+            80,
+            |gen| {
+                let n = gen.usize_in(2, 20);
+                let g = chain(n, gen.usize_in(0, 1200) as u64, gen.usize_in(1, 900) as u64);
+                let actions: Vec<[usize; 2]> =
+                    (0..n).map(|_| [gen.usize_in(0, 2), gen.usize_in(0, 2)]).collect();
+                ((g, MemoryMap::from_actions(&actions)), ())
+            },
+            |(g, m), _| {
+                let lv = Liveness::analyze(g);
+                let r = c.rectify(g, &lv, m);
+                (r.epsilon == 0.0) == (r.map == *m)
+            },
+        );
+    }
+
+    #[test]
+    fn heuristic_map_is_valid_on_all_workloads() {
+        let c = Compiler::new(ChipSpec::nnpi());
+        for w in Workload::all() {
+            let g = w.build();
+            let lv = Liveness::analyze(&g);
+            let m = c.heuristic_map(&g, &lv);
+            assert!(c.is_valid(&g, &lv, &m), "heuristic map invalid on {}", w.name());
+            // The heuristic must actually use the fast memories.
+            let b = m.bytes_by_memory(&g);
+            assert!(b[MemKind::Sram.index()][0] + b[MemKind::Sram.index()][1] > 0, "{}: SRAM unused", w.name());
+        }
+    }
+
+    #[test]
+    fn heuristic_respects_weight_ceilings() {
+        let c = Compiler::new(ChipSpec::nnpi());
+        let g = Workload::Bert.build();
+        let lv = Liveness::analyze(&g);
+        let m = c.heuristic_map(&g, &lv);
+        for (i, p) in m.placements.iter().enumerate() {
+            let w = g.nodes[i].weight_bytes;
+            if w > (4 << 20) {
+                assert_eq!(p.weight, MemKind::Dram, "large weight {} in {:?}", w, p.weight);
+            }
+        }
+    }
+
+    #[test]
+    fn all_dram_always_valid_on_real_workloads() {
+        let c = Compiler::new(ChipSpec::nnpi());
+        for w in Workload::all() {
+            let g = w.build();
+            let lv = Liveness::analyze(&g);
+            assert!(c.is_valid(&g, &lv, &MemoryMap::all_dram(g.len())));
+        }
+    }
+
+    #[test]
+    fn all_sram_invalid_on_real_workloads() {
+        // 25-108 MB of weights cannot fit 4 MB of SRAM.
+        let c = Compiler::new(ChipSpec::nnpi());
+        for w in Workload::all() {
+            let g = w.build();
+            let lv = Liveness::analyze(&g);
+            let r = c.rectify(&g, &lv, &MemoryMap::constant(g.len(), MemKind::Sram));
+            assert!(!r.valid(), "{} fully fits SRAM?!", w.name());
+            assert!(r.epsilon > 0.5, "ε suspiciously small: {}", r.epsilon);
+        }
+    }
+}

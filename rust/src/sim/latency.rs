@@ -1,0 +1,239 @@
+//! Roofline latency model: the positive-reward half of the environment.
+//!
+//! Per node, execution time is the maximum of compute time (MACs over the
+//! efficiency-scaled MAC rate) and memory time (weight streaming + input
+//! reads + output write at the bandwidth of each tensor's assigned memory),
+//! plus a fixed launch overhead; the graph executes sequentially in
+//! topological order (batch-1 inference — no inter-request overlap), so
+//! end-to-end latency is the sum.
+//!
+//! The model captures the two strategies the paper observes EGRL discovers
+//! (§5.2.1): *avoiding DRAM* (bandwidth terms shrink when tensors sit in
+//! LLC/SRAM — but only help where the node is memory-bound) and
+//! *contiguity* (a consumer reads its inputs at the bandwidth of the
+//! memory its producer wrote to, so keeping chains in fast memory
+//! compounds).
+
+use crate::graph::Graph;
+use crate::mapping::MemoryMap;
+use super::spec::ChipSpec;
+
+/// Latency evaluator. Stateless; construct once per chip.
+#[derive(Clone, Debug)]
+pub struct LatencyModel {
+    pub chip: ChipSpec,
+}
+
+/// Per-node timing breakdown (for diagnostics and the perf bench).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NodeCost {
+    pub compute_s: f64,
+    pub weight_s: f64,
+    pub input_s: f64,
+    pub output_s: f64,
+}
+
+impl NodeCost {
+    /// Node wall time: overlap compute against total memory traffic.
+    pub fn total_s(&self, overhead_s: f64) -> f64 {
+        let mem = self.weight_s + self.input_s + self.output_s;
+        self.compute_s.max(mem) + overhead_s
+    }
+
+    /// Is the node limited by memory traffic rather than compute?
+    pub fn memory_bound(&self) -> bool {
+        self.weight_s + self.input_s + self.output_s > self.compute_s
+    }
+}
+
+impl LatencyModel {
+    pub fn new(chip: ChipSpec) -> LatencyModel {
+        LatencyModel { chip }
+    }
+
+    /// Timing breakdown of node `i` under `map`.
+    pub fn node_cost(&self, g: &Graph, map: &MemoryMap, i: usize) -> NodeCost {
+        let node = &g.nodes[i];
+        let eff = self.chip.op_efficiency(node.op);
+        let compute_s = node.macs as f64 / (self.chip.peak_macs_per_s * eff);
+        let weight_s = if node.weight_bytes > 0 {
+            node.weight_bytes as f64 / self.chip.mem(map.placements[i].weight).read_bw
+        } else {
+            0.0
+        };
+        // Inputs are read from wherever each producer wrote its activation.
+        let mut input_s = 0.0;
+        for &p in g.preds(i) {
+            let bytes = g.nodes[p].ofm_bytes() as f64;
+            input_s += bytes / self.chip.mem(map.placements[p].activation).read_bw;
+        }
+        let output_s =
+            node.ofm_bytes() as f64 / self.chip.mem(map.placements[i].activation).write_bw;
+        NodeCost { compute_s, weight_s, input_s, output_s }
+    }
+
+    /// End-to-end inference latency (seconds) of a *valid* map.
+    pub fn latency(&self, g: &Graph, map: &MemoryMap) -> f64 {
+        debug_assert_eq!(map.len(), g.len());
+        let mut total = 0.0;
+        for i in 0..g.len() {
+            total += self.node_cost(g, map, i).total_s(self.chip.node_overhead_s);
+        }
+        total
+    }
+
+    /// Fraction of nodes that are memory-bound under `map` (diagnostic for
+    /// the §5.2.1 analysis and for the Greedy-DP discussion).
+    pub fn memory_bound_fraction(&self, g: &Graph, map: &MemoryMap) -> f64 {
+        if g.is_empty() {
+            return 0.0;
+        }
+        let n = (0..g.len())
+            .filter(|&i| self.node_cost(g, map, i).memory_bound())
+            .count();
+        n as f64 / g.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::node::test_node;
+    use crate::graph::Graph;
+    use crate::mapping::{MemKind, MemoryMap};
+    use crate::sim::liveness::Liveness;
+    use crate::sim::compiler::Compiler;
+    use crate::testing::prop::check;
+    use crate::workloads::Workload;
+
+    fn model() -> LatencyModel {
+        LatencyModel::new(ChipSpec::nnpi())
+    }
+
+    fn chain(n: usize, w: u64, a: u64) -> Graph {
+        let nodes = (0..n).map(|i| test_node(i, w, a)).collect();
+        let edges = (0..n - 1).map(|i| (i, i + 1)).collect();
+        Graph::new("chain", nodes, edges).unwrap()
+    }
+
+    #[test]
+    fn latency_positive_and_finite() {
+        let g = chain(5, 1000, 500);
+        let m = MemoryMap::all_dram(5);
+        let l = model().latency(&g, &m);
+        assert!(l.is_finite() && l > 0.0);
+    }
+
+    #[test]
+    fn faster_memory_never_hurts() {
+        // Moving a weight from DRAM to SRAM can only reduce latency.
+        let g = chain(5, 1 << 20, 500);
+        let dram = MemoryMap::all_dram(5);
+        let mut up = dram.clone();
+        up.placements[2].weight = MemKind::Sram;
+        let m = model();
+        assert!(m.latency(&g, &up) <= m.latency(&g, &dram));
+    }
+
+    #[test]
+    fn prop_promoting_any_tensor_is_monotone() {
+        let m = model();
+        check(
+            "promoting one tensor never increases latency",
+            100,
+            |gen| {
+                let n = gen.usize_in(2, 20);
+                let g = chain(n, 1 << gen.usize_in(8, 20), 1 << gen.usize_in(6, 16));
+                let actions: Vec<[usize; 2]> =
+                    (0..n).map(|_| [gen.usize_in(0, 1), gen.usize_in(0, 1)]).collect();
+                let map = MemoryMap::from_actions(&actions);
+                let node = gen.usize_in(0, n - 1);
+                let which = gen.bool();
+                ((g, map, node, which), ())
+            },
+            |(g, map, node, which), _| {
+                let before = m.latency(g, map);
+                let mut up = map.clone();
+                // Promote one tensor one level (Dram→Llc or Llc→Sram).
+                if *which {
+                    up.placements[*node].weight =
+                        MemKind::from_index(up.placements[*node].weight.index() + 1);
+                } else {
+                    up.placements[*node].activation =
+                        MemKind::from_index(up.placements[*node].activation.index() + 1);
+                }
+                m.latency(g, &up) <= before + 1e-15
+            },
+        );
+    }
+
+    #[test]
+    fn compute_bound_node_ignores_weight_promotion() {
+        // A node with enormous MACs and a tiny weight: memory placement of
+        // that node's weight should not change its latency.
+        let mut g = chain(1, 64, 100);
+        g.nodes[0].macs = 10_000_000_000;
+        let m = model();
+        let dram = MemoryMap::all_dram(1);
+        let mut sram = dram.clone();
+        sram.placements[0].weight = MemKind::Sram;
+        let a = m.latency(&g, &dram);
+        let b = m.latency(&g, &sram);
+        assert!((a - b).abs() < 1e-12, "compute-bound node changed: {a} vs {b}");
+    }
+
+    #[test]
+    fn contiguity_coupling_via_producer_memory() {
+        // Consumer read time depends on the producer's activation memory.
+        let g = chain(2, 0, 1 << 20);
+        let m = model();
+        let mut producer_dram = MemoryMap::constant(2, MemKind::Sram);
+        producer_dram.placements[0].activation = MemKind::Dram;
+        let all_sram = MemoryMap::constant(2, MemKind::Sram);
+        assert!(m.latency(&g, &all_sram) < m.latency(&g, &producer_dram));
+    }
+
+    #[test]
+    fn compiler_map_beats_all_dram_on_paper_workloads() {
+        let chip = ChipSpec::nnpi();
+        let lm = LatencyModel::new(chip.clone());
+        let c = Compiler::new(chip);
+        for w in Workload::all() {
+            let g = w.build();
+            let lv = Liveness::analyze(&g);
+            let heur = c.heuristic_map(&g, &lv);
+            let dram = MemoryMap::all_dram(g.len());
+            let lh = lm.latency(&g, &heur);
+            let ld = lm.latency(&g, &dram);
+            assert!(lh < ld, "{}: heuristic {lh} !< all-dram {ld}", w.name());
+        }
+    }
+
+    #[test]
+    fn workload_latencies_in_plausible_range() {
+        // Batch-1 int8 inference on an NNP-I-class part: hundreds of µs to
+        // a handful of ms.
+        let chip = ChipSpec::nnpi();
+        let lm = LatencyModel::new(chip.clone());
+        let c = Compiler::new(chip);
+        for w in Workload::all() {
+            let g = w.build();
+            let lv = Liveness::analyze(&g);
+            let l = lm.latency(&g, &c.heuristic_map(&g, &lv));
+            assert!(
+                (5e-5..2e-2).contains(&l),
+                "{}: latency {l}s outside plausible envelope",
+                w.name()
+            );
+        }
+    }
+
+    #[test]
+    fn memory_bound_fraction_drops_with_fast_memory() {
+        let g = chain(8, 1 << 20, 1 << 12);
+        let m = model();
+        let dram = MemoryMap::all_dram(8);
+        let sram = MemoryMap::constant(8, MemKind::Sram);
+        assert!(m.memory_bound_fraction(&g, &sram) <= m.memory_bound_fraction(&g, &dram));
+    }
+}

@@ -1,0 +1,125 @@
+//! Activation liveness analysis.
+//!
+//! An output-activation tensor is *live* from the step its producer
+//! executes until the step its last consumer executes (inclusive). Weight
+//! tensors are resident for the whole inference (the NNP-I keeps weights
+//! pinned in their assigned memory across the run). Liveness drives the
+//! capacity constraints in [`crate::sim::compiler`]: at no execution step
+//! may the live bytes assigned to a memory exceed its capacity.
+
+use crate::graph::Graph;
+
+/// Live interval of each node's output activation, in execution-step
+/// indices over a fixed topological order.
+#[derive(Clone, Debug)]
+pub struct Liveness {
+    /// Execution order (a topological order of the graph).
+    pub order: Vec<usize>,
+    /// `step[i]` = position of node `i` in `order`.
+    pub step_of: Vec<usize>,
+    /// `last_use[i]` = last step at which node i's activation is read
+    /// (its own step if it has no consumers — e.g. graph outputs).
+    pub last_use: Vec<usize>,
+}
+
+impl Liveness {
+    /// Analyze a graph over its canonical topological order.
+    pub fn analyze(g: &Graph) -> Liveness {
+        let order = g.topo_order();
+        let mut step_of = vec![0usize; g.len()];
+        for (s, &i) in order.iter().enumerate() {
+            step_of[i] = s;
+        }
+        let mut last_use = vec![0usize; g.len()];
+        for i in 0..g.len() {
+            let mut last = step_of[i];
+            for &c in g.succs(i) {
+                last = last.max(step_of[c]);
+            }
+            last_use[i] = last;
+        }
+        Liveness { order, step_of, last_use }
+    }
+
+    /// Is node `i`'s activation live while the node at step `s` executes?
+    #[inline]
+    pub fn live_at(&self, i: usize, s: usize) -> bool {
+        self.step_of[i] <= s && s <= self.last_use[i]
+    }
+
+    /// Iterate execution steps, calling `f(step, executing_node)`.
+    pub fn walk(&self, mut f: impl FnMut(usize, usize)) {
+        for (s, &i) in self.order.iter().enumerate() {
+            f(s, i);
+        }
+    }
+
+    /// Peak number of simultaneously-live activations (diagnostic).
+    pub fn peak_live_count(&self) -> usize {
+        let n = self.order.len();
+        let mut delta = vec![0isize; n + 1];
+        for i in 0..n {
+            delta[self.step_of[i]] += 1;
+            delta[self.last_use[i] + 1] -= 1;
+        }
+        let mut cur = 0isize;
+        let mut peak = 0isize;
+        for d in delta {
+            cur += d;
+            peak = peak.max(cur);
+        }
+        peak as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::node::test_node;
+    use crate::graph::Graph;
+
+    fn diamond() -> Graph {
+        let nodes = (0..4).map(|i| test_node(i, 10, 10)).collect();
+        Graph::new("d", nodes, vec![(0, 1), (0, 2), (1, 3), (2, 3)]).unwrap()
+    }
+
+    #[test]
+    fn chain_liveness_is_one_step() {
+        let nodes = (0..3).map(|i| test_node(i, 0, 10)).collect();
+        let g = Graph::new("c", nodes, vec![(0, 1), (1, 2)]).unwrap();
+        let lv = Liveness::analyze(&g);
+        assert_eq!(lv.last_use, vec![1, 2, 2]);
+        assert!(lv.live_at(0, 0));
+        assert!(lv.live_at(0, 1));
+        assert!(!lv.live_at(0, 2));
+    }
+
+    #[test]
+    fn diamond_keeps_fork_live_until_last_branch() {
+        let g = diamond();
+        let lv = Liveness::analyze(&g);
+        // Node 0's activation is read by node 1 (step 1) and node 2 (step 2).
+        assert_eq!(lv.last_use[0], 2);
+        // Branch outputs live until the join at step 3.
+        assert_eq!(lv.last_use[1], 3);
+        assert_eq!(lv.last_use[2], 3);
+        // Join output has no consumers: lives only at its own step.
+        assert_eq!(lv.last_use[3], 3);
+    }
+
+    #[test]
+    fn peak_live_count_diamond() {
+        let g = diamond();
+        let lv = Liveness::analyze(&g);
+        // At step 2 (executing node 2): live = {0, 1, 2} → 3.
+        assert_eq!(lv.peak_live_count(), 3);
+    }
+
+    #[test]
+    fn terminal_node_lives_at_own_step() {
+        let g = diamond();
+        let lv = Liveness::analyze(&g);
+        assert!(lv.live_at(3, 3));
+        assert!(!lv.live_at(3, 2));
+    }
+}

@@ -1,0 +1,25 @@
+//! NNP-I-class inference-accelerator simulator.
+//!
+//! The paper trains and evaluates directly on Intel NNP-I silicon; this
+//! module is the substituted substrate (DESIGN.md §2): a chip model with
+//! the same *structure* of trade-offs — three memory levels trading
+//! capacity for bandwidth, capacity-induced mapping validity, a heuristic
+//! native compiler that rectifies invalid maps, and noisy end-to-end
+//! latency as the only feedback signal.
+//!
+//! * [`spec`]     — chip parameters (capacities, bandwidths, compute rates);
+//! * [`liveness`] — activation live ranges over the execution order;
+//! * [`compiler`] — validity checking, rectification (ε), and the native
+//!                  heuristic mapper that is the paper's baseline;
+//! * [`latency`]  — the roofline latency model (the positive reward);
+//! * [`noise`]    — multiplicative measurement noise.
+
+pub mod spec;
+pub mod liveness;
+pub mod compiler;
+pub mod latency;
+pub mod noise;
+
+pub use compiler::{Compiler, RectifyOutcome};
+pub use latency::LatencyModel;
+pub use spec::{ChipSpec, MemSpec};

@@ -1,0 +1,80 @@
+//! Measurement noise: latency observed from hardware jitters run-to-run.
+//!
+//! The paper stresses that the reward is a *sparse and noisy* signal
+//! measured on physical silicon (§1, §3.1); pure policy-gradient methods
+//! degrade under it while population methods tolerate it. The simulator
+//! reproduces this with multiplicative log-normal jitter on every measured
+//! latency, calibrated to a ~2% relative standard deviation (typical
+//! run-to-run variation of batch-1 inference on a dedicated accelerator).
+
+use crate::utils::Rng;
+
+/// Latency measurement-noise model.
+#[derive(Clone, Debug)]
+pub struct NoiseModel {
+    /// Relative standard deviation (0 disables noise).
+    pub rel_std: f64,
+}
+
+impl NoiseModel {
+    pub fn new(rel_std: f64) -> NoiseModel {
+        assert!(rel_std >= 0.0);
+        NoiseModel { rel_std }
+    }
+
+    /// One noisy measurement of a true latency.
+    pub fn measure(&self, true_latency_s: f64, rng: &mut Rng) -> f64 {
+        if self.rel_std == 0.0 {
+            return true_latency_s;
+        }
+        // Log-normal with median = true latency: always positive,
+        // right-skewed like real timing jitter.
+        true_latency_s * (self.rel_std * rng.normal()).exp()
+    }
+
+    /// Mean of `k` independent measurements (how final speedups are
+    /// evaluated — mirrors timing a few inference runs on hardware).
+    pub fn measure_mean(&self, true_latency_s: f64, k: usize, rng: &mut Rng) -> f64 {
+        assert!(k > 0);
+        (0..k).map(|_| self.measure(true_latency_s, rng)).sum::<f64>() / k as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_noise_is_identity() {
+        let n = NoiseModel::new(0.0);
+        let mut rng = Rng::new(1);
+        assert_eq!(n.measure(1.5e-3, &mut rng), 1.5e-3);
+    }
+
+    #[test]
+    fn noise_centered_on_truth() {
+        let n = NoiseModel::new(0.02);
+        let mut rng = Rng::new(2);
+        let truth = 1e-3;
+        let mean = n.measure_mean(truth, 20_000, &mut rng);
+        assert!((mean / truth - 1.0).abs() < 0.005, "mean={mean}");
+    }
+
+    #[test]
+    fn noise_is_always_positive() {
+        let n = NoiseModel::new(0.5);
+        let mut rng = Rng::new(3);
+        for _ in 0..1000 {
+            assert!(n.measure(1e-3, &mut rng) > 0.0);
+        }
+    }
+
+    #[test]
+    fn relative_spread_matches_parameter() {
+        let n = NoiseModel::new(0.02);
+        let mut rng = Rng::new(4);
+        let xs: Vec<f64> = (0..50_000).map(|_| n.measure(1.0, &mut rng)).collect();
+        let s = crate::utils::stats::Summary::of(&xs);
+        assert!((s.std - 0.02).abs() < 0.003, "std={}", s.std);
+    }
+}

@@ -1,0 +1,114 @@
+//! Chip parameterization: an NNP-I-1000-class inference accelerator.
+//!
+//! Numbers follow the published Spring Hill description (Wechsler et al.,
+//! Hot Chips 2019) at the fidelity the placement problem needs: what
+//! matters to the MDP is the *ratio* structure — DRAM is ~10× slower than
+//! LLC which is ~5× slower than scratchpad SRAM, while capacities shrink
+//! 1000× → 6× in the other direction.
+
+use crate::mapping::MemKind;
+use crate::graph::node::OpKind;
+
+/// One memory level.
+#[derive(Clone, Copy, Debug)]
+pub struct MemSpec {
+    /// Capacity in bytes.
+    pub capacity: u64,
+    /// Sustained read bandwidth, bytes/second.
+    pub read_bw: f64,
+    /// Sustained write bandwidth, bytes/second.
+    pub write_bw: f64,
+}
+
+/// Full chip specification.
+#[derive(Clone, Debug)]
+pub struct ChipSpec {
+    /// Memory levels indexed by `MemKind` ordinal (DRAM, LLC, SRAM).
+    pub mems: [MemSpec; 3],
+    /// Peak int8 MAC rate (operations per second).
+    pub peak_macs_per_s: f64,
+    /// Fixed per-node launch/drain overhead in seconds.
+    pub node_overhead_s: f64,
+    /// Relative standard deviation of latency measurement noise.
+    pub noise_std: f64,
+}
+
+impl ChipSpec {
+    /// The default NNP-I-class configuration used by every experiment.
+    pub fn nnpi() -> ChipSpec {
+        ChipSpec {
+            mems: [
+                // DRAM: 32 GB LPDDR4X, ~68 GB/s shared; writes cheaper to
+                // model asymmetric at half rate.
+                MemSpec { capacity: 32 << 30, read_bw: 68e9, write_bw: 34e9 },
+                // LLC: 24 MB shared cache, ~680 GB/s.
+                MemSpec { capacity: 24 << 20, read_bw: 680e9, write_bw: 680e9 },
+                // ICE scratchpad SRAM: 4 MB at ~3.4 TB/s.
+                MemSpec { capacity: 4 << 20, read_bw: 3400e9, write_bw: 3400e9 },
+            ],
+            // ~49 TOPS int8 at the DL compute grid.
+            peak_macs_per_s: 49e12,
+            node_overhead_s: 2e-6,
+            noise_std: 0.02,
+        }
+    }
+
+    /// A tiny chip for tests: capacities small enough that test graphs
+    /// overflow SRAM/LLC and exercise rectification.
+    pub fn tiny() -> ChipSpec {
+        ChipSpec {
+            mems: [
+                MemSpec { capacity: 1 << 30, read_bw: 10e9, write_bw: 5e9 },
+                MemSpec { capacity: 4 << 10, read_bw: 100e9, write_bw: 100e9 },
+                MemSpec { capacity: 1 << 10, read_bw: 500e9, write_bw: 500e9 },
+            ],
+            peak_macs_per_s: 1e12,
+            node_overhead_s: 1e-6,
+            noise_std: 0.02,
+        }
+    }
+
+    pub fn mem(&self, m: MemKind) -> &MemSpec {
+        &self.mems[m.index()]
+    }
+
+    /// Compute-efficiency factor for an op kind: dense tensor ops approach
+    /// the MAC grid's peak; vector/elementwise ops run on the DSP at a
+    /// small fraction of it.
+    pub fn op_efficiency(&self, op: OpKind) -> f64 {
+        match op {
+            OpKind::Conv | OpKind::MatMul => 0.7,
+            OpKind::Pool | OpKind::GlobalPool => 0.15,
+            OpKind::Softmax | OpKind::LayerNorm | OpKind::BatchNorm => 0.08,
+            OpKind::EltwiseAdd | OpKind::Activation => 0.12,
+            OpKind::Embedding | OpKind::Concat | OpKind::Reshape => 0.25,
+            OpKind::Input => 1.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hierarchy_trades_capacity_for_bandwidth() {
+        let c = ChipSpec::nnpi();
+        let [dram, llc, sram] = c.mems;
+        assert!(dram.capacity > llc.capacity && llc.capacity > sram.capacity);
+        assert!(dram.read_bw < llc.read_bw && llc.read_bw < sram.read_bw);
+    }
+
+    #[test]
+    fn mem_lookup_by_kind() {
+        let c = ChipSpec::nnpi();
+        assert_eq!(c.mem(MemKind::Sram).capacity, 4 << 20);
+        assert_eq!(c.mem(MemKind::Llc).capacity, 24 << 20);
+    }
+
+    #[test]
+    fn dense_ops_more_efficient_than_vector_ops() {
+        let c = ChipSpec::nnpi();
+        assert!(c.op_efficiency(OpKind::Conv) > c.op_efficiency(OpKind::Softmax));
+    }
+}

@@ -1,0 +1,9 @@
+//! Test support: a miniature property-based testing framework.
+//!
+//! `proptest` is not vendored in the offline build image, so `prop` provides
+//! the subset this project relies on: seeded random generators, a
+//! `check`-style driver that runs a property over many generated cases, and
+//! greedy input shrinking for failing cases. DESIGN.md §2 records the
+//! substitution.
+
+pub mod prop;

@@ -1,0 +1,152 @@
+//! Mini property-based testing: seeded generation + greedy shrinking.
+//!
+//! Usage:
+//! ```text
+//! use egrl::testing::prop::{check, Gen};
+//! check("sum is commutative", 200, |g| {
+//!     let a = g.usize_in(0, 1000);
+//!     let b = g.usize_in(0, 1000);
+//!     ((a, b), ())
+//! }, |&(a, b), _| a + b == b + a);
+//! ```
+//! The generator closure returns `(case, aux)`; the property receives the
+//! case. On failure the case is reported together with the seed that
+//! reproduces it.
+
+use crate::utils::Rng;
+
+/// Random input generator handed to property closures.
+pub struct Gen {
+    rng: Rng,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen { rng: Rng::new(seed) }
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range(lo, hi + 1)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range_f64(lo as f64, hi as f64) as f32
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    /// A vector of f32 with length in [min_len, max_len].
+    pub fn vec_f32(&mut self, min_len: usize, max_len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        let n = self.usize_in(min_len, max_len);
+        (0..n).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    /// A vector of usizes, each in [0, bound).
+    pub fn vec_usize(&mut self, min_len: usize, max_len: usize, bound: usize) -> Vec<usize> {
+        let n = self.usize_in(min_len, max_len);
+        (0..n).map(|_| self.rng.below(bound)).collect()
+    }
+}
+
+/// Run `cases` random cases of a property. Panics (with seed and case
+/// debug-print) on the first failure.
+pub fn check<C: std::fmt::Debug, A>(
+    name: &str,
+    cases: u64,
+    mut gen: impl FnMut(&mut Gen) -> (C, A),
+    mut prop: impl FnMut(&C, &A) -> bool,
+) {
+    // Fixed base seed for reproducibility; env override for exploration.
+    let base = std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xE6_52_41u64);
+    for i in 0..cases {
+        let seed = base.wrapping_add(i.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut g = Gen::new(seed);
+        let (case, aux) = gen(&mut g);
+        if !prop(&case, &aux) {
+            panic!(
+                "property '{name}' failed on case #{i} (seed {seed:#x}):\n{case:#?}"
+            );
+        }
+    }
+}
+
+/// Greedy shrinking helper: given a failing `Vec<T>` case and a re-check
+/// closure, try removing chunks then single elements while the property
+/// still fails, returning a (locally) minimal failing input.
+pub fn shrink_vec<T: Clone>(mut case: Vec<T>, mut still_fails: impl FnMut(&[T]) -> bool) -> Vec<T> {
+    debug_assert!(still_fails(&case));
+    // Chunk removal, halving chunk size.
+    let mut chunk = case.len() / 2;
+    while chunk >= 1 {
+        let mut i = 0;
+        while i + chunk <= case.len() {
+            let mut candidate = case.clone();
+            candidate.drain(i..i + chunk);
+            if still_fails(&candidate) {
+                case = candidate;
+            } else {
+                i += chunk;
+            }
+        }
+        chunk /= 2;
+    }
+    case
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check(
+            "reverse-reverse is identity",
+            100,
+            |g| (g.vec_usize(0, 20, 100), ()),
+            |xs, _| {
+                let mut r = xs.clone();
+                r.reverse();
+                r.reverse();
+                r == *xs
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-false'")]
+    fn check_reports_failures() {
+        check("always-false", 5, |g| (g.usize_in(0, 10), ()), |_, _| false);
+    }
+
+    #[test]
+    fn shrink_finds_small_case() {
+        // Property "fails" when the vec contains a 7.
+        let case = vec![1, 5, 7, 9, 11, 7, 2];
+        let min = shrink_vec(case, |xs| xs.contains(&7));
+        assert_eq!(min, vec![7]);
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        let mut g = Gen::new(3);
+        for _ in 0..1000 {
+            let x = g.usize_in(5, 9);
+            assert!((5..=9).contains(&x));
+            let y = g.f32_in(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&y));
+        }
+    }
+}

@@ -1,0 +1,173 @@
+//! Numeric helpers shared across the trainer: softmax/log-softmax,
+//! temperature-scaled Boltzmann softmax, entropy, and small vector ops used
+//! by the EA operators and the visualization pipeline.
+
+/// Numerically-stable softmax over a slice (in place variant returns a Vec).
+pub fn softmax(xs: &[f32]) -> Vec<f32> {
+    let m = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = xs.iter().map(|&x| (x - m).exp()).collect();
+    let z: f32 = exps.iter().sum();
+    exps.iter().map(|&e| e / z).collect()
+}
+
+/// Boltzmann softmax with temperature `t` (paper Appendix E):
+/// `p_i = exp(prior_i / t) / Σ_j exp(prior_j / t)`.
+///
+/// Temperature is clamped to a small positive floor so that evolved
+/// chromosomes whose mutated temperature collapses to ~0 degrade to a
+/// near-argmax distribution instead of producing NaNs.
+pub fn boltzmann_softmax(priors: &[f32], t: f32) -> Vec<f32> {
+    let t = t.max(1e-3);
+    let scaled: Vec<f32> = priors.iter().map(|&p| p / t).collect();
+    softmax(&scaled)
+}
+
+/// Stable log-softmax.
+pub fn log_softmax(xs: &[f32]) -> Vec<f32> {
+    let m = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let z: f32 = xs.iter().map(|&x| (x - m).exp()).sum();
+    let lz = z.ln() + m;
+    xs.iter().map(|&x| x - lz).collect()
+}
+
+/// Shannon entropy of a probability vector (nats).
+pub fn entropy(probs: &[f32]) -> f32 {
+    probs
+        .iter()
+        .filter(|&&p| p > 0.0)
+        .map(|&p| -p * p.ln())
+        .sum()
+}
+
+/// Index of the maximum element (first on ties).
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// `log2(1 + x)` feature scaling used for byte-size node features: tensor
+/// sizes span ~6 orders of magnitude, so raw bytes would swamp the GNN.
+pub fn log2_1p(x: f64) -> f32 {
+    (1.0 + x).log2() as f32
+}
+
+/// Dot product.
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Euclidean norm.
+pub fn norm(a: &[f32]) -> f32 {
+    dot(a, a).sqrt()
+}
+
+/// Mean of an f64 slice (0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Clamp helper for f32.
+pub fn clamp(x: f32, lo: f32, hi: f32) -> f32 {
+    x.max(lo).min(hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_close(a: f32, b: f32, tol: f32) {
+        assert!((a - b).abs() < tol, "{a} vs {b}");
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let p = softmax(&[1.0, 2.0, 3.0]);
+        assert_close(p.iter().sum::<f32>(), 1.0, 1e-6);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn softmax_stable_for_large_inputs() {
+        let p = softmax(&[1000.0, 1000.0]);
+        assert_close(p[0], 0.5, 1e-6);
+        assert!(p.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn boltzmann_low_temperature_is_argmaxy() {
+        let p = boltzmann_softmax(&[0.1, 0.9, 0.2], 0.01);
+        assert!(p[1] > 0.99);
+    }
+
+    #[test]
+    fn boltzmann_high_temperature_is_uniformish() {
+        let p = boltzmann_softmax(&[0.1, 0.9, 0.2], 100.0);
+        for &x in &p {
+            assert_close(x, 1.0 / 3.0, 0.01);
+        }
+    }
+
+    #[test]
+    fn boltzmann_zero_temperature_no_nan() {
+        let p = boltzmann_softmax(&[0.5, -0.5], 0.0);
+        assert!(p.iter().all(|x| x.is_finite()));
+        assert!(p[0] > p[1]);
+    }
+
+    #[test]
+    fn log_softmax_matches_softmax() {
+        let xs = [0.3f32, -1.2, 2.5];
+        let p = softmax(&xs);
+        let lp = log_softmax(&xs);
+        for i in 0..3 {
+            assert_close(lp[i].exp(), p[i], 1e-5);
+        }
+    }
+
+    #[test]
+    fn entropy_uniform_is_ln_n() {
+        let e = entropy(&[0.25; 4]);
+        assert_close(e, (4.0f32).ln(), 1e-5);
+    }
+
+    #[test]
+    fn entropy_onehot_is_zero() {
+        assert_close(entropy(&[0.0, 1.0, 0.0]), 0.0, 1e-7);
+    }
+
+    #[test]
+    fn argmax_first_on_ties() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0]), 1);
+    }
+
+    #[test]
+    fn stats_sane() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std_dev(&xs) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn log2_1p_monotone() {
+        assert!(log2_1p(0.0) == 0.0);
+        assert!(log2_1p(1024.0) > log2_1p(512.0));
+    }
+}

@@ -1,0 +1,17 @@
+//! Small self-contained utilities: deterministic RNG, math helpers,
+//! statistics, a JSON writer/parser, and a scoped thread pool.
+//!
+//! These exist because the build image has no network access to crates.io:
+//! only the crates vendored for the `xla` dependency are available, so the
+//! usual `rand` / `serde` / `rayon` stack is re-implemented here at the
+//! (small) scale this project needs. Each substitution is documented in
+//! DESIGN.md §2.
+
+pub mod rng;
+pub mod math;
+pub mod stats;
+pub mod json;
+pub mod pool;
+pub mod timer;
+
+pub use rng::Rng;

@@ -1,0 +1,124 @@
+//! Wall-clock timing helpers for the benchmark harness and the perf pass.
+
+use std::time::Instant;
+
+/// A simple scoped stopwatch.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    /// Elapsed seconds since start.
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Elapsed microseconds since start.
+    pub fn elapsed_us(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e6
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Timer::start();
+    let out = f();
+    (out, t.elapsed_s())
+}
+
+/// Repeatedly run `f` until `min_time_s` has elapsed (at least `min_iters`
+/// times) and report mean seconds/iteration. This is the measurement core
+/// of the criterion-substitute bench harness.
+pub fn bench_loop<F: FnMut()>(mut f: F, min_iters: u64, min_time_s: f64) -> BenchResult {
+    // Warmup.
+    f();
+    let mut iters = 0u64;
+    let mut samples: Vec<f64> = Vec::new();
+    let start = Instant::now();
+    while iters < min_iters || start.elapsed().as_secs_f64() < min_time_s {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+        iters += 1;
+        if iters > 10_000_000 {
+            break;
+        }
+    }
+    let summary = crate::utils::stats::Summary::of(&samples);
+    BenchResult { iters, mean_s: summary.mean, std_s: summary.std, min_s: summary.min }
+}
+
+/// Result of a `bench_loop` measurement.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchResult {
+    pub iters: u64,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn throughput_per_s(&self) -> f64 {
+        if self.mean_s > 0.0 {
+            1.0 / self.mean_s
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let (scale, unit) = if self.mean_s >= 1.0 {
+            (1.0, "s")
+        } else if self.mean_s >= 1e-3 {
+            (1e3, "ms")
+        } else if self.mean_s >= 1e-6 {
+            (1e6, "µs")
+        } else {
+            (1e9, "ns")
+        };
+        write!(
+            f,
+            "{:.3} {} ± {:.3} (min {:.3}, n={})",
+            self.mean_s * scale,
+            unit,
+            self.std_s * scale,
+            self.min_s * scale,
+            self.iters
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_advances() {
+        let t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(t.elapsed_s() >= 0.002);
+        assert!(t.elapsed_us() >= 2000.0);
+    }
+
+    #[test]
+    fn bench_loop_runs_min_iters() {
+        let mut count = 0u64;
+        let r = bench_loop(|| count += 1, 10, 0.0);
+        assert!(r.iters >= 10);
+        assert!(count >= 11); // warmup + iters
+        assert!(r.mean_s >= 0.0);
+    }
+
+    #[test]
+    fn time_it_returns_value() {
+        let (v, s) = time_it(|| 42);
+        assert_eq!(v, 42);
+        assert!(s >= 0.0);
+    }
+}

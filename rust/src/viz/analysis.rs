@@ -1,0 +1,113 @@
+//! §5.2.1 mapping-strategy statistics: DRAM avoidance (by tensor class)
+//! and activation contiguity — the two qualitative behaviours the paper
+//! attributes to EGRL's best maps.
+
+use crate::graph::Graph;
+use crate::mapping::{MemKind, MemoryMap};
+
+/// Byte-weighted fraction of a tensor class mapped to each memory.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ClassDistribution {
+    /// Fractions indexed by MemKind ordinal; sums to 1 (or all-zero when
+    /// the class has no bytes).
+    pub fractions: [f64; 3],
+}
+
+impl ClassDistribution {
+    pub fn dram_fraction(&self) -> f64 {
+        self.fractions[MemKind::Dram.index()]
+    }
+}
+
+/// Summary statistics of one mapping.
+#[derive(Clone, Debug)]
+pub struct MapAnalysis {
+    pub weights: ClassDistribution,
+    pub activations: ClassDistribution,
+    /// Fraction of edges whose endpoint activations share a memory.
+    pub contiguity: f64,
+}
+
+/// Analyze a map's placement strategy.
+pub fn analyze(g: &Graph, map: &MemoryMap) -> MapAnalysis {
+    let bytes = map.bytes_by_memory(g);
+    let dist = |class: usize| {
+        let total: u64 = (0..3).map(|m| bytes[m][class]).sum();
+        let mut fractions = [0f64; 3];
+        if total > 0 {
+            for m in 0..3 {
+                fractions[m] = bytes[m][class] as f64 / total as f64;
+            }
+        }
+        ClassDistribution { fractions }
+    };
+    MapAnalysis {
+        weights: dist(0),
+        activations: dist(1),
+        contiguity: map.contiguity(g),
+    }
+}
+
+/// Render a side-by-side comparison (baseline vs agent) of the §5.2.1
+/// statistics.
+pub fn render_comparison(g: &Graph, baseline: &MemoryMap, agent: &MemoryMap) -> String {
+    let b = analyze(g, baseline);
+    let a = analyze(g, agent);
+    let row = |label: &str, bv: f64, av: f64| {
+        format!("{label:<28} {:>8.1}%  {:>8.1}%\n", bv * 100.0, av * 100.0)
+    };
+    let mut s = String::new();
+    s.push_str(&format!("{:<28} {:>9}  {:>9}\n", "metric", "compiler", "agent"));
+    s.push_str(&row("weights in DRAM", b.weights.dram_fraction(), a.weights.dram_fraction()));
+    s.push_str(&row(
+        "activations in DRAM",
+        b.activations.dram_fraction(),
+        a.activations.dram_fraction(),
+    ));
+    s.push_str(&row("activation contiguity", b.contiguity, a.contiguity));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::node::test_node;
+    use crate::graph::Graph;
+
+    fn g3() -> Graph {
+        let nodes = vec![
+            test_node(0, 100, 10),
+            test_node(1, 300, 10),
+            test_node(2, 0, 10),
+        ];
+        Graph::new("t", nodes, vec![(0, 1), (1, 2)]).unwrap()
+    }
+
+    #[test]
+    fn distributions_are_byte_weighted() {
+        let g = g3();
+        let mut m = MemoryMap::constant(3, MemKind::Dram);
+        m.placements[1].weight = MemKind::Llc; // 300 of 400 weight bytes
+        let a = analyze(&g, &m);
+        assert!((a.weights.fractions[MemKind::Llc.index()] - 0.75).abs() < 1e-12);
+        assert!((a.weights.dram_fraction() - 0.25).abs() < 1e-12);
+        assert_eq!(a.activations.dram_fraction(), 1.0);
+    }
+
+    #[test]
+    fn contiguity_from_mapping() {
+        let g = g3();
+        let m = MemoryMap::constant(3, MemKind::Sram);
+        assert_eq!(analyze(&g, &m).contiguity, 1.0);
+    }
+
+    #[test]
+    fn render_includes_both_columns() {
+        let g = g3();
+        let b = MemoryMap::constant(3, MemKind::Dram);
+        let a = MemoryMap::constant(3, MemKind::Sram);
+        let s = render_comparison(&g, &b, &a);
+        assert!(s.contains("weights in DRAM"));
+        assert!(s.contains("100.0%") && s.contains("0.0%"));
+    }
+}

@@ -1,0 +1,240 @@
+//! Figure 6: mapping-space embedding and cluster separability.
+//!
+//! The paper projects one-hot-encoded mappings with UMAP under the
+//! Jaccard metric and shows that compiler-competitive mappings and
+//! best mappings form separable clusters. UMAP is not available offline,
+//! so (per the substitution rule) this module provides
+//!
+//! * classical **metric MDS** on the Jaccard distance matrix (double
+//!   centering + power iteration for the top-2 eigenvectors) — a faithful
+//!   2-D metric-preserving projection, and
+//! * the **silhouette coefficient** on the raw Jaccard distances — a
+//!   projection-free, *quantitative* version of the separability claim
+//!   (the figure's qualitative point becomes a number we can assert).
+
+use crate::mapping::MemoryMap;
+
+/// Pairwise Jaccard distance matrix (condensed to full symmetric form).
+pub fn distance_matrix(maps: &[MemoryMap]) -> Vec<f64> {
+    let n = maps.len();
+    let mut d = vec![0f64; n * n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let dist = maps[i].jaccard_distance(&maps[j]);
+            d[i * n + j] = dist;
+            d[j * n + i] = dist;
+        }
+    }
+    d
+}
+
+/// Classical MDS: embed an `n × n` distance matrix into 2-D.
+/// Returns `n` (x, y) coordinates.
+pub fn mds_2d(dist: &[f64], n: usize) -> Vec<(f64, f64)> {
+    assert_eq!(dist.len(), n * n);
+    if n == 0 {
+        return Vec::new();
+    }
+    if n == 1 {
+        return vec![(0.0, 0.0)];
+    }
+    // Double-centered Gram matrix B = -1/2 J D² J.
+    let mut d2 = vec![0f64; n * n];
+    for i in 0..n * n {
+        d2[i] = dist[i] * dist[i];
+    }
+    let row_mean: Vec<f64> = (0..n)
+        .map(|i| d2[i * n..(i + 1) * n].iter().sum::<f64>() / n as f64)
+        .collect();
+    let grand = row_mean.iter().sum::<f64>() / n as f64;
+    let mut b = vec![0f64; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            b[i * n + j] = -0.5 * (d2[i * n + j] - row_mean[i] - row_mean[j] + grand);
+        }
+    }
+    // Top-2 eigenpairs by power iteration with deflation.
+    let (v1, l1) = power_iteration(&b, n, 0xABCD);
+    let mut b2 = b.clone();
+    for i in 0..n {
+        for j in 0..n {
+            b2[i * n + j] -= l1 * v1[i] * v1[j];
+        }
+    }
+    let (v2, l2) = power_iteration(&b2, n, 0x1234);
+    let s1 = l1.max(0.0).sqrt();
+    let s2 = l2.max(0.0).sqrt();
+    (0..n).map(|i| (v1[i] * s1, v2[i] * s2)).collect()
+}
+
+/// Dominant eigenpair of a symmetric matrix via power iteration.
+fn power_iteration(m: &[f64], n: usize, seed: u64) -> (Vec<f64>, f64) {
+    let mut rng = crate::utils::Rng::new(seed);
+    let mut v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let mut lambda = 0.0;
+    for _ in 0..200 {
+        let mut w = vec![0f64; n];
+        for i in 0..n {
+            let row = &m[i * n..(i + 1) * n];
+            w[i] = row.iter().zip(&v).map(|(a, b)| a * b).sum();
+        }
+        let norm = w.iter().map(|x| x * x).sum::<f64>().sqrt();
+        if norm < 1e-12 {
+            return (vec![0.0; n], 0.0);
+        }
+        for x in w.iter_mut() {
+            *x /= norm;
+        }
+        lambda = norm;
+        v = w;
+    }
+    // Rayleigh quotient for a signed eigenvalue.
+    let mut mv = vec![0f64; n];
+    for i in 0..n {
+        mv[i] = m[i * n..(i + 1) * n].iter().zip(&v).map(|(a, b)| a * b).sum();
+    }
+    let rq: f64 = mv.iter().zip(&v).map(|(a, b)| a * b).sum();
+    let _ = lambda;
+    (v, rq)
+}
+
+/// Mean silhouette coefficient of a 2-way labelling under a precomputed
+/// distance matrix. Range [-1, 1]; > 0 means clusters are separable.
+pub fn silhouette(dist: &[f64], n: usize, labels: &[usize]) -> f64 {
+    assert_eq!(labels.len(), n);
+    let clusters: Vec<usize> = {
+        let mut c = labels.to_vec();
+        c.sort_unstable();
+        c.dedup();
+        c
+    };
+    assert!(clusters.len() >= 2, "silhouette needs >= 2 clusters");
+    let mut total = 0.0;
+    let mut count = 0usize;
+    for i in 0..n {
+        let own = labels[i];
+        let mean_dist_to = |cluster: usize, exclude_self: bool| -> Option<f64> {
+            let mut s = 0.0;
+            let mut k = 0usize;
+            for j in 0..n {
+                if labels[j] == cluster && !(exclude_self && j == i) {
+                    s += dist[i * n + j];
+                    k += 1;
+                }
+            }
+            if k == 0 {
+                None
+            } else {
+                Some(s / k as f64)
+            }
+        };
+        let a = match mean_dist_to(own, true) {
+            Some(x) => x,
+            None => continue, // singleton cluster: skip (standard convention)
+        };
+        let b = clusters
+            .iter()
+            .filter(|&&c| c != own)
+            .filter_map(|&c| mean_dist_to(c, false))
+            .fold(f64::INFINITY, f64::min);
+        let s = if a.max(b) > 0.0 { (b - a) / a.max(b) } else { 0.0 };
+        total += s;
+        count += 1;
+    }
+    if count == 0 {
+        0.0
+    } else {
+        total / count as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapping::{MemKind, MemoryMap};
+    use crate::utils::Rng;
+
+    fn near(center: MemKind, flips: usize, n: usize, rng: &mut Rng) -> MemoryMap {
+        let mut m = MemoryMap::constant(n, center);
+        for _ in 0..flips {
+            let i = rng.below(n);
+            m.placements[i].weight = MemKind::from_index(rng.below(3));
+        }
+        m
+    }
+
+    #[test]
+    fn mds_separates_two_tight_clusters() {
+        let mut rng = Rng::new(1);
+        let n_nodes = 30;
+        let mut maps = Vec::new();
+        for _ in 0..8 {
+            maps.push(near(MemKind::Dram, 2, n_nodes, &mut rng));
+        }
+        for _ in 0..8 {
+            maps.push(near(MemKind::Sram, 2, n_nodes, &mut rng));
+        }
+        let d = distance_matrix(&maps);
+        let coords = mds_2d(&d, maps.len());
+        // Cluster centroids in the embedding must be farther apart than
+        // the mean intra-cluster spread.
+        let centroid = |r: std::ops::Range<usize>| {
+            let k = r.len() as f64;
+            let (sx, sy) = r.clone().fold((0.0, 0.0), |(x, y), i| (x + coords[i].0, y + coords[i].1));
+            (sx / k, sy / k)
+        };
+        let c1 = centroid(0..8);
+        let c2 = centroid(8..16);
+        let between = ((c1.0 - c2.0).powi(2) + (c1.1 - c2.1).powi(2)).sqrt();
+        let spread = (0..8)
+            .map(|i| ((coords[i].0 - c1.0).powi(2) + (coords[i].1 - c1.1).powi(2)).sqrt())
+            .sum::<f64>()
+            / 8.0;
+        assert!(between > spread, "between {between} <= spread {spread}");
+    }
+
+    #[test]
+    fn silhouette_high_for_separated_low_for_mixed() {
+        let mut rng = Rng::new(2);
+        let mut maps = Vec::new();
+        for _ in 0..6 {
+            maps.push(near(MemKind::Dram, 1, 20, &mut rng));
+        }
+        for _ in 0..6 {
+            maps.push(near(MemKind::Sram, 1, 20, &mut rng));
+        }
+        let d = distance_matrix(&maps);
+        let good: Vec<usize> = (0..12).map(|i| i / 6).collect();
+        let bad: Vec<usize> = (0..12).map(|i| i % 2).collect();
+        let s_good = silhouette(&d, 12, &good);
+        let s_bad = silhouette(&d, 12, &bad);
+        assert!(s_good > 0.5, "good labelling silhouette {s_good}");
+        assert!(s_bad < s_good, "mixed labelling should score lower");
+    }
+
+    #[test]
+    fn distance_matrix_symmetric_zero_diag() {
+        let mut rng = Rng::new(3);
+        let maps: Vec<MemoryMap> = (0..5).map(|_| near(MemKind::Llc, 3, 10, &mut rng)).collect();
+        let d = distance_matrix(&maps);
+        for i in 0..5 {
+            assert_eq!(d[i * 5 + i], 0.0);
+            for j in 0..5 {
+                assert_eq!(d[i * 5 + j], d[j * 5 + i]);
+            }
+        }
+    }
+
+    #[test]
+    fn mds_handles_degenerate_inputs() {
+        assert!(mds_2d(&[], 0).is_empty());
+        assert_eq!(mds_2d(&[0.0], 1), vec![(0.0, 0.0)]);
+        // All-identical maps → all-zero distances → origin embedding.
+        let maps = vec![MemoryMap::constant(4, MemKind::Dram); 3];
+        let d = distance_matrix(&maps);
+        let c = mds_2d(&d, 3);
+        for (x, y) in c {
+            assert!(x.abs() < 1e-6 && y.abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Analysis + visualization backends for the paper's Figures 6 and 7.
+//!
+//! * [`transition`] — memory-shift transition matrices and per-tensor
+//!   mapping strips (Figure 7);
+//! * [`embed`]      — Jaccard-metric 2-D embedding (classical MDS — the
+//!   UMAP substitute, DESIGN.md §2) plus silhouette scoring as the
+//!   quantitative separability measure behind Figure 6;
+//! * [`analysis`]   — §5.2.1 statistics: DRAM avoidance by tensor class
+//!   and activation contiguity.
+
+pub mod transition;
+pub mod embed;
+pub mod analysis;

@@ -1,0 +1,127 @@
+//! Figure 7: how EGRL re-distributed the tensors the compiler placed in
+//! each memory (top), and per-tensor mapping strips (bottom).
+
+use crate::graph::Graph;
+use crate::mapping::{MemKind, MemoryMap};
+
+/// `m[i][j]` = fraction of bytes the baseline put in memory `i` that the
+/// agent moved to memory `j` (rows sum to 1 where the baseline used `i`).
+pub fn transition_matrix(g: &Graph, baseline: &MemoryMap, agent: &MemoryMap) -> [[f64; 3]; 3] {
+    assert_eq!(baseline.len(), g.len());
+    assert_eq!(agent.len(), g.len());
+    let mut bytes = [[0u64; 3]; 3];
+    for i in 0..g.len() {
+        let w = g.nodes[i].weight_bytes;
+        if w > 0 {
+            bytes[baseline.placements[i].weight.index()][agent.placements[i].weight.index()] += w;
+        }
+        let a = g.nodes[i].ofm_bytes();
+        bytes[baseline.placements[i].activation.index()][agent.placements[i].activation.index()] += a;
+    }
+    let mut out = [[0f64; 3]; 3];
+    for i in 0..3 {
+        let row: u64 = bytes[i].iter().sum();
+        if row > 0 {
+            for j in 0..3 {
+                out[i][j] = bytes[i][j] as f64 / row as f64;
+            }
+        }
+    }
+    out
+}
+
+/// Render a transition matrix as an aligned text table.
+pub fn render_matrix(m: &[[f64; 3]; 3]) -> String {
+    let mut s = String::from("          → DRAM    → LLC     → SRAM\n");
+    for (i, row) in m.iter().enumerate() {
+        s.push_str(&format!(
+            "{:>6}   {:>7.1}%  {:>7.1}%  {:>7.1}%\n",
+            MemKind::from_index(i).name(),
+            row[0] * 100.0,
+            row[1] * 100.0,
+            row[2] * 100.0
+        ));
+    }
+    s
+}
+
+/// Per-tensor mapping strip (Figure 7 bottom): one character per tensor in
+/// topological order — `D`/`L`/`S` — weights row and activations row.
+pub fn render_strips(g: &Graph, map: &MemoryMap, label: &str) -> String {
+    let order = g.topo_order();
+    let ch = |m: MemKind| match m {
+        MemKind::Dram => 'D',
+        MemKind::Llc => 'L',
+        MemKind::Sram => 'S',
+    };
+    let mut w_row = String::new();
+    let mut a_row = String::new();
+    for &i in &order {
+        w_row.push(if g.nodes[i].has_weights() {
+            ch(map.placements[i].weight)
+        } else {
+            '.'
+        });
+        a_row.push(ch(map.placements[i].activation));
+    }
+    format!("{label:>10} W |{w_row}|\n{:>10} A |{a_row}|\n", "")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::node::test_node;
+    use crate::graph::Graph;
+
+    fn g2() -> Graph {
+        let nodes = vec![test_node(0, 100, 10), test_node(1, 0, 20)];
+        Graph::new("t", nodes, vec![(0, 1)]).unwrap()
+    }
+
+    #[test]
+    fn identity_mapping_gives_identity_matrix() {
+        let g = g2();
+        let m = MemoryMap::constant(2, MemKind::Llc);
+        let t = transition_matrix(&g, &m, &m);
+        assert_eq!(t[MemKind::Llc.index()][MemKind::Llc.index()], 1.0);
+        assert_eq!(t[MemKind::Dram.index()], [0.0; 3]);
+    }
+
+    #[test]
+    fn full_shift_shows_in_row() {
+        let g = g2();
+        let base = MemoryMap::constant(2, MemKind::Dram);
+        let agent = MemoryMap::constant(2, MemKind::Sram);
+        let t = transition_matrix(&g, &base, &agent);
+        assert_eq!(t[0][2], 1.0);
+    }
+
+    #[test]
+    fn rows_sum_to_one_or_zero() {
+        let g = g2();
+        let base = MemoryMap::constant(2, MemKind::Dram);
+        let mut agent = base.clone();
+        agent.placements[0].weight = MemKind::Llc;
+        let t = transition_matrix(&g, &base, &agent);
+        for row in t {
+            let s: f64 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-12 || s == 0.0);
+        }
+    }
+
+    #[test]
+    fn strips_mark_weightless_nodes() {
+        let g = g2();
+        let m = MemoryMap::constant(2, MemKind::Sram);
+        let s = render_strips(&g, &m, "agent");
+        assert!(s.contains("|S.|"), "{s}");
+        assert!(s.contains("|SS|"), "{s}");
+    }
+
+    #[test]
+    fn render_matrix_is_tabular() {
+        let t = [[1.0, 0.0, 0.0], [0.0, 1.0, 0.0], [0.0, 0.0, 1.0]];
+        let s = render_matrix(&t);
+        assert!(s.contains("DRAM") && s.contains("100.0%"));
+    }
+}

@@ -1,0 +1,108 @@
+//! Workload builders: faithful computational graphs of the three benchmark
+//! networks evaluated in the paper, plus a synthetic-DAG generator used by
+//! tests and ablations.
+//!
+//! Node counts match the paper exactly (§4 Workloads Tested):
+//! * ResNet-50  —  57 operational nodes;
+//! * ResNet-101 — 108 operational nodes;
+//! * BERT-base  — 376 operational nodes (seq-len 384 question-answering
+//!   configuration, compiler-IR granularity: bias adds, layer-norm
+//!   statistics/affine stages and dropout placeholders are separate ops).
+//!
+//! Weight/activation byte sizes use int8 activations and int8 weights — the
+//! NNP-I inference datatype — so the capacity pressure against the modelled
+//! 4 MB SRAM / 24 MB LLC matches the real chip's placement problem.
+
+pub mod resnet;
+pub mod bert;
+pub mod synthetic;
+
+use crate::graph::Graph;
+
+/// Identifier for the built-in benchmark workloads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Workload {
+    ResNet50,
+    ResNet101,
+    Bert,
+}
+
+impl Workload {
+    pub fn name(self) -> &'static str {
+        match self {
+            Workload::ResNet50 => "resnet50",
+            Workload::ResNet101 => "resnet101",
+            Workload::Bert => "bert",
+        }
+    }
+
+    /// All paper workloads, in paper order.
+    pub fn all() -> [Workload; 3] {
+        [Workload::ResNet50, Workload::ResNet101, Workload::Bert]
+    }
+
+    /// Parse from a CLI string.
+    pub fn parse(s: &str) -> anyhow::Result<Workload> {
+        match s.to_ascii_lowercase().as_str() {
+            "resnet50" | "r50" => Ok(Workload::ResNet50),
+            "resnet101" | "r101" => Ok(Workload::ResNet101),
+            "bert" | "bert-base" => Ok(Workload::Bert),
+            other => anyhow::bail!("unknown workload '{other}' (expected resnet50|resnet101|bert)"),
+        }
+    }
+
+    /// Build the computational graph.
+    pub fn build(self) -> Graph {
+        match self {
+            Workload::ResNet50 => resnet::resnet50(),
+            Workload::ResNet101 => resnet::resnet101(),
+            Workload::Bert => bert::bert_base(),
+        }
+    }
+
+    /// Node count the paper reports for this workload.
+    pub fn paper_node_count(self) -> usize {
+        match self {
+            Workload::ResNet50 => 57,
+            Workload::ResNet101 => 108,
+            Workload::Bert => 376,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn node_counts_match_paper() {
+        for w in Workload::all() {
+            let g = w.build();
+            assert_eq!(
+                g.len(),
+                w.paper_node_count(),
+                "workload {} node count",
+                w.name()
+            );
+        }
+    }
+
+    #[test]
+    fn workloads_are_dags_with_features() {
+        for w in Workload::all() {
+            let g = w.build();
+            let order = g.topo_order();
+            assert_eq!(order.len(), g.len());
+            let f = g.feature_matrix();
+            assert_eq!(f.len(), g.len() * crate::graph::features::DIM);
+            assert!(f.iter().all(|x| x.is_finite()));
+        }
+    }
+
+    #[test]
+    fn parse_workload_names() {
+        assert_eq!(Workload::parse("r50").unwrap(), Workload::ResNet50);
+        assert_eq!(Workload::parse("BERT").unwrap(), Workload::Bert);
+        assert!(Workload::parse("vgg").is_err());
+    }
+}

@@ -1,0 +1,243 @@
+//! ResNet-50 / ResNet-101 graph builders (He et al., 2016).
+//!
+//! Inference-time graphs: batch-norms are folded into the preceding
+//! convolution (standard for int8 inference compilers, and how the paper's
+//! 57/108 operational-layer counts arise), ReLUs are fused likewise.
+//! Remaining nodes: input, stem conv, stem max-pool, every bottleneck
+//! convolution, every downsample (projection) convolution, global average
+//! pool and the final fully-connected classifier.
+//!
+//! Node counts: 50-layer = 1 + 1 + 1 + 3·16 + 4 + 1 + 1 = **57**;
+//! 101-layer = 1 + 1 + 1 + 3·33 + 4 + 1 + 1 = **108** — both matching §4 of
+//! the paper.
+
+use crate::graph::node::{ConvParams, Node, OpKind, TensorShape};
+use crate::graph::Graph;
+
+/// Incremental graph builder shared by the workload constructors.
+pub(crate) struct GraphBuilder {
+    pub nodes: Vec<Node>,
+    pub edges: Vec<(usize, usize)>,
+    name: String,
+}
+
+impl GraphBuilder {
+    pub fn new(name: &str) -> Self {
+        GraphBuilder { nodes: Vec::new(), edges: Vec::new(), name: name.to_string() }
+    }
+
+    /// Push a node; `inputs` are indices of producer nodes.
+    pub fn push(&mut self, mut node: Node, inputs: &[usize]) -> usize {
+        let id = self.nodes.len();
+        node.id = id;
+        for &i in inputs {
+            self.edges.push((i, id));
+        }
+        self.nodes.push(node);
+        id
+    }
+
+    pub fn finish(self) -> Graph {
+        Graph::new(self.name, self.nodes, self.edges).expect("builder produces valid DAG")
+    }
+}
+
+/// Output spatial size of a convolution.
+fn conv_out(in_sz: u32, kernel: u32, stride: u32, pad: u32, dilation: u32) -> u32 {
+    let eff_k = dilation.max(1) * (kernel - 1) + 1;
+    (in_sz + 2 * pad - eff_k) / stride + 1
+}
+
+/// Construct a convolution node. `ifm` is (x, y, channels-in).
+#[allow(clippy::too_many_arguments)]
+fn conv(
+    name: &str,
+    ifm: TensorShape,
+    cout: u32,
+    kernel: u32,
+    stride: u32,
+    pad: u32,
+) -> Node {
+    let ox = conv_out(ifm.x, kernel, stride, pad, 1);
+    let oy = conv_out(ifm.y, kernel, stride, pad, 1);
+    let ofm = TensorShape::new(ox, oy, cout);
+    let weight_bytes = (kernel as u64) * (kernel as u64) * (ifm.z as u64) * (cout as u64);
+    let macs = weight_bytes * (ox as u64) * (oy as u64);
+    Node {
+        id: 0,
+        name: name.to_string(),
+        op: OpKind::Conv,
+        weight_bytes,
+        ifm,
+        ofm,
+        conv: ConvParams { groups: 1, kernel_x: kernel, kernel_y: kernel, stride, pad, dilation: 1 },
+        batch: 1,
+        macs,
+        act_elem_bytes: 1,
+    }
+}
+
+fn simple(name: &str, op: OpKind, ifm: TensorShape, ofm: TensorShape) -> Node {
+    Node {
+        id: 0,
+        name: name.to_string(),
+        op,
+        weight_bytes: 0,
+        ifm,
+        ofm,
+        conv: ConvParams::default(),
+        batch: 1,
+        // Elementwise-ish ops: one op per output element.
+        macs: ofm.volume(),
+        act_elem_bytes: 1,
+    }
+}
+
+/// Bottleneck residual block: 1x1 reduce → 3x3 → 1x1 expand (+ optional
+/// projection shortcut). Returns the output node index.
+/// Note the elementwise residual add is fused into the expand conv
+/// (inference-compiler behaviour), so a block contributes exactly 3 nodes
+/// (+1 for the projection when present).
+fn bottleneck(
+    b: &mut GraphBuilder,
+    input: usize,
+    in_shape: TensorShape,
+    mid: u32,
+    out_ch: u32,
+    stride: u32,
+    stage: usize,
+    block: usize,
+) -> (usize, TensorShape) {
+    let pfx = format!("layer{stage}.{block}");
+    let c1 = b.push(conv(&format!("{pfx}.conv1"), in_shape, mid, 1, 1, 0), &[input]);
+    let s1 = b.nodes[c1].ofm;
+    let c2 = b.push(conv(&format!("{pfx}.conv2"), s1, mid, 3, stride, 1), &[c1]);
+    let s2 = b.nodes[c2].ofm;
+    // Shortcut projection when shape changes.
+    let needs_proj = stride != 1 || in_shape.z != out_ch;
+    let shortcut = if needs_proj {
+        b.push(conv(&format!("{pfx}.downsample"), in_shape, out_ch, 1, stride, 0), &[input])
+    } else {
+        input
+    };
+    // Expand conv consumes both the main path and the shortcut (the
+    // residual add is fused into it).
+    let c3 = b.push(conv(&format!("{pfx}.conv3"), s2, out_ch, 1, 1, 0), &[c2, shortcut]);
+    (c3, b.nodes[c3].ofm)
+}
+
+/// Generic ResNet-v1 bottleneck network. `blocks` is the per-stage block
+/// count, e.g. `[3, 4, 6, 3]` for ResNet-50.
+fn resnet(name: &str, blocks: [usize; 4]) -> Graph {
+    let mut b = GraphBuilder::new(name);
+    let img = TensorShape::new(224, 224, 3);
+    let input = b.push(simple("input", OpKind::Input, img, img), &[]);
+    let c1 = b.push(conv("conv1", img, 64, 7, 2, 3), &[input]);
+    let s = b.nodes[c1].ofm; // 112x112x64
+    let pool_out = TensorShape::new(conv_out(s.x, 3, 2, 1, 1), conv_out(s.y, 3, 2, 1, 1), 64);
+    let p1 = {
+        let mut n = simple("maxpool", OpKind::Pool, s, pool_out);
+        n.conv = ConvParams { groups: 0, kernel_x: 3, kernel_y: 3, stride: 2, pad: 1, dilation: 0 };
+        b.push(n, &[c1])
+    };
+    let mut cur = p1;
+    let mut shape = pool_out; // 56x56x64
+    let stage_mid = [64u32, 128, 256, 512];
+    for (si, &nblocks) in blocks.iter().enumerate() {
+        let mid = stage_mid[si];
+        let out_ch = mid * 4;
+        for bi in 0..nblocks {
+            let stride = if si > 0 && bi == 0 { 2 } else { 1 };
+            let (o, sh) = bottleneck(&mut b, cur, shape, mid, out_ch, stride, si + 1, bi);
+            cur = o;
+            shape = sh;
+        }
+    }
+    let gp_out = TensorShape::new(1, 1, shape.z);
+    let gp = b.push(simple("avgpool", OpKind::GlobalPool, shape, gp_out), &[cur]);
+    // Classifier fully-connected layer: 2048 -> 1000.
+    let mut fc = simple("fc", OpKind::MatMul, gp_out, TensorShape::new(1, 1, 1000));
+    fc.weight_bytes = shape.z as u64 * 1000;
+    fc.macs = fc.weight_bytes;
+    b.push(fc, &[gp]);
+    b.finish()
+}
+
+/// ResNet-50: 57 operational nodes.
+pub fn resnet50() -> Graph {
+    resnet("resnet50", [3, 4, 6, 3])
+}
+
+/// ResNet-101: 108 operational nodes.
+pub fn resnet101() -> Graph {
+    resnet("resnet101", [3, 4, 23, 3])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet50_has_57_nodes() {
+        assert_eq!(resnet50().len(), 57);
+    }
+
+    #[test]
+    fn resnet101_has_108_nodes() {
+        assert_eq!(resnet101().len(), 108);
+    }
+
+    #[test]
+    fn resnet50_weight_total_plausible() {
+        // ~25.5M parameters; int8 → ~25.5 MB. Conv+fc weights only
+        // (BN folded) → slightly less. Accept 20–27 MB.
+        let mb = resnet50().total_weight_bytes() as f64 / (1024.0 * 1024.0);
+        assert!((20.0..27.0).contains(&mb), "resnet50 weights = {mb} MB");
+    }
+
+    #[test]
+    fn resnet101_weight_total_plausible() {
+        // ~44.5M parameters.
+        let mb = resnet101().total_weight_bytes() as f64 / (1024.0 * 1024.0);
+        assert!((38.0..47.0).contains(&mb), "resnet101 weights = {mb} MB");
+    }
+
+    #[test]
+    fn resnet50_macs_plausible() {
+        // ~4.1 GMACs for 224x224.
+        let g = resnet50().total_macs() as f64 / 1e9;
+        assert!((3.0..5.0).contains(&g), "resnet50 GMACs = {g}");
+    }
+
+    #[test]
+    fn stem_shapes() {
+        let g = resnet50();
+        let c1 = &g.nodes[1];
+        assert_eq!(c1.ofm, TensorShape::new(112, 112, 64));
+        let p = &g.nodes[2];
+        assert_eq!(p.ofm, TensorShape::new(56, 56, 64));
+    }
+
+    #[test]
+    fn final_stage_shape_is_7x7x2048() {
+        let g = resnet50();
+        // avgpool input.
+        let gp = g.nodes.iter().find(|n| n.op == OpKind::GlobalPool).unwrap();
+        assert_eq!(gp.ifm, TensorShape::new(7, 7, 2048));
+    }
+
+    #[test]
+    fn residual_blocks_have_two_input_convs() {
+        let g = resnet50();
+        // conv3 nodes consume main path + shortcut.
+        let multi_input = (0..g.len()).filter(|&i| g.preds(i).len() == 2).count();
+        assert_eq!(multi_input, 16, "one fused-add conv per block");
+    }
+
+    #[test]
+    fn conv_out_formula() {
+        assert_eq!(conv_out(224, 7, 2, 3, 1), 112);
+        assert_eq!(conv_out(56, 3, 1, 1, 1), 56);
+        assert_eq!(conv_out(56, 1, 2, 0, 1), 28);
+    }
+}

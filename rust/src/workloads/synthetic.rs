@@ -1,0 +1,139 @@
+//! Synthetic workload generator: random layered DAGs with realistic tensor
+//! size distributions. Used by property tests, by ablation benchmarks, and
+//! to exercise the GNN policy's size-generalization claims on graphs the
+//! builders don't cover.
+
+use crate::graph::node::{ConvParams, Node, OpKind, TensorShape};
+use crate::graph::Graph;
+use crate::utils::Rng;
+
+/// Configuration for the random-DAG generator.
+#[derive(Clone, Debug)]
+pub struct SyntheticConfig {
+    /// Number of operational nodes (>= 2).
+    pub nodes: usize,
+    /// Probability of an extra skip edge per node (residual-style fan-in).
+    pub skip_prob: f64,
+    /// Log2 range of weight byte sizes for weighted ops.
+    pub weight_log2_range: (f64, f64),
+    /// Log2 range of activation byte sizes.
+    pub act_log2_range: (f64, f64),
+    /// Fraction of nodes that carry weights.
+    pub weighted_fraction: f64,
+}
+
+impl Default for SyntheticConfig {
+    fn default() -> Self {
+        SyntheticConfig {
+            nodes: 64,
+            skip_prob: 0.3,
+            weight_log2_range: (10.0, 22.0), // 1 KB .. 4 MB
+            act_log2_range: (12.0, 21.0),    // 4 KB .. 2 MB
+            weighted_fraction: 0.5,
+        }
+    }
+}
+
+/// Generate a random layered DAG. Node 0 is an input; every other node has
+/// at least one predecessor with a smaller index, so the graph is connected
+/// and already topologically ordered.
+pub fn synthetic(cfg: &SyntheticConfig, rng: &mut Rng) -> Graph {
+    assert!(cfg.nodes >= 2);
+    let mut nodes = Vec::with_capacity(cfg.nodes);
+    let mut edges = Vec::new();
+    for i in 0..cfg.nodes {
+        let weighted = i > 0 && rng.chance(cfg.weighted_fraction);
+        let (op, weight_bytes) = if i == 0 {
+            (OpKind::Input, 0)
+        } else if weighted {
+            let lg = rng.range_f64(cfg.weight_log2_range.0, cfg.weight_log2_range.1);
+            (
+                if rng.chance(0.5) { OpKind::Conv } else { OpKind::MatMul },
+                2f64.powf(lg) as u64,
+            )
+        } else {
+            let kinds = [OpKind::Activation, OpKind::EltwiseAdd, OpKind::Pool, OpKind::Softmax];
+            (*rng.choose(&kinds), 0)
+        };
+        let act_lg = rng.range_f64(cfg.act_log2_range.0, cfg.act_log2_range.1);
+        let act_elems = 2f64.powf(act_lg) as u64;
+        // Factor the element count into a plausible (x, y, z).
+        let z = 1u64 << rng.range(4, 10);
+        let xy = (act_elems / z).max(1);
+        let x = (xy as f64).sqrt().max(1.0) as u64;
+        let y = (xy / x).max(1);
+        let shape = TensorShape::new(x as u32, y as u32, z as u32);
+        let macs = weight_bytes.max(1) * 16 + shape.volume();
+        nodes.push(Node {
+            id: i,
+            name: format!("syn{i}"),
+            op,
+            weight_bytes,
+            ifm: shape,
+            ofm: shape,
+            conv: ConvParams::default(),
+            batch: 1,
+            macs,
+            act_elem_bytes: 1,
+        });
+        if i > 0 {
+            // Chain edge from a recent predecessor keeps depth realistic.
+            let lo = i.saturating_sub(4);
+            let main = rng.range(lo, i);
+            edges.push((main, i));
+            if rng.chance(cfg.skip_prob) && i >= 2 {
+                let skip = rng.below(i - 1);
+                if skip != main {
+                    edges.push((skip, i));
+                }
+            }
+        }
+    }
+    Graph::new(format!("synthetic{}", cfg.nodes), nodes, edges).expect("generator emits DAGs")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::check;
+
+    #[test]
+    fn prop_generator_emits_valid_connected_dags() {
+        check(
+            "synthetic graphs valid",
+            60,
+            |g| {
+                let cfg = SyntheticConfig { nodes: g.usize_in(2, 120), ..Default::default() };
+                let graph = synthetic(&cfg, g.rng());
+                (cfg.nodes, graph)
+            },
+            |&n, graph| {
+                graph.len() == n
+                    && graph.topo_order().len() == n
+                    // every non-input node reachable: has >= 1 pred
+                    && (1..n).all(|i| !graph.preds(i).is_empty())
+            },
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = SyntheticConfig::default();
+        let a = synthetic(&cfg, &mut Rng::new(5));
+        let b = synthetic(&cfg, &mut Rng::new(5));
+        assert_eq!(a.edges, b.edges);
+        assert_eq!(a.total_weight_bytes(), b.total_weight_bytes());
+    }
+
+    #[test]
+    fn respects_size_ranges() {
+        let cfg = SyntheticConfig::default();
+        let g = synthetic(&cfg, &mut Rng::new(7));
+        for n in &g.nodes {
+            if n.weight_bytes > 0 {
+                assert!(n.weight_bytes >= 1 << 10);
+                assert!(n.weight_bytes <= 1 << 22);
+            }
+        }
+    }
+}

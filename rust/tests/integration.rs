@@ -1,0 +1,196 @@
+//! Cross-layer integration tests: Rust coordinator ↔ AOT artifacts ↔
+//! simulator. These need `artifacts/` (run `make artifacts`); without it
+//! they skip (printing a note) so that `cargo test` stays meaningful on a
+//! fresh checkout.
+
+use std::sync::Arc;
+
+use egrl::config::EgrlConfig;
+use egrl::coordinator::{Mode, Trainer};
+use egrl::ea::BoltzmannChromosome;
+use egrl::env::MappingEnv;
+use egrl::gnn::PolicyRunner;
+use egrl::metrics::RunLog;
+use egrl::rl::{SacLearner, Transition};
+use egrl::runtime::{literal_f32, literal_to_f32, Runtime};
+use egrl::utils::Rng;
+use egrl::workloads::Workload;
+
+/// Open a runtime if artifacts exist. (`PjRtClient` is `Rc`-based, so the
+/// runtime cannot be shared across test threads; the SAC-compiling
+/// scenarios are merged into one test below so the minutes-long XLA
+/// compile of sac_update happens exactly once per test run.)
+fn runtime() -> Option<Runtime> {
+    let dir = Runtime::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping integration test: artifacts not built");
+        return None;
+    }
+    Some(Runtime::open(dir).expect("open runtime"))
+}
+
+#[test]
+fn policy_runner_emits_simplex_probs() {
+    let Some(rt) = runtime() else { return };
+    let env = MappingEnv::nnpi(Workload::ResNet50.build(), 1);
+    let runner = PolicyRunner::for_env(&rt, &env).unwrap();
+    assert_eq!(runner.n_real, 57);
+    assert_eq!(runner.n_artifact, 64);
+    let params = rt.actor_init().unwrap();
+    let probs = runner.probs(&params).unwrap();
+    assert_eq!(probs.len(), 64 * 2 * 3);
+    for chunk in probs.chunks(3).take(runner.n_real * 2) {
+        let s: f32 = chunk.iter().sum();
+        assert!((s - 1.0).abs() < 1e-4, "not a simplex: {chunk:?}");
+        assert!(chunk.iter().all(|&p| p >= 0.0));
+    }
+}
+
+#[test]
+fn initial_policy_prefers_dram() {
+    // Table 2: initial mapping action = DRAM — the AOT init biases the
+    // output head toward choice 0.
+    let Some(rt) = runtime() else { return };
+    let env = MappingEnv::nnpi(Workload::ResNet50.build(), 2);
+    let runner = PolicyRunner::for_env(&rt, &env).unwrap();
+    let probs = runner.probs(&rt.actor_init().unwrap()).unwrap();
+    let map = runner.greedy_map(&probs);
+    let dram = map
+        .placements
+        .iter()
+        .filter(|p| p.weight == egrl::mapping::MemKind::Dram)
+        .count();
+    assert!(
+        dram as f64 > 0.8 * map.len() as f64,
+        "initial policy not DRAM-biased: {dram}/{}",
+        map.len()
+    );
+}
+
+#[test]
+fn boltzmann_artifact_matches_rust_decode() {
+    // L1 Pallas kernel (through AOT+PJRT) vs the native Rust decode: the
+    // same Boltzmann-softmax math at both ends of the stack.
+    let Some(rt) = runtime() else { return };
+    let n = 64usize;
+    let Some(file) = rt.manifest.boltzmann_file(n).unwrap() else {
+        eprintln!("skipping: no boltzmann artifact");
+        return;
+    };
+    let exe = rt.load(&file).unwrap();
+    let mut rng = Rng::new(42);
+    let mut chrom = BoltzmannChromosome::random(n, 1.0, &mut rng);
+    // Exercise extreme temperatures too.
+    chrom.temps[0] = 0.0;
+    chrom.temps[1] = 50.0;
+    let out = exe
+        .run(&[
+            literal_f32(&chrom.priors, &[n, 2, 3]),
+            literal_f32(&chrom.temps, &[n, 2]),
+        ])
+        .unwrap();
+    let kernel_probs = literal_to_f32(&out[0]).unwrap();
+    let rust_probs = chrom.decode();
+    assert_eq!(kernel_probs.len(), rust_probs.len());
+    for (i, (a, b)) in kernel_probs.iter().zip(&rust_probs).enumerate() {
+        assert!(
+            (a - b).abs() < 1e-4,
+            "L1 kernel vs L3 decode mismatch at {i}: {a} vs {b}"
+        );
+    }
+}
+
+/// All three SAC-dependent scenarios in one test: the sac_update_64
+/// artifact takes minutes to XLA-compile on this CPU, and a per-test
+/// `Runtime` (PjRtClient is Rc-based, so it cannot be shared across test
+/// threads) would pay that three times.
+#[test]
+fn sac_scenarios_share_one_compile() {
+    let Some(rt) = runtime() else { return };
+    sac_learner_fits_fixed_batch(&rt);
+    egrl_full_stack_two_generations(&rt);
+    pg_only_mode_runs_and_updates(&rt);
+}
+
+fn sac_learner_fits_fixed_batch(rt: &Runtime) {
+    let env = MappingEnv::nnpi(Workload::ResNet50.build(), 3);
+    let mut sac = SacLearner::new(rt, &env).unwrap();
+    let mut rng = Rng::new(3);
+    let n = env.num_nodes();
+    // A fixed batch: all-DRAM maps with reward 1.0.
+    let tr = Transition { actions: vec![[0, 0]; n], reward: 1.0 };
+    let batch: Vec<&Transition> = (0..sac.batch_size()).map(|_| &tr).collect();
+    let first = sac.update(&batch, &mut rng).unwrap();
+    let mut last = first;
+    for _ in 0..8 {
+        last = sac.update(&batch, &mut rng).unwrap();
+    }
+    assert!(first.critic_loss.is_finite() && last.critic_loss.is_finite());
+    assert!(
+        last.critic_loss < first.critic_loss,
+        "critic not learning: {} -> {}",
+        first.critic_loss,
+        last.critic_loss
+    );
+    // Entropy of a 3-way factorized policy stays in [0, ln 3].
+    assert!(last.entropy >= 0.0 && last.entropy <= 1.0987);
+}
+
+fn egrl_full_stack_two_generations(rt: &Runtime) {
+    let env = Arc::new(MappingEnv::nnpi(Workload::ResNet50.build(), 4));
+    let cfg = EgrlConfig {
+        seed: 4,
+        pop_size: 6,
+        elites: 1,
+        total_steps: 14, // two generations of 6 + 1 PG rollout
+        update_every: 7, // one SAC update per generation
+        ..Default::default()
+    };
+    let mut trainer = Trainer::new(env.clone(), cfg, Mode::Egrl, Some(rt)).unwrap();
+    let mut log = RunLog::new("resnet50", "egrl", 4);
+    let res = trainer.run(&mut log).unwrap();
+    assert!(res.iterations >= 14);
+    assert!(trainer.generations() >= 2);
+    // The DRAM-biased init must find valid maps immediately.
+    assert!(res.best_speedup > 0.0, "no valid map in 2 generations");
+    assert!(trainer.pg_actor_params().is_some());
+}
+
+#[test]
+fn same_actor_params_drive_all_workload_sizes() {
+    // The Fig-5 transfer mechanism: one parameter vector works with every
+    // artifact size variant.
+    let Some(rt) = runtime() else { return };
+    let params = rt.actor_init().unwrap();
+    for w in Workload::all() {
+        let env = MappingEnv::nnpi(w.build(), 5);
+        let runner = PolicyRunner::for_env(&rt, &env).unwrap();
+        let probs = runner.probs(&params).unwrap();
+        assert!(probs.iter().all(|p| p.is_finite()), "{}: NaN probs", w.name());
+        let map = runner.greedy_map(&probs);
+        assert_eq!(map.len(), env.num_nodes());
+    }
+}
+
+fn pg_only_mode_runs_and_updates(rt: &Runtime) {
+    let env = Arc::new(MappingEnv::nnpi(Workload::ResNet50.build(), 6));
+    let cfg = EgrlConfig {
+        seed: 6,
+        total_steps: 30,
+        pg_rollouts: 5,
+        batch_size: 24,
+        ..Default::default()
+    };
+    let mut trainer = Trainer::new(env, cfg, Mode::PgOnly, Some(rt)).unwrap();
+    let before = trainer.pg_actor_params().unwrap().to_vec();
+    let mut log = RunLog::new("resnet50", "pg", 6);
+    let res = trainer.run(&mut log).unwrap();
+    assert!(res.iterations >= 30);
+    let after = trainer.pg_actor_params().unwrap();
+    let delta: f32 = before
+        .iter()
+        .zip(after)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f32::max);
+    assert!(delta > 0.0, "PG actor never updated");
+}
