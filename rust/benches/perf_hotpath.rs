@@ -1,22 +1,35 @@
 //! Performance benchmark of every hot path (EXPERIMENTS.md §Perf).
 //!
 //! L3 (native Rust): environment step (rectify + liveness-aware capacity
-//! accounting + latency model), its components, Boltzmann decode/sample,
-//! EA generation machinery, Jaccard/MDS analysis.
+//! accounting + latency model) on all three of its paths (allocating /
+//! workspace-reusing / zero-allocation in-place), the table-driven vs.
+//! naive latency evaluators, Boltzmann decode/sample, EA generation
+//! machinery (including the seed's serial allocating rollout loop vs. the
+//! parallel rollout engine), Jaccard/MDS analysis.
 //!
 //! Runtime path (with artifacts): policy_fwd execution per size variant
 //! and one sac_update step — the PJRT-side costs that bound EGRL's
 //! wall-clock on this host.
+//!
+//! Besides the stdout report, writes `BENCH_hotpath.json` (all raw
+//! measurements + derived speedup ratios) so future PRs can track the
+//! perf trajectory mechanically.
+
+use std::sync::Arc;
 
 use egrl::bench_harness::Bench;
+use egrl::config::EgrlConfig;
+use egrl::coordinator::{Mode, Trainer};
+use egrl::ea::population::{EvolveParams, Genome, Population};
 use egrl::ea::BoltzmannChromosome;
 use egrl::env::MappingEnv;
 use egrl::gnn::PolicyRunner;
-use egrl::mapping::MemoryMap;
-use egrl::rl::{SacLearner, Transition};
+use egrl::mapping::{MemKind, MemoryMap};
+use egrl::rl::{Replay, SacLearner, Transition};
 use egrl::runtime::Runtime;
 use egrl::sim::compiler::CompilerWorkspace;
 use egrl::sim::liveness::Liveness;
+use egrl::utils::json::Json;
 use egrl::utils::Rng;
 use egrl::viz::embed;
 use egrl::workloads::Workload;
@@ -45,7 +58,7 @@ fn main() -> anyhow::Result<()> {
                 std::hint::black_box(env.step(&map, &mut local_rng));
             },
         );
-        // AFTER: workspace-reusing hot path (CompilerWorkspace).
+        // Workspace reuse, but still one owned outcome clone per step.
         b.measure_throughput(
             &format!("env.step reuse ({} nodes, {})", n, w.name()),
             1.0,
@@ -55,25 +68,62 @@ fn main() -> anyhow::Result<()> {
                 std::hint::black_box(env.step_with(&map, &mut local_rng, &mut ws));
             },
         );
+        // AFTER: the zero-allocation in-place path the rollout engine uses.
+        let mut buf = map.clone();
+        b.measure_throughput(
+            &format!("env.step in-place ({} nodes, {})", n, w.name()),
+            1.0,
+            200,
+            0.5,
+            || {
+                buf.placements.copy_from_slice(&map.placements);
+                std::hint::black_box(env.step_in_place(&mut buf, &mut local_rng, &mut ws));
+            },
+        );
     }
 
     // ---- L3 components ------------------------------------------------------
     let env = MappingEnv::nnpi(Workload::Bert.build(), 2);
-    let n = env.num_nodes();
     let map = env.compiler_map.clone();
     let mut ws = CompilerWorkspace::default();
     b.measure("rectify only (bert)", 200, 0.5, || {
         std::hint::black_box(env.compiler.rectify_with(&env.graph, &env.liveness, &map, &mut ws));
     });
-    b.measure("latency model only (bert)", 200, 0.5, || {
+    let mut buf = map.clone();
+    b.measure("rectify in-place (bert)", 200, 0.5, || {
+        buf.placements.copy_from_slice(&map.placements);
+        std::hint::black_box(env.compiler.rectify_in_place(
+            &env.graph,
+            &env.liveness,
+            &mut buf,
+            &mut ws,
+        ));
+    });
+    b.measure("latency naive (bert)", 200, 0.5, || {
         std::hint::black_box(env.latency.latency(&env.graph, &map));
     });
+    b.measure("latency table (bert)", 200, 0.5, || {
+        std::hint::black_box(env.cost_table.latency(&map));
+    });
+    // Mutation-local re-evaluation: score a single-node activation move
+    // via latency_delta (O(preds + succs·preds)) instead of re-walking
+    // the whole graph.
+    {
+        let node = env.num_nodes() / 2;
+        let old = map.placements[node];
+        let mut moved = map.clone();
+        moved.placements[node].activation = MemKind::from_index((old.activation.index() + 1) % 3);
+        b.measure("latency delta single move (bert)", 200, 0.5, || {
+            std::hint::black_box(env.cost_table.latency_delta(&moved, node, old));
+        });
+    }
     b.measure("liveness analysis (bert)", 200, 0.5, || {
         std::hint::black_box(Liveness::analyze(&env.graph));
     });
     b.measure("feature extraction (bert)", 200, 0.5, || {
         std::hint::black_box(env.graph.feature_matrix());
     });
+    let n = env.num_nodes();
 
     // ---- EA machinery -------------------------------------------------------
     let chrom = BoltzmannChromosome::random(n, 1.0, &mut rng);
@@ -95,6 +145,76 @@ fn main() -> anyhow::Result<()> {
     b.measure("MDS 2-D embedding (24 maps)", 20, 0.3, || {
         std::hint::black_box(embed::mds_2d(&d, maps.len()));
     });
+
+    // ---- Trainer::generation: seed serial path vs the rollout engine -------
+    // BEFORE: a faithful emulation of the seed trainer's generation — serial
+    // rollouts through the allocating env.step (fresh workspace + owned
+    // outcome per step), then evolution. AFTER: the real Trainer::generation
+    // on the parallel, zero-allocation engine at various thread counts.
+    {
+        let gen_env = MappingEnv::nnpi(Workload::ResNet50.build(), 3);
+        let pop_size = 20;
+        let gn = gen_env.num_nodes();
+        let mut pop = Population::init(pop_size, pop_size, gn, 1.0, None, &mut rng);
+        let mut replay = Replay::new(100_000);
+        let params = EvolveParams {
+            elites: 4,
+            mut_prob: 0.9,
+            mut_std: 0.1,
+            mut_frac: 0.1,
+            tournament: 3,
+        };
+        let mut seed_rng = rng.fork();
+        b.measure("generation BEFORE (seed serial, alloc)", 30, 0.5, || {
+            for i in 0..pop.len() {
+                let map = match &pop.members[i].genome {
+                    Genome::Boltzmann(bz) => bz.sample_map(&mut seed_rng),
+                    Genome::Gnn(_) => unreachable!("artifact-free population"),
+                };
+                let out = gen_env.step(&map, &mut seed_rng);
+                replay.push(Transition::from_map(&map, out.reward));
+                pop.members[i].fitness = out.reward;
+                std::hint::black_box(&out.rectified);
+            }
+            let mut ev_rng = seed_rng.fork();
+            pop.evolve(params, &mut ev_rng, &mut |_g: &[f32]| -> Option<Vec<f32>> { None });
+        });
+
+        for threads in [1usize, 2, 4] {
+            let cfg = EgrlConfig {
+                threads,
+                seed: 3,
+                pop_size,
+                elites: 4,
+                total_steps: u64::MAX,
+                ..Default::default()
+            };
+            let env = Arc::new(MappingEnv::nnpi(Workload::ResNet50.build(), 3));
+            let mut trainer = Trainer::new(env, cfg, Mode::EaOnly, None)?;
+            b.measure(&format!("generation AFTER (engine, threads={threads})"), 30, 0.5, || {
+                std::hint::black_box(trainer.generation().unwrap());
+            });
+        }
+    }
+
+    // ---- derived ratios -----------------------------------------------------
+    let ratio = |num: &str, den: &str| -> f64 {
+        match (b.mean_s(num), b.mean_s(den)) {
+            (Some(a), Some(c)) if c > 0.0 => a / c,
+            _ => f64::NAN,
+        }
+    };
+    let gen_speedup_t4 =
+        ratio("generation BEFORE (seed serial, alloc)", "generation AFTER (engine, threads=4)");
+    let gen_speedup_t1 =
+        ratio("generation BEFORE (seed serial, alloc)", "generation AFTER (engine, threads=1)");
+    let latency_speedup = ratio("latency naive (bert)", "latency table (bert)");
+    let delta_speedup = ratio("latency table (bert)", "latency delta single move (bert)");
+    println!("\nderived:");
+    println!("  generation speedup (threads=4 vs seed serial): {gen_speedup_t4:.2}x");
+    println!("  generation speedup (threads=1 vs seed serial): {gen_speedup_t1:.2}x");
+    println!("  latency table vs naive:                        {latency_speedup:.2}x");
+    println!("  latency_delta vs full table recompute:         {delta_speedup:.2}x");
 
     // ---- runtime path (artifacts) ---------------------------------------------
     let dir = Runtime::default_dir();
@@ -127,6 +247,23 @@ fn main() -> anyhow::Result<()> {
     } else {
         println!("\n(PJRT runtime benches skipped: artifacts missing)");
     }
+
+    // ---- machine-readable dump ----------------------------------------------
+    let json = Json::obj(vec![
+        ("schema", Json::str("egrl-bench-hotpath-v1")),
+        ("measurements", b.to_json()),
+        (
+            "derived",
+            Json::obj(vec![
+                ("generation_speedup_threads4_vs_seed", Json::Num(gen_speedup_t4)),
+                ("generation_speedup_threads1_vs_seed", Json::Num(gen_speedup_t1)),
+                ("latency_table_speedup_vs_naive", Json::Num(latency_speedup)),
+                ("latency_delta_speedup_vs_full_recompute", Json::Num(delta_speedup)),
+            ]),
+        ),
+    ]);
+    std::fs::write("BENCH_hotpath.json", json.to_string_pretty())?;
+    println!("\nwrote BENCH_hotpath.json");
 
     println!("\nperf targets (DESIGN.md §8): env.step ≥ 50k/s on ResNet-50-sized graphs;");
     println!("the simulator must never be the bottleneck relative to artifact execution.");

@@ -10,8 +10,9 @@
 
 use super::{BestTracker, MappingAgent};
 use crate::env::MappingEnv;
-use crate::mapping::{MemKind, MemoryMap};
+use crate::mapping::{MemKind, MemoryMap, NodePlacement};
 use crate::metrics::RunLog;
+use crate::sim::compiler::CompilerWorkspace;
 use crate::utils::Rng;
 
 /// The Greedy-DP agent. Starts from the paper's initial action (all-DRAM).
@@ -44,6 +45,10 @@ impl MappingAgent for GreedyDp {
         let mut tracker = BestTracker::new(n);
         let start = env.iterations();
         let mut next_log = self.log_every;
+        // Hot loop: one reusable workspace + candidate buffer (clone_from
+        // reuses its allocation), in-place rectification.
+        let mut ws = CompilerWorkspace::default();
+        let mut candidate = MemoryMap::all_dram(n);
         'outer: loop {
             let mut improved_any = false;
             for node in 0..n {
@@ -53,13 +58,15 @@ impl MappingAgent for GreedyDp {
                         if env.iterations() - start >= budget {
                             break 'outer;
                         }
-                        let mut candidate = current.clone();
+                        candidate.placements.clone_from(&current.placements);
                         candidate.placements[node].weight = w;
                         candidate.placements[node].activation = a;
-                        let out = env.step(&candidate, rng);
+                        let out = env.step_in_place(&mut candidate, rng, &mut ws);
                         tracker.consider(&candidate, out.speedup);
                         if out.reward > best_local.1 {
-                            best_local = (candidate.placements[node], out.reward);
+                            // Record the *proposed* sub-action, not what
+                            // rectification turned it into.
+                            best_local = (NodePlacement { weight: w, activation: a }, out.reward);
                         }
                         let used = env.iterations() - start;
                         if used >= next_log {

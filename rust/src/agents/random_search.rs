@@ -4,8 +4,9 @@
 
 use super::{BestTracker, MappingAgent};
 use crate::env::MappingEnv;
-use crate::mapping::MemoryMap;
+use crate::mapping::{MemKind, MemoryMap, NodePlacement};
 use crate::metrics::RunLog;
+use crate::sim::compiler::CompilerWorkspace;
 use crate::utils::Rng;
 
 /// Samples uniformly random maps and keeps the best valid one.
@@ -35,12 +36,18 @@ impl MappingAgent for RandomSearch {
         let mut tracker = BestTracker::new(n);
         let start = env.iterations();
         let mut next_log = self.log_every;
+        // Hot loop: one reusable workspace + proposal buffer, in-place
+        // rectification — no per-step allocation.
+        let mut ws = CompilerWorkspace::default();
+        let mut map = MemoryMap { placements: Vec::with_capacity(n) };
         while env.iterations() - start < budget {
-            let actions: Vec<[usize; 2]> =
-                (0..n).map(|_| [rng.below(3), rng.below(3)]).collect();
-            let map = MemoryMap::from_actions(&actions);
-            let out = env.step(&map, rng);
-            tracker.consider(&out.rectified, out.speedup);
+            map.placements.clear();
+            map.placements.extend((0..n).map(|_| NodePlacement {
+                weight: MemKind::from_index(rng.below(3)),
+                activation: MemKind::from_index(rng.below(3)),
+            }));
+            let out = env.step_in_place(&mut map, rng, &mut ws);
+            tracker.consider(&map, out.speedup);
             let used = env.iterations() - start;
             if used >= next_log {
                 log.push(used, tracker.best_speedup);

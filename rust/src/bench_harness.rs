@@ -8,6 +8,7 @@
 //!   per paper figure), with the paper's reference values alongside the
 //!   measured ones.
 
+use crate::utils::json::Json;
 use crate::utils::timer::{bench_loop, BenchResult};
 
 /// A named group of timing measurements.
@@ -50,6 +51,33 @@ impl Bench {
 
     pub fn name(&self) -> &str {
         &self.name
+    }
+
+    /// Mean seconds of a measurement by label (for derived ratios).
+    pub fn mean_s(&self, label: &str) -> Option<f64> {
+        self.results.iter().find(|(l, _)| l == label).map(|(_, r)| r.mean_s)
+    }
+
+    /// Machine-readable dump of every measurement — the payload of
+    /// `BENCH_hotpath.json`, which lets future PRs track the perf
+    /// trajectory without scraping stdout.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("bench", Json::str(self.name.clone())),
+            (
+                "results",
+                Json::arr(self.results.iter().map(|(label, r)| {
+                    Json::obj(vec![
+                        ("label", Json::str(label.clone())),
+                        ("mean_s", Json::Num(r.mean_s)),
+                        ("std_s", Json::Num(r.std_s)),
+                        ("min_s", Json::Num(r.min_s)),
+                        ("iters", Json::Num(r.iters as f64)),
+                        ("throughput_per_s", Json::Num(r.throughput_per_s())),
+                    ])
+                })),
+            ),
+        ])
     }
 }
 
@@ -136,5 +164,20 @@ mod tests {
     #[test]
     fn pm_formats() {
         assert_eq!(pm(1.284, 0.056), "1.28 ± 0.06");
+    }
+
+    #[test]
+    fn bench_json_roundtrips() {
+        let mut b = Bench::new("json");
+        let mut x = 0u64;
+        b.measure("tick", 3, 0.0, || x += 1);
+        let j = b.to_json();
+        let parsed = crate::utils::json::parse(&j.to_string_pretty()).unwrap();
+        let results = parsed.require("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].get("label").unwrap().as_str(), Some("tick"));
+        assert!(results[0].get("mean_s").unwrap().as_f64().is_some());
+        assert!(b.mean_s("tick").is_some());
+        assert!(b.mean_s("missing").is_none());
     }
 }

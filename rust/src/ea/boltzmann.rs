@@ -13,7 +13,7 @@
 //! is the population hot path (thousands of decodes per generation), and
 //! the two are cross-checked in the integration tests.
 
-use crate::mapping::MemoryMap;
+use crate::mapping::{MemKind, MemoryMap, NodePlacement};
 use crate::utils::math::boltzmann_softmax;
 use crate::utils::Rng;
 
@@ -62,7 +62,18 @@ impl BoltzmannChromosome {
 
     /// Sample a complete memory map.
     pub fn sample_map(&self, rng: &mut Rng) -> MemoryMap {
-        let mut actions = Vec::with_capacity(self.n);
+        let mut out = MemoryMap { placements: Vec::new() };
+        self.sample_map_into(rng, &mut out);
+        out
+    }
+
+    /// Sample into a caller-provided buffer — the rollout engine reuses
+    /// one proposal buffer per population slot across generations, so the
+    /// decode phase allocates nothing after warm-up. Draw order matches
+    /// [`Self::sample_map`] (weight then activation, node-major).
+    pub fn sample_map_into(&self, rng: &mut Rng, out: &mut MemoryMap) {
+        out.placements.clear();
+        out.placements.reserve(self.n);
         for node in 0..self.n {
             let mut pair = [0usize; 2];
             for (k, slot) in pair.iter_mut().enumerate() {
@@ -70,9 +81,11 @@ impl BoltzmannChromosome {
                 let p = boltzmann_softmax(&self.priors[i * 3..i * 3 + 3], self.temps[i]);
                 *slot = rng.categorical(&p);
             }
-            actions.push(pair);
+            out.placements.push(NodePlacement {
+                weight: MemKind::from_index(pair[0]),
+                activation: MemKind::from_index(pair[1]),
+            });
         }
-        MemoryMap::from_actions(&actions)
     }
 
     /// Gaussian mutation: perturb a fraction of priors additively and the

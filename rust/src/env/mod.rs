@@ -16,6 +16,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use crate::graph::Graph;
 use crate::mapping::MemoryMap;
 use crate::sim::compiler::{Compiler, CompilerWorkspace};
+use crate::sim::latency::CostTable;
 use crate::sim::liveness::Liveness;
 use crate::sim::noise::NoiseModel;
 use crate::sim::spec::ChipSpec;
@@ -42,6 +43,23 @@ impl Default for EnvConfig {
     }
 }
 
+/// Scalar outcome of one zero-allocation step ([`MappingEnv::step_in_place`]):
+/// identical to [`StepOutcome`] minus the map payload, which stays in the
+/// caller's (rectified-in-place) buffer.
+#[derive(Clone, Copy, Debug)]
+pub struct StepStats {
+    /// Re-assigned-bytes ratio; 0 ⇔ the proposal was valid.
+    pub epsilon: f64,
+    /// Scalar training reward.
+    pub reward: f64,
+    /// Whether the proposal was executable as-is.
+    pub valid: bool,
+    /// Noisy measured latency — `None` for invalid proposals.
+    pub measured_latency_s: Option<f64>,
+    /// Measured speedup vs. the native compiler (`None` when invalid).
+    pub speedup: Option<f64>,
+}
+
 /// Outcome of one environment step.
 #[derive(Clone, Debug)]
 pub struct StepOutcome {
@@ -66,6 +84,9 @@ pub struct MappingEnv {
     pub liveness: Liveness,
     pub compiler: Compiler,
     pub latency: LatencyModel,
+    /// Precomputed per-(node, memory) cost table — the hot-path latency
+    /// evaluator (bit-identical to [`LatencyModel::latency`]).
+    pub cost_table: CostTable,
     pub noise: NoiseModel,
     pub config: EnvConfig,
     /// The native compiler's own mapping (the baseline).
@@ -73,6 +94,9 @@ pub struct MappingEnv {
     /// Reference latency of the compiler map (mean of several noisy
     /// measurements at construction — "the baseline run").
     pub compiler_latency_s: f64,
+    /// Noise-free latency of the compiler map, cached at construction so
+    /// [`Self::true_speedup`] never re-walks the baseline.
+    pub baseline_true_latency_s: f64,
     iterations: AtomicU64,
 }
 
@@ -82,22 +106,28 @@ impl MappingEnv {
     pub fn new(graph: Graph, chip: ChipSpec, config: EnvConfig, seed: u64) -> MappingEnv {
         let liveness = Liveness::analyze(&graph);
         let compiler = Compiler::new(chip.clone());
+        let cost_table = CostTable::new(&graph, &chip);
         let latency = LatencyModel::new(chip);
         let noise = NoiseModel::new(config.noise_std);
         let compiler_map = compiler.heuristic_map(&graph, &liveness);
         let mut rng = Rng::new(seed ^ 0xBA5E11);
-        let true_base = latency.latency(&graph, &compiler_map);
-        let compiler_latency_s =
-            noise.measure_mean(true_base, config.eval_measurements.max(1), &mut rng);
+        let baseline_true_latency_s = cost_table.latency(&compiler_map);
+        let compiler_latency_s = noise.measure_mean(
+            baseline_true_latency_s,
+            config.eval_measurements.max(1),
+            &mut rng,
+        );
         MappingEnv {
             graph,
             liveness,
             compiler,
             latency,
+            cost_table,
             noise,
             config,
             compiler_map,
             compiler_latency_s,
+            baseline_true_latency_s,
             iterations: AtomicU64::new(0),
         }
     }
@@ -124,32 +154,54 @@ impl MappingEnv {
         self.step_with(proposal, rng, &mut ws)
     }
 
-    /// Allocation-reusing variant of [`Self::step`] for the hot loop.
+    /// Workspace-reusing variant of [`Self::step`]. Still returns an
+    /// owned outcome (one map clone per call); the rollout engine uses
+    /// [`Self::step_in_place`], which allocates nothing.
     pub fn step_with(
         &self,
         proposal: &MemoryMap,
         rng: &mut Rng,
         ws: &mut CompilerWorkspace,
     ) -> StepOutcome {
+        let mut rectified = proposal.clone();
+        let s = self.step_in_place(&mut rectified, rng, ws);
+        StepOutcome {
+            rectified,
+            epsilon: s.epsilon,
+            reward: s.reward,
+            valid: s.valid,
+            measured_latency_s: s.measured_latency_s,
+            speedup: s.speedup,
+        }
+    }
+
+    /// Zero-allocation Algorithm-1 step: rectifies `map` in place (on
+    /// return it is the executable map `M_C`) and returns only scalar
+    /// statistics. Thread-safe for concurrent rollout workers — each
+    /// worker brings its own `map`, `rng` and workspace; the shared
+    /// iteration counter is atomic.
+    pub fn step_in_place(
+        &self,
+        map: &mut MemoryMap,
+        rng: &mut Rng,
+        ws: &mut CompilerWorkspace,
+    ) -> StepStats {
         self.iterations.fetch_add(1, Ordering::Relaxed);
-        let r = self.compiler.rectify_with(&self.graph, &self.liveness, proposal, ws);
+        let r = self.compiler.rectify_in_place(&self.graph, &self.liveness, map, ws);
         if !r.valid() {
             // Invalid: no inference executed; negative reward ∝ ε.
-            let reward = -self.config.invalid_scale * r.epsilon;
-            return StepOutcome {
-                rectified: r.map,
+            return StepStats {
                 epsilon: r.epsilon,
-                reward,
+                reward: -self.config.invalid_scale * r.epsilon,
                 valid: false,
                 measured_latency_s: None,
                 speedup: None,
             };
         }
-        let true_latency = self.latency.latency(&self.graph, &r.map);
+        let true_latency = self.cost_table.latency(map);
         let measured = self.noise.measure(true_latency, rng);
         let speedup = self.compiler_latency_s / measured;
-        StepOutcome {
-            rectified: r.map,
+        StepStats {
             epsilon: 0.0,
             reward: self.config.reward_scale * speedup,
             valid: true,
@@ -159,21 +211,22 @@ impl MappingEnv {
     }
 
     /// Noise-free speedup of a map (for reporting figures; panics on
-    /// invalid maps — evaluate only rectified maps).
+    /// invalid maps — evaluate only rectified maps). Called once per
+    /// generation and from reporting paths, never per rollout, so the
+    /// validity check stays a hard assert even in release builds.
     pub fn true_speedup(&self, map: &MemoryMap) -> f64 {
         assert!(
             self.compiler.is_valid(&self.graph, &self.liveness, map),
             "true_speedup on invalid map"
         );
-        let true_base = self.latency.latency(&self.graph, &self.compiler_map);
-        true_base / self.latency.latency(&self.graph, map)
+        self.baseline_true_latency_s / self.cost_table.latency(map)
     }
 
     /// Evaluate a (possibly invalid) proposal the way the paper reports
     /// final numbers: rectify, then average several noisy measurements.
     pub fn eval_speedup(&self, proposal: &MemoryMap, rng: &mut Rng) -> f64 {
         let r = self.compiler.rectify(&self.graph, &self.liveness, proposal);
-        let true_latency = self.latency.latency(&self.graph, &r.map);
+        let true_latency = self.cost_table.latency(&r.map);
         let measured = self.noise.measure_mean(true_latency, self.config.eval_measurements, rng);
         self.compiler_latency_s / measured
     }
@@ -258,5 +311,33 @@ mod tests {
         let s = e.eval_speedup(&bad, &mut rng);
         // Rectified map executes; speedup is finite and positive.
         assert!(s.is_finite() && s > 0.0);
+    }
+
+    #[test]
+    fn step_in_place_matches_step_with() {
+        let e = env();
+        let n = e.num_nodes();
+        let actions: Vec<[usize; 2]> = (0..n).map(|i| [i % 3, (i + 1) % 3]).collect();
+        let proposal = MemoryMap::from_actions(&actions);
+        // Same rng stream on both paths → identical noise draws.
+        let out = e.step_with(&proposal, &mut Rng::new(41), &mut CompilerWorkspace::default());
+        let mut in_place = proposal.clone();
+        let st =
+            e.step_in_place(&mut in_place, &mut Rng::new(41), &mut CompilerWorkspace::default());
+        assert_eq!(in_place, out.rectified);
+        assert_eq!(st.valid, out.valid);
+        assert_eq!(st.reward.to_bits(), out.reward.to_bits());
+        assert_eq!(st.epsilon.to_bits(), out.epsilon.to_bits());
+        assert_eq!(st.speedup, out.speedup);
+    }
+
+    #[test]
+    fn cached_baseline_matches_live_recompute() {
+        let e = env();
+        assert_eq!(
+            e.baseline_true_latency_s.to_bits(),
+            e.latency.latency(&e.graph, &e.compiler_map).to_bits(),
+            "cached baseline drifted from the latency model"
+        );
     }
 }

@@ -16,6 +16,7 @@ use crate::mapping::MemoryMap;
 use crate::runtime::{literal_f32, literal_to_f32, Executable, Runtime};
 use crate::utils::math::clamp;
 use crate::utils::Rng;
+use crate::xla;
 
 /// Evaluates GNN parameter vectors against one workload environment.
 pub struct PolicyRunner {

@@ -23,6 +23,7 @@
 //! See `DESIGN.md` for the system inventory and the per-experiment index,
 //! and `EXPERIMENTS.md` for reproduction results.
 
+pub mod xla;
 pub mod utils;
 pub mod testing;
 pub mod graph;

@@ -14,6 +14,7 @@ use crate::graph::features;
 use crate::runtime::{literal_f32, literal_to_f32, Executable, Runtime};
 use crate::utils::math::clamp;
 use crate::utils::Rng;
+use crate::xla;
 use super::replay::Transition;
 
 /// Metrics emitted by one SAC step (mirrors the artifact's output order).

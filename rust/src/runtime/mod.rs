@@ -16,6 +16,8 @@ pub mod manifest;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
+use crate::xla;
+
 pub use manifest::Manifest;
 
 /// Create an f32 literal of the given dimensions from host data.

@@ -40,6 +40,26 @@ impl RectifyOutcome {
     }
 }
 
+/// Scalar statistics of one rectification — the payload-free result of
+/// the zero-allocation path, which leaves the rectified map in the
+/// caller's buffer instead of returning an owned clone.
+#[derive(Clone, Copy, Debug)]
+pub struct RectifyStats {
+    /// Re-assigned-bytes ratio ε ∈ [0, 1]; 0 means the input was valid.
+    pub epsilon: f64,
+    /// Bytes the compiler had to move.
+    pub reassigned_bytes: u64,
+    /// Total tensor bytes in the workload.
+    pub total_bytes: u64,
+}
+
+impl RectifyStats {
+    /// Was the proposed map executable as-is?
+    pub fn valid(&self) -> bool {
+        self.reassigned_bytes == 0
+    }
+}
+
 /// The compiler model. Stateless apart from the chip spec; reusable
 /// scratch buffers live in [`CompilerWorkspace`] for the hot path.
 #[derive(Clone, Debug)]
@@ -49,6 +69,9 @@ pub struct Compiler {
 
 /// Reusable scratch state for rectification — avoids per-call allocation
 /// in the trainer's hot loop (thousands of rectifications per generation).
+/// After the first call on a given graph size it never allocates again;
+/// the death rows that used to live here are map-independent and moved
+/// into [`Liveness`].
 #[derive(Default)]
 pub struct CompilerWorkspace {
     /// Live activation bytes currently resident per memory.
@@ -57,8 +80,6 @@ pub struct CompilerWorkspace {
     w_used: [u64; 3],
     /// Per-node final activation memory while walking.
     act_mem: Vec<MemKind>,
-    /// Node indices whose activation dies at step s, grouped by step.
-    death_row: Vec<Vec<usize>>,
 }
 
 impl Compiler {
@@ -72,7 +93,9 @@ impl Compiler {
         self.rectify_with(g, lv, proposed, &mut ws)
     }
 
-    /// Allocation-reusing variant of [`Self::rectify`].
+    /// Allocation-reusing variant of [`Self::rectify`]. Still clones the
+    /// proposal into an owned outcome; the rollout hot loop uses
+    /// [`Self::rectify_in_place`] instead and allocates nothing.
     pub fn rectify_with(
         &self,
         g: &Graph,
@@ -80,23 +103,34 @@ impl Compiler {
         proposed: &MemoryMap,
         ws: &mut CompilerWorkspace,
     ) -> RectifyOutcome {
-        assert_eq!(proposed.len(), g.len(), "map size != graph size");
+        let mut out = proposed.clone();
+        let s = self.rectify_in_place(g, lv, &mut out, ws);
+        RectifyOutcome {
+            map: out,
+            epsilon: s.epsilon,
+            reassigned_bytes: s.reassigned_bytes,
+            total_bytes: s.total_bytes,
+        }
+    }
+
+    /// Rectify `map` **in place** — the zero-allocation hot path. Each
+    /// placement is read exactly once before it can be overwritten, so
+    /// the proposal buffer doubles as the output buffer; on return `map`
+    /// is the executable map `M_C` and the stats carry ε.
+    pub fn rectify_in_place(
+        &self,
+        g: &Graph,
+        lv: &Liveness,
+        map: &mut MemoryMap,
+        ws: &mut CompilerWorkspace,
+    ) -> RectifyStats {
+        assert_eq!(map.len(), g.len(), "map size != graph size");
         let n = g.len();
         ws.act_used = [0; 3];
         ws.w_used = [0; 3];
         ws.act_mem.clear();
         ws.act_mem.resize(n, MemKind::Dram);
-        if ws.death_row.len() < n {
-            ws.death_row.resize_with(n, Vec::new);
-        }
-        for dr in ws.death_row.iter_mut().take(n) {
-            dr.clear();
-        }
-        for i in 0..n {
-            ws.death_row[lv.last_use[i]].push(i);
-        }
 
-        let mut out = proposed.clone();
         let mut reassigned: u64 = 0;
         let mut total: u64 = 0;
 
@@ -107,12 +141,12 @@ impl Compiler {
                 continue;
             }
             total += w;
-            let want = proposed.placements[i].weight;
+            let want = map.placements[i].weight;
             let got = self.fit_weight(want, w, &ws.w_used);
             ws.w_used[got.index()] += w;
             if got != want {
                 reassigned += w;
-                out.placements[i].weight = got;
+                map.placements[i].weight = got;
             }
         }
 
@@ -121,22 +155,23 @@ impl Compiler {
         for (s, &i) in lv.order.iter().enumerate() {
             let a = g.nodes[i].ofm_bytes();
             total += a;
-            let want = proposed.placements[i].activation;
+            let want = map.placements[i].activation;
             let got = self.fit_act(want, a, &ws.w_used, &ws.act_used);
             ws.act_used[got.index()] += a;
             ws.act_mem[i] = got;
             if got != want {
                 reassigned += a;
-                out.placements[i].activation = got;
+                map.placements[i].activation = got;
             }
             // Retire activations whose last consumer just executed.
-            for &dead in &ws.death_row[s] {
+            for &dead in lv.deaths_at(s) {
+                let dead = dead as usize;
                 ws.act_used[ws.act_mem[dead].index()] -= g.nodes[dead].ofm_bytes();
             }
         }
 
         let epsilon = if total == 0 { 0.0 } else { reassigned as f64 / total as f64 };
-        RectifyOutcome { map: out, epsilon, reassigned_bytes: reassigned, total_bytes: total }
+        RectifyStats { epsilon, reassigned_bytes: reassigned, total_bytes: total }
     }
 
     /// First memory at or below `want` (toward DRAM) where `bytes` of
@@ -190,10 +225,6 @@ impl Compiler {
         let mut w_used = [0u64; 3];
         let mut act_used = [0u64; 3];
         let mut act_mem = vec![MemKind::Dram; n];
-        let mut death_row: Vec<Vec<usize>> = vec![Vec::new(); n];
-        for i in 0..n {
-            death_row[lv.last_use[i]].push(i);
-        }
         let mut map = MemoryMap::all_dram(n);
 
         let fits = |m: MemKind, bytes: u64, w_used: &[u64; 3], act_used: &[u64; 3]| {
@@ -227,7 +258,8 @@ impl Compiler {
             act_used[want.index()] += a;
             act_mem[i] = want;
             map.placements[i].activation = want;
-            for &dead in &death_row[s] {
+            for &dead in lv.deaths_at(s) {
+                let dead = dead as usize;
                 act_used[act_mem[dead].index()] -= g.nodes[dead].ofm_bytes();
             }
         }
@@ -363,6 +395,51 @@ mod tests {
                 (r.epsilon == 0.0) == (r.map == *m)
             },
         );
+    }
+
+    #[test]
+    fn prop_in_place_rectify_matches_cloning_path() {
+        let c = tiny_compiler();
+        check(
+            "rectify_in_place ≡ rectify_with (map and stats)",
+            80,
+            |gen| {
+                let n = gen.usize_in(2, 30);
+                let w = gen.usize_in(0, 2000) as u64;
+                let a = gen.usize_in(1, 1500) as u64;
+                let g = chain(n, w, a);
+                let actions: Vec<[usize; 2]> =
+                    (0..n).map(|_| [gen.usize_in(0, 2), gen.usize_in(0, 2)]).collect();
+                ((g, MemoryMap::from_actions(&actions)), ())
+            },
+            |(g, m), _| {
+                let lv = Liveness::analyze(g);
+                let r = c.rectify(g, &lv, m);
+                let mut ws = CompilerWorkspace::default();
+                let mut in_place = m.clone();
+                let s = c.rectify_in_place(g, &lv, &mut in_place, &mut ws);
+                in_place == r.map
+                    && s.valid() == r.valid()
+                    && s.reassigned_bytes == r.reassigned_bytes
+                    && s.total_bytes == r.total_bytes
+                    && (s.epsilon - r.epsilon).abs() < 1e-15
+            },
+        );
+    }
+
+    #[test]
+    fn workspace_reuse_across_graph_sizes() {
+        // One workspace driven over graphs of shrinking and growing sizes
+        // must not carry stale state between calls.
+        let c = tiny_compiler();
+        let mut ws = CompilerWorkspace::default();
+        for &n in &[12usize, 3, 30, 7] {
+            let g = chain(n, 100, 50);
+            let lv = Liveness::analyze(&g);
+            let mut m = MemoryMap::all_dram(n);
+            let s = c.rectify_in_place(&g, &lv, &mut m, &mut ws);
+            assert!(s.valid(), "all-DRAM invalid on chain({n})?");
+        }
     }
 
     #[test]

@@ -13,9 +13,16 @@
 //! *contiguity* (a consumer reads its inputs at the bandwidth of the
 //! memory its producer wrote to, so keeping chains in fast memory
 //! compounds).
+//!
+//! Two evaluators share the math: [`LatencyModel`] is the readable
+//! reference (per-node divisions against the chip spec), and
+//! [`CostTable`] is the hot path — every bandwidth division is
+//! precomputed per (node, memory) at construction, so evaluating a map is
+//! pure table lookups and adds. The property tests below pin the two to
+//! bit-identical results.
 
 use crate::graph::Graph;
-use crate::mapping::MemoryMap;
+use crate::mapping::{MemoryMap, NodePlacement};
 use super::spec::ChipSpec;
 
 /// Latency evaluator. Stateless; construct once per chip.
@@ -92,6 +99,175 @@ impl LatencyModel {
             .filter(|&i| self.node_cost(g, map, i).memory_bound())
             .count();
         n as f64 / g.len() as f64
+    }
+}
+
+/// Precomputed latency cost table for one (graph, chip) pair.
+///
+/// Every map-independent quantity of the roofline model is tabulated at
+/// construction: per-node compute seconds, and per-(node, memory) weight
+/// streaming / output write / single-consumer read seconds. Evaluating a
+/// map is then a flat walk with no divisions and no graph-pointer
+/// chasing (predecessors and successors are flattened to CSR). The add
+/// order replicates [`LatencyModel::latency`] exactly, so the two
+/// evaluators agree to the last bit.
+#[derive(Clone, Debug)]
+pub struct CostTable {
+    n: usize,
+    /// Compute seconds per node (placement-independent).
+    compute_s: Vec<f64>,
+    /// Weight-streaming seconds per node, per candidate weight memory.
+    weight_s: Vec<[f64; 3]>,
+    /// Output-write seconds per node, per candidate activation memory.
+    output_s: Vec<[f64; 3]>,
+    /// Seconds for ONE consumer to read this node's activation out of
+    /// each candidate memory.
+    read_s: Vec<[f64; 3]>,
+    /// CSR predecessor lists (row offsets + flattened indices).
+    pred_start: Vec<u32>,
+    pred_idx: Vec<u32>,
+    /// CSR successor lists — consumers affected by an activation move,
+    /// used by [`Self::latency_delta`].
+    succ_start: Vec<u32>,
+    succ_idx: Vec<u32>,
+    /// Fixed per-node launch overhead.
+    overhead_s: f64,
+}
+
+impl CostTable {
+    /// Tabulate the roofline model for `g` on `chip`.
+    pub fn new(g: &Graph, chip: &ChipSpec) -> CostTable {
+        let n = g.len();
+        let mut compute_s = Vec::with_capacity(n);
+        let mut weight_s = Vec::with_capacity(n);
+        let mut output_s = Vec::with_capacity(n);
+        let mut read_s = Vec::with_capacity(n);
+        for node in &g.nodes {
+            let eff = chip.op_efficiency(node.op);
+            compute_s.push(node.macs as f64 / (chip.peak_macs_per_s * eff));
+            let w = node.weight_bytes as f64;
+            weight_s.push(if node.weight_bytes > 0 {
+                [w / chip.mems[0].read_bw, w / chip.mems[1].read_bw, w / chip.mems[2].read_bw]
+            } else {
+                [0.0; 3]
+            });
+            let a = node.ofm_bytes() as f64;
+            output_s.push([
+                a / chip.mems[0].write_bw,
+                a / chip.mems[1].write_bw,
+                a / chip.mems[2].write_bw,
+            ]);
+            read_s.push([
+                a / chip.mems[0].read_bw,
+                a / chip.mems[1].read_bw,
+                a / chip.mems[2].read_bw,
+            ]);
+        }
+        let mut pred_start = Vec::with_capacity(n + 1);
+        let mut pred_idx = Vec::new();
+        let mut succ_start = Vec::with_capacity(n + 1);
+        let mut succ_idx = Vec::new();
+        pred_start.push(0u32);
+        succ_start.push(0u32);
+        for i in 0..n {
+            pred_idx.extend(g.preds(i).iter().map(|&p| p as u32));
+            pred_start.push(pred_idx.len() as u32);
+            succ_idx.extend(g.succs(i).iter().map(|&s| s as u32));
+            succ_start.push(succ_idx.len() as u32);
+        }
+        CostTable {
+            n,
+            compute_s,
+            weight_s,
+            output_s,
+            read_s,
+            pred_start,
+            pred_idx,
+            succ_start,
+            succ_idx,
+            overhead_s: chip.node_overhead_s,
+        }
+    }
+
+    /// Number of nodes the table was built for.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Memory seconds of node `i`: weight streaming + producer reads +
+    /// output write. `ovr` substitutes one node's placement (the
+    /// incremental evaluator probes "what if node k still had placement
+    /// p" without touching the map).
+    #[inline]
+    fn node_mem_s(&self, map: &MemoryMap, i: usize, ovr: Option<(usize, NodePlacement)>) -> f64 {
+        let place = |j: usize| -> NodePlacement {
+            match ovr {
+                Some((k, p)) if k == j => p,
+                _ => map.placements[j],
+            }
+        };
+        let p = place(i);
+        let mut input = 0.0;
+        let (s, e) = (self.pred_start[i] as usize, self.pred_start[i + 1] as usize);
+        for &q in &self.pred_idx[s..e] {
+            let q = q as usize;
+            input += self.read_s[q][place(q).activation.index()];
+        }
+        self.weight_s[i][p.weight.index()] + input + self.output_s[i][p.activation.index()]
+    }
+
+    /// Wall seconds of node `i` (roofline max + launch overhead).
+    #[inline]
+    fn node_total_s(&self, map: &MemoryMap, i: usize, ovr: Option<(usize, NodePlacement)>) -> f64 {
+        self.compute_s[i].max(self.node_mem_s(map, i, ovr)) + self.overhead_s
+    }
+
+    /// End-to-end inference latency (seconds) of a *valid* map — pure
+    /// table lookups, bit-identical to [`LatencyModel::latency`].
+    pub fn latency(&self, map: &MemoryMap) -> f64 {
+        debug_assert_eq!(map.len(), self.n);
+        let mut total = 0.0;
+        for i in 0..self.n {
+            let p = map.placements[i];
+            let mut input = 0.0;
+            let (s, e) = (self.pred_start[i] as usize, self.pred_start[i + 1] as usize);
+            for &q in &self.pred_idx[s..e] {
+                let q = q as usize;
+                input += self.read_s[q][map.placements[q].activation.index()];
+            }
+            let mem =
+                self.weight_s[i][p.weight.index()] + input + self.output_s[i][p.activation.index()];
+            total += self.compute_s[i].max(mem) + self.overhead_s;
+        }
+        total
+    }
+
+    /// Exact latency change caused by moving `node` from `old` to its
+    /// current placement in `map` — O(preds + succs·preds) instead of
+    /// O(graph), for mutation-local re-evaluation (single-decision EA
+    /// moves, Greedy-DP style sweeps).
+    ///
+    /// `map` must already hold the NEW placement at `node`. Returns
+    /// `latency(new map) - latency(old map)` up to float associativity.
+    pub fn latency_delta(&self, map: &MemoryMap, node: usize, old: NodePlacement) -> f64 {
+        let new_p = map.placements[node];
+        let mut delta =
+            self.node_total_s(map, node, None) - self.node_total_s(map, node, Some((node, old)));
+        // Moving the activation changes every consumer's input time too;
+        // weight moves are purely node-local.
+        if old.activation != new_p.activation {
+            let (s, e) = (self.succ_start[node] as usize, self.succ_start[node + 1] as usize);
+            for &c in &self.succ_idx[s..e] {
+                let c = c as usize;
+                delta += self.node_total_s(map, c, None)
+                    - self.node_total_s(map, c, Some((node, old)));
+            }
+        }
+        delta
     }
 }
 
@@ -235,5 +411,110 @@ mod tests {
         let dram = MemoryMap::all_dram(8);
         let sram = MemoryMap::constant(8, MemKind::Sram);
         assert!(m.memory_bound_fraction(&g, &sram) <= m.memory_bound_fraction(&g, &dram));
+    }
+
+    // ---- CostTable ---------------------------------------------------------
+
+    /// Random DAG: a chain plus extra forward skip edges, so nodes have
+    /// multiple predecessors and the producer-read coupling is exercised.
+    fn random_dag(gen: &mut crate::testing::prop::Gen) -> Graph {
+        let n = gen.usize_in(2, 24);
+        let w = 1u64 << gen.usize_in(6, 20);
+        let a = 1u64 << gen.usize_in(6, 16);
+        let nodes = (0..n).map(|i| test_node(i, w, a)).collect();
+        let mut edges: Vec<(usize, usize)> = (0..n - 1).map(|i| (i, i + 1)).collect();
+        for i in 0..n.saturating_sub(2) {
+            if gen.bool() {
+                edges.push((i, gen.usize_in(i + 2, n - 1)));
+            }
+        }
+        Graph::new("dag", nodes, edges).unwrap()
+    }
+
+    fn random_map(gen: &mut crate::testing::prop::Gen, n: usize) -> MemoryMap {
+        let actions: Vec<[usize; 2]> =
+            (0..n).map(|_| [gen.usize_in(0, 2), gen.usize_in(0, 2)]).collect();
+        MemoryMap::from_actions(&actions)
+    }
+
+    #[test]
+    fn prop_cost_table_matches_naive_latency() {
+        let chip = ChipSpec::nnpi();
+        let m = LatencyModel::new(chip.clone());
+        check(
+            "CostTable::latency ≡ naive node_cost sum",
+            120,
+            |gen| {
+                let g = random_dag(gen);
+                let map = random_map(gen, g.len());
+                ((g, map), ())
+            },
+            |(g, map), _| {
+                let table = CostTable::new(g, &chip);
+                let naive = m.latency(g, map);
+                let fast = table.latency(map);
+                (fast - naive).abs() <= 1e-12 * naive.max(1.0)
+            },
+        );
+    }
+
+    #[test]
+    fn cost_table_exact_on_paper_workloads() {
+        let chip = ChipSpec::nnpi();
+        let lm = LatencyModel::new(chip.clone());
+        let c = Compiler::new(chip.clone());
+        for w in Workload::all() {
+            let g = w.build();
+            let lv = Liveness::analyze(&g);
+            let table = CostTable::new(&g, &chip);
+            for map in [c.heuristic_map(&g, &lv), MemoryMap::all_dram(g.len())] {
+                let naive = lm.latency(&g, &map);
+                let fast = table.latency(&map);
+                assert_eq!(
+                    naive.to_bits(),
+                    fast.to_bits(),
+                    "{}: table {fast} != naive {naive}",
+                    w.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn prop_latency_delta_matches_full_recompute() {
+        let chip = ChipSpec::nnpi();
+        check(
+            "latency_delta ≡ full recompute difference",
+            120,
+            |gen| {
+                let g = random_dag(gen);
+                let n = g.len();
+                let before = random_map(gen, n);
+                let node = gen.usize_in(0, n - 1);
+                let mut after = before.clone();
+                after.placements[node] = crate::mapping::NodePlacement {
+                    weight: MemKind::from_index(gen.usize_in(0, 2)),
+                    activation: MemKind::from_index(gen.usize_in(0, 2)),
+                };
+                ((g, before, after, node), ())
+            },
+            |(g, before, after, node), _| {
+                let table = CostTable::new(g, &chip);
+                let full = table.latency(after) - table.latency(before);
+                let delta = table.latency_delta(after, *node, before.placements[*node]);
+                (full - delta).abs() < 1e-15
+            },
+        );
+    }
+
+    #[test]
+    fn latency_delta_zero_for_no_op_move() {
+        let chip = ChipSpec::nnpi();
+        let g = chain(6, 1 << 12, 1 << 10);
+        let table = CostTable::new(&g, &chip);
+        let m = MemoryMap::all_dram(6);
+        assert_eq!(table.latency_delta(&m, 3, m.placements[3]), 0.0);
+        assert_eq!(table.len(), 6);
+        assert!(!table.is_empty());
     }
 }

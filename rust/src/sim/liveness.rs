@@ -11,6 +11,13 @@ use crate::graph::Graph;
 
 /// Live interval of each node's output activation, in execution-step
 /// indices over a fixed topological order.
+///
+/// Also owns the CSR "death rows" — for each execution step, the nodes
+/// whose activation dies right after that step executes. The rows are a
+/// pure function of the graph (not of any memory map), so they are built
+/// once here instead of being re-bucketed per rectification call; this is
+/// what makes [`crate::sim::compiler::Compiler::rectify_in_place`]
+/// allocation-free.
 #[derive(Clone, Debug)]
 pub struct Liveness {
     /// Execution order (a topological order of the graph).
@@ -20,25 +27,51 @@ pub struct Liveness {
     /// `last_use[i]` = last step at which node i's activation is read
     /// (its own step if it has no consumers — e.g. graph outputs).
     pub last_use: Vec<usize>,
+    /// CSR row offsets into `death_nodes`, length `len + 1`.
+    death_start: Vec<u32>,
+    /// Node indices grouped by death step (each node appears exactly once).
+    death_nodes: Vec<u32>,
 }
 
 impl Liveness {
     /// Analyze a graph over its canonical topological order.
     pub fn analyze(g: &Graph) -> Liveness {
+        let n = g.len();
         let order = g.topo_order();
-        let mut step_of = vec![0usize; g.len()];
+        let mut step_of = vec![0usize; n];
         for (s, &i) in order.iter().enumerate() {
             step_of[i] = s;
         }
-        let mut last_use = vec![0usize; g.len()];
-        for i in 0..g.len() {
+        let mut last_use = vec![0usize; n];
+        for i in 0..n {
             let mut last = step_of[i];
             for &c in g.succs(i) {
                 last = last.max(step_of[c]);
             }
             last_use[i] = last;
         }
-        Liveness { order, step_of, last_use }
+        // Counting sort of nodes by death step → CSR rows.
+        let mut death_start = vec![0u32; n + 1];
+        for &s in &last_use {
+            death_start[s + 1] += 1;
+        }
+        for s in 0..n {
+            death_start[s + 1] += death_start[s];
+        }
+        let mut cursor = death_start.clone();
+        let mut death_nodes = vec![0u32; n];
+        for i in 0..n {
+            let s = last_use[i];
+            death_nodes[cursor[s] as usize] = i as u32;
+            cursor[s] += 1;
+        }
+        Liveness { order, step_of, last_use, death_start, death_nodes }
+    }
+
+    /// Nodes whose activation dies right after step `s` executes.
+    #[inline]
+    pub fn deaths_at(&self, s: usize) -> &[u32] {
+        &self.death_nodes[self.death_start[s] as usize..self.death_start[s + 1] as usize]
     }
 
     /// Is node `i`'s activation live while the node at step `s` executes?
@@ -121,5 +154,32 @@ mod tests {
         let lv = Liveness::analyze(&g);
         assert!(lv.live_at(3, 3));
         assert!(!lv.live_at(3, 2));
+    }
+
+    #[test]
+    fn death_rows_partition_nodes_by_last_use() {
+        let g = diamond();
+        let lv = Liveness::analyze(&g);
+        let mut seen = vec![false; g.len()];
+        for s in 0..g.len() {
+            for &i in lv.deaths_at(s) {
+                assert_eq!(lv.last_use[i as usize], s, "node {i} in wrong row");
+                assert!(!seen[i as usize], "node {i} appears twice");
+                seen[i as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&x| x), "some node never dies");
+    }
+
+    #[test]
+    fn death_rows_match_chain_intervals() {
+        let nodes = (0..3).map(|i| test_node(i, 0, 10)).collect();
+        let g = Graph::new("c", nodes, vec![(0, 1), (1, 2)]).unwrap();
+        let lv = Liveness::analyze(&g);
+        // last_use = [1, 2, 2]: nothing dies at step 0, node 0 at step 1,
+        // nodes 1 and 2 at step 2.
+        assert_eq!(lv.deaths_at(0), &[] as &[u32]);
+        assert_eq!(lv.deaths_at(1), &[0]);
+        assert_eq!(lv.deaths_at(2), &[1, 2]);
     }
 }

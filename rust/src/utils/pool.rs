@@ -3,45 +3,76 @@
 //! The EGRL generation loop evaluates a population of 20 policies per
 //! generation; each rollout is an independent simulator episode, so they
 //! parallelize trivially. `tokio`/`rayon` are not vendored in the offline
-//! image, so this provides the one primitive the coordinator needs:
-//! `map_parallel` — run a closure over an index range on `n` threads and
-//! collect results in order.
+//! image, so this provides the primitives the coordinator needs:
+//!
+//! * [`map_parallel`]      — run a closure over an index range on `n`
+//!   threads, collecting results in order;
+//! * [`map_parallel_with`] — same, plus one reusable per-worker scratch
+//!   value (e.g. a `CompilerWorkspace`), built once per worker;
+//! * [`map_parallel_mut`]  — same, plus exclusive `&mut` access to one
+//!   slot of an item slice per call — the rollout engine's shape: each
+//!   episode rectifies its proposal buffer in place.
+//!
+//! Work is claimed dynamically through an atomic counter, so callers that
+//! need determinism must not couple results to *which worker* ran an
+//! index — per-item state (RNG streams in particular) must be derived
+//! from the index, never from the worker (DESIGN.md §8).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Run `f(i)` for every `i in 0..n`, spread over up to `threads` OS threads,
 /// returning results in index order. Falls back to a plain sequential loop
-/// for `threads <= 1` (the benchmark image is single-core, where thread
-/// spawn overhead would dominate the microsecond-scale simulator episodes).
+/// for `threads <= 1` (on a single-core image thread spawn overhead would
+/// dominate the microsecond-scale simulator episodes).
 pub fn map_parallel<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
 where
     T: Send,
     F: Fn(usize) -> T + Sync,
+{
+    map_parallel_with(n, threads, || (), |_scratch, i| f(i))
+}
+
+/// [`map_parallel`] with a per-worker scratch value: `init` runs once on
+/// each worker thread (and once total on the sequential path), and every
+/// call of `f` on that worker reuses the same scratch.
+pub fn map_parallel_with<T, W, I, F>(n: usize, threads: usize, init: I, f: F) -> Vec<T>
+where
+    T: Send,
+    I: Fn() -> W + Sync,
+    F: Fn(&mut W, usize) -> T + Sync,
 {
     if n == 0 {
         return Vec::new();
     }
     let threads = threads.max(1).min(n);
     if threads == 1 {
-        return (0..n).map(f).collect();
+        let mut w = init();
+        return (0..n).map(|i| f(&mut w, i)).collect();
     }
     let mut results: Vec<Option<T>> = (0..n).map(|_| None).collect();
-    let next = std::sync::atomic::AtomicUsize::new(0);
+    let next = AtomicUsize::new(0);
     let f = &f;
-    let results_ptr = SendSlice(results.as_mut_ptr());
+    let init = &init;
+    let results_ptr = SendPtr(results.as_mut_ptr());
     std::thread::scope(|scope| {
         for _ in 0..threads {
             let next = &next;
             let results_ptr = &results_ptr;
-            scope.spawn(move || loop {
-                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let val = f(i);
-                // SAFETY: each index i is claimed by exactly one worker via
-                // the atomic counter, so writes never alias; the scope joins
-                // all workers before `results` is read or dropped.
-                unsafe {
-                    *results_ptr.0.add(i) = Some(val);
+            scope.spawn(move || {
+                let mut w = init();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let val = f(&mut w, i);
+                    // SAFETY: each index i is claimed by exactly one worker
+                    // via the atomic counter, so writes never alias; the
+                    // scope joins all workers before `results` is read or
+                    // dropped.
+                    unsafe {
+                        *results_ptr.0.add(i) = Some(val);
+                    }
                 }
             });
         }
@@ -49,11 +80,65 @@ where
     results.into_iter().map(|x| x.expect("worker completed")).collect()
 }
 
-/// Wrapper making a raw pointer Sync for the disjoint-index write pattern
-/// above. Safe by the argument in `map_parallel`.
-struct SendSlice<T>(*mut Option<T>);
-unsafe impl<T: Send> Sync for SendSlice<T> {}
-unsafe impl<T: Send> Send for SendSlice<T> {}
+/// [`map_parallel_with`] over an item slice: every call additionally gets
+/// exclusive `&mut` access to its own slot of `items`. This is the rollout
+/// engine's primitive — proposals are rectified in place, workspaces are
+/// reused per worker, and nothing is allocated per episode.
+pub fn map_parallel_mut<T, W, R, I, F>(items: &mut [T], threads: usize, init: I, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    I: Fn() -> W + Sync,
+    F: Fn(&mut W, usize, &mut T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.max(1).min(n);
+    if threads == 1 {
+        let mut w = init();
+        return items.iter_mut().enumerate().map(|(i, t)| f(&mut w, i, t)).collect();
+    }
+    let mut results: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let next = AtomicUsize::new(0);
+    let f = &f;
+    let init = &init;
+    let results_ptr = SendPtr(results.as_mut_ptr());
+    let items_ptr = SendPtr(items.as_mut_ptr());
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let next = &next;
+            let results_ptr = &results_ptr;
+            let items_ptr = &items_ptr;
+            scope.spawn(move || {
+                let mut w = init();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    // SAFETY: index i is claimed by exactly one worker (the
+                    // atomic counter), so &mut *items_ptr.add(i) and the
+                    // result write never alias across workers; the scope
+                    // joins all workers before either slice is used again.
+                    let item = unsafe { &mut *items_ptr.0.add(i) };
+                    let val = f(&mut w, i, item);
+                    unsafe {
+                        *results_ptr.0.add(i) = Some(val);
+                    }
+                }
+            });
+        }
+    });
+    results.into_iter().map(|x| x.expect("worker completed")).collect()
+}
+
+/// Wrapper making a raw pointer Send+Sync for the disjoint-index write
+/// pattern above. Safe by the per-call-site arguments.
+struct SendPtr<T>(*mut T);
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+unsafe impl<T: Send> Send for SendPtr<T> {}
 
 #[cfg(test)]
 mod tests {
@@ -89,5 +174,41 @@ mod tests {
     fn more_threads_than_items() {
         let out = map_parallel(3, 64, |i| i + 1);
         assert_eq!(out, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn scratch_built_once_per_worker() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let builds = AtomicUsize::new(0);
+        let out = map_parallel_with(
+            64,
+            4,
+            || builds.fetch_add(1, Ordering::Relaxed),
+            |_w, i| i,
+        );
+        assert_eq!(out, (0..64).collect::<Vec<_>>());
+        // At most one scratch per worker (sequential fallback builds one).
+        assert!(builds.load(Ordering::Relaxed) <= 4);
+        assert!(builds.load(Ordering::Relaxed) >= 1);
+    }
+
+    #[test]
+    fn mut_items_each_visited_exactly_once() {
+        for threads in [1, 4] {
+            let mut items: Vec<usize> = vec![0; 500];
+            let out = map_parallel_mut(&mut items, threads, || (), |_w, i, slot| {
+                *slot += i + 1;
+                *slot
+            });
+            assert_eq!(items, (1..=500).collect::<Vec<_>>());
+            assert_eq!(out, (1..=500).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn mut_empty_slice() {
+        let mut items: Vec<u8> = Vec::new();
+        let out: Vec<u8> = map_parallel_mut(&mut items, 4, || (), |_w, _i, t| *t);
+        assert!(out.is_empty());
     }
 }

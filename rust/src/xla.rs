@@ -1,0 +1,191 @@
+//! Offline stand-in for the PJRT `xla` crate.
+//!
+//! The runtime layer ([`crate::runtime`], [`crate::gnn`], [`crate::rl`])
+//! was written against the external `xla` crate (PJRT CPU client over
+//! xla_extension). That crate cannot be resolved in the offline build
+//! image, so this module provides the same surface under the same name —
+//! consumers import it with `use crate::xla;` and keep their `xla::…`
+//! paths unchanged. Restoring the real backend is a one-line change per
+//! consumer plus the Cargo.toml dependency.
+//!
+//! Host-side [`Literal`] handling (construction, readback, element
+//! counts) is fully functional — it is plain byte shuffling and the unit
+//! tests exercise it. Device-side entry points ([`PjRtClient::cpu`],
+//! compilation, execution) report [`Error::BackendUnavailable`]; every
+//! caller already handles that, because all artifact paths are gated on
+//! `artifacts/manifest.json` existing.
+
+use std::borrow::Borrow;
+
+/// Error type mirroring `xla::Error` at the fidelity callers need: they
+/// only ever format it with `{:?}` and wrap it in `anyhow`.
+#[derive(Clone, Debug)]
+pub enum Error {
+    /// Returned by every device-side operation of this stand-in.
+    BackendUnavailable(&'static str),
+    /// Host-side misuse (shape/type mismatches).
+    Invalid(String),
+}
+
+/// Element dtype of a [`Literal`]. Only `F32` crosses the FFI boundary in
+/// this project (parameters, features, probabilities).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+}
+
+impl ElementType {
+    fn byte_size(self) -> usize {
+        match self {
+            ElementType::F32 => 4,
+        }
+    }
+}
+
+/// Host types that can be read back out of a [`Literal`].
+pub trait NativeType: Sized + Copy {
+    const TY: ElementType;
+    fn from_le(bytes: &[u8]) -> Self;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn from_le(bytes: &[u8]) -> Self {
+        f32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]])
+    }
+}
+
+/// A host tensor: dtype + dimensions + raw little-endian bytes.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<usize>,
+    bytes: Vec<u8>,
+}
+
+impl Literal {
+    /// Build a literal from raw bytes (the real crate's constructor used
+    /// by [`crate::runtime::literal_f32`]).
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal, Error> {
+        let n: usize = dims.iter().product();
+        if data.len() != n * ty.byte_size() {
+            return Err(Error::Invalid(format!(
+                "literal data {} bytes, shape {dims:?} wants {}",
+                data.len(),
+                n * ty.byte_size()
+            )));
+        }
+        Ok(Literal { ty, dims: dims.to_vec(), bytes: data.to_vec() })
+    }
+
+    /// Copy the payload back into a host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        if self.ty != T::TY {
+            return Err(Error::Invalid(format!("literal is {:?}", self.ty)));
+        }
+        Ok(self
+            .bytes
+            .chunks_exact(self.ty.byte_size())
+            .map(T::from_le)
+            .collect())
+    }
+
+    /// Number of elements (product of dimensions).
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// Decompose a tuple literal into its parts. The stand-in never
+    /// produces device tuples, so reaching this is a logic error upstream
+    /// (execution already failed with [`Error::BackendUnavailable`]).
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        Err(Error::BackendUnavailable("tuple literals need the real xla crate"))
+    }
+}
+
+const UNAVAILABLE: &str =
+    "PJRT backend unavailable: offline build uses the crate::xla stand-in (see rust/src/xla.rs)";
+
+/// Device buffer handle. Never constructed by the stand-in.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(Error::BackendUnavailable(UNAVAILABLE))
+    }
+}
+
+/// Compiled computation handle. Never constructed by the stand-in.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: Borrow<Literal>>(
+        &self,
+        _inputs: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(Error::BackendUnavailable(UNAVAILABLE))
+    }
+}
+
+/// PJRT client. [`PjRtClient::cpu`] is the single entry point through
+/// which all device work flows, so failing here cleanly disables the
+/// artifact path (callers degrade to the artifact-free EA configuration).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(Error::BackendUnavailable(UNAVAILABLE))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(Error::BackendUnavailable(UNAVAILABLE))
+    }
+}
+
+/// Parsed HLO module. Parsing requires the real toolchain.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        Err(Error::BackendUnavailable(UNAVAILABLE))
+    }
+}
+
+/// An XLA computation wrapping a parsed module.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_construct_and_read_back() {
+        let data = [1.0f32, -2.5, 3.25];
+        let bytes: Vec<u8> = data.iter().flat_map(|x| x.to_le_bytes()).collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &bytes).unwrap();
+        assert_eq!(lit.element_count(), 3);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), data);
+    }
+
+    #[test]
+    fn literal_rejects_shape_mismatch() {
+        let r = Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2], &[0u8; 4]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn client_reports_unavailable() {
+        assert!(matches!(PjRtClient::cpu(), Err(Error::BackendUnavailable(_))));
+    }
+}
