@@ -8,7 +8,7 @@
 
 use std::sync::Arc;
 
-use egrl::agents::{GreedyDp, MappingAgent, RandomSearch};
+use egrl::agents::{GreedyDp, LocalSearch, MappingAgent, RandomSearch};
 use egrl::bench_harness::Table;
 use egrl::cli::Cli;
 use egrl::config::EgrlConfig;
@@ -53,6 +53,22 @@ fn main() -> anyhow::Result<()> {
         let rect = env.compiler.rectify(&env.graph, &env.liveness, &best);
         table.row(&[
             "greedy-dp".into(),
+            format!("{:.3}", env.true_speedup(&rect.map)),
+            format!("{}", env.iterations()),
+            "yes".into(),
+        ]);
+    }
+
+    // Local search (incremental move-evaluation engine).
+    {
+        let env = MappingEnv::nnpi(workload.build(), seed);
+        let mut agent = LocalSearch::default();
+        let mut rng = Rng::new(seed);
+        let mut log = RunLog::new(workload.name(), agent.name(), seed);
+        let best = agent.run(&env, steps, &mut rng, &mut log);
+        let rect = env.compiler.rectify(&env.graph, &env.liveness, &best);
+        table.row(&[
+            "local-search".into(),
             format!("{:.3}", env.true_speedup(&rect.map)),
             format!("{}", env.iterations()),
             "yes".into(),

@@ -24,7 +24,7 @@ use egrl::ea::population::{EvolveParams, Genome, Population};
 use egrl::ea::BoltzmannChromosome;
 use egrl::env::MappingEnv;
 use egrl::gnn::PolicyRunner;
-use egrl::mapping::{MemKind, MemoryMap};
+use egrl::mapping::{MemKind, MemoryMap, NodePlacement};
 use egrl::rl::{Replay, SacLearner, Transition};
 use egrl::runtime::Runtime;
 use egrl::sim::compiler::CompilerWorkspace;
@@ -146,6 +146,72 @@ fn main() -> anyhow::Result<()> {
         std::hint::black_box(embed::mds_2d(&d, maps.len()));
     });
 
+    // ---- Local search: incremental move evaluation vs the full step ---------
+    // The same stream of single-node candidate moves off the compiler map
+    // priced two ways: BEFORE — a full env step per candidate (rectify the
+    // whole proposal + walk the whole graph), what every agent paid until
+    // the move-evaluation engine existed; AFTER — MappingEnv::try_move
+    // (O(degree)-ish capacity check + cached-term latency re-sum).
+    let ls_speedup;
+    let ls_moves_per_s;
+    let ls_full_moves_per_s;
+    {
+        let env = MappingEnv::nnpi(Workload::ResNet50.build(), 5);
+        let n = env.num_nodes();
+        let base = env.compiler_map.clone();
+        let moves: Vec<(usize, NodePlacement)> = (0..n * 9)
+            .map(|i| {
+                let node = i % n;
+                (
+                    node,
+                    NodePlacement {
+                        weight: MemKind::from_index((i / n) % 3),
+                        activation: MemKind::from_index((i / (n * 3)) % 3),
+                    },
+                )
+            })
+            .collect();
+        let mut ws = CompilerWorkspace::default();
+        let mut buf = base.clone();
+        let mut rng_full = rng.fork();
+        let mut i_full = 0usize;
+        b.measure_throughput("move eval full step (resnet50)", 1.0, 400, 0.5, || {
+            let (node, p) = moves[i_full % moves.len()];
+            i_full += 1;
+            buf.placements.copy_from_slice(&base.placements);
+            buf.placements[node] = p;
+            std::hint::black_box(env.step_in_place(&mut buf, &mut rng_full, &mut ws));
+        });
+        let mut st = env.search_state(&base);
+        let mut rng_inc = rng.fork();
+        let mut i_inc = 0usize;
+        b.measure_throughput("move eval try_move (resnet50)", 1.0, 400, 0.5, || {
+            let (node, p) = moves[i_inc % moves.len()];
+            i_inc += 1;
+            std::hint::black_box(env.try_move(&mut st, node, p, &mut rng_inc));
+        });
+        let full_s = b.mean_s("move eval full step (resnet50)").unwrap_or(f64::NAN);
+        let inc_s = b.mean_s("move eval try_move (resnet50)").unwrap_or(f64::NAN);
+        ls_speedup = full_s / inc_s;
+        ls_moves_per_s = 1.0 / inc_s;
+        ls_full_moves_per_s = 1.0 / full_s;
+        println!(
+            "\nlocal-search move eval: {:.0}/s incremental vs {:.0}/s full-step ({:.1}x)",
+            ls_moves_per_s, ls_full_moves_per_s, ls_speedup
+        );
+        let ls_json = Json::obj(vec![
+            ("schema", Json::str("egrl-bench-localsearch-v1")),
+            ("workload", Json::str("resnet50")),
+            ("moves_per_sec_try_move", Json::Num(ls_moves_per_s)),
+            ("moves_per_sec_full_step", Json::Num(ls_full_moves_per_s)),
+            ("try_move_speedup_vs_full_step", Json::Num(ls_speedup)),
+            ("target_speedup", Json::Num(10.0)),
+            ("meets_target", Json::Bool(ls_speedup >= 10.0)),
+        ]);
+        std::fs::write("BENCH_localsearch.json", ls_json.to_string_pretty())?;
+        println!("wrote BENCH_localsearch.json");
+    }
+
     // ---- Trainer::generation: seed serial path vs the rollout engine -------
     // BEFORE: a faithful emulation of the seed trainer's generation — serial
     // rollouts through the allocating env.step (fresh workspace + owned
@@ -259,6 +325,9 @@ fn main() -> anyhow::Result<()> {
                 ("generation_speedup_threads1_vs_seed", Json::Num(gen_speedup_t1)),
                 ("latency_table_speedup_vs_naive", Json::Num(latency_speedup)),
                 ("latency_delta_speedup_vs_full_recompute", Json::Num(delta_speedup)),
+                ("localsearch_try_move_speedup_vs_full_step", Json::Num(ls_speedup)),
+                ("localsearch_moves_per_sec", Json::Num(ls_moves_per_s)),
+                ("localsearch_full_step_moves_per_sec", Json::Num(ls_full_moves_per_s)),
             ]),
         ),
     ]);

@@ -1,9 +1,12 @@
-//! Search-baseline agents from the paper's §4 (non-population methods):
-//! Greedy-DP and random search, sharing the [`MappingAgent`] interface the
-//! benchmark harness drives. (EGRL / EA-only / PG-only are run through
-//! [`crate::coordinator`], which produces the same [`RunLog`] curves.)
+//! Search-baseline agents (non-population methods): the paper's §4
+//! Greedy-DP, random search, and the incremental local-search climber
+//! built on the move-evaluation engine, sharing the [`MappingAgent`]
+//! interface the benchmark harness drives. (EGRL / EA-only / PG-only are
+//! run through [`crate::coordinator`], which produces the same
+//! [`RunLog`] curves.)
 
 pub mod greedy_dp;
+pub mod local_search;
 pub mod random_search;
 
 use crate::env::MappingEnv;
@@ -12,6 +15,7 @@ use crate::metrics::RunLog;
 use crate::utils::Rng;
 
 pub use greedy_dp::GreedyDp;
+pub use local_search::LocalSearch;
 pub use random_search::RandomSearch;
 
 /// A search agent that optimizes a memory map against an environment

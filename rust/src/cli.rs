@@ -92,7 +92,10 @@ USAGE:
 SUBCOMMANDS:
   train      Train an agent on a workload
              --workload resnet50|resnet101|bert   (default resnet50)
-             --agent egrl|ea|pg|greedy-dp|random  (default egrl)
+             --agent egrl|ea|pg|greedy-dp|random|local-search
+                                                  (default egrl)
+             (EA refinement: --set refine_elites=K --set refine_moves=N
+              --set refine_temp=T; local-search reuses refine_temp)
              --steps N        iteration budget    (default 4000)
              --seed N                              (default 0)
              --artifacts DIR  AOT artifacts        (default artifacts/)

@@ -68,6 +68,19 @@ pub struct EgrlConfig {
     pub threads: usize,
     /// Steps per episode (Table 2: 1).
     pub steps_per_episode: usize,
+    /// Std of the exploratory Gaussian noise added to the PG actor's
+    /// logits during its rollout (was hard-coded 0.1).
+    pub pg_action_noise: f64,
+    /// Elites polished by memetic local-search refinement each
+    /// generation (0 = refinement off — the paper's plain EA).
+    pub refine_elites: usize,
+    /// Move evaluations each refined elite may spend per generation.
+    /// Every evaluation consumes one env iteration, so refined and
+    /// unrefined runs stay comparable at equal `total_steps`.
+    pub refine_moves: u64,
+    /// Initial simulated-annealing temperature (reward units) for
+    /// refinement; 0 = pure first-improvement hill climbing.
+    pub refine_temp: f64,
 }
 
 impl Default for EgrlConfig {
@@ -99,6 +112,10 @@ impl Default for EgrlConfig {
             boltzmann_init_temp: 1.0,
             threads: 1,
             steps_per_episode: 1,
+            pg_action_noise: 0.1,
+            refine_elites: 0,
+            refine_moves: 200,
+            refine_temp: 0.0,
         }
     }
 }
@@ -148,10 +165,20 @@ impl EgrlConfig {
             "update_every" => self.update_every = p(key, value)?,
             "migration_period" => self.migration_period = p(key, value)?,
             "noise_std" => self.noise_std = p(key, value)?,
-            "eval_measurements" => self.eval_measurements = p(key, value)?,
+            "eval_measurements" => {
+                let v: usize = p(key, value)?;
+                // `NoiseModel::measure_mean` averages k > 0 draws; 0 is a
+                // config error, not a runtime panic.
+                anyhow::ensure!(v > 0, "eval_measurements must be >= 1, got {v}");
+                self.eval_measurements = v;
+            }
             "boltzmann_init_temp" => self.boltzmann_init_temp = p(key, value)?,
             "threads" => self.threads = p(key, value)?,
             "steps_per_episode" => self.steps_per_episode = p(key, value)?,
+            "pg_action_noise" => self.pg_action_noise = p(key, value)?,
+            "refine_elites" => self.refine_elites = p(key, value)?,
+            "refine_moves" => self.refine_moves = p(key, value)?,
+            "refine_temp" => self.refine_temp = p(key, value)?,
             other => anyhow::bail!("unknown config key '{other}'"),
         }
         Ok(())
@@ -213,5 +240,28 @@ mod tests {
         let mut c = EgrlConfig::default();
         assert!(c.set("popsize", "10").is_err());
         assert!(c.set("pop_size", "abc").is_err());
+    }
+
+    #[test]
+    fn set_rejects_zero_eval_measurements() {
+        let mut c = EgrlConfig::default();
+        assert!(c.set("eval_measurements", "0").is_err());
+        c.set("eval_measurements", "3").unwrap();
+        assert_eq!(c.eval_measurements, 3);
+    }
+
+    #[test]
+    fn refinement_and_pg_noise_keys_wired() {
+        let mut c = EgrlConfig::default();
+        assert_eq!(c.refine_elites, 0, "refinement must default off (plain EA)");
+        assert_eq!(c.pg_action_noise, 0.1, "default matches the old hard-coded value");
+        c.set("refine_elites", "3").unwrap();
+        c.set("refine_moves", "64").unwrap();
+        c.set("refine_temp", "0.25").unwrap();
+        c.set("pg_action_noise", "0.3").unwrap();
+        assert_eq!(c.refine_elites, 3);
+        assert_eq!(c.refine_moves, 64);
+        assert_eq!(c.refine_temp, 0.25);
+        assert_eq!(c.pg_action_noise, 0.3);
     }
 }

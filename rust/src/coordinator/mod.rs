@@ -6,13 +6,16 @@
 //!
 //! 1. rolls out every population member (+ one noisy PG rollout), storing
 //!    every transition in the shared replay buffer;
-//! 2. ranks by fitness, preserves elites, rebuilds the rest via
+//! 2. optionally polishes the top-`refine_elites` members' rectified maps
+//!    with the incremental move-evaluation engine and writes the results
+//!    back (memetic Lamarckian refinement, DESIGN.md §9);
+//! 3. ranks by fitness, preserves elites, rebuilds the rest via
 //!    tournament selection, crossover (with GNN→Boltzmann posterior
 //!    seeding across encodings) and Gaussian mutation;
-//! 3. runs SAC gradient steps through the AOT artifact (one per env step,
+//! 4. runs SAC gradient steps through the AOT artifact (one per env step,
 //!    Table 2) on minibatches sampled from the shared buffer;
-//! 4. periodically migrates the PG actor into the population, replacing
-//!    the weakest member.
+//! 5. at the end of each full migration period, migrates the PG actor
+//!    into the population, replacing the weakest member.
 //!
 //! Population rollouts run on the **parallel rollout engine**: every
 //! genome is decoded up front on the main thread (PJRT execution and the
@@ -28,6 +31,7 @@
 
 use std::sync::Arc;
 
+use crate::agents::local_search::{refine, RefineResult};
 use crate::config::EgrlConfig;
 use crate::ea::population::{EvolveParams, Genome, Population};
 use crate::env::MappingEnv;
@@ -37,8 +41,12 @@ use crate::metrics::RunLog;
 use crate::rl::{Replay, SacLearner, Transition};
 use crate::runtime::Runtime;
 use crate::sim::compiler::CompilerWorkspace;
-use crate::utils::pool::map_parallel_mut;
+use crate::utils::pool::{map_parallel, map_parallel_mut};
 use crate::utils::Rng;
+
+/// Logit margin by which Lamarckian write-back makes a refined decision
+/// the prior argmax (see `BoltzmannChromosome::sharpen_toward`).
+const REFINE_SHARPEN_STRENGTH: f32 = 2.0;
 
 /// Which of the paper's agents to run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -253,6 +261,53 @@ impl Trainer {
         Ok(())
     }
 
+    /// Memetic elite refinement (Lamarckian): polish the decoded maps of
+    /// the top-`refine_elites` members with a local-search move budget,
+    /// then write the refined placements back — fitness for every
+    /// refined member, sharpened priors for Boltzmann genomes (GNN
+    /// weights cannot absorb a map directly, so their genomes keep only
+    /// the fitness update).
+    ///
+    /// Parallel across `cfg.threads` workers with the same determinism
+    /// contract as the rollout engine (DESIGN.md §8): one RNG stream is
+    /// forked per refined elite in rank order before any worker starts,
+    /// and all write-backs commit serially in rank order afterwards, so
+    /// results are bit-identical for any thread count. Every evaluated
+    /// move consumes one env iteration — refinement spends the same
+    /// budget currency as rollouts and the curves stay honest.
+    fn refine_elites(&mut self) {
+        let k = self.cfg.refine_elites.min(self.pop.len());
+        if k == 0 || self.cfg.refine_moves == 0 {
+            return;
+        }
+        let ranking = self.pop.ranking();
+        let elites: Vec<usize> = ranking[..k].to_vec();
+        let seeds: Vec<u64> = (0..k).map(|_| self.rng.next_u64()).collect();
+        let env: &MappingEnv = &self.env;
+        let budget = self.cfg.refine_moves;
+        let temp0 = self.cfg.refine_temp;
+        // After the rollout phase each proposal buffer holds the
+        // member's rectified (therefore valid) map — the refinement
+        // starting points.
+        let proposals: &[MemoryMap] = &self.proposals;
+        let elite_idx = &elites;
+        let results: Vec<RefineResult> = map_parallel(k, self.cfg.threads, move |j| {
+            let mut rng = Rng::new(seeds[j]);
+            refine(env, &proposals[elite_idx[j]], budget, temp0, &mut rng, |_, _| {})
+        });
+        for (j, res) in results.iter().enumerate() {
+            let i = elites[j];
+            self.pop.members[i].fitness = res.reward;
+            if let Genome::Boltzmann(bz) = &mut self.pop.members[i].genome {
+                bz.sharpen_toward(&res.map, REFINE_SHARPEN_STRENGTH);
+            }
+            if res.best_speedup > self.best_measured {
+                self.best_measured = res.best_speedup;
+                self.best_map.placements.clone_from(&res.best_map.placements);
+            }
+        }
+    }
+
     /// One noisy PG-actor rollout (action-space exploration). Serial —
     /// it interleaves with SAC parameter state — but on the in-place
     /// simulator path with the trainer's persistent workspace.
@@ -262,7 +317,7 @@ impl Trainer {
             _ => return Ok(()),
         };
         let probs = runner.probs(sac.actor_params())?;
-        let mut map = runner.noisy_sample_map(&probs, 0.1, &mut self.rng);
+        let mut map = runner.noisy_sample_map(&probs, self.cfg.pg_action_noise as f32, &mut self.rng);
         let mut tr = Transition::from_map(&map, 0.0);
         let out = self.env.step_in_place(&mut map, &mut self.rng, &mut self.scratch);
         tr.reward = out.reward as f32;
@@ -287,6 +342,11 @@ impl Trainer {
             for _ in 0..self.cfg.pg_rollouts.max(1) {
                 self.rollout_pg()?;
             }
+        }
+        // --- memetic elite refinement (before selection, so the sharpened
+        // genomes and Lamarckian fitnesses drive this generation's ranking)
+        if self.mode.uses_population() {
+            self.refine_elites();
         }
         let steps = self.env.iterations() - start;
         // --- evolution -------------------------------------------------------
@@ -318,7 +378,7 @@ impl Trainer {
             }
             // --- migration (Algorithm 2 line 38) ----------------------------
             if self.mode == Mode::Egrl
-                && self.generations % self.cfg.migration_period.max(1) as u64 == 0
+                && Self::migration_due(self.generations, self.cfg.migration_period)
                 && !self.pop.is_empty()
             {
                 let params = sac.actor_params().to_vec();
@@ -358,6 +418,17 @@ impl Trainer {
             best_speedup: self.best_true,
             iterations: self.env.iterations(),
         })
+    }
+
+    /// Migration cadence (Algorithm 2 line 38): the PG actor migrates
+    /// into the population only at the **end of each full period**.
+    /// `generations_completed` is the 0-based index of the generation in
+    /// flight. The old `generations % period == 0` test fired during the
+    /// very first generation, overwriting the worst EA member with the
+    /// still-untrained SAC actor before it had taken a single gradient
+    /// step.
+    fn migration_due(generations_completed: u64, period: usize) -> bool {
+        (generations_completed + 1) % period.max(1) as u64 == 0
     }
 
     /// Noise-free speedup of the current best map (0 until a valid map
@@ -495,6 +566,109 @@ mod tests {
             "returned map does not reproduce the returned speedup"
         );
         assert_eq!(log.final_speedup().to_bits(), res.best_speedup.to_bits());
+    }
+
+    /// Regression: migration must not fire during generation 0 — the SAC
+    /// actor is untrained until a full period of gradient steps has run.
+    #[test]
+    fn migration_waits_for_a_full_period() {
+        assert!(!Trainer::migration_due(0, 5), "gen 0 migrated an untrained actor");
+        assert!(!Trainer::migration_due(1, 5));
+        assert!(!Trainer::migration_due(3, 5));
+        assert!(Trainer::migration_due(4, 5), "end of first 5-gen period");
+        assert!(!Trainer::migration_due(5, 5));
+        assert!(Trainer::migration_due(9, 5), "end of second period");
+        // Degenerate periods: every generation is a full period, and a
+        // zero period is clamped instead of dividing by zero.
+        assert!(Trainer::migration_due(0, 1));
+        assert!(Trainer::migration_due(3, 1));
+        assert!(Trainer::migration_due(0, 0));
+    }
+
+    /// The §8 determinism contract extended to the memetic refinement
+    /// layer: per-elite RNG streams forked in rank order, serial commit,
+    /// so the thread count changes nothing.
+    #[test]
+    fn refined_runs_bit_identical_across_thread_counts() {
+        let run = |threads: usize| {
+            let env = Arc::new(MappingEnv::nnpi(Workload::ResNet50.build(), 21));
+            let cfg = EgrlConfig {
+                threads,
+                seed: 21,
+                total_steps: 400,
+                pop_size: 10,
+                elites: 2,
+                refine_elites: 2,
+                refine_moves: 40,
+                ..Default::default()
+            };
+            let mut t = Trainer::new(env, cfg, Mode::EaOnly, None).unwrap();
+            let mut log = RunLog::new("resnet50", "ea", 21);
+            let res = t.run(&mut log).unwrap();
+            (res.best_speedup, res.best_map, log.points)
+        };
+        let serial = run(1);
+        let parallel = run(4);
+        assert_eq!(
+            serial.0.to_bits(),
+            parallel.0.to_bits(),
+            "refined best_speedup differs: {} vs {}",
+            serial.0,
+            parallel.0
+        );
+        assert_eq!(serial.1, parallel.1, "refined best_map differs across thread counts");
+        assert_eq!(serial.2, parallel.2, "refined RunLog differs across thread counts");
+    }
+
+    /// Lamarckian refinement must not hurt: at the same iteration budget
+    /// the refined EA's final best speedup is at least the plain EA's.
+    #[test]
+    fn refined_ea_at_least_matches_unrefined_at_equal_budget() {
+        let run = |refine_elites: usize| {
+            let env = Arc::new(MappingEnv::nnpi(Workload::ResNet50.build(), 22));
+            let cfg = EgrlConfig {
+                seed: 22,
+                total_steps: 900,
+                pop_size: 10,
+                elites: 2,
+                refine_elites,
+                refine_moves: 30,
+                ..Default::default()
+            };
+            let mut t = Trainer::new(env, cfg, Mode::EaOnly, None).unwrap();
+            let mut log = RunLog::new("resnet50", "ea", 22);
+            t.run(&mut log).unwrap().best_speedup
+        };
+        let plain = run(0);
+        let refined = run(2);
+        assert!(
+            refined >= plain,
+            "refined EA ({refined}) fell below unrefined EA ({plain}) at equal budget"
+        );
+    }
+
+    #[test]
+    fn refinement_consumes_iterations_from_the_same_budget() {
+        let env = Arc::new(MappingEnv::nnpi(Workload::ResNet50.build(), 23));
+        let cfg = EgrlConfig {
+            seed: 23,
+            total_steps: 300,
+            pop_size: 10,
+            elites: 2,
+            refine_elites: 2,
+            refine_moves: 25,
+            ..Default::default()
+        };
+        let mut t = Trainer::new(env, cfg, Mode::EaOnly, None).unwrap();
+        let mut log = RunLog::new("resnet50", "ea", 23);
+        let res = t.run(&mut log).unwrap();
+        // Each generation: 10 rollouts + 2·25 refinement moves = 60.
+        let per_gen = 10 + 2 * 25;
+        assert!(
+            res.iterations >= 300 && res.iterations < 300 + per_gen,
+            "iteration accounting off: {}",
+            res.iterations
+        );
     }
 
     #[test]

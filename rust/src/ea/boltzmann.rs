@@ -118,6 +118,33 @@ impl BoltzmannChromosome {
         child
     }
 
+    /// Lamarckian write-back for memetic refinement: sharpen the priors
+    /// toward a locally-refined map. For each decision, the refined
+    /// choice's prior is raised to at least the maximum of the *other*
+    /// two priors plus `strength`, making it the argmax by a logit margin
+    /// of at least `strength` while leaving the other priors (and the
+    /// evolved temperatures — the chromosome's own exploration schedule)
+    /// untouched: low-temperature decisions decode to the refined
+    /// placement with high probability, high-temperature decisions keep
+    /// exploring around it. Idempotent — an elite re-refined to the same
+    /// map every generation keeps a bounded margin instead of growing
+    /// its priors without limit (which would freeze it against mutation).
+    pub fn sharpen_toward(&mut self, map: &MemoryMap, strength: f32) {
+        assert_eq!(map.placements.len(), self.n, "refined map size != chromosome");
+        for (node, p) in map.placements.iter().enumerate() {
+            for (k, choice) in [p.weight.index(), p.activation.index()].into_iter().enumerate() {
+                let d = (node * 2 + k) * 3;
+                let mut other_max = f32::NEG_INFINITY;
+                for j in 0..3 {
+                    if j != choice {
+                        other_max = other_max.max(self.priors[d + j]);
+                    }
+                }
+                self.priors[d + choice] = self.priors[d + choice].max(other_max + strength);
+            }
+        }
+    }
+
     /// Seed the prior from a GNN policy's posterior probabilities
     /// (Algorithm 2 lines 17–18 / Figure 2 "seed prior"): the chromosome
     /// bootstraps from gradient-learned knowledge while keeping its own
@@ -229,6 +256,30 @@ mod tests {
             c.mutate(2.0, 0.9, &mut rng);
         }
         assert!(c.temps.iter().all(|&t| t >= 1e-3 && t.is_finite()));
+    }
+
+    #[test]
+    fn sharpening_makes_refined_map_the_argmax() {
+        let mut rng = Rng::new(7);
+        let mut c = BoltzmannChromosome::random(6, 1.0, &mut rng);
+        // A refined map with mixed decisions.
+        let actions: Vec<[usize; 2]> = (0..6).map(|i| [i % 3, (i + 1) % 3]).collect();
+        let refined = MemoryMap::from_actions(&actions);
+        let temps_before = c.temps.clone();
+        c.sharpen_toward(&refined, 2.0);
+        // Temperatures (the exploration schedule) are untouched.
+        assert_eq!(c.temps, temps_before);
+        // Idempotent: re-refining an elite to the same map must not grow
+        // the priors further (that would freeze it against mutation).
+        let priors_once = c.priors.clone();
+        c.sharpen_toward(&refined, 2.0);
+        assert_eq!(c.priors, priors_once, "sharpen_toward is not idempotent");
+        // At low temperature every decision decodes to the refined map.
+        for t in c.temps.iter_mut() {
+            *t = 1e-3;
+        }
+        let m = c.sample_map(&mut rng);
+        assert_eq!(m, refined, "sharpened chromosome does not decode to refined map");
     }
 
     #[test]

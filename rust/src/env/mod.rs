@@ -14,9 +14,9 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::graph::Graph;
-use crate::mapping::MemoryMap;
-use crate::sim::compiler::{Compiler, CompilerWorkspace};
-use crate::sim::latency::CostTable;
+use crate::mapping::{MemoryMap, NodePlacement};
+use crate::sim::compiler::{CapacityState, Compiler, CompilerWorkspace};
+use crate::sim::latency::{sum_in_order, CostTable};
 use crate::sim::liveness::Liveness;
 use crate::sim::noise::NoiseModel;
 use crate::sim::spec::ChipSpec;
@@ -76,6 +76,55 @@ pub struct StepOutcome {
     pub measured_latency_s: Option<f64>,
     /// Measured speedup vs. the native compiler (`None` when invalid).
     pub speedup: Option<f64>,
+}
+
+/// Incremental single-move search state — the move-evaluation engine
+/// (DESIGN.md §9). Holds the current **valid** map plus the capacity and
+/// latency accounting that let [`MappingEnv::try_move`] price a
+/// single-node placement move with O(degree + live interval) incremental
+/// work plus one O(n) cached-term re-sum (kept for bit-exactness with
+/// the full walk; it is adds only — no divisions, no rectify, no graph
+/// chasing — so it is still far cheaper than the full env step).
+pub struct SearchState {
+    map: MemoryMap,
+    cap: CapacityState,
+    /// Cached per-node wall seconds of `map` (the exact terms
+    /// [`CostTable::latency`] sums).
+    totals: Vec<f64>,
+    totals_scratch: Vec<f64>,
+    true_latency_s: f64,
+    /// Scratch proposal + workspace for the invalid-move ε fallback.
+    scratch_map: MemoryMap,
+    ws: CompilerWorkspace,
+}
+
+impl SearchState {
+    /// The current (always valid) map.
+    pub fn map(&self) -> &MemoryMap {
+        &self.map
+    }
+
+    /// Noise-free latency of the current map (bit-identical to
+    /// [`CostTable::latency`] on it).
+    pub fn true_latency_s(&self) -> f64 {
+        self.true_latency_s
+    }
+
+    /// Consume the state, keeping the refined map.
+    pub fn into_map(self) -> MemoryMap {
+        self.map
+    }
+}
+
+/// Outcome of one incremental move evaluation: exactly the [`StepStats`]
+/// the full [`MappingEnv::step_in_place`] path would report for the
+/// moved proposal, plus the noise-free latency of the moved map (valid
+/// moves only).
+#[derive(Clone, Copy, Debug)]
+pub struct MoveEval {
+    pub stats: StepStats,
+    /// Noise-free latency of the moved map — `None` for invalid moves.
+    pub true_latency_s: Option<f64>,
 }
 
 /// The memory-mapping environment for one workload on one chip.
@@ -210,6 +259,101 @@ impl MappingEnv {
         }
     }
 
+    /// Build the move-evaluation engine state from a **valid** starting
+    /// map (asserted by the capacity build). O(n); everything after is
+    /// incremental.
+    pub fn search_state(&self, start: &MemoryMap) -> SearchState {
+        let cap = self.compiler.capacity_state(&self.graph, &self.liveness, start);
+        let mut totals = Vec::new();
+        self.cost_table.node_totals_into(start, &mut totals);
+        let true_latency_s = sum_in_order(&totals);
+        SearchState {
+            map: start.clone(),
+            cap,
+            totals,
+            totals_scratch: Vec::new(),
+            true_latency_s,
+            scratch_map: start.clone(),
+            ws: CompilerWorkspace::default(),
+        }
+    }
+
+    /// Evaluate moving `node` to placement `p` on top of the state's
+    /// current map, **without committing**. Semantically one env step:
+    /// it consumes one iteration (the paper's x-axis stays honest — every
+    /// evaluated move is one "inference") and returns stats bit-identical
+    /// to [`Self::step_in_place`] on the moved proposal, including the
+    /// noise-draw policy (one draw for valid moves, none for invalid).
+    /// Valid moves cost O(degree + live interval) incremental work plus
+    /// an O(n) adds-only re-sum of the cached per-node terms (the price
+    /// of bit-exactness — see [`SearchState`]); invalid moves fall back
+    /// to one full rectification walk to report the exact ε.
+    pub fn try_move(
+        &self,
+        st: &mut SearchState,
+        node: usize,
+        p: NodePlacement,
+        rng: &mut Rng,
+    ) -> MoveEval {
+        self.iterations.fetch_add(1, Ordering::Relaxed);
+        if self.compiler.move_fits(&self.graph, &self.liveness, &st.cap, &st.map, node, p) {
+            let true_latency = self.cost_table.probe_move_latency(
+                &st.map,
+                node,
+                p,
+                &st.totals,
+                &mut st.totals_scratch,
+            );
+            let measured = self.noise.measure(true_latency, rng);
+            let speedup = self.compiler_latency_s / measured;
+            MoveEval {
+                stats: StepStats {
+                    epsilon: 0.0,
+                    reward: self.config.reward_scale * speedup,
+                    valid: true,
+                    measured_latency_s: Some(measured),
+                    speedup: Some(speedup),
+                },
+                true_latency_s: Some(true_latency),
+            }
+        } else {
+            st.scratch_map.placements.clone_from(&st.map.placements);
+            st.scratch_map.placements[node] = p;
+            let r = self.compiler.rectify_in_place(
+                &self.graph,
+                &self.liveness,
+                &mut st.scratch_map,
+                &mut st.ws,
+            );
+            debug_assert!(!r.valid(), "move_fits said invalid but rectify found it valid");
+            MoveEval {
+                stats: StepStats {
+                    epsilon: r.epsilon,
+                    reward: -self.config.invalid_scale * r.epsilon,
+                    valid: false,
+                    measured_latency_s: None,
+                    speedup: None,
+                },
+                true_latency_s: None,
+            }
+        }
+    }
+
+    /// Commit a move previously evaluated as valid by [`Self::try_move`]:
+    /// updates the map, the capacity accounting and the cached latency
+    /// terms. Free of env iterations (the evaluation already paid).
+    pub fn commit_move(&self, st: &mut SearchState, node: usize, p: NodePlacement) {
+        debug_assert!(
+            self.compiler.move_fits(&self.graph, &self.liveness, &st.cap, &st.map, node, p),
+            "commit_move of a non-fitting move"
+        );
+        let old = st.map.placements[node];
+        st.map.placements[node] = p;
+        self.compiler.apply_move(&self.graph, &self.liveness, &mut st.cap, node, old, p);
+        self.cost_table.refresh_totals(&st.map, node, old, &mut st.totals);
+        st.true_latency_s = sum_in_order(&st.totals);
+    }
+
     /// Noise-free speedup of a map (for reporting figures; panics on
     /// invalid maps — evaluate only rectified maps). Called once per
     /// generation and from reporting paths, never per rollout, so the
@@ -227,7 +371,11 @@ impl MappingEnv {
     pub fn eval_speedup(&self, proposal: &MemoryMap, rng: &mut Rng) -> f64 {
         let r = self.compiler.rectify(&self.graph, &self.liveness, proposal);
         let true_latency = self.cost_table.latency(&r.map);
-        let measured = self.noise.measure_mean(true_latency, self.config.eval_measurements, rng);
+        // Clamp like the constructor does: `measure_mean` asserts k > 0,
+        // and a config carrying `eval_measurements = 0` must degrade to a
+        // single measurement, not panic mid-run.
+        let k = self.config.eval_measurements.max(1);
+        let measured = self.noise.measure_mean(true_latency, k, rng);
         self.compiler_latency_s / measured
     }
 }
@@ -329,6 +477,133 @@ mod tests {
         assert_eq!(st.reward.to_bits(), out.reward.to_bits());
         assert_eq!(st.epsilon.to_bits(), out.epsilon.to_bits());
         assert_eq!(st.speedup, out.speedup);
+    }
+
+    #[test]
+    fn eval_speedup_zero_measurements_clamps_instead_of_panicking() {
+        let cfg = EnvConfig { eval_measurements: 0, ..Default::default() };
+        let e = MappingEnv::new(Workload::ResNet50.build(), crate::sim::spec::ChipSpec::nnpi(), cfg, 7);
+        let mut rng = Rng::new(1);
+        let s = e.eval_speedup(&e.compiler_map.clone(), &mut rng);
+        assert!(s.is_finite() && s > 0.0);
+    }
+
+    /// The move-evaluation engine contract: `try_move` must be
+    /// indistinguishable from the full path — rectify the moved proposal
+    /// with `rectify_in_place`, walk it with `CostTable::latency` — down
+    /// to the last bit of every stat, for random valid starts and random
+    /// single-node moves (valid and invalid alike).
+    #[test]
+    fn prop_try_move_bit_identical_to_full_step() {
+        use crate::testing::prop::check;
+        let e = env();
+        let n = e.num_nodes();
+        check(
+            "try_move ≡ rectify_in_place + CostTable::latency",
+            120,
+            |gen| {
+                // Valid start: rectify a random proposal.
+                let actions: Vec<[usize; 2]> =
+                    (0..n).map(|_| [gen.usize_in(0, 2), gen.usize_in(0, 2)]).collect();
+                let start =
+                    e.compiler.rectify(&e.graph, &e.liveness, &MemoryMap::from_actions(&actions)).map;
+                let node = gen.usize_in(0, n - 1);
+                let p = crate::mapping::NodePlacement {
+                    weight: MemKind::from_index(gen.usize_in(0, 2)),
+                    activation: MemKind::from_index(gen.usize_in(0, 2)),
+                };
+                let seed = gen.rng().next_u64();
+                ((start, node, p, seed), ())
+            },
+            |(start, node, p, seed), _| {
+                let mut st = e.search_state(start);
+                let ev = e.try_move(&mut st, *node, *p, &mut Rng::new(*seed));
+                // Full path on the identical proposal with the identical
+                // rng stream.
+                let mut moved = start.clone();
+                moved.placements[*node] = *p;
+                let mut buf = moved.clone();
+                let full = e.step_in_place(
+                    &mut buf,
+                    &mut Rng::new(*seed),
+                    &mut CompilerWorkspace::default(),
+                );
+                let stats_ok = ev.stats.valid == full.valid
+                    && ev.stats.epsilon.to_bits() == full.epsilon.to_bits()
+                    && ev.stats.reward.to_bits() == full.reward.to_bits()
+                    && ev.stats.measured_latency_s.map(f64::to_bits)
+                        == full.measured_latency_s.map(f64::to_bits)
+                    && ev.stats.speedup.map(f64::to_bits) == full.speedup.map(f64::to_bits);
+                let latency_ok = match ev.true_latency_s {
+                    Some(l) => {
+                        full.valid && l.to_bits() == e.cost_table.latency(&moved).to_bits()
+                    }
+                    None => !full.valid,
+                };
+                // Commit path: the state must land exactly on the moved
+                // map with its exact latency.
+                let commit_ok = if ev.stats.valid {
+                    e.commit_move(&mut st, *node, *p);
+                    *st.map() == moved
+                        && st.true_latency_s().to_bits() == e.cost_table.latency(&moved).to_bits()
+                } else {
+                    *st.map() == *start
+                };
+                stats_ok && latency_ok && commit_ok
+            },
+        );
+    }
+
+    /// Long committed move chains must not let the incremental state
+    /// drift: after many accepted moves, the capacity accounting and the
+    /// cached latency must equal a fresh build from the current map.
+    #[test]
+    fn prop_committed_move_chains_stay_consistent() {
+        use crate::testing::prop::check;
+        let e = env();
+        let n = e.num_nodes();
+        check(
+            "search state ≡ fresh rebuild after move chains",
+            30,
+            |gen| {
+                let moves: Vec<(usize, usize, usize)> = (0..40)
+                    .map(|_| {
+                        (gen.usize_in(0, n - 1), gen.usize_in(0, 2), gen.usize_in(0, 2))
+                    })
+                    .collect();
+                (moves, ())
+            },
+            |moves, _| {
+                let mut st = e.search_state(&e.compiler_map);
+                let mut rng = Rng::new(99);
+                for &(node, w, a) in moves {
+                    let p = crate::mapping::NodePlacement {
+                        weight: MemKind::from_index(w),
+                        activation: MemKind::from_index(a),
+                    };
+                    if e.try_move(&mut st, node, p, &mut rng).stats.valid {
+                        e.commit_move(&mut st, node, p);
+                    }
+                }
+                let fresh = e.search_state(st.map());
+                e.compiler.is_valid(&e.graph, &e.liveness, st.map())
+                    && st.true_latency_s().to_bits() == fresh.true_latency_s().to_bits()
+                    && st.cap == fresh.cap
+            },
+        );
+    }
+
+    #[test]
+    fn try_move_counts_iterations() {
+        let e = env();
+        let mut st = e.search_state(&e.compiler_map);
+        let mut rng = Rng::new(5);
+        let before = e.iterations();
+        let p = st.map().placements[0];
+        for _ in 0..7 {
+            e.try_move(&mut st, 0, p, &mut rng);
+        }
+        assert_eq!(e.iterations() - before, 7, "every evaluated move is one inference");
     }
 
     #[test]

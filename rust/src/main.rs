@@ -7,7 +7,7 @@
 
 use std::sync::Arc;
 
-use egrl::agents::{GreedyDp, MappingAgent, RandomSearch};
+use egrl::agents::{GreedyDp, LocalSearch, MappingAgent, RandomSearch};
 use egrl::cli::{Cli, USAGE};
 use egrl::config::EgrlConfig;
 use egrl::coordinator::{Mode, Trainer};
@@ -116,6 +116,14 @@ fn cmd_train(cli: &Cli) -> anyhow::Result<()> {
         }
         "random" => {
             let mut a = RandomSearch::default();
+            let mut rng = Rng::new(cfg.seed);
+            let m = a.run(&env, cfg.total_steps, &mut rng, &mut log);
+            let r = env.compiler.rectify(&env.graph, &env.liveness, &m);
+            let s = env.true_speedup(&r.map);
+            (r.map, s)
+        }
+        "local-search" => {
+            let mut a = LocalSearch { log_every: 50, temp0: cfg.refine_temp };
             let mut rng = Rng::new(cfg.seed);
             let m = a.run(&env, cfg.total_steps, &mut rng, &mut log);
             let r = env.compiler.rectify(&env.graph, &env.liveness, &m);

@@ -16,7 +16,7 @@
 //!    headroom the learning agents exploit.
 
 use crate::graph::Graph;
-use crate::mapping::{MemKind, MemoryMap};
+use crate::mapping::{MemKind, MemoryMap, NodePlacement};
 use super::liveness::Liveness;
 use super::spec::ChipSpec;
 
@@ -65,6 +65,50 @@ impl RectifyStats {
 #[derive(Clone, Debug)]
 pub struct Compiler {
     pub chip: ChipSpec,
+}
+
+/// Incremental capacity accounting for a *valid* map — the compiler half
+/// of the move-evaluation engine (DESIGN.md §9).
+///
+/// Validity (rectification is the identity) is equivalent to a set of
+/// per-memory constraints that this state tracks in closed form. DRAM is
+/// unconstrained: a placement that wants DRAM is never reassigned (there
+/// is nowhere left to spill), mirroring `fit_weight`/`fit_act`. For each
+/// constrained memory `m` (LLC, SRAM):
+///
+/// * `W[m] ≤ cap[m]` — weights are resident for the whole run and the
+///   phase-1 partial sums are monotone, so no weight spills iff the
+///   total fits;
+/// * `W[m] + A[s][m] ≤ cap[m]` at every execution step `s`, where
+///   `A[s][m]` is the live activation bytes mapped to `m` at step `s`
+///   (including the activation produced at `s`). `A[·][m]` only grows at
+///   steps that place into `m` — exactly where phase 2 checks — so the
+///   per-step condition equals the per-placement condition. The first
+///   constraint is the `A = 0` floor of the second.
+///
+/// With `W[m]` and the per-step loads `A[s][m]` (plus their per-memory
+/// peaks) maintained here, a single-node move is validity-checked in
+/// O(live-interval) instead of re-walking the whole graph.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CapacityState {
+    /// Total weight bytes resident per memory.
+    w_used: [u64; 3],
+    /// Live activation bytes per (execution step, memory), `act[s*3+m]`.
+    act: Vec<u64>,
+    /// `max_s act[s*3+m]` per memory, kept in sync by [`Compiler::apply_move`].
+    peak_act: [u64; 3],
+}
+
+impl CapacityState {
+    /// Total weight bytes currently mapped to `m`.
+    pub fn weight_bytes(&self, m: MemKind) -> u64 {
+        self.w_used[m.index()]
+    }
+
+    /// Peak live activation bytes in `m` over the whole execution.
+    pub fn peak_activation_bytes(&self, m: MemKind) -> u64 {
+        self.peak_act[m.index()]
+    }
 }
 
 /// Reusable scratch state for rectification — avoids per-call allocation
@@ -209,6 +253,143 @@ impl Compiler {
     /// Validity = rectification is the identity.
     pub fn is_valid(&self, g: &Graph, lv: &Liveness, map: &MemoryMap) -> bool {
         self.rectify(g, lv, map).valid()
+    }
+
+    /// Build the incremental capacity accounting for a **valid** `map`
+    /// (asserted — the closed-form constraints of [`CapacityState`] are
+    /// exactly validity, so an invalid start would poison every
+    /// subsequent [`Self::move_fits`] answer). O(n).
+    pub fn capacity_state(&self, g: &Graph, lv: &Liveness, map: &MemoryMap) -> CapacityState {
+        assert_eq!(map.len(), g.len(), "map size != graph size");
+        let n = g.len();
+        let mut w_used = [0u64; 3];
+        for (i, p) in map.placements.iter().enumerate() {
+            w_used[p.weight.index()] += g.nodes[i].weight_bytes;
+        }
+        let mut act = vec![0u64; n * 3];
+        let mut live = [0u64; 3];
+        for (s, &i) in lv.order.iter().enumerate() {
+            live[map.placements[i].activation.index()] += g.nodes[i].ofm_bytes();
+            act[s * 3..s * 3 + 3].copy_from_slice(&live);
+            for &dead in lv.deaths_at(s) {
+                let dead = dead as usize;
+                live[map.placements[dead].activation.index()] -= g.nodes[dead].ofm_bytes();
+            }
+        }
+        let mut peak_act = [0u64; 3];
+        for s in 0..n {
+            for m in 0..3 {
+                peak_act[m] = peak_act[m].max(act[s * 3 + m]);
+            }
+        }
+        for m in 1..3 {
+            assert!(
+                w_used[m] + peak_act[m] <= self.chip.mems[m].capacity,
+                "capacity_state built from an invalid map ({} over capacity)",
+                MemKind::from_index(m).name()
+            );
+        }
+        CapacityState { w_used, act, peak_act }
+    }
+
+    /// Would moving `node` to placement `new` keep the map valid? Exact
+    /// (it agrees with `rectify(moved map).valid()` — property-tested)
+    /// and cheap: O(live interval) for the common cases, with one O(n)
+    /// scan only in the corner where the weight moves into the memory
+    /// the activation is leaving.
+    ///
+    /// `cap` must describe `map`, and `map` must be valid.
+    pub fn move_fits(
+        &self,
+        g: &Graph,
+        lv: &Liveness,
+        cap: &CapacityState,
+        map: &MemoryMap,
+        node: usize,
+        new: NodePlacement,
+    ) -> bool {
+        let old = map.placements[node];
+        if new == old {
+            return true;
+        }
+        let w = g.nodes[node].weight_bytes;
+        let a = g.nodes[node].ofm_bytes();
+        let mut dw = [0i64; 3];
+        if w > 0 && new.weight != old.weight {
+            dw[old.weight.index()] -= w as i64;
+            dw[new.weight.index()] += w as i64;
+        }
+        let act_moved = a > 0 && new.activation != old.activation;
+        let (s0, s1) = (lv.step_of[node], lv.last_use[node]);
+        // DRAM (index 0) is skipped: want-DRAM placements never spill.
+        for mi in 1..3 {
+            let capacity = self.chip.mems[mi].capacity;
+            let w_new = (cap.w_used[mi] as i64 + dw[mi]) as u64;
+            if act_moved && new.activation.index() == mi {
+                // Load after adding `a` on the live interval. Using the
+                // global peak for the out-of-interval part is exact:
+                // max(peak, in_peak + a) = max(out_peak, in_peak + a)
+                // because in_peak + a ≥ in_peak.
+                let mut in_peak = 0u64;
+                for s in s0..=s1 {
+                    in_peak = in_peak.max(cap.act[s * 3 + mi]);
+                }
+                if w_new + cap.peak_act[mi].max(in_peak + a) > capacity {
+                    return false;
+                }
+            } else if act_moved && old.activation.index() == mi {
+                if dw[mi] > 0 {
+                    // Weight grows while the activation leaves: the
+                    // reduced peak needs an exact full scan.
+                    let mut peak = 0u64;
+                    for s in 0..lv.order.len() {
+                        let mut v = cap.act[s * 3 + mi];
+                        if (s0..=s1).contains(&s) {
+                            v -= a;
+                        }
+                        peak = peak.max(v);
+                    }
+                    if w_new + peak > capacity {
+                        return false;
+                    }
+                }
+                // dw ≤ 0: every constraint in this memory only loosens.
+            } else if dw[mi] > 0 && w_new + cap.peak_act[mi] > capacity {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Commit a single-node move into `cap` (the caller updates the map
+    /// itself). O(live interval) plus an O(n) peak rescan of the two
+    /// affected memories.
+    pub fn apply_move(
+        &self,
+        g: &Graph,
+        lv: &Liveness,
+        cap: &mut CapacityState,
+        node: usize,
+        old: NodePlacement,
+        new: NodePlacement,
+    ) {
+        let w = g.nodes[node].weight_bytes;
+        if w > 0 && new.weight != old.weight {
+            cap.w_used[old.weight.index()] -= w;
+            cap.w_used[new.weight.index()] += w;
+        }
+        let a = g.nodes[node].ofm_bytes();
+        if a > 0 && new.activation != old.activation {
+            let (m0, m1) = (old.activation.index(), new.activation.index());
+            for s in lv.step_of[node]..=lv.last_use[node] {
+                cap.act[s * 3 + m0] -= a;
+                cap.act[s * 3 + m1] += a;
+            }
+            for mi in [m0, m1] {
+                cap.peak_act[mi] =
+                    (0..lv.order.len()).map(|s| cap.act[s * 3 + mi]).max().unwrap_or(0);
+            }
+        }
     }
 
     /// The native compiler's own mapping: sequential greedy with size
@@ -440,6 +621,91 @@ mod tests {
             let s = c.rectify_in_place(&g, &lv, &mut m, &mut ws);
             assert!(s.valid(), "all-DRAM invalid on chain({n})?");
         }
+    }
+
+    /// Chain plus random forward skip edges: multi-step live intervals,
+    /// so the interval accounting in `CapacityState` is exercised.
+    fn random_dag(gen: &mut crate::testing::prop::Gen) -> Graph {
+        let n = gen.usize_in(3, 24);
+        let w = gen.usize_in(0, 1500) as u64;
+        let a = gen.usize_in(1, 900) as u64;
+        let nodes = (0..n).map(|i| test_node(i, w, a)).collect();
+        let mut edges: Vec<(usize, usize)> = (0..n - 1).map(|i| (i, i + 1)).collect();
+        for i in 0..n - 2 {
+            if gen.bool() {
+                edges.push((i, gen.usize_in(i + 2, n - 1)));
+            }
+        }
+        Graph::new("dag", nodes, edges).unwrap()
+    }
+
+    /// The incremental engine's load-bearing property: `move_fits` must
+    /// agree with the ground truth — rectifying the moved map — for any
+    /// valid start and any single-node move, and `apply_move` must land
+    /// the state exactly where a fresh build from the moved map does.
+    #[test]
+    fn prop_move_fits_agrees_with_rectify() {
+        let c = tiny_compiler();
+        check(
+            "move_fits ≡ rectify(moved).valid(); apply_move ≡ rebuild",
+            200,
+            |gen| {
+                let g = random_dag(gen);
+                let n = g.len();
+                let actions: Vec<[usize; 2]> =
+                    (0..n).map(|_| [gen.usize_in(0, 2), gen.usize_in(0, 2)]).collect();
+                let node = gen.usize_in(0, n - 1);
+                let mv = NodePlacement {
+                    weight: MemKind::from_index(gen.usize_in(0, 2)),
+                    activation: MemKind::from_index(gen.usize_in(0, 2)),
+                };
+                ((g, MemoryMap::from_actions(&actions), node, mv), ())
+            },
+            |(g, proposal, node, mv), _| {
+                let lv = Liveness::analyze(g);
+                // Valid start: rectify the random proposal.
+                let start = c.rectify(g, &lv, proposal).map;
+                let cap = c.capacity_state(g, &lv, &start);
+                let fits = c.move_fits(g, &lv, &cap, &start, *node, *mv);
+                let mut moved = start.clone();
+                moved.placements[*node] = *mv;
+                let truth = c.rectify(g, &lv, &moved).valid();
+                if fits != truth {
+                    return false;
+                }
+                if fits {
+                    let mut applied = cap.clone();
+                    c.apply_move(g, &lv, &mut applied, *node, start.placements[*node], *mv);
+                    applied == c.capacity_state(g, &lv, &moved)
+                } else {
+                    true
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "capacity_state built from an invalid map")]
+    fn capacity_state_rejects_invalid_start() {
+        let g = chain(2, 800, 10);
+        let lv = Liveness::analyze(&g);
+        let c = tiny_compiler();
+        // Two 800-byte weights in 1 KB SRAM: invalid.
+        let m = MemoryMap::constant(2, MemKind::Sram);
+        c.capacity_state(&g, &lv, &m);
+    }
+
+    #[test]
+    fn capacity_state_accessors_report_totals() {
+        let g = chain(3, 100, 50);
+        let lv = Liveness::analyze(&g);
+        let c = tiny_compiler();
+        let m = MemoryMap::constant(3, MemKind::Llc);
+        let cap = c.capacity_state(&g, &lv, &m);
+        assert_eq!(cap.weight_bytes(MemKind::Llc), 300);
+        assert_eq!(cap.weight_bytes(MemKind::Sram), 0);
+        // Chain: producer + consumer live together → peak = 2 · 50.
+        assert_eq!(cap.peak_activation_bytes(MemKind::Llc), 100);
     }
 
     #[test]

@@ -246,6 +246,68 @@ impl CostTable {
         total
     }
 
+    /// Fill `out` with every node's wall seconds under `map` — exactly
+    /// the per-node terms [`Self::latency`] accumulates, so
+    /// [`sum_in_order`] over them reproduces it bit-for-bit. The cache
+    /// behind the move-evaluation engine (DESIGN.md §9).
+    pub fn node_totals_into(&self, map: &MemoryMap, out: &mut Vec<f64>) {
+        debug_assert_eq!(map.len(), self.n);
+        out.clear();
+        out.extend((0..self.n).map(|i| self.node_total_s(map, i, None)));
+    }
+
+    /// Noise-free latency of `map` with `node`'s placement overridden to
+    /// `p`, priced against cached `totals` (from [`Self::node_totals_into`]
+    /// for the *current* map): only the moved node's term — plus its
+    /// consumers' terms when the activation moves — is recomputed, then
+    /// the terms are re-summed in index order, so the result is
+    /// bit-identical to [`Self::latency`] on the moved map. `scratch` is
+    /// a reusable buffer (no steady-state allocation).
+    pub fn probe_move_latency(
+        &self,
+        map: &MemoryMap,
+        node: usize,
+        p: NodePlacement,
+        totals: &[f64],
+        scratch: &mut Vec<f64>,
+    ) -> f64 {
+        debug_assert_eq!(totals.len(), self.n);
+        scratch.clear();
+        scratch.extend_from_slice(totals);
+        let ovr = Some((node, p));
+        scratch[node] = self.node_total_s(map, node, ovr);
+        if map.placements[node].activation != p.activation {
+            let (s, e) = (self.succ_start[node] as usize, self.succ_start[node + 1] as usize);
+            for &c in &self.succ_idx[s..e] {
+                let c = c as usize;
+                scratch[c] = self.node_total_s(map, c, ovr);
+            }
+        }
+        sum_in_order(scratch)
+    }
+
+    /// Refresh the cached totals after committing a move: `map` must
+    /// already hold `node`'s new placement; `old` is the placement it
+    /// replaced. Recomputes the same entries [`Self::probe_move_latency`]
+    /// overrides.
+    pub fn refresh_totals(
+        &self,
+        map: &MemoryMap,
+        node: usize,
+        old: NodePlacement,
+        totals: &mut [f64],
+    ) {
+        debug_assert_eq!(totals.len(), self.n);
+        totals[node] = self.node_total_s(map, node, None);
+        if old.activation != map.placements[node].activation {
+            let (s, e) = (self.succ_start[node] as usize, self.succ_start[node + 1] as usize);
+            for &c in &self.succ_idx[s..e] {
+                let c = c as usize;
+                totals[c] = self.node_total_s(map, c, None);
+            }
+        }
+    }
+
     /// Exact latency change caused by moving `node` from `old` to its
     /// current placement in `map` — O(preds + succs·preds) instead of
     /// O(graph), for mutation-local re-evaluation (single-decision EA
@@ -269,6 +331,18 @@ impl CostTable {
         }
         delta
     }
+}
+
+/// Left-to-right sum starting from 0.0 — the exact accumulation order of
+/// [`CostTable::latency`], so summing cached per-node totals reproduces a
+/// full walk bit-for-bit.
+#[inline]
+pub fn sum_in_order(terms: &[f64]) -> f64 {
+    let mut total = 0.0;
+    for &t in terms {
+        total += t;
+    }
+    total
 }
 
 #[cfg(test)]
@@ -503,6 +577,49 @@ mod tests {
                 let full = table.latency(after) - table.latency(before);
                 let delta = table.latency_delta(after, *node, before.placements[*node]);
                 (full - delta).abs() < 1e-15
+            },
+        );
+    }
+
+    #[test]
+    fn prop_cached_totals_and_probe_are_bit_exact() {
+        let chip = ChipSpec::nnpi();
+        check(
+            "node_totals sum ≡ latency; probe ≡ latency of moved map (bits)",
+            120,
+            |gen| {
+                let g = random_dag(gen);
+                let n = g.len();
+                let map = random_map(gen, n);
+                let node = gen.usize_in(0, n - 1);
+                let p = crate::mapping::NodePlacement {
+                    weight: MemKind::from_index(gen.usize_in(0, 2)),
+                    activation: MemKind::from_index(gen.usize_in(0, 2)),
+                };
+                ((g, map, node, p), ())
+            },
+            |(g, map, node, p), _| {
+                let table = CostTable::new(g, &chip);
+                let mut totals = Vec::new();
+                table.node_totals_into(map, &mut totals);
+                if sum_in_order(&totals).to_bits() != table.latency(map).to_bits() {
+                    return false;
+                }
+                let mut scratch = Vec::new();
+                let probed = table.probe_move_latency(map, *node, *p, &totals, &mut scratch);
+                let mut moved = map.clone();
+                moved.placements[*node] = *p;
+                if probed.to_bits() != table.latency(&moved).to_bits() {
+                    return false;
+                }
+                // refresh_totals lands the cache exactly where a fresh
+                // build from the moved map does.
+                let old = map.placements[*node];
+                let mut refreshed = totals.clone();
+                table.refresh_totals(&moved, *node, old, &mut refreshed);
+                let mut fresh = Vec::new();
+                table.node_totals_into(&moved, &mut fresh);
+                refreshed.iter().zip(&fresh).all(|(a, b)| a.to_bits() == b.to_bits())
             },
         );
     }
