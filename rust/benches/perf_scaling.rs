@@ -1,0 +1,130 @@
+//! Scaling benchmark of the incremental-cost core (ISSUE 3 tentpole):
+//! old vs. new paths swept over synthetic graphs of n ∈ {1k, 4k, 10k}
+//! nodes, through one deterministic generator (`sized_synthetic`).
+//!
+//! Two comparisons per size:
+//!
+//! * **capacity**: the reference scan `CapacityState` vs. the
+//!   segment-tree backend, both answering the same 9-way
+//!   `move_fits_all` probes (O(n)-ish vs. O(log n));
+//! * **pricing**: the per-move `MappingEnv::try_move` loop (nine calls,
+//!   each with its own O(n) re-sum — and a full rectify walk on every
+//!   invalid candidate) vs. the batched `try_move_batch` (one shared
+//!   peak-query set + one shared compensated-sum pass for all nine).
+//!
+//! Besides the stdout report, writes `BENCH_scaling.json`
+//! (`schema: egrl-bench-scaling-v1`, uploaded by CI). Acceptance target:
+//! the batched path prices **≥ 5×** more placements/sec than per-move
+//! `try_move` at n = 10k.
+
+use egrl::bench_harness::Bench;
+use egrl::env::MappingEnv;
+use egrl::mapping::NodePlacement;
+use egrl::utils::json::Json;
+use egrl::utils::Rng;
+use egrl::workloads::synthetic::sized_synthetic;
+
+fn main() -> anyhow::Result<()> {
+    let sizes = [1000usize, 4000, 10_000];
+    let mut b = Bench::new("perf_scaling: incremental-cost core, old vs new");
+    let mut rows: Vec<Json> = Vec::new();
+    let mut speedup_at_10k = f64::NAN;
+
+    for &n in &sizes {
+        let env = MappingEnv::nnpi(sized_synthetic(n), 1);
+        let base = env.compiler_map.clone();
+
+        // ---- capacity: scan vs segment tree, same 9-way probes ------------
+        let scan = env.compiler.scan_capacity_state(&env.graph, &env.liveness, &base);
+        let tree = env.compiler.tree_capacity_state(&env.graph, &env.liveness, &base);
+        let mut i_scan = 0usize;
+        b.measure_throughput(&format!("capacity 9-way scan (n={n})"), 9.0, 30, 0.3, || {
+            let node = i_scan % n;
+            i_scan += 1;
+            std::hint::black_box(scan.move_fits_all(
+                &env.compiler.chip,
+                &env.graph,
+                &env.liveness,
+                &base,
+                node,
+            ));
+        });
+        let mut i_tree = 0usize;
+        b.measure_throughput(&format!("capacity 9-way segtree (n={n})"), 9.0, 30, 0.3, || {
+            let node = i_tree % n;
+            i_tree += 1;
+            std::hint::black_box(tree.move_fits_all(
+                &env.compiler.chip,
+                &env.graph,
+                &env.liveness,
+                &base,
+                node,
+            ));
+        });
+
+        // ---- pricing: nine try_move calls vs one try_move_batch ------------
+        // Same node stream, same placements (the full 9 per node), no
+        // commits — both paths price the identical work.
+        let mut st_single = env.search_state(&base);
+        let mut rng_single = Rng::new(2);
+        let mut k_single = 0usize;
+        b.measure_throughput(&format!("pricing try_move ×9 (n={n})"), 9.0, 10, 0.4, || {
+            let node = k_single % n;
+            k_single += 1;
+            for &p in NodePlacement::ALL.iter() {
+                std::hint::black_box(env.try_move(&mut st_single, node, p, &mut rng_single));
+            }
+        });
+        let mut st_batch = env.search_state(&base);
+        let mut rng_batch = Rng::new(2);
+        let mut k_batch = 0usize;
+        b.measure_throughput(&format!("pricing try_move_batch (n={n})"), 9.0, 10, 0.4, || {
+            let node = k_batch % n;
+            k_batch += 1;
+            std::hint::black_box(env.try_move_batch(&mut st_batch, node, &mut rng_batch));
+        });
+
+        // ---- per-size derived numbers --------------------------------------
+        let mean = |label: String| b.mean_s(&label).unwrap_or(f64::NAN);
+        let scan_s = mean(format!("capacity 9-way scan (n={n})"));
+        let tree_s = mean(format!("capacity 9-way segtree (n={n})"));
+        let single_s = mean(format!("pricing try_move ×9 (n={n})"));
+        let batch_s = mean(format!("pricing try_move_batch (n={n})"));
+        let capacity_speedup = scan_s / tree_s;
+        let pricing_speedup = single_s / batch_s;
+        let single_pps = 9.0 / single_s;
+        let batch_pps = 9.0 / batch_s;
+        if n == 10_000 {
+            speedup_at_10k = pricing_speedup;
+        }
+        println!(
+            "\nn={n}: capacity segtree {capacity_speedup:.1}x vs scan; \
+             pricing {batch_pps:.0}/s batched vs {single_pps:.0}/s per-move ({pricing_speedup:.1}x)"
+        );
+        rows.push(Json::obj(vec![
+            ("nodes", Json::Num(n as f64)),
+            ("capacity_scan_mean_s", Json::Num(scan_s)),
+            ("capacity_segtree_mean_s", Json::Num(tree_s)),
+            ("capacity_segtree_speedup", Json::Num(capacity_speedup)),
+            ("placements_per_sec_try_move", Json::Num(single_pps)),
+            ("placements_per_sec_batch", Json::Num(batch_pps)),
+            ("batch_pricing_speedup", Json::Num(pricing_speedup)),
+        ]));
+    }
+
+    let json = Json::obj(vec![
+        ("schema", Json::str("egrl-bench-scaling-v1")),
+        ("workload_generator", Json::str("sized_synthetic")),
+        ("sizes", Json::arr(sizes.iter().map(|&n| Json::Num(n as f64)))),
+        ("per_size", Json::Arr(rows)),
+        ("batch_pricing_speedup_at_10k", Json::Num(speedup_at_10k)),
+        ("target_speedup_at_10k", Json::Num(5.0)),
+        ("meets_target", Json::Bool(speedup_at_10k >= 5.0)),
+    ]);
+    std::fs::write("BENCH_scaling.json", json.to_string_pretty())?;
+    println!("\nwrote BENCH_scaling.json");
+    println!(
+        "target (ISSUE 3): batched pricing ≥ 5x per-move try_move at n=10k — measured {speedup_at_10k:.1}x"
+    );
+    Ok(())
+}

@@ -91,18 +91,31 @@ USAGE:
 
 SUBCOMMANDS:
   train      Train an agent on a workload
-             --workload resnet50|resnet101|bert   (default resnet50)
+             --workload resnet50|resnet101|bert|synthetic-large
+                                                  (default resnet50)
              --agent egrl|ea|pg|greedy-dp|random|local-search
                                                   (default egrl)
              (EA refinement: --set refine_elites=K --set refine_moves=N
-              --set refine_temp=T; local-search reuses refine_temp)
+              --set refine_temp=T --set refine_temps=T1,T2,...
+              [per-elite ladder]; local-search reuses refine_temp)
              --steps N        iteration budget    (default 4000)
              --seed N                              (default 0)
              --artifacts DIR  AOT artifacts        (default artifacts/)
              --no-artifacts   EA with Boltzmann-only population
              --out FILE       write CSV curve
+             --save-map FILE  write the best map as a mapping artifact
              --set key=value  config override (repeatable)
              --config FILE    key=value config file
+  polish     Online serving path: refine a precompiled mapping artifact
+             with the batched local-search engine
+             --workload ...   workload the map belongs to
+             --map FILE       mapping artifact (default: compiler map)
+             --moves N        move-evaluation budget (default 2000,
+                              min 9 = one batched node visit)
+             --seed N                              (default 0)
+             --out FILE       refined map + speedup JSON
+                              (default polished.json)
+             --set key=value  e.g. refine_temp=0.5 for annealing
   compile    Run the native-compiler baseline and print its mapping stats
              --workload ...
   smoke      Verify artifacts against the manifest smoke vector

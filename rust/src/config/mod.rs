@@ -79,8 +79,14 @@ pub struct EgrlConfig {
     /// unrefined runs stay comparable at equal `total_steps`.
     pub refine_moves: u64,
     /// Initial simulated-annealing temperature (reward units) for
-    /// refinement; 0 = pure first-improvement hill climbing.
+    /// refinement; 0 = pure best-of-9 hill climbing.
     pub refine_temp: f64,
+    /// Per-elite temperature ladder (portfolio scheduling): refined
+    /// elite of rank `j` anneals at `refine_temps[j % len]`, so e.g.
+    /// `refine_temps = 0.0,0.5` alternates hill-climb and annealing
+    /// rungs across the elites. Empty (the default) falls back to the
+    /// single global `refine_temp`.
+    pub refine_temps: Vec<f64>,
 }
 
 impl Default for EgrlConfig {
@@ -116,6 +122,7 @@ impl Default for EgrlConfig {
             refine_elites: 0,
             refine_moves: 200,
             refine_temp: 0.0,
+            refine_temps: Vec::new(),
         }
     }
 }
@@ -142,6 +149,18 @@ impl EgrlConfig {
         fn p<T: std::str::FromStr>(k: &str, v: &str) -> anyhow::Result<T> {
             v.parse().map_err(|_| anyhow::anyhow!("bad value '{v}' for key '{k}'"))
         }
+        /// The float refinement keys are temperatures/noise magnitudes:
+        /// negative or non-finite values (NaN/inf parse fine through
+        /// `f64::from_str`!) would silently corrupt the annealing accept
+        /// rule, so they are config errors, not runtime surprises.
+        fn nonneg_f64(k: &str, v: &str) -> anyhow::Result<f64> {
+            let x: f64 = p(k, v)?;
+            anyhow::ensure!(
+                x.is_finite() && x >= 0.0,
+                "{k} must be a finite non-negative number, got '{v}'"
+            );
+            Ok(x)
+        }
         match key {
             "seed" => self.seed = p(key, value)?,
             "pop_size" => self.pop_size = p(key, value)?,
@@ -164,7 +183,7 @@ impl EgrlConfig {
             "grad_steps_per_env_step" => self.grad_steps_per_env_step = p(key, value)?,
             "update_every" => self.update_every = p(key, value)?,
             "migration_period" => self.migration_period = p(key, value)?,
-            "noise_std" => self.noise_std = p(key, value)?,
+            "noise_std" => self.noise_std = nonneg_f64(key, value)?,
             "eval_measurements" => {
                 let v: usize = p(key, value)?;
                 // `NoiseModel::measure_mean` averages k > 0 draws; 0 is a
@@ -175,10 +194,19 @@ impl EgrlConfig {
             "boltzmann_init_temp" => self.boltzmann_init_temp = p(key, value)?,
             "threads" => self.threads = p(key, value)?,
             "steps_per_episode" => self.steps_per_episode = p(key, value)?,
-            "pg_action_noise" => self.pg_action_noise = p(key, value)?,
+            "pg_action_noise" => self.pg_action_noise = nonneg_f64(key, value)?,
             "refine_elites" => self.refine_elites = p(key, value)?,
             "refine_moves" => self.refine_moves = p(key, value)?,
-            "refine_temp" => self.refine_temp = p(key, value)?,
+            "refine_temp" => self.refine_temp = nonneg_f64(key, value)?,
+            "refine_temps" => {
+                // Comma-separated ladder, e.g. `refine_temps = 0.0,0.5`;
+                // an empty value clears the ladder (global refine_temp).
+                let mut temps = Vec::new();
+                for item in value.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+                    temps.push(nonneg_f64(key, item)?);
+                }
+                self.refine_temps = temps;
+            }
             other => anyhow::bail!("unknown config key '{other}'"),
         }
         Ok(())
@@ -248,6 +276,49 @@ mod tests {
         assert!(c.set("eval_measurements", "0").is_err());
         c.set("eval_measurements", "3").unwrap();
         assert_eq!(c.eval_measurements, 3);
+    }
+
+    #[test]
+    fn refine_temp_rejects_negative_and_nan() {
+        let mut c = EgrlConfig::default();
+        // `f64::from_str` happily parses all of these — the guard must not.
+        assert!(c.set("refine_temp", "-0.5").is_err());
+        assert!(c.set("refine_temp", "NaN").is_err());
+        assert!(c.set("refine_temp", "inf").is_err());
+        c.set("refine_temp", "0.0").unwrap();
+        c.set("refine_temp", "1.25").unwrap();
+        assert_eq!(c.refine_temp, 1.25);
+    }
+
+    #[test]
+    fn noise_magnitudes_reject_negative_and_nan() {
+        // Same guard class as the temperatures: a NaN noise_std would
+        // turn every measurement into NaN and every accept test false.
+        let mut c = EgrlConfig::default();
+        for key in ["noise_std", "pg_action_noise"] {
+            assert!(c.set(key, "-0.02").is_err(), "{key} accepted a negative value");
+            assert!(c.set(key, "NaN").is_err(), "{key} accepted NaN");
+            c.set(key, "0.0").unwrap();
+            c.set(key, "0.05").unwrap();
+        }
+        assert_eq!(c.noise_std, 0.05);
+        assert_eq!(c.pg_action_noise, 0.05);
+    }
+
+    #[test]
+    fn refine_temps_ladder_parses_and_guards() {
+        let mut c = EgrlConfig::default();
+        assert!(c.refine_temps.is_empty(), "ladder must default off");
+        c.set("refine_temps", "0.0, 0.5,0.25").unwrap();
+        assert_eq!(c.refine_temps, vec![0.0, 0.5, 0.25]);
+        assert!(c.set("refine_temps", "0.1,-0.2").is_err());
+        assert!(c.set("refine_temps", "0.1,NaN").is_err());
+        assert!(c.set("refine_temps", "0.1,abc").is_err());
+        // Rejected settings must not have clobbered the ladder.
+        assert_eq!(c.refine_temps, vec![0.0, 0.5, 0.25]);
+        // Empty value clears it (falls back to the global refine_temp).
+        c.set("refine_temps", "").unwrap();
+        assert!(c.refine_temps.is_empty());
     }
 
     #[test]

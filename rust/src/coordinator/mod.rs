@@ -272,9 +272,15 @@ impl Trainer {
     /// contract as the rollout engine (DESIGN.md §8): one RNG stream is
     /// forked per refined elite in rank order before any worker starts,
     /// and all write-backs commit serially in rank order afterwards, so
-    /// results are bit-identical for any thread count. Every evaluated
-    /// move consumes one env iteration — refinement spends the same
-    /// budget currency as rollouts and the curves stay honest.
+    /// results are bit-identical for any thread count. Every placement a
+    /// batch prices consumes one env iteration — refinement spends the
+    /// same budget currency as rollouts and the curves stay honest.
+    ///
+    /// Portfolio scheduling: when `cfg.refine_temps` is non-empty the
+    /// elites are spread round-robin across its rungs (rank `j` gets
+    /// `refine_temps[j % len]`), so e.g. `[0.0, 0.5]` alternates pure
+    /// hill-climb and annealing rungs across the refined elites instead
+    /// of one global temperature. Empty list → the global `refine_temp`.
     fn refine_elites(&mut self) {
         let k = self.cfg.refine_elites.min(self.pop.len());
         if k == 0 || self.cfg.refine_moves == 0 {
@@ -283,17 +289,26 @@ impl Trainer {
         let ranking = self.pop.ranking();
         let elites: Vec<usize> = ranking[..k].to_vec();
         let seeds: Vec<u64> = (0..k).map(|_| self.rng.next_u64()).collect();
+        let temps: Vec<f64> = (0..k)
+            .map(|j| {
+                if self.cfg.refine_temps.is_empty() {
+                    self.cfg.refine_temp
+                } else {
+                    self.cfg.refine_temps[j % self.cfg.refine_temps.len()]
+                }
+            })
+            .collect();
         let env: &MappingEnv = &self.env;
         let budget = self.cfg.refine_moves;
-        let temp0 = self.cfg.refine_temp;
         // After the rollout phase each proposal buffer holds the
         // member's rectified (therefore valid) map — the refinement
         // starting points.
         let proposals: &[MemoryMap] = &self.proposals;
         let elite_idx = &elites;
+        let temp_rungs = &temps;
         let results: Vec<RefineResult> = map_parallel(k, self.cfg.threads, move |j| {
             let mut rng = Rng::new(seeds[j]);
-            refine(env, &proposals[elite_idx[j]], budget, temp0, &mut rng, |_, _| {})
+            refine(env, &proposals[elite_idx[j]], budget, temp_rungs[j], &mut rng, |_, _| {})
         });
         for (j, res) in results.iter().enumerate() {
             let i = elites[j];
@@ -669,6 +684,37 @@ mod tests {
             "iteration accounting off: {}",
             res.iterations
         );
+    }
+
+    /// Portfolio scheduling (per-elite temperature ladder): `refine_temps`
+    /// spreads the refined elites over hill-climb and annealing rungs and
+    /// must preserve the §8 thread-count bit-identity contract.
+    #[test]
+    fn temperature_ladder_bit_identical_across_thread_counts() {
+        let run = |threads: usize| {
+            let env = Arc::new(MappingEnv::nnpi(Workload::ResNet50.build(), 31));
+            let cfg = EgrlConfig {
+                threads,
+                seed: 31,
+                total_steps: 400,
+                pop_size: 10,
+                elites: 2,
+                refine_elites: 3,
+                refine_moves: 36,
+                refine_temps: vec![0.0, 0.4],
+                ..Default::default()
+            };
+            let mut t = Trainer::new(env, cfg, Mode::EaOnly, None).unwrap();
+            let mut log = RunLog::new("resnet50", "ea", 31);
+            let res = t.run(&mut log).unwrap();
+            (res.best_speedup, res.best_map, log.points)
+        };
+        let serial = run(1);
+        let parallel = run(4);
+        assert_eq!(serial.0.to_bits(), parallel.0.to_bits(), "ladder best_speedup differs");
+        assert_eq!(serial.1, parallel.1, "ladder best_map differs across thread counts");
+        assert_eq!(serial.2, parallel.2, "ladder RunLog differs across thread counts");
+        assert!(serial.0 > 0.0, "ladder run never found a valid map");
     }
 
     #[test]

@@ -92,6 +92,8 @@ pub struct SearchState {
     /// [`CostTable::latency`] sums).
     totals: Vec<f64>,
     totals_scratch: Vec<f64>,
+    /// Reusable affected-node marker for the batched 9-way probe.
+    skip_scratch: Vec<bool>,
     true_latency_s: f64,
     /// Scratch proposal + workspace for the invalid-move ε fallback.
     scratch_map: MemoryMap,
@@ -125,6 +127,67 @@ pub struct MoveEval {
     pub stats: StepStats,
     /// Noise-free latency of the moved map — `None` for invalid moves.
     pub true_latency_s: Option<f64>,
+}
+
+/// Price of one valid placement inside a [`MoveBatch`].
+#[derive(Clone, Copy, Debug)]
+pub struct MovePrice {
+    /// Noise-free latency of the map with this placement applied —
+    /// ε-bounded (1e-9 relative) w.r.t. the bit-exact single-move path.
+    pub true_latency_s: f64,
+    /// One noisy measurement of that latency.
+    pub measured_latency_s: f64,
+    /// Measured speedup vs. the native compiler.
+    pub speedup: f64,
+    /// Scalar reward (`reward_scale · speedup`).
+    pub reward: f64,
+}
+
+/// All nine placements of one node priced in a single batched pass
+/// ([`MappingEnv::try_move_batch`]): one shared capacity-peak query set,
+/// one shared latency recompute, one noise draw per valid placement.
+/// Invalid placements are reported unpriced (`None`) — the batch
+/// consumers (hill climber, annealer, elite refinement) only need
+/// validity, so the exact-ε rectify fallback of [`MappingEnv::try_move`]
+/// is skipped on this path (DESIGN.md §10).
+#[derive(Clone, Debug)]
+pub struct MoveBatch {
+    /// The probed node.
+    pub node: usize,
+    /// Indexed `weight.index() * 3 + activation.index()`.
+    pub prices: [Option<MovePrice>; 9],
+}
+
+impl MoveBatch {
+    /// Moves one batch evaluation consumes: every priced placement is
+    /// one environment iteration (DESIGN.md §9 accounting policy).
+    pub const MOVES: u64 = 9;
+
+    /// The price of one placement (`None` if it would break capacity).
+    pub fn price(&self, p: NodePlacement) -> Option<&MovePrice> {
+        self.prices[p.batch_index()].as_ref()
+    }
+
+    /// Highest-reward valid placement other than `current`
+    /// (deterministic: first batch index wins ties).
+    pub fn best_excluding(&self, current: NodePlacement) -> Option<(NodePlacement, MovePrice)> {
+        let mut best: Option<(NodePlacement, MovePrice)> = None;
+        for (k, &cand) in NodePlacement::ALL.iter().enumerate() {
+            if cand == current {
+                continue;
+            }
+            if let Some(price) = self.prices[k] {
+                let better = match best {
+                    Some((_, b)) => price.reward > b.reward,
+                    None => true,
+                };
+                if better {
+                    best = Some((cand, price));
+                }
+            }
+        }
+        best
+    }
 }
 
 /// The memory-mapping environment for one workload on one chip.
@@ -272,6 +335,7 @@ impl MappingEnv {
             cap,
             totals,
             totals_scratch: Vec::new(),
+            skip_scratch: Vec::new(),
             true_latency_s,
             scratch_map: start.clone(),
             ws: CompilerWorkspace::default(),
@@ -337,6 +401,50 @@ impl MappingEnv {
                 true_latency_s: None,
             }
         }
+    }
+
+    /// Price **all nine placements** of `node` on top of the state's
+    /// current map in one batched pass, without committing: one shared
+    /// capacity-peak query set ([`Compiler::move_fits_all`]), one shared
+    /// latency recompute ([`CostTable::probe_all_placements`]), then one
+    /// noise draw per **valid** placement in placement-index order
+    /// (`w * 3 + a`).
+    ///
+    /// Iteration accounting stays the §9 policy: the batch consumes
+    /// [`MoveBatch::MOVES`] = 9 environment iterations — every priced
+    /// placement is one evaluated move, the same currency as
+    /// [`Self::try_move`]. The entry at the current placement is always
+    /// valid and doubles as a fresh incumbent measurement (the batched
+    /// local search re-baselines at every node visit — a per-visit
+    /// winner's-curse guard). Latencies are ε-bounded (1e-9 relative)
+    /// w.r.t. the bit-exact single-move path; invalid placements are
+    /// reported unpriced rather than paying the exact-ε rectify walk.
+    pub fn try_move_batch(&self, st: &mut SearchState, node: usize, rng: &mut Rng) -> MoveBatch {
+        self.iterations.fetch_add(MoveBatch::MOVES, Ordering::Relaxed);
+        let fits =
+            self.compiler.move_fits_all(&self.graph, &self.liveness, &st.cap, &st.map, node);
+        let lats = self.cost_table.probe_all_placements(
+            &st.map,
+            node,
+            &st.totals,
+            &mut st.skip_scratch,
+        );
+        let mut prices: [Option<MovePrice>; 9] = [None; 9];
+        for k in 0..9 {
+            if !fits[k] {
+                continue;
+            }
+            let true_latency = lats[k];
+            let measured = self.noise.measure(true_latency, rng);
+            let speedup = self.compiler_latency_s / measured;
+            prices[k] = Some(MovePrice {
+                true_latency_s: true_latency,
+                measured_latency_s: measured,
+                speedup,
+                reward: self.config.reward_scale * speedup,
+            });
+        }
+        MoveBatch { node, prices }
     }
 
     /// Commit a move previously evaluated as valid by [`Self::try_move`]:
@@ -604,6 +712,82 @@ mod tests {
             e.try_move(&mut st, 0, p, &mut rng);
         }
         assert_eq!(e.iterations() - before, 7, "every evaluated move is one inference");
+    }
+
+    #[test]
+    fn try_move_batch_counts_nine_iterations() {
+        let e = env();
+        let mut st = e.search_state(&e.compiler_map);
+        let mut rng = Rng::new(6);
+        let before = e.iterations();
+        let batch = e.try_move_batch(&mut st, 0, &mut rng);
+        assert_eq!(e.iterations() - before, MoveBatch::MOVES, "one batch = nine moves");
+        // The current placement is always a valid (priced) entry.
+        assert!(batch.price(st.map().placements[0]).is_some());
+    }
+
+    /// Batch ≡ singles: on a zero-noise env, every batch entry must
+    /// match `try_move` on the same placement — identical validity,
+    /// ε-equal (1e-9 relative) latency/reward — and `best_excluding`
+    /// must pick the argmax-reward valid candidate.
+    #[test]
+    fn prop_try_move_batch_matches_single_moves() {
+        use crate::testing::prop::check;
+        let cfg = EnvConfig { noise_std: 0.0, ..Default::default() };
+        let e = MappingEnv::new(Workload::ResNet50.build(), ChipSpec::nnpi(), cfg, 7);
+        let n = e.num_nodes();
+        check(
+            "try_move_batch ≡ 9 × try_move (zero noise)",
+            60,
+            |gen| {
+                let actions: Vec<[usize; 2]> =
+                    (0..n).map(|_| [gen.usize_in(0, 2), gen.usize_in(0, 2)]).collect();
+                let start = e
+                    .compiler
+                    .rectify(&e.graph, &e.liveness, &MemoryMap::from_actions(&actions))
+                    .map;
+                let node = gen.usize_in(0, n - 1);
+                ((start, node), ())
+            },
+            |(start, node), _| {
+                let mut st = e.search_state(start);
+                let mut rng = Rng::new(1);
+                let batch = e.try_move_batch(&mut st, *node, &mut rng);
+                let mut best_reward = f64::NEG_INFINITY;
+                let current = st.map().placements[*node];
+                for wi in 0..3 {
+                    for ai in 0..3 {
+                        let p = NodePlacement {
+                            weight: MemKind::from_index(wi),
+                            activation: MemKind::from_index(ai),
+                        };
+                        let single = e.try_move(&mut st, *node, p, &mut rng);
+                        match (batch.price(p), single.stats.valid) {
+                            (Some(price), true) => {
+                                let exact = single.true_latency_s.unwrap();
+                                if (price.true_latency_s - exact).abs() > 1e-9 * exact {
+                                    return false;
+                                }
+                                if (price.reward - single.stats.reward).abs()
+                                    > 1e-9 * single.stats.reward.abs()
+                                {
+                                    return false;
+                                }
+                                if p != current && price.reward > best_reward {
+                                    best_reward = price.reward;
+                                }
+                            }
+                            (None, false) => {}
+                            _ => return false,
+                        }
+                    }
+                }
+                match batch.best_excluding(current) {
+                    Some((_, price)) => price.reward == best_reward,
+                    None => best_reward == f64::NEG_INFINITY,
+                }
+            },
+        );
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //! distance used by the Figure-6 mapping-space analysis.
 
 use crate::graph::Graph;
+use crate::utils::json::Json;
 
 /// One of the three on-chip memory units of the modelled NNP-I.
 /// Ordinals double as action indices (0 = DRAM, 1 = LLC, 2 = SRAM) and are
@@ -66,6 +67,31 @@ pub struct NodePlacement {
     pub activation: MemKind,
 }
 
+impl NodePlacement {
+    /// All nine (weight, activation) placements of one node, in
+    /// **batch-index order**: `ALL[k].batch_index() == k`. This is the
+    /// single source of the index convention shared by the batched
+    /// capacity probe (`move_fits_all`), the batched latency probe
+    /// (`probe_all_placements`) and `MoveBatch::prices`.
+    pub const ALL: [NodePlacement; 9] = [
+        NodePlacement { weight: MemKind::Dram, activation: MemKind::Dram },
+        NodePlacement { weight: MemKind::Dram, activation: MemKind::Llc },
+        NodePlacement { weight: MemKind::Dram, activation: MemKind::Sram },
+        NodePlacement { weight: MemKind::Llc, activation: MemKind::Dram },
+        NodePlacement { weight: MemKind::Llc, activation: MemKind::Llc },
+        NodePlacement { weight: MemKind::Llc, activation: MemKind::Sram },
+        NodePlacement { weight: MemKind::Sram, activation: MemKind::Dram },
+        NodePlacement { weight: MemKind::Sram, activation: MemKind::Llc },
+        NodePlacement { weight: MemKind::Sram, activation: MemKind::Sram },
+    ];
+
+    /// Position of this placement in [`Self::ALL`] and in every 9-slot
+    /// batch array: `weight.index() * 3 + activation.index()`.
+    pub fn batch_index(self) -> usize {
+        self.weight.index() * 3 + self.activation.index()
+    }
+}
+
 /// A complete mapping of a workload's tensors to memories.
 #[derive(Clone, Debug, PartialEq)]
 pub struct MemoryMap {
@@ -118,6 +144,59 @@ impl MemoryMap {
             .iter()
             .map(|p| [p.weight.index(), p.activation.index()])
             .collect()
+    }
+
+    /// Serialize as a mapping artifact — the on-disk interchange format
+    /// of the serving path (`egrl train --save-map` writes it,
+    /// `egrl polish --map` reads it):
+    /// `{"schema": "egrl-map-v1", "nodes": N, "actions": [[w, a], ...]}`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::str("egrl-map-v1")),
+            ("nodes", Json::Num(self.len() as f64)),
+            (
+                "actions",
+                Json::arr(self.placements.iter().map(|p| {
+                    Json::arr([
+                        Json::Num(p.weight.index() as f64),
+                        Json::Num(p.activation.index() as f64),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    /// Parse a mapping artifact (the [`Self::to_json`] object, or a bare
+    /// `[[w, a], ...]` actions array). Every action index is validated —
+    /// a corrupt artifact is an error, not a panic.
+    pub fn from_json(j: &Json) -> anyhow::Result<MemoryMap> {
+        let actions = j
+            .get("actions")
+            .unwrap_or(j)
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("mapping artifact: expected an 'actions' array"))?;
+        let mut placements = Vec::with_capacity(actions.len());
+        for (i, entry) in actions.iter().enumerate() {
+            let pair = entry
+                .as_arr()
+                .filter(|p| p.len() == 2)
+                .ok_or_else(|| anyhow::anyhow!("action {i}: expected a [weight, act] pair"))?;
+            let idx = |which: &str, v: &Json| -> anyhow::Result<MemKind> {
+                let x = v
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("action {i}: {which} index not a number"))?;
+                anyhow::ensure!(
+                    x.fract() == 0.0 && (0.0..3.0).contains(&x),
+                    "action {i}: {which} index {x} outside 0..=2"
+                );
+                Ok(MemKind::from_index(x as usize))
+            };
+            placements.push(NodePlacement {
+                weight: idx("weight", &pair[0])?,
+                activation: idx("activation", &pair[1])?,
+            });
+        }
+        Ok(MemoryMap { placements })
     }
 
     /// One-hot categorical encoding, `2 * 3` entries per node — the Fig-6
@@ -247,6 +326,50 @@ mod tests {
             },
             |m, _| MemoryMap::from_actions(&m.to_actions()) == *m,
         );
+    }
+
+    #[test]
+    fn placement_all_is_in_batch_index_order() {
+        assert_eq!(NodePlacement::ALL.len(), 9);
+        for (k, p) in NodePlacement::ALL.iter().enumerate() {
+            assert_eq!(p.batch_index(), k, "ALL[{k}] out of batch-index order");
+            assert_eq!(p.batch_index(), p.weight.index() * 3 + p.activation.index());
+        }
+        // All nine placements are distinct.
+        for (i, a) in NodePlacement::ALL.iter().enumerate() {
+            for b in &NodePlacement::ALL[i + 1..] {
+                assert_ne!(a, b);
+            }
+        }
+    }
+
+    #[test]
+    fn prop_map_json_roundtrip() {
+        check(
+            "mapping artifact JSON roundtrip",
+            100,
+            |g| {
+                let n = g.usize_in(1, 60);
+                (random_map(g, n), ())
+            },
+            |m, _| {
+                let text = m.to_json().to_string_pretty();
+                let parsed = crate::utils::json::parse(&text).unwrap();
+                MemoryMap::from_json(&parsed).unwrap() == *m
+            },
+        );
+    }
+
+    #[test]
+    fn map_json_accepts_bare_actions_and_rejects_corruption() {
+        let bare = crate::utils::json::parse("[[0, 1], [2, 0]]").unwrap();
+        let m = MemoryMap::from_json(&bare).unwrap();
+        assert_eq!(m.placements[0].activation, MemKind::Llc);
+        assert_eq!(m.placements[1].weight, MemKind::Sram);
+        for bad in ["[[0]]", "[[0, 3]]", "[[0, -1]]", "[[0, 1.5]]", "{\"nodes\": 2}", "[0, 1]"] {
+            let j = crate::utils::json::parse(bad).unwrap();
+            assert!(MemoryMap::from_json(&j).is_err(), "accepted corrupt artifact {bad}");
+        }
     }
 
     #[test]

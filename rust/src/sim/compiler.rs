@@ -18,6 +18,7 @@
 use crate::graph::Graph;
 use crate::mapping::{MemKind, MemoryMap, NodePlacement};
 use super::liveness::Liveness;
+use super::segtree::MaxSegTree;
 use super::spec::ChipSpec;
 
 /// Result of compiling (rectifying) an agent-proposed map.
@@ -68,12 +69,12 @@ pub struct Compiler {
 }
 
 /// Incremental capacity accounting for a *valid* map — the compiler half
-/// of the move-evaluation engine (DESIGN.md §9).
+/// of the move-evaluation engine (DESIGN.md §9, §10).
 ///
 /// Validity (rectification is the identity) is equivalent to a set of
-/// per-memory constraints that this state tracks in closed form. DRAM is
-/// unconstrained: a placement that wants DRAM is never reassigned (there
-/// is nowhere left to spill), mirroring `fit_weight`/`fit_act`. For each
+/// per-memory constraints tracked in closed form. DRAM is unconstrained:
+/// a placement that wants DRAM is never reassigned (there is nowhere
+/// left to spill), mirroring `fit_weight`/`fit_act`. For each
 /// constrained memory `m` (LLC, SRAM):
 ///
 /// * `W[m] ≤ cap[m]` — weights are resident for the whole run and the
@@ -86,20 +87,127 @@ pub struct Compiler {
 ///   per-step condition equals the per-placement condition. The first
 ///   constraint is the `A = 0` floor of the second.
 ///
-/// With `W[m]` and the per-step loads `A[s][m]` (plus their per-memory
-/// peaks) maintained here, a single-node move is validity-checked in
-/// O(live-interval) instead of re-walking the whole graph.
+/// Two interchangeable backends share the surface and are selected by
+/// the `segtree` cargo feature: [`TreeCapacityState`] (default — lazy
+/// segment trees, O(log n) probes and commits) and
+/// [`ScanCapacityState`] (the reference closed-form scan, kept as the
+/// property-test oracle and the `perf_scaling` bench's "old path").
+#[cfg(feature = "segtree")]
+pub type CapacityState = TreeCapacityState;
+/// See [`TreeCapacityState`] — under `--no-default-features` the
+/// reference scan backend is the live implementation.
+#[cfg(not(feature = "segtree"))]
+pub type CapacityState = ScanCapacityState;
+
+/// Peak live-activation loads around one node's live interval `[s0, s1]`,
+/// per memory: over the interval (`in_peak`), over its complement
+/// (`out_peak`) and globally (`all_peak`). Computed once per probed node
+/// and shared by all nine candidate placements.
+#[derive(Clone, Copy, Debug, Default)]
+struct NodePeaks {
+    in_peak: [u64; 3],
+    out_peak: [u64; 3],
+    all_peak: [u64; 3],
+}
+
+/// The closed-form candidate check shared by both capacity backends:
+/// does moving a node carrying `w` weight bytes and `a` activation bytes
+/// from `old` to `cand` keep `W[m] + max_s A[s][m] ≤ cap[m]` for every
+/// constrained memory? Exactness:
+///
+/// * gaining memory: the new peak is `max(all_peak, in_peak + a)` — the
+///   out-of-interval part cannot exceed the global peak, and
+///   `in_peak + a ≥ in_peak` covers the interval side;
+/// * losing memory: every interval step carried `a`, so the reduced
+///   interval peak is exactly `in_peak − a` and the remainder is
+///   `out_peak` (only checked when the weight grows — otherwise every
+///   constraint in that memory loosens);
+/// * weight-only: the activation profile is untouched, only `W[m]` moves.
+fn fits_given_peaks(
+    chip: &ChipSpec,
+    w_used: &[u64; 3],
+    w: u64,
+    a: u64,
+    old: NodePlacement,
+    cand: NodePlacement,
+    peaks: &NodePeaks,
+) -> bool {
+    if cand == old {
+        return true;
+    }
+    let mut dw = [0i64; 3];
+    if w > 0 && cand.weight != old.weight {
+        dw[old.weight.index()] -= w as i64;
+        dw[cand.weight.index()] += w as i64;
+    }
+    let act_moved = a > 0 && cand.activation != old.activation;
+    // DRAM (index 0) is skipped: want-DRAM placements never spill.
+    for mi in 1..3 {
+        let capacity = chip.mems[mi].capacity;
+        let w_new = (w_used[mi] as i64 + dw[mi]) as u64;
+        if act_moved && cand.activation.index() == mi {
+            if w_new + peaks.all_peak[mi].max(peaks.in_peak[mi] + a) > capacity {
+                return false;
+            }
+        } else if act_moved && old.activation.index() == mi {
+            if dw[mi] > 0 && w_new + peaks.out_peak[mi].max(peaks.in_peak[mi] - a) > capacity {
+                return false;
+            }
+        } else if dw[mi] > 0 && w_new + peaks.all_peak[mi] > capacity {
+            return false;
+        }
+    }
+    true
+}
+
+/// Evaluate all nine candidate placements of `node` against one shared
+/// peak set. Indexed `weight.index() * 3 + activation.index()`.
+fn fits_all(
+    chip: &ChipSpec,
+    w_used: &[u64; 3],
+    g: &Graph,
+    map: &MemoryMap,
+    node: usize,
+    peaks: &NodePeaks,
+) -> [bool; 9] {
+    let old = map.placements[node];
+    let w = g.nodes[node].weight_bytes;
+    let a = g.nodes[node].ofm_bytes();
+    let mut out = [false; 9];
+    for (k, &cand) in NodePlacement::ALL.iter().enumerate() {
+        out[k] = fits_given_peaks(chip, w_used, w, a, old, cand, peaks);
+    }
+    out
+}
+
+/// Reference capacity backend: flat per-step loads plus maintained
+/// peaks — the pre-segment-tree closed form. Probes are O(live interval)
+/// with an O(n) scan in the weight-grows-while-activation-leaves corner;
+/// commits pay an O(n) peak rescan. Compiled unconditionally: it is the
+/// oracle the tree backend is property-tested against, the "old path" in
+/// the `perf_scaling` bench, and the live [`CapacityState`] under
+/// `--no-default-features`.
 #[derive(Clone, Debug, PartialEq, Eq)]
-pub struct CapacityState {
+pub struct ScanCapacityState {
     /// Total weight bytes resident per memory.
     w_used: [u64; 3],
     /// Live activation bytes per (execution step, memory), `act[s*3+m]`.
     act: Vec<u64>,
-    /// `max_s act[s*3+m]` per memory, kept in sync by [`Compiler::apply_move`].
+    /// `max_s act[s*3+m]` per memory, kept in sync by [`Self::apply`].
     peak_act: [u64; 3],
 }
 
-impl CapacityState {
+impl ScanCapacityState {
+    fn from_parts(w_used: [u64; 3], act: Vec<u64>, n: usize) -> ScanCapacityState {
+        let mut peak_act = [0u64; 3];
+        for s in 0..n {
+            for m in 0..3 {
+                peak_act[m] = peak_act[m].max(act[s * 3 + m]);
+            }
+        }
+        ScanCapacityState { w_used, act, peak_act }
+    }
+
     /// Total weight bytes currently mapped to `m`.
     pub fn weight_bytes(&self, m: MemKind) -> u64 {
         self.w_used[m.index()]
@@ -109,7 +217,264 @@ impl CapacityState {
     pub fn peak_activation_bytes(&self, m: MemKind) -> u64 {
         self.peak_act[m.index()]
     }
+
+    /// One O(n) pass over the load profile, splitting the peaks at the
+    /// node's live interval.
+    fn node_peaks(&self, s0: usize, s1: usize, n_steps: usize) -> NodePeaks {
+        let mut p = NodePeaks { all_peak: self.peak_act, ..NodePeaks::default() };
+        for s in 0..n_steps {
+            for mi in 1..3 {
+                let v = self.act[s * 3 + mi];
+                if (s0..=s1).contains(&s) {
+                    p.in_peak[mi] = p.in_peak[mi].max(v);
+                } else {
+                    p.out_peak[mi] = p.out_peak[mi].max(v);
+                }
+            }
+        }
+        p
+    }
+
+    /// Single-candidate probe — the original lazy scan: an interval scan
+    /// only when a constrained memory gains the activation, one full scan
+    /// only in the losing-memory-while-weight-grows corner.
+    pub fn move_fits(
+        &self,
+        chip: &ChipSpec,
+        g: &Graph,
+        lv: &Liveness,
+        map: &MemoryMap,
+        node: usize,
+        new: NodePlacement,
+    ) -> bool {
+        let old = map.placements[node];
+        if new == old {
+            return true;
+        }
+        let w = g.nodes[node].weight_bytes;
+        let a = g.nodes[node].ofm_bytes();
+        let mut dw = [0i64; 3];
+        if w > 0 && new.weight != old.weight {
+            dw[old.weight.index()] -= w as i64;
+            dw[new.weight.index()] += w as i64;
+        }
+        let act_moved = a > 0 && new.activation != old.activation;
+        let (s0, s1) = (lv.step_of[node], lv.last_use[node]);
+        // DRAM (index 0) is skipped: want-DRAM placements never spill.
+        for mi in 1..3 {
+            let capacity = chip.mems[mi].capacity;
+            let w_new = (self.w_used[mi] as i64 + dw[mi]) as u64;
+            if act_moved && new.activation.index() == mi {
+                // Load after adding `a` on the live interval. Using the
+                // global peak for the out-of-interval part is exact:
+                // max(peak, in_peak + a) = max(out_peak, in_peak + a)
+                // because in_peak + a ≥ in_peak.
+                let mut in_peak = 0u64;
+                for s in s0..=s1 {
+                    in_peak = in_peak.max(self.act[s * 3 + mi]);
+                }
+                if w_new + self.peak_act[mi].max(in_peak + a) > capacity {
+                    return false;
+                }
+            } else if act_moved && old.activation.index() == mi {
+                if dw[mi] > 0 {
+                    // Weight grows while the activation leaves: the
+                    // reduced peak needs an exact full scan.
+                    let mut peak = 0u64;
+                    for s in 0..lv.order.len() {
+                        let mut v = self.act[s * 3 + mi];
+                        if (s0..=s1).contains(&s) {
+                            v -= a;
+                        }
+                        peak = peak.max(v);
+                    }
+                    if w_new + peak > capacity {
+                        return false;
+                    }
+                }
+                // dw ≤ 0: every constraint in this memory only loosens.
+            } else if dw[mi] > 0 && w_new + self.peak_act[mi] > capacity {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Batched 9-way probe: one shared peak pass, nine closed-form checks.
+    pub fn move_fits_all(
+        &self,
+        chip: &ChipSpec,
+        g: &Graph,
+        lv: &Liveness,
+        map: &MemoryMap,
+        node: usize,
+    ) -> [bool; 9] {
+        let peaks = self.node_peaks(lv.step_of[node], lv.last_use[node], lv.order.len());
+        fits_all(chip, &self.w_used, g, map, node, &peaks)
+    }
+
+    /// Commit a single-node move. O(live interval) plus an O(n) peak
+    /// rescan of the two affected memories.
+    pub fn apply(
+        &mut self,
+        g: &Graph,
+        lv: &Liveness,
+        node: usize,
+        old: NodePlacement,
+        new: NodePlacement,
+    ) {
+        let w = g.nodes[node].weight_bytes;
+        if w > 0 && new.weight != old.weight {
+            self.w_used[old.weight.index()] -= w;
+            self.w_used[new.weight.index()] += w;
+        }
+        let a = g.nodes[node].ofm_bytes();
+        if a > 0 && new.activation != old.activation {
+            let (m0, m1) = (old.activation.index(), new.activation.index());
+            for s in lv.step_of[node]..=lv.last_use[node] {
+                self.act[s * 3 + m0] -= a;
+                self.act[s * 3 + m1] += a;
+            }
+            for mi in [m0, m1] {
+                self.peak_act[mi] =
+                    (0..lv.order.len()).map(|s| self.act[s * 3 + mi]).max().unwrap_or(0);
+            }
+        }
+    }
 }
+
+/// Segment-tree capacity backend (the default): one lazy range-add /
+/// range-max tree per memory over the per-step loads `A[s][m]`, giving
+/// O(log n) probes (`move_fits`/`move_fits_all`) and O(log n) commits
+/// (`apply`) with an O(1) global peak — no O(n) rescans anywhere on the
+/// search hot path (DESIGN.md §10).
+#[derive(Clone, Debug)]
+pub struct TreeCapacityState {
+    /// Total weight bytes resident per memory.
+    w_used: [u64; 3],
+    /// One tree per memory over the per-step live activation bytes.
+    act: [MaxSegTree; 3],
+}
+
+impl TreeCapacityState {
+    fn from_parts(w_used: [u64; 3], act: Vec<u64>, n: usize) -> TreeCapacityState {
+        let mut per_mem: [Vec<u64>; 3] =
+            [Vec::with_capacity(n), Vec::with_capacity(n), Vec::with_capacity(n)];
+        for s in 0..n {
+            for (m, col) in per_mem.iter_mut().enumerate() {
+                col.push(act[s * 3 + m]);
+            }
+        }
+        let [dram, llc, sram] = per_mem;
+        TreeCapacityState {
+            w_used,
+            act: [MaxSegTree::build(&dram), MaxSegTree::build(&llc), MaxSegTree::build(&sram)],
+        }
+    }
+
+    /// Total weight bytes currently mapped to `m`.
+    pub fn weight_bytes(&self, m: MemKind) -> u64 {
+        self.w_used[m.index()]
+    }
+
+    /// Peak live activation bytes in `m` over the whole execution. O(1).
+    pub fn peak_activation_bytes(&self, m: MemKind) -> u64 {
+        self.act[m.index()].root_max()
+    }
+
+    /// Three O(log n) queries per constrained memory.
+    fn node_peaks(&self, s0: usize, s1: usize, n_steps: usize) -> NodePeaks {
+        let mut p = NodePeaks::default();
+        for mi in 1..3 {
+            let t = &self.act[mi];
+            p.all_peak[mi] = t.root_max();
+            p.in_peak[mi] = t.range_max(s0, s1);
+            let mut out = 0u64;
+            if s0 > 0 {
+                out = out.max(t.range_max(0, s0 - 1));
+            }
+            if s1 + 1 < n_steps {
+                out = out.max(t.range_max(s1 + 1, n_steps - 1));
+            }
+            p.out_peak[mi] = out;
+        }
+        p
+    }
+
+    /// Single-candidate probe in O(log n).
+    pub fn move_fits(
+        &self,
+        chip: &ChipSpec,
+        g: &Graph,
+        lv: &Liveness,
+        map: &MemoryMap,
+        node: usize,
+        new: NodePlacement,
+    ) -> bool {
+        let old = map.placements[node];
+        if new == old {
+            return true;
+        }
+        let peaks = self.node_peaks(lv.step_of[node], lv.last_use[node], lv.order.len());
+        fits_given_peaks(
+            chip,
+            &self.w_used,
+            g.nodes[node].weight_bytes,
+            g.nodes[node].ofm_bytes(),
+            old,
+            new,
+            &peaks,
+        )
+    }
+
+    /// Batched 9-way probe: one shared O(log n) peak query set, nine
+    /// closed-form checks.
+    pub fn move_fits_all(
+        &self,
+        chip: &ChipSpec,
+        g: &Graph,
+        lv: &Liveness,
+        map: &MemoryMap,
+        node: usize,
+    ) -> [bool; 9] {
+        let peaks = self.node_peaks(lv.step_of[node], lv.last_use[node], lv.order.len());
+        fits_all(chip, &self.w_used, g, map, node, &peaks)
+    }
+
+    /// Commit a single-node move: two O(log n) range-adds.
+    pub fn apply(
+        &mut self,
+        g: &Graph,
+        lv: &Liveness,
+        node: usize,
+        old: NodePlacement,
+        new: NodePlacement,
+    ) {
+        let w = g.nodes[node].weight_bytes;
+        if w > 0 && new.weight != old.weight {
+            self.w_used[old.weight.index()] -= w;
+            self.w_used[new.weight.index()] += w;
+        }
+        let a = g.nodes[node].ofm_bytes();
+        if a > 0 && new.activation != old.activation {
+            let (s0, s1) = (lv.step_of[node], lv.last_use[node]);
+            self.act[old.activation.index()].range_add(s0, s1, -(a as i64));
+            self.act[new.activation.index()].range_add(s0, s1, a as i64);
+        }
+    }
+}
+
+/// Semantic equality: same weight residency and the same per-step load
+/// profile. The internal lazy-tag layout of two equal trees may differ
+/// (it depends on the update history), so equality materializes leaves.
+impl PartialEq for TreeCapacityState {
+    fn eq(&self, other: &Self) -> bool {
+        self.w_used == other.w_used
+            && self.act.iter().zip(&other.act).all(|(a, b)| a.leaf_values() == b.leaf_values())
+    }
+}
+
+impl Eq for TreeCapacityState {}
 
 /// Reusable scratch state for rectification — avoids per-call allocation
 /// in the trainer's hot loop (thousands of rectifications per generation).
@@ -258,8 +623,36 @@ impl Compiler {
     /// Build the incremental capacity accounting for a **valid** `map`
     /// (asserted — the closed-form constraints of [`CapacityState`] are
     /// exactly validity, so an invalid start would poison every
-    /// subsequent [`Self::move_fits`] answer). O(n).
+    /// subsequent [`Self::move_fits`] answer). O(n). The backend is
+    /// selected by the `segtree` feature (see [`CapacityState`]).
     pub fn capacity_state(&self, g: &Graph, lv: &Liveness, map: &MemoryMap) -> CapacityState {
+        let (w_used, act) = self.build_capacity_profile(g, lv, map);
+        CapacityState::from_parts(w_used, act, g.len())
+    }
+
+    /// The reference scan backend, available regardless of features — the
+    /// oracle for the tree≡scan property tests and the "old path" of the
+    /// `perf_scaling` bench.
+    pub fn scan_capacity_state(&self, g: &Graph, lv: &Liveness, map: &MemoryMap) -> ScanCapacityState {
+        let (w_used, act) = self.build_capacity_profile(g, lv, map);
+        ScanCapacityState::from_parts(w_used, act, g.len())
+    }
+
+    /// The segment-tree backend, available regardless of features (A/B
+    /// benches compare it against [`Self::scan_capacity_state`]).
+    pub fn tree_capacity_state(&self, g: &Graph, lv: &Liveness, map: &MemoryMap) -> TreeCapacityState {
+        let (w_used, act) = self.build_capacity_profile(g, lv, map);
+        TreeCapacityState::from_parts(w_used, act, g.len())
+    }
+
+    /// Shared capacity builder: weight residency + per-step live loads,
+    /// with the validity assert both backends rely on.
+    fn build_capacity_profile(
+        &self,
+        g: &Graph,
+        lv: &Liveness,
+        map: &MemoryMap,
+    ) -> ([u64; 3], Vec<u64>) {
         assert_eq!(map.len(), g.len(), "map size != graph size");
         let n = g.len();
         let mut w_used = [0u64; 3];
@@ -276,27 +669,21 @@ impl Compiler {
                 live[map.placements[dead].activation.index()] -= g.nodes[dead].ofm_bytes();
             }
         }
-        let mut peak_act = [0u64; 3];
-        for s in 0..n {
-            for m in 0..3 {
-                peak_act[m] = peak_act[m].max(act[s * 3 + m]);
-            }
-        }
         for m in 1..3 {
+            let peak = (0..n).map(|s| act[s * 3 + m]).max().unwrap_or(0);
             assert!(
-                w_used[m] + peak_act[m] <= self.chip.mems[m].capacity,
+                w_used[m] + peak <= self.chip.mems[m].capacity,
                 "capacity_state built from an invalid map ({} over capacity)",
                 MemKind::from_index(m).name()
             );
         }
-        CapacityState { w_used, act, peak_act }
+        (w_used, act)
     }
 
     /// Would moving `node` to placement `new` keep the map valid? Exact
     /// (it agrees with `rectify(moved map).valid()` — property-tested)
-    /// and cheap: O(live interval) for the common cases, with one O(n)
-    /// scan only in the corner where the weight moves into the memory
-    /// the activation is leaving.
+    /// and cheap: O(log n) on the default segment-tree backend,
+    /// O(live interval)-to-O(n) on the reference scan.
     ///
     /// `cap` must describe `map`, and `map` must be valid.
     pub fn move_fits(
@@ -308,62 +695,28 @@ impl Compiler {
         node: usize,
         new: NodePlacement,
     ) -> bool {
-        let old = map.placements[node];
-        if new == old {
-            return true;
-        }
-        let w = g.nodes[node].weight_bytes;
-        let a = g.nodes[node].ofm_bytes();
-        let mut dw = [0i64; 3];
-        if w > 0 && new.weight != old.weight {
-            dw[old.weight.index()] -= w as i64;
-            dw[new.weight.index()] += w as i64;
-        }
-        let act_moved = a > 0 && new.activation != old.activation;
-        let (s0, s1) = (lv.step_of[node], lv.last_use[node]);
-        // DRAM (index 0) is skipped: want-DRAM placements never spill.
-        for mi in 1..3 {
-            let capacity = self.chip.mems[mi].capacity;
-            let w_new = (cap.w_used[mi] as i64 + dw[mi]) as u64;
-            if act_moved && new.activation.index() == mi {
-                // Load after adding `a` on the live interval. Using the
-                // global peak for the out-of-interval part is exact:
-                // max(peak, in_peak + a) = max(out_peak, in_peak + a)
-                // because in_peak + a ≥ in_peak.
-                let mut in_peak = 0u64;
-                for s in s0..=s1 {
-                    in_peak = in_peak.max(cap.act[s * 3 + mi]);
-                }
-                if w_new + cap.peak_act[mi].max(in_peak + a) > capacity {
-                    return false;
-                }
-            } else if act_moved && old.activation.index() == mi {
-                if dw[mi] > 0 {
-                    // Weight grows while the activation leaves: the
-                    // reduced peak needs an exact full scan.
-                    let mut peak = 0u64;
-                    for s in 0..lv.order.len() {
-                        let mut v = cap.act[s * 3 + mi];
-                        if (s0..=s1).contains(&s) {
-                            v -= a;
-                        }
-                        peak = peak.max(v);
-                    }
-                    if w_new + peak > capacity {
-                        return false;
-                    }
-                }
-                // dw ≤ 0: every constraint in this memory only loosens.
-            } else if dw[mi] > 0 && w_new + cap.peak_act[mi] > capacity {
-                return false;
-            }
-        }
-        true
+        cap.move_fits(&self.chip, g, lv, map, node, new)
+    }
+
+    /// Batched capacity half of the 9-way move pricing: the validity of
+    /// **every** placement of `node`, sharing one interval-peak query set
+    /// across the nine candidates. Indexed
+    /// `weight.index() * 3 + activation.index()`; the entry at the
+    /// current placement is always `true`.
+    pub fn move_fits_all(
+        &self,
+        g: &Graph,
+        lv: &Liveness,
+        cap: &CapacityState,
+        map: &MemoryMap,
+        node: usize,
+    ) -> [bool; 9] {
+        cap.move_fits_all(&self.chip, g, lv, map, node)
     }
 
     /// Commit a single-node move into `cap` (the caller updates the map
-    /// itself). O(live interval) plus an O(n) peak rescan of the two
-    /// affected memories.
+    /// itself). O(log n) on the tree backend; O(live interval) plus an
+    /// O(n) peak rescan on the reference scan.
     pub fn apply_move(
         &self,
         g: &Graph,
@@ -373,23 +726,7 @@ impl Compiler {
         old: NodePlacement,
         new: NodePlacement,
     ) {
-        let w = g.nodes[node].weight_bytes;
-        if w > 0 && new.weight != old.weight {
-            cap.w_used[old.weight.index()] -= w;
-            cap.w_used[new.weight.index()] += w;
-        }
-        let a = g.nodes[node].ofm_bytes();
-        if a > 0 && new.activation != old.activation {
-            let (m0, m1) = (old.activation.index(), new.activation.index());
-            for s in lv.step_of[node]..=lv.last_use[node] {
-                cap.act[s * 3 + m0] -= a;
-                cap.act[s * 3 + m1] += a;
-            }
-            for mi in [m0, m1] {
-                cap.peak_act[mi] =
-                    (0..lv.order.len()).map(|s| cap.act[s * 3 + mi]).max().unwrap_or(0);
-            }
-        }
+        cap.apply(g, lv, node, old, new);
     }
 
     /// The native compiler's own mapping: sequential greedy with size
@@ -682,6 +1019,150 @@ mod tests {
                 }
             },
         );
+    }
+
+    /// The tentpole contract: the segment-tree backend must agree with
+    /// the reference scan on every probe — single and 9-way batched —
+    /// and land on the identical load profile after committing any
+    /// fitting move. ≥1k random DAG/move pairs (acceptance criterion).
+    #[test]
+    fn prop_tree_capacity_matches_scan_reference() {
+        let c = tiny_compiler();
+        check(
+            "segment-tree move_fits ≡ reference scan (probe + batch + apply)",
+            1000,
+            |gen| {
+                let g = random_dag(gen);
+                let n = g.len();
+                let actions: Vec<[usize; 2]> =
+                    (0..n).map(|_| [gen.usize_in(0, 2), gen.usize_in(0, 2)]).collect();
+                let node = gen.usize_in(0, n - 1);
+                let mv = NodePlacement {
+                    weight: MemKind::from_index(gen.usize_in(0, 2)),
+                    activation: MemKind::from_index(gen.usize_in(0, 2)),
+                };
+                ((g, MemoryMap::from_actions(&actions), node, mv), ())
+            },
+            |(g, proposal, node, mv), _| {
+                let lv = Liveness::analyze(g);
+                let start = c.rectify(g, &lv, proposal).map;
+                let scan = c.scan_capacity_state(g, &lv, &start);
+                let tree = c.tree_capacity_state(g, &lv, &start);
+                // Accessors agree.
+                for m in MemKind::ALL {
+                    if scan.weight_bytes(m) != tree.weight_bytes(m)
+                        || scan.peak_activation_bytes(m) != tree.peak_activation_bytes(m)
+                    {
+                        return false;
+                    }
+                }
+                // Single probe and 9-way batch agree for every candidate.
+                let batch_scan = scan.move_fits_all(&c.chip, g, &lv, &start, *node);
+                let batch_tree = tree.move_fits_all(&c.chip, g, &lv, &start, *node);
+                if batch_scan != batch_tree {
+                    return false;
+                }
+                for wi in 0..3 {
+                    for ai in 0..3 {
+                        let cand = NodePlacement {
+                            weight: MemKind::from_index(wi),
+                            activation: MemKind::from_index(ai),
+                        };
+                        let single_scan = scan.move_fits(&c.chip, g, &lv, &start, *node, cand);
+                        let single_tree = tree.move_fits(&c.chip, g, &lv, &start, *node, cand);
+                        if single_scan != batch_scan[wi * 3 + ai] || single_tree != single_scan {
+                            return false;
+                        }
+                    }
+                }
+                // Committing a fitting move lands both backends on the
+                // profile a fresh build from the moved map produces.
+                if tree.move_fits(&c.chip, g, &lv, &start, *node, *mv) {
+                    let mut moved = start.clone();
+                    let old = moved.placements[*node];
+                    moved.placements[*node] = *mv;
+                    let mut scan2 = scan.clone();
+                    let mut tree2 = tree.clone();
+                    scan2.apply(g, &lv, *node, old, *mv);
+                    tree2.apply(g, &lv, *node, old, *mv);
+                    scan2 == c.scan_capacity_state(g, &lv, &moved)
+                        && tree2 == c.tree_capacity_state(g, &lv, &moved)
+                } else {
+                    true
+                }
+            },
+        );
+    }
+
+    /// Degenerate graphs (satellite): a single-node graph has a
+    /// zero-length live interval at step 0 — every interval query hits
+    /// the `s0 == s1 == 0` edge — and both backends must still agree
+    /// with the rectify ground truth.
+    #[test]
+    fn capacity_state_single_node_graph() {
+        let c = tiny_compiler();
+        let g = Graph::new("one", vec![test_node(0, 100, 50)], vec![]).unwrap();
+        let lv = Liveness::analyze(&g);
+        let start = MemoryMap::all_dram(1);
+        let scan = c.scan_capacity_state(&g, &lv, &start);
+        let tree = c.tree_capacity_state(&g, &lv, &start);
+        for wi in 0..3 {
+            for ai in 0..3 {
+                let cand = NodePlacement {
+                    weight: MemKind::from_index(wi),
+                    activation: MemKind::from_index(ai),
+                };
+                let mut moved = start.clone();
+                moved.placements[0] = cand;
+                let truth = c.rectify(&g, &lv, &moved).valid();
+                assert_eq!(scan.move_fits(&c.chip, &g, &lv, &start, 0, cand), truth);
+                assert_eq!(tree.move_fits(&c.chip, &g, &lv, &start, 0, cand), truth);
+            }
+        }
+        // On the tiny chip (1 KB SRAM) a 100-byte weight + 50-byte
+        // activation fits anywhere: all 9 placements are valid.
+        assert_eq!(tree.move_fits_all(&c.chip, &g, &lv, &start, 0), [true; 9]);
+    }
+
+    /// Degenerate map (satellite): an all-DRAM map has zero load in
+    /// every constrained memory, so every per-step load profile is
+    /// all-zero and each node's interval is degenerate from the
+    /// accounting's point of view. Probes off it must match rectify.
+    #[test]
+    fn capacity_state_all_dram_map_degenerate_intervals() {
+        let c = tiny_compiler();
+        let g = chain(6, 400, 300);
+        let lv = Liveness::analyze(&g);
+        let start = MemoryMap::all_dram(6);
+        let scan = c.scan_capacity_state(&g, &lv, &start);
+        let tree = c.tree_capacity_state(&g, &lv, &start);
+        for m in MemKind::ALL {
+            assert_eq!(scan.peak_activation_bytes(m), if m == MemKind::Dram { 600 } else { 0 });
+            assert_eq!(tree.peak_activation_bytes(m), scan.peak_activation_bytes(m));
+        }
+        for node in 0..6 {
+            for wi in 0..3 {
+                for ai in 0..3 {
+                    let cand = NodePlacement {
+                        weight: MemKind::from_index(wi),
+                        activation: MemKind::from_index(ai),
+                    };
+                    let mut moved = start.clone();
+                    moved.placements[node] = cand;
+                    let truth = c.rectify(&g, &lv, &moved).valid();
+                    assert_eq!(
+                        tree.move_fits(&c.chip, &g, &lv, &start, node, cand),
+                        truth,
+                        "node {node} cand {cand:?}"
+                    );
+                    assert_eq!(
+                        scan.move_fits(&c.chip, &g, &lv, &start, node, cand),
+                        truth,
+                        "node {node} cand {cand:?} (scan)"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -22,7 +22,7 @@
 //! bit-identical results.
 
 use crate::graph::Graph;
-use crate::mapping::{MemoryMap, NodePlacement};
+use crate::mapping::{MemKind, MemoryMap, NodePlacement};
 use super::spec::ChipSpec;
 
 /// Latency evaluator. Stateless; construct once per chip.
@@ -116,13 +116,16 @@ pub struct CostTable {
     n: usize,
     /// Compute seconds per node (placement-independent).
     compute_s: Vec<f64>,
-    /// Weight-streaming seconds per node, per candidate weight memory.
-    weight_s: Vec<[f64; 3]>,
-    /// Output-write seconds per node, per candidate activation memory.
-    output_s: Vec<[f64; 3]>,
-    /// Seconds for ONE consumer to read this node's activation out of
-    /// each candidate memory.
-    read_s: Vec<[f64; 3]>,
+    /// Weight-streaming seconds, struct-of-arrays: `weight_s[m][i]` is
+    /// node `i`'s term with its weight in memory `m`. One contiguous
+    /// lane per memory keeps the batched 9-way probe walking sequential
+    /// memory instead of striding through per-node `[f64; 3]` rows.
+    weight_s: [Vec<f64>; 3],
+    /// Output-write seconds, `output_s[m][i]` (struct-of-arrays).
+    output_s: [Vec<f64>; 3],
+    /// Seconds for ONE consumer to read node `i`'s activation out of
+    /// memory `m`: `read_s[m][i]` (struct-of-arrays).
+    read_s: [Vec<f64>; 3],
     /// CSR predecessor lists (row offsets + flattened indices).
     pred_start: Vec<u32>,
     pred_idx: Vec<u32>,
@@ -139,29 +142,22 @@ impl CostTable {
     pub fn new(g: &Graph, chip: &ChipSpec) -> CostTable {
         let n = g.len();
         let mut compute_s = Vec::with_capacity(n);
-        let mut weight_s = Vec::with_capacity(n);
-        let mut output_s = Vec::with_capacity(n);
-        let mut read_s = Vec::with_capacity(n);
+        let mut weight_s: [Vec<f64>; 3] =
+            [Vec::with_capacity(n), Vec::with_capacity(n), Vec::with_capacity(n)];
+        let mut output_s: [Vec<f64>; 3] =
+            [Vec::with_capacity(n), Vec::with_capacity(n), Vec::with_capacity(n)];
+        let mut read_s: [Vec<f64>; 3] =
+            [Vec::with_capacity(n), Vec::with_capacity(n), Vec::with_capacity(n)];
         for node in &g.nodes {
             let eff = chip.op_efficiency(node.op);
             compute_s.push(node.macs as f64 / (chip.peak_macs_per_s * eff));
             let w = node.weight_bytes as f64;
-            weight_s.push(if node.weight_bytes > 0 {
-                [w / chip.mems[0].read_bw, w / chip.mems[1].read_bw, w / chip.mems[2].read_bw]
-            } else {
-                [0.0; 3]
-            });
             let a = node.ofm_bytes() as f64;
-            output_s.push([
-                a / chip.mems[0].write_bw,
-                a / chip.mems[1].write_bw,
-                a / chip.mems[2].write_bw,
-            ]);
-            read_s.push([
-                a / chip.mems[0].read_bw,
-                a / chip.mems[1].read_bw,
-                a / chip.mems[2].read_bw,
-            ]);
+            for m in 0..3 {
+                weight_s[m].push(if node.weight_bytes > 0 { w / chip.mems[m].read_bw } else { 0.0 });
+                output_s[m].push(a / chip.mems[m].write_bw);
+                read_s[m].push(a / chip.mems[m].read_bw);
+            }
         }
         let mut pred_start = Vec::with_capacity(n + 1);
         let mut pred_idx = Vec::new();
@@ -215,9 +211,9 @@ impl CostTable {
         let (s, e) = (self.pred_start[i] as usize, self.pred_start[i + 1] as usize);
         for &q in &self.pred_idx[s..e] {
             let q = q as usize;
-            input += self.read_s[q][place(q).activation.index()];
+            input += self.read_s[place(q).activation.index()][q];
         }
-        self.weight_s[i][p.weight.index()] + input + self.output_s[i][p.activation.index()]
+        self.weight_s[p.weight.index()][i] + input + self.output_s[p.activation.index()][i]
     }
 
     /// Wall seconds of node `i` (roofline max + launch overhead).
@@ -237,10 +233,10 @@ impl CostTable {
             let (s, e) = (self.pred_start[i] as usize, self.pred_start[i + 1] as usize);
             for &q in &self.pred_idx[s..e] {
                 let q = q as usize;
-                input += self.read_s[q][map.placements[q].activation.index()];
+                input += self.read_s[map.placements[q].activation.index()][q];
             }
             let mem =
-                self.weight_s[i][p.weight.index()] + input + self.output_s[i][p.activation.index()];
+                self.weight_s[p.weight.index()][i] + input + self.output_s[p.activation.index()][i];
             total += self.compute_s[i].max(mem) + self.overhead_s;
         }
         total
@@ -308,6 +304,93 @@ impl CostTable {
         }
     }
 
+    /// Price **all nine** placements of `node` against cached per-node
+    /// `totals` in one batched pass (DESIGN.md §10). Work shared across
+    /// the batch instead of paid nine times:
+    ///
+    /// * the placement-independent remainder — every node that is
+    ///   neither `node` nor one of its consumers — is folded into one
+    ///   compensated base sum;
+    /// * the node's own predecessor-read time is computed once (it does
+    ///   not depend on the node's own placement);
+    /// * consumer terms depend only on the node's **activation** memory,
+    ///   so they are recomputed once per activation candidate (3×, not
+    ///   9×), walking one contiguous struct-of-arrays lane.
+    ///
+    /// Totals accumulate through a Neumaier running sum, so each result
+    /// is ε-bounded — within 1e-9 relative — of the bit-exact
+    /// index-order re-sum [`Self::probe_move_latency`] performs
+    /// (property-tested; the compensated sum is *more* accurate, it just
+    /// associates differently). Results are indexed
+    /// `weight.index() * 3 + activation.index()`. `skip_scratch` is a
+    /// reusable n-length marker buffer (no steady-state allocation).
+    pub fn probe_all_placements(
+        &self,
+        map: &MemoryMap,
+        node: usize,
+        totals: &[f64],
+        skip_scratch: &mut Vec<bool>,
+    ) -> [f64; 9] {
+        debug_assert_eq!(totals.len(), self.n);
+        skip_scratch.clear();
+        skip_scratch.resize(self.n, false);
+        skip_scratch[node] = true;
+        let (cs, ce) = (self.succ_start[node] as usize, self.succ_start[node + 1] as usize);
+        for &c in &self.succ_idx[cs..ce] {
+            skip_scratch[c as usize] = true;
+        }
+        // Base: compensated sum of every unaffected node's cached term.
+        let mut base = Neumaier::default();
+        for (&t, &skip) in totals.iter().zip(skip_scratch.iter()) {
+            if !skip {
+                base.add(t);
+            }
+        }
+        // The node's own input time is independent of its own placement.
+        let mut input = 0.0;
+        let (ps, pe) = (self.pred_start[node] as usize, self.pred_start[node + 1] as usize);
+        for &q in &self.pred_idx[ps..pe] {
+            let q = q as usize;
+            input += self.read_s[map.placements[q].activation.index()][q];
+        }
+        // Consumer terms, once per candidate activation memory. Each
+        // consumer's term is counted once per *node*, not per edge:
+        // `Graph::new` permits parallel edges, the cached-total slots are
+        // per-node, and the slot-based `probe_move_latency` path writes a
+        // duplicated consumer once — this sum must agree with it.
+        let succ = &self.succ_idx[cs..ce];
+        let mut consumer_s = [0.0f64; 3];
+        for (ai, slot) in consumer_s.iter_mut().enumerate() {
+            let ovr = Some((
+                node,
+                NodePlacement {
+                    weight: map.placements[node].weight,
+                    activation: MemKind::from_index(ai),
+                },
+            ));
+            let mut acc = Neumaier::default();
+            for (k, &c) in succ.iter().enumerate() {
+                if succ[..k].contains(&c) {
+                    continue; // parallel edge: this consumer is already summed
+                }
+                acc.add(self.node_total_s(map, c as usize, ovr));
+            }
+            *slot = acc.value();
+        }
+        let mut out = [0.0f64; 9];
+        for wi in 0..3 {
+            for ai in 0..3 {
+                let mem = self.weight_s[wi][node] + input + self.output_s[ai][node];
+                let own = self.compute_s[node].max(mem) + self.overhead_s;
+                let mut total = base;
+                total.add(own);
+                total.add(consumer_s[ai]);
+                out[wi * 3 + ai] = total.value();
+            }
+        }
+        out
+    }
+
     /// Exact latency change caused by moving `node` from `old` to its
     /// current placement in `map` — O(preds + succs·preds) instead of
     /// O(graph), for mutation-local re-evaluation (single-decision EA
@@ -343,6 +426,52 @@ pub fn sum_in_order(terms: &[f64]) -> f64 {
         total += t;
     }
     total
+}
+
+/// Neumaier (improved Kahan–Babuška) compensated accumulator: tracks the
+/// rounding error of every add in a correction term, so the final value
+/// has O(1)·ulp error regardless of how many terms went in or in what
+/// order. This is what lets the batched move pricer reorder its
+/// accumulation (base + own + consumers) while staying within the 1e-9
+/// relative ε contract against the index-order sum (DESIGN.md §10) —
+/// all latency terms are positive, so the condition number of the sum is
+/// 1 and the bound is loose by orders of magnitude.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Neumaier {
+    sum: f64,
+    comp: f64,
+}
+
+impl Neumaier {
+    /// Fold one term into the running sum.
+    #[inline]
+    pub fn add(&mut self, x: f64) {
+        let t = self.sum + x;
+        if self.sum.abs() >= x.abs() {
+            self.comp += (self.sum - t) + x;
+        } else {
+            self.comp += (x - t) + self.sum;
+        }
+        self.sum = t;
+    }
+
+    /// The compensated total.
+    #[inline]
+    pub fn value(&self) -> f64 {
+        self.sum + self.comp
+    }
+}
+
+/// Compensated left-to-right sum — ε-equal (not bit-equal) to
+/// [`sum_in_order`]; within 1e-9 relative for positive term vectors
+/// (property-tested far tighter).
+#[inline]
+pub fn sum_compensated(terms: &[f64]) -> f64 {
+    let mut acc = Neumaier::default();
+    for &t in terms {
+        acc.add(t);
+    }
+    acc.value()
 }
 
 #[cfg(test)]
@@ -622,6 +751,142 @@ mod tests {
                 refreshed.iter().zip(&fresh).all(|(a, b)| a.to_bits() == b.to_bits())
             },
         );
+    }
+
+    /// The compensated-sum ε contract (DESIGN.md §10): Neumaier
+    /// accumulation over positive latency-scale terms stays within 1e-9
+    /// relative of the plain index-order sum.
+    #[test]
+    fn prop_compensated_sum_within_epsilon_of_in_order() {
+        check(
+            "sum_compensated ≡ sum_in_order within 1e-9 relative",
+            200,
+            |gen| {
+                // Latency-like terms spanning ~9 orders of magnitude.
+                let n = gen.usize_in(1, 4000);
+                let terms: Vec<f64> = (0..n)
+                    .map(|_| {
+                        let mag = gen.f64_in(-12.0, -3.0);
+                        10f64.powf(mag)
+                    })
+                    .collect();
+                (terms, ())
+            },
+            |terms, _| {
+                let plain = sum_in_order(terms);
+                let comp = sum_compensated(terms);
+                (comp - plain).abs() <= 1e-9 * plain
+            },
+        );
+    }
+
+    /// The batched 9-way probe must agree with the bit-exact per-move
+    /// probe for every one of the nine placements, within the 1e-9
+    /// relative ε the compensated accumulation is allowed.
+    #[test]
+    fn prop_probe_all_placements_matches_per_move_probe() {
+        let chip = ChipSpec::nnpi();
+        check(
+            "probe_all_placements ≡ 9 × probe_move_latency (ε-bounded)",
+            150,
+            |gen| {
+                let g = random_dag(gen);
+                let map = random_map(gen, g.len());
+                let node = gen.usize_in(0, g.len() - 1);
+                ((g, map, node), ())
+            },
+            |(g, map, node), _| {
+                let table = CostTable::new(g, &chip);
+                let mut totals = Vec::new();
+                table.node_totals_into(map, &mut totals);
+                let mut skip = Vec::new();
+                let batch = table.probe_all_placements(map, *node, &totals, &mut skip);
+                let mut scratch = Vec::new();
+                for wi in 0..3 {
+                    for ai in 0..3 {
+                        let p = crate::mapping::NodePlacement {
+                            weight: MemKind::from_index(wi),
+                            activation: MemKind::from_index(ai),
+                        };
+                        let exact =
+                            table.probe_move_latency(map, *node, p, &totals, &mut scratch);
+                        let fast = batch[wi * 3 + ai];
+                        if (fast - exact).abs() > 1e-9 * exact {
+                            return false;
+                        }
+                    }
+                }
+                // The entry at the current placement prices the unmoved
+                // map: ε-equal to the cached latency itself.
+                let cur = map.placements[*node];
+                let here = batch[cur.weight.index() * 3 + cur.activation.index()];
+                (here - table.latency(map)).abs() <= 1e-9 * here
+            },
+        );
+    }
+
+    /// `Graph::new` permits parallel edges (it only rejects
+    /// out-of-bounds, self-loops and cycles). A duplicated consumer must
+    /// be priced once per node on the batched path, exactly like the
+    /// slot-based per-move path — regression for an edge-multiplicity
+    /// double count in the consumer sum.
+    #[test]
+    fn probe_all_placements_handles_parallel_edges() {
+        let chip = ChipSpec::nnpi();
+        let nodes = (0..3).map(|i| test_node(i, 1 << 12, 1 << 10)).collect();
+        // Edge (0, 1) twice: node 1 reads node 0's activation through two
+        // parallel edges; node 1 appears twice in succs(0).
+        let g = Graph::new("dup", nodes, vec![(0, 1), (0, 1), (1, 2)]).unwrap();
+        let table = CostTable::new(&g, &chip);
+        let map = MemoryMap::all_dram(3);
+        let mut totals = Vec::new();
+        table.node_totals_into(&map, &mut totals);
+        let (mut skip, mut scratch) = (Vec::new(), Vec::new());
+        let batch = table.probe_all_placements(&map, 0, &totals, &mut skip);
+        for wi in 0..3 {
+            for ai in 0..3 {
+                let p = crate::mapping::NodePlacement {
+                    weight: MemKind::from_index(wi),
+                    activation: MemKind::from_index(ai),
+                };
+                let exact = table.probe_move_latency(&map, 0, p, &totals, &mut scratch);
+                let fast = batch[wi * 3 + ai];
+                assert!(
+                    (fast - exact).abs() <= 1e-9 * exact,
+                    "parallel-edge batch {fast} vs exact {exact} at ({wi},{ai})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn probe_all_placements_on_paper_workload() {
+        // End-to-end sanity on a real graph: batch ≡ fresh latency of
+        // each moved map, ε-bounded, for a node with consumers.
+        let chip = ChipSpec::nnpi();
+        let g = Workload::ResNet50.build();
+        let table = CostTable::new(&g, &chip);
+        let map = MemoryMap::all_dram(g.len());
+        let mut totals = Vec::new();
+        table.node_totals_into(&map, &mut totals);
+        let mut skip = Vec::new();
+        let node = g.len() / 2;
+        let batch = table.probe_all_placements(&map, node, &totals, &mut skip);
+        for wi in 0..3 {
+            for ai in 0..3 {
+                let mut moved = map.clone();
+                moved.placements[node] = crate::mapping::NodePlacement {
+                    weight: MemKind::from_index(wi),
+                    activation: MemKind::from_index(ai),
+                };
+                let exact = table.latency(&moved);
+                let fast = batch[wi * 3 + ai];
+                assert!(
+                    (fast - exact).abs() <= 1e-9 * exact,
+                    "placement ({wi},{ai}): batch {fast} vs exact {exact}"
+                );
+            }
+        }
     }
 
     #[test]

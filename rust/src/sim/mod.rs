@@ -9,6 +9,8 @@
 //!
 //! * [`spec`]     — chip parameters (capacities, bandwidths, compute rates);
 //! * [`liveness`] — activation live ranges over the execution order;
+//! * [`segtree`]  — lazy range-add/range-max tree over per-step loads
+//!                  (the capacity engine's O(log n) backend);
 //! * [`compiler`] — validity checking, rectification (ε), and the native
 //!                  heuristic mapper that is the paper's baseline;
 //! * [`latency`]  — the roofline latency model (the positive reward);
@@ -16,6 +18,7 @@
 
 pub mod spec;
 pub mod liveness;
+pub mod segtree;
 pub mod compiler;
 pub mod latency;
 pub mod noise;

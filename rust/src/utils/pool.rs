@@ -211,4 +211,53 @@ mod tests {
         let out: Vec<u8> = map_parallel_mut(&mut items, 4, || (), |_w, _i, t| *t);
         assert!(out.is_empty());
     }
+
+    /// A panicking worker must not deadlock the pool: `thread::scope`
+    /// joins every worker (the survivors keep draining the atomic
+    /// counter to completion) and then re-raises the panic on the caller
+    /// thread. If this contract broke — e.g. a channel-based rewrite
+    /// waiting forever on the dead worker's results — this test would
+    /// hang rather than fail, which is exactly the regression it guards.
+    #[test]
+    fn worker_panic_propagates_instead_of_deadlocking() {
+        let result = std::panic::catch_unwind(|| {
+            map_parallel(64, 4, |i| {
+                if i == 13 {
+                    panic!("worker 13 exploded");
+                }
+                i
+            })
+        });
+        assert!(result.is_err(), "worker panic was swallowed");
+    }
+
+    #[test]
+    fn worker_panic_propagates_on_mut_path() {
+        let result = std::panic::catch_unwind(|| {
+            let mut items: Vec<usize> = (0..200).collect();
+            map_parallel_mut(&mut items, 4, || (), |_w, i, slot| {
+                if i == 100 {
+                    panic!("mut worker exploded");
+                }
+                *slot += 1;
+                *slot
+            })
+        });
+        assert!(result.is_err(), "mut-path worker panic was swallowed");
+    }
+
+    #[test]
+    fn worker_panic_propagates_sequentially_too() {
+        // threads = 1 takes the no-thread fallback; the panic must
+        // surface identically there.
+        let result = std::panic::catch_unwind(|| {
+            map_parallel(8, 1, |i| {
+                if i == 3 {
+                    panic!("sequential panic");
+                }
+                i
+            })
+        });
+        assert!(result.is_err());
+    }
 }

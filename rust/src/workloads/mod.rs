@@ -25,6 +25,9 @@ pub enum Workload {
     ResNet50,
     ResNet101,
     Bert,
+    /// 10k-node deterministic scaling workload (not a paper network —
+    /// excluded from [`Workload::all`], which drives the figure benches).
+    SyntheticLarge,
 }
 
 impl Workload {
@@ -33,10 +36,13 @@ impl Workload {
             Workload::ResNet50 => "resnet50",
             Workload::ResNet101 => "resnet101",
             Workload::Bert => "bert",
+            Workload::SyntheticLarge => "synthetic-large",
         }
     }
 
-    /// All paper workloads, in paper order.
+    /// All **paper** workloads, in paper order (the figure benches and
+    /// paper-fidelity tests iterate these; the scaling workload is
+    /// addressed explicitly).
     pub fn all() -> [Workload; 3] {
         [Workload::ResNet50, Workload::ResNet101, Workload::Bert]
     }
@@ -47,7 +53,10 @@ impl Workload {
             "resnet50" | "r50" => Ok(Workload::ResNet50),
             "resnet101" | "r101" => Ok(Workload::ResNet101),
             "bert" | "bert-base" => Ok(Workload::Bert),
-            other => anyhow::bail!("unknown workload '{other}' (expected resnet50|resnet101|bert)"),
+            "synthetic-large" | "synthetic_large" | "syn10k" => Ok(Workload::SyntheticLarge),
+            other => anyhow::bail!(
+                "unknown workload '{other}' (expected resnet50|resnet101|bert|synthetic-large)"
+            ),
         }
     }
 
@@ -57,15 +66,18 @@ impl Workload {
             Workload::ResNet50 => resnet::resnet50(),
             Workload::ResNet101 => resnet::resnet101(),
             Workload::Bert => bert::bert_base(),
+            Workload::SyntheticLarge => synthetic::synthetic_large(),
         }
     }
 
-    /// Node count the paper reports for this workload.
+    /// Node count the paper reports for this workload (generator target
+    /// for the synthetic scaling graph).
     pub fn paper_node_count(self) -> usize {
         match self {
             Workload::ResNet50 => 57,
             Workload::ResNet101 => 108,
             Workload::Bert => 376,
+            Workload::SyntheticLarge => synthetic::SYNTHETIC_LARGE_NODES,
         }
     }
 }
@@ -103,6 +115,18 @@ mod tests {
     fn parse_workload_names() {
         assert_eq!(Workload::parse("r50").unwrap(), Workload::ResNet50);
         assert_eq!(Workload::parse("BERT").unwrap(), Workload::Bert);
+        assert_eq!(Workload::parse("synthetic-large").unwrap(), Workload::SyntheticLarge);
+        assert_eq!(Workload::parse("syn10k").unwrap(), Workload::SyntheticLarge);
         assert!(Workload::parse("vgg").is_err());
+    }
+
+    #[test]
+    fn synthetic_large_workload_builds_at_target_size() {
+        let w = Workload::SyntheticLarge;
+        let g = w.build();
+        assert_eq!(g.len(), w.paper_node_count());
+        assert_eq!(w.name(), "synthetic-large");
+        // Deliberately NOT in the paper set.
+        assert!(!Workload::all().contains(&w));
     }
 }

@@ -34,6 +34,35 @@ impl Default for SyntheticConfig {
     }
 }
 
+/// Node count of the `synthetic-large` scaling workload (ROADMAP "Larger
+/// graphs"): an order of magnitude beyond BERT-base's 376 nodes.
+pub const SYNTHETIC_LARGE_NODES: usize = 10_000;
+
+/// Fixed generator seed for the scaling workloads, so `synthetic-large`
+/// is one reproducible graph, not a family.
+const SCALING_SEED: u64 = 0x5CA1_AB1E;
+
+/// The 10k-node scaling workload behind `Workload::SyntheticLarge`.
+pub fn synthetic_large() -> Graph {
+    sized_synthetic(SYNTHETIC_LARGE_NODES)
+}
+
+/// Deterministic scaling graph with `nodes` nodes — the `perf_scaling`
+/// bench sweeps n ∈ {1k, 4k, 10k} through this one generator. Tensor
+/// sizes are scaled down relative to [`SyntheticConfig::default`] so the
+/// *total* bytes at 10k nodes stay in the same regime as the paper
+/// workloads against the modelled 4 MB SRAM / 24 MB LLC: fast-memory
+/// placement remains a real decision instead of being always-invalid.
+pub fn sized_synthetic(nodes: usize) -> Graph {
+    let cfg = SyntheticConfig {
+        nodes,
+        weight_log2_range: (8.0, 17.0), // 256 B .. 128 KB
+        act_log2_range: (8.0, 15.0),    // 256 B .. 32 KB
+        ..Default::default()
+    };
+    synthetic(&cfg, &mut Rng::new(SCALING_SEED))
+}
+
 /// Generate a random layered DAG. Node 0 is an input; every other node has
 /// at least one predecessor with a smaller index, so the graph is connected
 /// and already topologically ordered.
@@ -123,6 +152,32 @@ mod tests {
         let b = synthetic(&cfg, &mut Rng::new(5));
         assert_eq!(a.edges, b.edges);
         assert_eq!(a.total_weight_bytes(), b.total_weight_bytes());
+    }
+
+    #[test]
+    fn sized_synthetic_is_deterministic_and_scales() {
+        for &n in &[100usize, 1000] {
+            let a = sized_synthetic(n);
+            let b = sized_synthetic(n);
+            assert_eq!(a.len(), n);
+            assert_eq!(a.edges, b.edges, "sized_synthetic({n}) not deterministic");
+            assert_eq!(a.total_weight_bytes(), b.total_weight_bytes());
+        }
+    }
+
+    #[test]
+    fn synthetic_large_leaves_room_in_fast_memory() {
+        // The scaling workload must keep fast-memory placement a real
+        // decision: total weights well above LLC+SRAM (so capacity binds)
+        // but single tensors far below SRAM (so single moves can fit).
+        let g = synthetic_large();
+        assert_eq!(g.len(), SYNTHETIC_LARGE_NODES);
+        let total_w = g.total_weight_bytes();
+        assert!(total_w > (28 << 20), "weights {total_w} don't pressure LLC+SRAM");
+        let max_w = g.nodes.iter().map(|n| n.weight_bytes).max().unwrap();
+        assert!(max_w <= (128 << 10), "single weight {max_w} exceeds the 128 KB ceiling");
+        let max_a = g.nodes.iter().map(|n| n.ofm_bytes()).max().unwrap();
+        assert!(max_a <= (64 << 10), "single activation {max_a} too large");
     }
 
     #[test]
