@@ -1,0 +1,181 @@
+//! serve_bench: load generator for the placement-serving subsystem
+//! (ISSUE 4 tentpole acceptance).
+//!
+//! Replays a Zipf-distributed `map` request mix over the paper set +
+//! `synthetic-large` against an in-process [`Broker`], timing every
+//! request, then drives the anytime refinement of the hottest workload
+//! through chunked `polish` requests and reads back the published
+//! improvement curve. Writes `BENCH_serve.json`
+//! (`schema: egrl-bench-serve-v1`, uploaded by CI) with throughput,
+//! p50/p99 latency split hit vs. cold, hit rate and the anytime curve.
+//!
+//! Acceptance targets checked here (reported as booleans, like every
+//! other bench in this repo):
+//! * cache-hit p99 ≥ **100×** faster than the mean cold (miss) path;
+//! * the anytime curve is monotone **non-increasing** in latency —
+//!   background publication never regresses a served map.
+//!
+//! Background workers are disabled (`workers: 0`) so the replay is
+//! deterministic; the curve is produced by the same refinement engine
+//! the workers run, driven synchronously via `polish`.
+
+use std::time::Instant;
+
+use egrl::env::EnvConfig;
+use egrl::serve::{Broker, ServeOptions};
+use egrl::utils::json::{parse, Json};
+use egrl::utils::Rng;
+use egrl::workloads::Workload;
+
+/// Nearest-rank percentile of an ascending-sorted sample.
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+fn summary(label: &str, sample: &mut Vec<f64>) -> (Json, f64, f64) {
+    sample.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+    let mean = if sample.is_empty() {
+        f64::NAN
+    } else {
+        sample.iter().sum::<f64>() / sample.len() as f64
+    };
+    let p50 = percentile(sample, 0.50);
+    let p99 = percentile(sample, 0.99);
+    println!(
+        "  {label:<6} n={:<4} mean {:>9.1} µs   p50 {:>9.1} µs   p99 {:>9.1} µs",
+        sample.len(),
+        mean * 1e6,
+        p50 * 1e6,
+        p99 * 1e6
+    );
+    let json = Json::obj(vec![
+        ("count", Json::Num(sample.len() as f64)),
+        ("mean_us", Json::Num(mean * 1e6)),
+        ("p50_us", Json::Num(p50 * 1e6)),
+        ("p99_us", Json::Num(p99 * 1e6)),
+    ]);
+    (json, mean, p99)
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("== bench: serve_bench — Zipf replay against the placement broker ==");
+    // Zipf(s = 1) over rank: resnet50 is the hot head, the 10k-node
+    // scaling workload the cold tail.
+    let mix =
+        [Workload::ResNet50, Workload::Bert, Workload::ResNet101, Workload::SyntheticLarge];
+    let zipf: Vec<f64> = (1..=mix.len()).map(|k| 1.0 / k as f64).collect();
+    let zipf_total: f64 = zipf.iter().sum();
+
+    let broker = Broker::new(ServeOptions {
+        cache_cap: 16,
+        deadline_ms: 10,
+        refine_budget: 36_000,
+        workers: 0,
+        seed: 1,
+        env: EnvConfig::default(),
+    });
+
+    const REQUESTS: usize = 400;
+    let mut rng = Rng::new(42);
+    let mut hit_s: Vec<f64> = Vec::new();
+    let mut cold_s: Vec<f64> = Vec::new();
+    let replay_t0 = Instant::now();
+    for _ in 0..REQUESTS {
+        let mut x = rng.uniform() * zipf_total;
+        let mut pick = mix[mix.len() - 1];
+        for (&w, &weight) in mix.iter().zip(&zipf) {
+            if x < weight {
+                pick = w;
+                break;
+            }
+            x -= weight;
+        }
+        let line = format!(r#"{{"op":"map","workload":"{}"}}"#, pick.name());
+        let t0 = Instant::now();
+        let resp = broker.handle(&line);
+        let dt = t0.elapsed().as_secs_f64();
+        let j = parse(&resp)?;
+        match j.get("cache").and_then(Json::as_str) {
+            Some("hit") => hit_s.push(dt),
+            Some("miss") => cold_s.push(dt),
+            _ => anyhow::bail!("unexpected serve response: {resp}"),
+        }
+    }
+    let wall_s = replay_t0.elapsed().as_secs_f64();
+    let throughput_rps = REQUESTS as f64 / wall_s;
+    println!("\nreplayed {REQUESTS} requests in {wall_s:.3} s ({throughput_rps:.0} req/s)");
+    let (hit_json, _hit_mean, hit_p99) = summary("hit", &mut hit_s);
+    let (cold_json, cold_mean, _cold_p99) = summary("cold", &mut cold_s);
+    let hit_rate = hit_s.len() as f64 / REQUESTS as f64;
+    println!("  hit rate {:.3}", hit_rate);
+
+    // Acceptance: cache-hit p99 ≥ 100× faster than cold mapping.
+    let cold_over_hit_p99 = cold_mean / hit_p99;
+    let latency_target_met = cold_over_hit_p99 >= 100.0;
+    println!("  cold mean / hit p99 = {cold_over_hit_p99:.0}x (target >= 100x)");
+
+    // Anytime-improvement curve: refine the hot workload through the
+    // same engine the background workers run, publishing through the
+    // monotone cache rule, then read the curve back.
+    for _ in 0..8 {
+        let resp = broker.handle(r#"{"op":"polish","workload":"resnet50","budget":4500}"#);
+        anyhow::ensure!(parse(&resp)?.get("error").is_none(), "polish failed: {resp}");
+    }
+    let fp = broker.fingerprint_of(Workload::ResNet50);
+    let curve = broker.cache().curve(fp);
+    let curve_monotone = curve
+        .windows(2)
+        .all(|pair| pair[1].1 <= pair[0].1 && pair[1].0 >= pair[0].0);
+    let final_entry = broker.cache().peek(fp).expect("hot entry resident");
+    println!(
+        "  anytime curve: {} publishes, latency {:.1} µs -> {:.1} µs (speedup {:.3}), monotone: {curve_monotone}",
+        curve.len(),
+        curve.first().map(|p| p.1 * 1e6).unwrap_or(f64::NAN),
+        curve.last().map(|p| p.1 * 1e6).unwrap_or(f64::NAN),
+        final_entry.speedup
+    );
+
+    let stats_line = broker.handle(r#"{"op":"stats"}"#);
+    let stats = parse(&stats_line)?;
+
+    let json = Json::obj(vec![
+        ("schema", Json::str("egrl-bench-serve-v1")),
+        (
+            "workload_mix",
+            Json::arr(mix.iter().map(|w| Json::str(w.name()))),
+        ),
+        ("zipf_exponent", Json::Num(1.0)),
+        ("requests", Json::Num(REQUESTS as f64)),
+        ("wall_s", Json::Num(wall_s)),
+        ("throughput_rps", Json::Num(throughput_rps)),
+        ("hit", hit_json),
+        ("cold", cold_json),
+        ("hit_rate", Json::Num(hit_rate)),
+        ("cold_over_hit_p99", Json::Num(cold_over_hit_p99)),
+        ("target_cold_over_hit_p99", Json::Num(100.0)),
+        ("latency_target_met", Json::Bool(latency_target_met)),
+        (
+            "anytime_curve",
+            Json::arr(curve.iter().map(|&(iters, lat)| {
+                Json::obj(vec![
+                    ("refine_iters", Json::Num(iters as f64)),
+                    ("true_latency_s", Json::Num(lat)),
+                ])
+            })),
+        ),
+        ("curve_monotone", Json::Bool(curve_monotone)),
+        ("final_speedup", Json::Num(final_entry.speedup)),
+        ("broker_stats", stats),
+    ]);
+    std::fs::write("BENCH_serve.json", json.to_string_pretty())?;
+    println!("\nwrote BENCH_serve.json");
+    println!(
+        "targets (ISSUE 4): hit p99 {}x faster than cold (>= 100x: {}), anytime curve monotone: {}",
+        cold_over_hit_p99 as i64, latency_target_met, curve_monotone
+    );
+    Ok(())
+}

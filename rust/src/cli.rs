@@ -106,6 +106,19 @@ SUBCOMMANDS:
              --save-map FILE  write the best map as a mapping artifact
              --set key=value  config override (repeatable)
              --config FILE    key=value config file
+  serve      Placement-serving broker: JSON-lines requests (one object
+             per line) against a fingerprint-keyed map cache with
+             background anytime refinement
+             ops: {\"op\":\"map\",\"workload\":W[,\"return_map\":true]}
+                  {\"op\":\"polish\",\"workload\":W[,\"budget\":N]}
+                  {\"op\":\"stats\"} | {\"op\":\"evict\",\"workload\":W}
+                  {\"op\":\"shutdown\"}
+             --tcp ADDR       serve a TCP listener instead of stdin/stdout
+             --warm DIR       warm-start the cache from saved artifacts
+             --save DIR       persist cache entries as artifacts on exit
+             --seed N                              (default 0)
+             --set key=value  serve_cache_cap=64 serve_deadline_ms=25
+                              serve_refine_budget=18000 serve_workers=1
   polish     Online serving path: refine a precompiled mapping artifact
              with the batched local-search engine
              --workload ...   workload the map belongs to

@@ -87,6 +87,18 @@ pub struct EgrlConfig {
     /// rungs across the elites. Empty (the default) falls back to the
     /// single global `refine_temp`.
     pub refine_temps: Vec<f64>,
+    /// `egrl serve`: map-cache capacity in entries (LRU beyond it).
+    pub serve_cache_cap: usize,
+    /// `egrl serve`: per-request deadline (ms) for inline refinement on
+    /// a cache miss; 0 answers misses immediately with the best
+    /// available (warm/compiler) map.
+    pub serve_deadline_ms: u64,
+    /// `egrl serve`: total refinement move budget per cache entry
+    /// (inline + background), in environment iterations.
+    pub serve_refine_budget: u64,
+    /// `egrl serve`: background anytime-refinement worker threads; 0
+    /// disables background refinement (deadline-phase and `polish` only).
+    pub serve_workers: usize,
 }
 
 impl Default for EgrlConfig {
@@ -123,6 +135,10 @@ impl Default for EgrlConfig {
             refine_moves: 200,
             refine_temp: 0.0,
             refine_temps: Vec::new(),
+            serve_cache_cap: 64,
+            serve_deadline_ms: 25,
+            serve_refine_budget: 18_000,
+            serve_workers: 1,
         }
     }
 }
@@ -163,8 +179,32 @@ impl EgrlConfig {
         }
         match key {
             "seed" => self.seed = p(key, value)?,
-            "pop_size" => self.pop_size = p(key, value)?,
-            "elites" => self.elites = p(key, value)?,
+            "pop_size" => {
+                let v: usize = p(key, value)?;
+                anyhow::ensure!(v >= 1, "pop_size must be >= 1, got {v}");
+                anyhow::ensure!(
+                    self.refine_elites <= v,
+                    "pop_size {v} is below refine_elites {} (lower refine_elites first)",
+                    self.refine_elites
+                );
+                anyhow::ensure!(
+                    self.elites <= v,
+                    "pop_size {v} is below elites {} (lower elites first)",
+                    self.elites
+                );
+                self.pop_size = v;
+            }
+            "elites" => {
+                let v: usize = p(key, value)?;
+                // Same invariant class as refine_elites: more shielded
+                // elites than population members is impossible.
+                anyhow::ensure!(
+                    v <= self.pop_size,
+                    "elites {v} exceeds pop_size {} (set pop_size first)",
+                    self.pop_size
+                );
+                self.elites = v;
+            }
             "boltzmann_fraction" => self.boltzmann_fraction = p(key, value)?,
             "mut_prob" => self.mut_prob = p(key, value)?,
             "mut_std" => self.mut_std = p(key, value)?,
@@ -192,10 +232,29 @@ impl EgrlConfig {
                 self.eval_measurements = v;
             }
             "boltzmann_init_temp" => self.boltzmann_init_temp = p(key, value)?,
-            "threads" => self.threads = p(key, value)?,
+            "threads" => {
+                let v: usize = p(key, value)?;
+                // `threads = 0` used to reach the worker pool as a
+                // nonsensical "no workers" request; every consumer wants
+                // ≥ 1 (the pool clamps, but the intent is a typo).
+                anyhow::ensure!(v >= 1, "threads must be >= 1, got {v}");
+                self.threads = v;
+            }
             "steps_per_episode" => self.steps_per_episode = p(key, value)?,
             "pg_action_noise" => self.pg_action_noise = nonneg_f64(key, value)?,
-            "refine_elites" => self.refine_elites = p(key, value)?,
+            "refine_elites" => {
+                let v: usize = p(key, value)?;
+                // More refined elites than population members cannot be
+                // satisfied; catching it here (against the *current*
+                // pop_size — set pop_size first when raising both) turns
+                // a silent clamp into a config error.
+                anyhow::ensure!(
+                    v <= self.pop_size,
+                    "refine_elites {v} exceeds pop_size {} (set pop_size first)",
+                    self.pop_size
+                );
+                self.refine_elites = v;
+            }
             "refine_moves" => self.refine_moves = p(key, value)?,
             "refine_temp" => self.refine_temp = nonneg_f64(key, value)?,
             "refine_temps" => {
@@ -207,8 +266,49 @@ impl EgrlConfig {
                 }
                 self.refine_temps = temps;
             }
+            "serve_cache_cap" => {
+                let v: usize = p(key, value)?;
+                anyhow::ensure!(v >= 1, "serve_cache_cap must be >= 1, got {v}");
+                self.serve_cache_cap = v;
+            }
+            "serve_deadline_ms" => self.serve_deadline_ms = p(key, value)?,
+            "serve_refine_budget" => self.serve_refine_budget = p(key, value)?,
+            "serve_workers" => self.serve_workers = p(key, value)?,
             other => anyhow::bail!("unknown config key '{other}'"),
         }
+        Ok(())
+    }
+
+    /// Cross-key sanity check for *constructed* configs (struct-literal
+    /// construction bypasses the per-key guards in [`Self::set`]). The
+    /// trainer and the serving broker call this up front so a bad config
+    /// fails fast with a named error instead of panicking — or silently
+    /// clamping — deep inside the worker pool.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.threads >= 1, "threads must be >= 1, got {}", self.threads);
+        anyhow::ensure!(self.pop_size >= 1, "pop_size must be >= 1, got {}", self.pop_size);
+        anyhow::ensure!(
+            self.refine_elites <= self.pop_size,
+            "refine_elites {} exceeds pop_size {}",
+            self.refine_elites,
+            self.pop_size
+        );
+        anyhow::ensure!(
+            self.elites <= self.pop_size,
+            "elites {} exceeds pop_size {}",
+            self.elites,
+            self.pop_size
+        );
+        anyhow::ensure!(
+            self.eval_measurements >= 1,
+            "eval_measurements must be >= 1, got {}",
+            self.eval_measurements
+        );
+        anyhow::ensure!(
+            self.serve_cache_cap >= 1,
+            "serve_cache_cap must be >= 1, got {}",
+            self.serve_cache_cap
+        );
         Ok(())
     }
 
@@ -319,6 +419,72 @@ mod tests {
         // Empty value clears it (falls back to the global refine_temp).
         c.set("refine_temps", "").unwrap();
         assert!(c.refine_temps.is_empty());
+    }
+
+    /// ISSUE 4 satellite: `threads = 0` and `refine_elites > pop_size`
+    /// used to slip through `set` and only surface (as a clamp or a
+    /// panic) inside the pool — both must now be config errors.
+    #[test]
+    fn set_rejects_zero_threads_and_oversized_refine_elites() {
+        let mut c = EgrlConfig::default();
+        let err = c.set("threads", "0").unwrap_err().to_string();
+        assert!(err.contains("threads"), "unhelpful error: {err}");
+        assert_eq!(c.threads, 1, "rejected set must not clobber the value");
+        c.set("threads", "4").unwrap();
+        assert_eq!(c.threads, 4);
+
+        // pop_size defaults to 20: 21 refined elites is impossible.
+        let err = c.set("refine_elites", "21").unwrap_err().to_string();
+        assert!(err.contains("pop_size"), "unhelpful error: {err}");
+        assert_eq!(c.refine_elites, 0);
+        c.set("refine_elites", "20").unwrap(); // == pop_size is allowed
+        // And lowering pop_size below the ladder is rejected symmetrically.
+        let err = c.set("pop_size", "10").unwrap_err().to_string();
+        assert!(err.contains("refine_elites"), "unhelpful error: {err}");
+        assert!(c.set("pop_size", "0").is_err());
+        // Raising both in the documented order works.
+        c.set("refine_elites", "5").unwrap();
+        c.set("pop_size", "10").unwrap();
+        assert_eq!((c.pop_size, c.refine_elites), (10, 5));
+        // `elites` carries the same invariant, symmetrically.
+        assert!(c.set("elites", "11").is_err());
+        c.set("elites", "10").unwrap();
+        assert!(c.set("pop_size", "9").is_err(), "pop_size sank below elites");
+        c.set("elites", "2").unwrap();
+        c.set("pop_size", "9").unwrap();
+        assert_eq!((c.pop_size, c.elites), (9, 2));
+    }
+
+    #[test]
+    fn validate_catches_constructed_invariant_breaks() {
+        assert!(EgrlConfig::default().validate().is_ok());
+        let bad = EgrlConfig { threads: 0, ..Default::default() };
+        assert!(bad.validate().is_err());
+        let bad = EgrlConfig { refine_elites: 21, ..Default::default() };
+        assert!(bad.validate().unwrap_err().to_string().contains("refine_elites"));
+        let bad = EgrlConfig { elites: 40, ..Default::default() };
+        assert!(bad.validate().is_err());
+        let bad = EgrlConfig { serve_cache_cap: 0, ..Default::default() };
+        assert!(bad.validate().is_err());
+        let bad = EgrlConfig { eval_measurements: 0, ..Default::default() };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn serve_keys_wired_with_guards() {
+        let mut c = EgrlConfig::default();
+        assert_eq!(c.serve_cache_cap, 64);
+        assert_eq!(c.serve_workers, 1);
+        c.set("serve_cache_cap", "8").unwrap();
+        c.set("serve_deadline_ms", "50").unwrap();
+        c.set("serve_refine_budget", "9000").unwrap();
+        c.set("serve_workers", "0").unwrap(); // 0 = background refinement off
+        assert_eq!(c.serve_cache_cap, 8);
+        assert_eq!(c.serve_deadline_ms, 50);
+        assert_eq!(c.serve_refine_budget, 9000);
+        assert_eq!(c.serve_workers, 0);
+        assert!(c.set("serve_cache_cap", "0").is_err());
+        assert!(c.set("serve_refine_budget", "abc").is_err());
     }
 
     #[test]

@@ -126,6 +126,10 @@ impl Trainer {
         mode: Mode,
         runtime: Option<&Runtime>,
     ) -> anyhow::Result<Trainer> {
+        // Fail fast on invariant-breaking configs (threads = 0,
+        // refine_elites > pop_size, ...) instead of clamping or
+        // panicking later inside the worker pool.
+        cfg.validate()?;
         let mut rng = Rng::new(cfg.seed);
         let (runner, sac, gnn_seed) = match runtime {
             Some(rt) => {
@@ -477,6 +481,27 @@ mod tests {
     fn ea_trainer(steps: u64, seed: u64) -> Trainer {
         let env = Arc::new(MappingEnv::nnpi(Workload::ResNet50.build(), seed));
         Trainer::new(env, quick_cfg(steps, seed), Mode::EaOnly, None).unwrap()
+    }
+
+    /// ISSUE 4 satellite regression: a directly-constructed config with
+    /// `threads = 0` or `refine_elites > pop_size` must fail at
+    /// `Trainer::new` with a named error — not panic (or silently
+    /// clamp) later inside the rollout/refinement pool.
+    #[test]
+    fn trainer_rejects_invalid_configs_up_front() {
+        let env = Arc::new(MappingEnv::nnpi(Workload::ResNet50.build(), 1));
+        let bad_threads = EgrlConfig { threads: 0, ..quick_cfg(100, 1) };
+        let err = Trainer::new(env.clone(), bad_threads, Mode::EaOnly, None)
+            .err()
+            .expect("threads = 0 accepted")
+            .to_string();
+        assert!(err.contains("threads"), "unhelpful error: {err}");
+        let bad_refine = EgrlConfig { refine_elites: 11, ..quick_cfg(100, 1) };
+        let err = Trainer::new(env, bad_refine, Mode::EaOnly, None)
+            .err()
+            .expect("refine_elites > pop_size accepted")
+            .to_string();
+        assert!(err.contains("refine_elites"), "unhelpful error: {err}");
     }
 
     #[test]

@@ -405,8 +405,11 @@ impl MappingEnv {
 
     /// Price **all nine placements** of `node` on top of the state's
     /// current map in one batched pass, without committing: one shared
-    /// capacity-peak query set ([`Compiler::move_fits_all`]), one shared
-    /// latency recompute ([`CostTable::probe_all_placements`]), then one
+    /// capacity-peak query set ([`Compiler::move_fits_all`], itself
+    /// prefiltered by O(1) `W[m]` + root-peak bounds), one shared
+    /// latency recompute over the **surviving** placements only
+    /// ([`CostTable::probe_placements_masked`] — adaptive batch pricing:
+    /// capacity-infeasible candidates are never priced), then one
     /// noise draw per **valid** placement in placement-index order
     /// (`w * 3 + a`).
     ///
@@ -423,11 +426,12 @@ impl MappingEnv {
         self.iterations.fetch_add(MoveBatch::MOVES, Ordering::Relaxed);
         let fits =
             self.compiler.move_fits_all(&self.graph, &self.liveness, &st.cap, &st.map, node);
-        let lats = self.cost_table.probe_all_placements(
+        let lats = self.cost_table.probe_placements_masked(
             &st.map,
             node,
             &st.totals,
             &mut st.skip_scratch,
+            &fits,
         );
         let mut prices: [Option<MovePrice>; 9] = [None; 9];
         for k in 0..9 {
@@ -786,6 +790,44 @@ mod tests {
                     Some((_, price)) => price.reward == best_reward,
                     None => best_reward == f64::NEG_INFINITY,
                 }
+            },
+        );
+    }
+
+    /// Adaptive batch pricing end-to-end: the surviving (valid) entries
+    /// of `try_move_batch` must carry noise-free latencies bit-identical
+    /// to the unfiltered `probe_all_placements` pass — the prefilter can
+    /// skip pricing, never change it.
+    #[test]
+    fn prop_batch_survivor_prices_bit_identical_to_unfiltered() {
+        use crate::testing::prop::check;
+        let e = env();
+        let n = e.num_nodes();
+        check(
+            "try_move_batch survivors ≡ unfiltered probe_all_placements (bits)",
+            80,
+            |gen| {
+                let actions: Vec<[usize; 2]> =
+                    (0..n).map(|_| [gen.usize_in(0, 2), gen.usize_in(0, 2)]).collect();
+                let start = e
+                    .compiler
+                    .rectify(&e.graph, &e.liveness, &MemoryMap::from_actions(&actions))
+                    .map;
+                let node = gen.usize_in(0, n - 1);
+                ((start, node), ())
+            },
+            |(start, node), _| {
+                let mut st = e.search_state(start);
+                let mut rng = Rng::new(17);
+                let batch = e.try_move_batch(&mut st, *node, &mut rng);
+                let mut totals = Vec::new();
+                e.cost_table.node_totals_into(start, &mut totals);
+                let mut skip = Vec::new();
+                let full = e.cost_table.probe_all_placements(start, *node, &totals, &mut skip);
+                (0..9).all(|k| match batch.prices[k] {
+                    Some(p) => p.true_latency_s.to_bits() == full[k].to_bits(),
+                    None => true,
+                })
             },
         );
     }

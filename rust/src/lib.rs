@@ -38,6 +38,7 @@ pub mod rl;
 pub mod ea;
 pub mod agents;
 pub mod coordinator;
+pub mod serve;
 pub mod metrics;
 pub mod viz;
 pub mod cli;

@@ -18,6 +18,7 @@ use egrl::env::{MappingEnv, MoveBatch};
 use egrl::mapping::MemoryMap;
 use egrl::metrics::RunLog;
 use egrl::runtime::Runtime;
+use egrl::serve::{Broker, ServeOptions};
 use egrl::sim::spec::ChipSpec;
 use egrl::utils::json::Json;
 use egrl::utils::Rng;
@@ -35,6 +36,7 @@ fn run() -> anyhow::Result<()> {
     let cli = Cli::parse_env()?;
     match cli.subcommand.as_str() {
         "train" => cmd_train(&cli),
+        "serve" => cmd_serve(&cli),
         "polish" => cmd_polish(&cli),
         "compile" => cmd_compile(&cli),
         "smoke" => cmd_smoke(&cli),
@@ -76,6 +78,9 @@ fn cmd_train(cli: &Cli) -> anyhow::Result<()> {
     cfg.total_steps = cli.get_u64("steps", cfg.total_steps)?;
     cfg.seed = cli.get_u64("seed", 0)?;
     cli.apply_overrides(&mut cfg)?;
+    // Fail fast on invariant-breaking configs (threads = 0,
+    // refine_elites > pop_size, ...) before any env/pool work starts.
+    cfg.validate()?;
 
     let env = Arc::new(MappingEnv::new(
         workload.build(),
@@ -157,6 +162,41 @@ fn cmd_train(cli: &Cli) -> anyhow::Result<()> {
     if let Some(path) = cli.get("save-map") {
         std::fs::write(path, best_map.to_json().to_string_pretty())?;
         println!("best map written to {path} (feed it to `egrl polish --map {path}`)");
+    }
+    Ok(())
+}
+
+/// The placement-serving subsystem (DESIGN.md §11): a JSON-lines broker
+/// over stdin/stdout (default) or a TCP listener, with a
+/// fingerprint-keyed LRU map cache, per-request deadlines and background
+/// anytime refinement workers.
+fn cmd_serve(cli: &Cli) -> anyhow::Result<()> {
+    let mut cfg = EgrlConfig { seed: cli.get_u64("seed", 0)?, ..EgrlConfig::default() };
+    cli.apply_overrides(&mut cfg)?;
+    // Fail fast on invariant-breaking configs — never panic in the pool.
+    cfg.validate()?;
+    let opts = ServeOptions::from_config(&cfg);
+    eprintln!(
+        "egrl serve: cache {} entries, deadline {} ms, refine budget {} moves, {} workers",
+        opts.cache_cap, opts.deadline_ms, opts.refine_budget, opts.workers
+    );
+    let broker = Broker::new(opts);
+    if let Some(dir) = cli.get("warm") {
+        let loaded = broker.warm_start_dir(std::path::Path::new(dir))?;
+        eprintln!("egrl serve: warm-started {loaded} artifact(s) from {dir}");
+    }
+    match cli.get("tcp") {
+        Some(addr) => {
+            let listener = std::net::TcpListener::bind(addr)
+                .map_err(|e| anyhow::anyhow!("binding TCP listener '{addr}': {e}"))?;
+            eprintln!("egrl serve: listening on {}", listener.local_addr()?);
+            broker.serve_tcp(listener)?;
+        }
+        None => broker.serve_stdio()?,
+    }
+    if let Some(dir) = cli.get("save") {
+        let written = broker.save_dir(std::path::Path::new(dir))?;
+        eprintln!("egrl serve: saved {written} cache artifact(s) to {dir}");
     }
     Ok(())
 }

@@ -167,14 +167,36 @@ impl MemoryMap {
     }
 
     /// Parse a mapping artifact (the [`Self::to_json`] object, or a bare
-    /// `[[w, a], ...]` actions array). Every action index is validated —
-    /// a corrupt artifact is an error, not a panic.
+    /// `[[w, a], ...]` actions array). Every action index is validated,
+    /// a `schema` tag other than `egrl-map-v1` is rejected, and a
+    /// declared `nodes` count must match the actions array (catching
+    /// truncated artifacts) — a corrupt artifact is an error, not a
+    /// panic. The serve cache's disk warm start depends on this.
     pub fn from_json(j: &Json) -> anyhow::Result<MemoryMap> {
+        if let Some(schema) = j.get("schema") {
+            let tag = schema
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("mapping artifact: 'schema' is not a string"))?;
+            anyhow::ensure!(
+                tag == "egrl-map-v1",
+                "unsupported mapping artifact schema '{tag}' (expected 'egrl-map-v1')"
+            );
+        }
         let actions = j
             .get("actions")
             .unwrap_or(j)
             .as_arr()
             .ok_or_else(|| anyhow::anyhow!("mapping artifact: expected an 'actions' array"))?;
+        if let Some(nodes) = j.get("nodes") {
+            let n = nodes
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("mapping artifact: 'nodes' is not a number"))?;
+            anyhow::ensure!(
+                n == actions.len() as f64,
+                "mapping artifact declares {n} nodes but carries {} actions (truncated?)",
+                actions.len()
+            );
+        }
         let mut placements = Vec::with_capacity(actions.len());
         for (i, entry) in actions.iter().enumerate() {
             let pair = entry
@@ -370,6 +392,45 @@ mod tests {
             let j = crate::utils::json::parse(bad).unwrap();
             assert!(MemoryMap::from_json(&j).is_err(), "accepted corrupt artifact {bad}");
         }
+    }
+
+    /// ISSUE 4 satellite: the malformed-artifact surface the serve
+    /// cache's disk warm start leans on. Truncated **text** fails at the
+    /// parser; a wrong **version tag** and a **node-count mismatch**
+    /// (truncated actions array) fail in `from_json` with named errors;
+    /// out-of-range node indices were already rejected.
+    #[test]
+    fn map_json_rejects_wrong_schema_and_truncation() {
+        let good = MemoryMap::from_actions(&[[0, 1], [2, 0], [1, 1]]);
+        let text = good.to_json().to_string_pretty();
+        // Truncated JSON text: a parse error, never a panic.
+        for cut in [text.len() / 4, text.len() / 2, text.len() - 2] {
+            assert!(crate::utils::json::parse(&text[..cut]).is_err(), "parsed truncation {cut}");
+        }
+        // Wrong version tag.
+        let wrong_tag =
+            crate::utils::json::parse(&text.replace("egrl-map-v1", "egrl-map-v2")).unwrap();
+        let err = MemoryMap::from_json(&wrong_tag).unwrap_err().to_string();
+        assert!(err.contains("egrl-map-v2"), "error must name the bad tag: {err}");
+        // Non-string schema.
+        let j = crate::utils::json::parse(r#"{"schema": 1, "actions": [[0, 0]]}"#).unwrap();
+        assert!(MemoryMap::from_json(&j).is_err());
+        // Declared node count disagrees with the actions array — a
+        // truncated-artifact fingerprint.
+        let j = crate::utils::json::parse(
+            r#"{"schema": "egrl-map-v1", "nodes": 3, "actions": [[0, 0], [1, 1]]}"#,
+        )
+        .unwrap();
+        let err = MemoryMap::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "error must flag truncation: {err}");
+        // Extended (serve) artifacts with extra keys still parse.
+        let j = crate::utils::json::parse(
+            r#"{"schema": "egrl-map-v1", "nodes": 1, "actions": [[2, 1]],
+                "fingerprint": "00", "workload": "resnet50", "speedup": 1.5}"#,
+        )
+        .unwrap();
+        let m = MemoryMap::from_json(&j).unwrap();
+        assert_eq!(m.placements[0].weight, MemKind::Sram);
     }
 
     #[test]

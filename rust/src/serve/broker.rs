@@ -1,0 +1,1035 @@
+//! The request broker: JSON-lines placement serving over stdin/stdout or
+//! a TCP listener, fronted by the fingerprint-keyed [`MapCache`] and
+//! backed by a pool of background anytime-refinement workers.
+//!
+//! Protocol — one JSON object per line in, one per line out:
+//!
+//! * `{"op":"map","workload":"resnet50"}` — serve the best known map for
+//!   the workload's fingerprint. Cache hit → immediate. Miss → the
+//!   broker builds the environment, starts from the disk warm-start
+//!   artifact (if one matches the fingerprint) or the native compiler
+//!   map, refines **inline until the per-request deadline**
+//!   (`serve_deadline_ms`), answers with the best map found, and hands
+//!   the remaining `serve_refine_budget` to the background workers.
+//!   `{"return_map":true}` includes the actions array in the response.
+//! * `{"op":"polish","workload":...,"budget":N}` — synchronous
+//!   refinement of the cached entry (creating it from the compiler map
+//!   if absent); publishes through the monotone cache rule.
+//! * `{"op":"stats"}` — hit/miss/staleness counters, cache state and a
+//!   per-entry summary.
+//! * `{"op":"evict","workload":...}` — drop the entry.
+//! * `{"op":"shutdown"}` — stop serving (background workers stop at the
+//!   next chunk boundary; queued jobs are abandoned).
+//!
+//! **Coalescing**: at most one background refinement job per fingerprint
+//! is ever in flight. A request that would enqueue refinement while one
+//! is running is *coalesced* — counted, served from the current entry,
+//! and flagged `"refining":true`; the in-flight job's publishes will
+//! benefit it retroactively through the cache.
+//!
+//! **Coherence**: workers publish via [`MapCache::publish_if_better`],
+//! which re-checks the noise-free latency under the cache lock — a
+//! reader can never observe a regression, and the per-entry anytime
+//! curve is monotone non-increasing (DESIGN.md §11).
+//!
+//! Malformed requests produce `{"error": ...}` responses; they never
+//! take the broker down.
+
+use std::collections::{HashMap, HashSet};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpListener;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::config::EgrlConfig;
+use crate::env::{EnvConfig, MappingEnv, MoveBatch};
+use crate::mapping::MemoryMap;
+use crate::sim::spec::ChipSpec;
+use crate::utils::json::{parse, Json};
+use crate::utils::pool::JobQueue;
+use crate::workloads::Workload;
+
+use super::cache::{CacheEntry, MapCache};
+use super::fingerprint::{fingerprint, Fingerprint};
+use super::refiner::AnytimeRefiner;
+
+/// Inline (deadline-bounded) refinement slice: 4 node visits between
+/// clock checks, so the deadline is honored at ~tens-of-µs granularity
+/// even on the 10k-node workload.
+const INLINE_CHUNK: u64 = 4 * MoveBatch::MOVES;
+/// Background refinement slice: 32 node visits between stop-flag checks
+/// and publish opportunities.
+const BACKGROUND_CHUNK: u64 = 32 * MoveBatch::MOVES;
+
+/// Serving configuration, lifted from the `serve_*` keys of
+/// [`EgrlConfig`].
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Map-cache capacity in entries (LRU beyond it).
+    pub cache_cap: usize,
+    /// Per-request deadline for inline refinement on a miss; 0 answers
+    /// misses immediately with the warm/compiler map.
+    pub deadline_ms: u64,
+    /// Total refinement move budget per cache entry (inline +
+    /// background), in env iterations.
+    pub refine_budget: u64,
+    /// Background refinement worker threads; 0 disables background
+    /// refinement entirely (deadline-phase and `polish` only).
+    pub workers: usize,
+    /// Base RNG seed (environments and refiners derive from it).
+    pub seed: u64,
+    /// Environment (reward/noise) configuration.
+    pub env: EnvConfig,
+}
+
+impl ServeOptions {
+    pub fn from_config(cfg: &EgrlConfig) -> ServeOptions {
+        ServeOptions {
+            cache_cap: cfg.serve_cache_cap,
+            deadline_ms: cfg.serve_deadline_ms,
+            refine_budget: cfg.serve_refine_budget,
+            workers: cfg.serve_workers,
+            seed: cfg.seed,
+            env: cfg.env_config(),
+        }
+    }
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions::from_config(&EgrlConfig::default())
+    }
+}
+
+/// One background refinement job (at most one in flight per fingerprint).
+struct RefineJob {
+    workload: Workload,
+    fp: Fingerprint,
+    start: MemoryMap,
+    budget: u64,
+    seed: u64,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+struct Counters {
+    requests: u64,
+    map_hits: u64,
+    map_misses: u64,
+    /// Hits served while a background refinement of the same entry was
+    /// in flight (the served map is one publish behind the search).
+    stale_hits: u64,
+    /// Requests that wanted refinement while a job for the same
+    /// fingerprint was already in flight (duplicate coalescing).
+    coalesced: u64,
+    errors: u64,
+    background_jobs: u64,
+    polishes: u64,
+    warm_starts: u64,
+    warm_rejected: u64,
+}
+
+/// The placement-serving broker. All methods take `&self`; the broker is
+/// shared by reference between the request thread and the scoped
+/// background workers.
+pub struct Broker {
+    opts: ServeOptions,
+    /// Lazily-built environments and their fingerprints, by workload name.
+    envs: Mutex<HashMap<&'static str, (Arc<MappingEnv>, Fingerprint)>>,
+    cache: MapCache,
+    /// Fingerprints with a background job queued or running.
+    in_flight: Mutex<HashSet<Fingerprint>>,
+    /// Reverse index for stats/save responses.
+    fp_workload: Mutex<HashMap<Fingerprint, Workload>>,
+    /// Disk warm-start pool: artifact maps awaiting first use, keyed by
+    /// the fingerprint persisted inside them (validated lazily against
+    /// the live environment).
+    warm: Mutex<HashMap<Fingerprint, MemoryMap>>,
+    queue: JobQueue<RefineJob>,
+    stop: AtomicBool,
+    counters: Mutex<Counters>,
+}
+
+impl Broker {
+    pub fn new(opts: ServeOptions) -> Broker {
+        let cache = MapCache::new(opts.cache_cap);
+        Broker {
+            opts,
+            envs: Mutex::new(HashMap::new()),
+            cache,
+            in_flight: Mutex::new(HashSet::new()),
+            fp_workload: Mutex::new(HashMap::new()),
+            warm: Mutex::new(HashMap::new()),
+            queue: JobQueue::new(),
+            stop: AtomicBool::new(false),
+            counters: Mutex::new(Counters::default()),
+        }
+    }
+
+    /// The cache (benches read curves and stats directly).
+    pub fn cache(&self) -> &MapCache {
+        &self.cache
+    }
+
+    /// The fingerprint this broker serves a workload under (builds the
+    /// environment on first touch — the "cold" cost).
+    pub fn fingerprint_of(&self, w: Workload) -> Fingerprint {
+        self.env_for(w).1
+    }
+
+    fn bump(&self, f: impl FnOnce(&mut Counters)) {
+        f(&mut self.counters.lock().expect("counters poisoned"));
+    }
+
+    fn env_for(&self, w: Workload) -> (Arc<MappingEnv>, Fingerprint) {
+        if let Some(pair) = self.envs.lock().expect("envs poisoned").get(w.name()) {
+            return pair.clone();
+        }
+        // Build OUTSIDE the lock: the cold cost (graph build + cost
+        // table over up to 10k nodes) must not stall workers that only
+        // need an already-resident environment. A concurrent duplicate
+        // build is deterministic (same seed/config), so first-insert
+        // wins and the loser's copy is dropped.
+        let env = Arc::new(MappingEnv::new(
+            w.build(),
+            ChipSpec::nnpi(),
+            self.opts.env.clone(),
+            self.opts.seed,
+        ));
+        let fp = fingerprint(&env.graph, &env.compiler.chip);
+        let pair = self
+            .envs
+            .lock()
+            .expect("envs poisoned")
+            .entry(w.name())
+            .or_insert((env, fp))
+            .clone();
+        self.fp_workload.lock().expect("fp index poisoned").insert(pair.1, w);
+        pair
+    }
+
+    fn refining(&self, fp: Fingerprint) -> bool {
+        self.in_flight.lock().expect("in-flight poisoned").contains(&fp)
+    }
+
+    // ---- request handling --------------------------------------------------
+
+    /// Handle one request line; always returns one response line.
+    pub fn handle(&self, line: &str) -> String {
+        self.bump(|c| c.requests += 1);
+        let resp = match self.handle_inner(line) {
+            Ok(j) => j,
+            Err(e) => {
+                self.bump(|c| c.errors += 1);
+                Json::obj(vec![("error", Json::str(format!("{e:#}")))])
+            }
+        };
+        resp.to_string_compact()
+    }
+
+    fn handle_inner(&self, line: &str) -> anyhow::Result<Json> {
+        let req = parse(line)?;
+        let op = req
+            .get("op")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("request missing 'op'"))?;
+        match op {
+            "map" => self.op_map(&req),
+            "polish" => self.op_polish(&req),
+            "stats" => Ok(self.op_stats()),
+            "evict" => self.op_evict(&req),
+            "shutdown" => {
+                self.stop.store(true, Ordering::SeqCst);
+                Ok(Json::obj(vec![("op", Json::str("shutdown")), ("ok", Json::Bool(true))]))
+            }
+            other => anyhow::bail!("unknown op '{other}' (expected map|polish|stats|evict|shutdown)"),
+        }
+    }
+
+    fn req_workload(&self, req: &Json) -> anyhow::Result<Workload> {
+        let name = req
+            .get("workload")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("request missing 'workload'"))?;
+        Workload::parse(name)
+    }
+
+    fn op_map(&self, req: &Json) -> anyhow::Result<Json> {
+        let t0 = Instant::now();
+        let w = self.req_workload(req)?;
+        let return_map = req.get("return_map").and_then(Json::as_bool).unwrap_or(false);
+        let (env, fp) = self.env_for(w);
+
+        if let Some(entry) = self.cache.get(fp) {
+            self.bump(|c| c.map_hits += 1);
+            if self.refining(fp) {
+                self.bump(|c| c.stale_hits += 1);
+            }
+            // Hot-entry top-up: hits keep feeding background budget until
+            // the entry converges or exhausts `serve_refine_budget`.
+            let refining =
+                if !entry.converged && entry.refine_iters < self.opts.refine_budget {
+                    let remaining = self.opts.refine_budget - entry.refine_iters;
+                    self.maybe_enqueue(w, fp, entry.map.clone(), remaining)
+                } else {
+                    self.refining(fp)
+                };
+            return Ok(map_response(w, fp, "hit", None, &entry, refining, return_map));
+        }
+        self.bump(|c| c.map_misses += 1);
+
+        // Best-available start: a fingerprint-matching warm artifact
+        // (validated against the live environment now) or the compiler map.
+        let warm = self.warm.lock().expect("warm pool poisoned").remove(&fp);
+        let (start, source) = match warm {
+            Some(m)
+                if m.len() == env.num_nodes()
+                    && env.compiler.is_valid(&env.graph, &env.liveness, &m) =>
+            {
+                self.bump(|c| c.warm_starts += 1);
+                (m, "warm")
+            }
+            Some(_) => {
+                self.bump(|c| c.warm_rejected += 1);
+                (env.compiler_map.clone(), "compiler")
+            }
+            None => (env.compiler_map.clone(), "compiler"),
+        };
+
+        // Inline anytime phase: refine until the per-request deadline
+        // (or the whole budget / convergence, whichever first).
+        let mut refiner = AnytimeRefiner::new(&env, &start, self.opts.seed ^ fp.0[1]);
+        if self.opts.deadline_ms > 0 {
+            let deadline = t0 + Duration::from_millis(self.opts.deadline_ms);
+            loop {
+                let remaining = self.opts.refine_budget.saturating_sub(refiner.moves());
+                if remaining < MoveBatch::MOVES || Instant::now() >= deadline {
+                    break;
+                }
+                let out = refiner.step_chunk(INLINE_CHUNK.min(remaining));
+                if out.spent == 0 || out.converged {
+                    break;
+                }
+            }
+        }
+        let true_latency_s = refiner.best_true_latency_s();
+        let entry = CacheEntry {
+            map: refiner.best_map().clone(),
+            true_latency_s,
+            speedup: env.baseline_true_latency_s / true_latency_s,
+            refine_iters: refiner.moves(),
+            version: 0,
+            converged: refiner.converged(),
+        };
+        self.cache.insert(fp, entry.clone());
+        let remaining = self.opts.refine_budget.saturating_sub(refiner.moves());
+        let refining = if refiner.converged() {
+            false
+        } else {
+            self.maybe_enqueue(w, fp, entry.map.clone(), remaining)
+        };
+        Ok(map_response(w, fp, "miss", Some(source), &entry, refining, return_map))
+    }
+
+    /// Enqueue a background refinement job unless one is already in
+    /// flight for `fp` (**duplicate in-flight coalescing**), workers are
+    /// disabled, or the remaining budget is below one batch. Returns
+    /// whether a refinement is in flight after the call.
+    fn maybe_enqueue(&self, w: Workload, fp: Fingerprint, start: MemoryMap, budget: u64) -> bool {
+        if budget < MoveBatch::MOVES {
+            return self.refining(fp);
+        }
+        {
+            let mut in_flight = self.in_flight.lock().expect("in-flight poisoned");
+            if in_flight.contains(&fp) {
+                drop(in_flight);
+                self.bump(|c| c.coalesced += 1);
+                return true;
+            }
+            if self.opts.workers == 0 {
+                return false;
+            }
+            in_flight.insert(fp);
+        }
+        let seed = {
+            let mut c = self.counters.lock().expect("counters poisoned");
+            c.background_jobs += 1;
+            self.opts.seed
+                ^ fp.0[0].rotate_left(13)
+                ^ c.background_jobs.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        };
+        if !self.queue.push(RefineJob { workload: w, fp, start, budget, seed }) {
+            // Queue already closed (shutdown): roll the reservation back.
+            self.in_flight.lock().expect("in-flight poisoned").remove(&fp);
+            return false;
+        }
+        true
+    }
+
+    fn op_polish(&self, req: &Json) -> anyhow::Result<Json> {
+        let w = self.req_workload(req)?;
+        let (env, fp) = self.env_for(w);
+        let budget = req
+            .get("budget")
+            .and_then(Json::as_f64)
+            .map(|x| x as u64)
+            .unwrap_or(self.opts.refine_budget);
+        anyhow::ensure!(
+            budget >= MoveBatch::MOVES,
+            "polish budget {budget} is below one batch ({} placements)",
+            MoveBatch::MOVES
+        );
+        // Polishing an uncached workload seeds the entry first.
+        let entry = match self.cache.peek(fp) {
+            Some(e) => e,
+            None => {
+                let lat = env.cost_table.latency(&env.compiler_map);
+                let e = CacheEntry {
+                    map: env.compiler_map.clone(),
+                    true_latency_s: lat,
+                    speedup: env.baseline_true_latency_s / lat,
+                    refine_iters: 0,
+                    version: 0,
+                    converged: false,
+                };
+                self.cache.insert(fp, e.clone());
+                e
+            }
+        };
+        let speedup_before = entry.speedup;
+        let seed = {
+            let mut c = self.counters.lock().expect("counters poisoned");
+            c.polishes += 1;
+            self.opts.seed ^ fp.0[1].rotate_left(7) ^ c.polishes.wrapping_mul(0xC2B2_AE3D_27D4_EB4F)
+        };
+        let mut refiner = AnytimeRefiner::new(&env, &entry.map, seed);
+        let out = refiner.step_chunk(budget);
+        let lat = refiner.best_true_latency_s();
+        let published = self.cache.publish_if_better(
+            fp,
+            refiner.best_map(),
+            lat,
+            env.baseline_true_latency_s / lat,
+            out.spent,
+            refiner.converged(),
+        );
+        let after = self.cache.peek(fp).map(|e| e.speedup).unwrap_or(speedup_before);
+        Ok(Json::obj(vec![
+            ("op", Json::str("polish")),
+            ("workload", Json::str(w.name())),
+            ("fingerprint", Json::str(fp.hex())),
+            ("moves", Json::Num(out.spent as f64)),
+            ("published", Json::Bool(published)),
+            ("speedup_before", Json::Num(speedup_before)),
+            ("speedup", Json::Num(after)),
+            ("converged", Json::Bool(refiner.converged())),
+        ]))
+    }
+
+    fn op_evict(&self, req: &Json) -> anyhow::Result<Json> {
+        let w = self.req_workload(req)?;
+        let (_, fp) = self.env_for(w);
+        let evicted = self.cache.evict(fp);
+        Ok(Json::obj(vec![
+            ("op", Json::str("evict")),
+            ("workload", Json::str(w.name())),
+            ("fingerprint", Json::str(fp.hex())),
+            ("evicted", Json::Bool(evicted)),
+        ]))
+    }
+
+    fn op_stats(&self) -> Json {
+        let c = *self.counters.lock().expect("counters poisoned");
+        let s = self.cache.stats();
+        let fpw = self.fp_workload.lock().expect("fp index poisoned").clone();
+        let entries: Vec<Json> = self
+            .cache
+            .snapshot()
+            .into_iter()
+            .map(|(fp, e)| {
+                Json::obj(vec![
+                    ("fingerprint", Json::str(fp.hex())),
+                    (
+                        "workload",
+                        Json::str(fpw.get(&fp).map(|w| w.name()).unwrap_or("unknown")),
+                    ),
+                    ("speedup", Json::Num(e.speedup)),
+                    ("true_latency_s", Json::Num(e.true_latency_s)),
+                    ("version", Json::Num(e.version as f64)),
+                    ("refine_iters", Json::Num(e.refine_iters as f64)),
+                    ("converged", Json::Bool(e.converged)),
+                    ("refining", Json::Bool(self.refining(fp))),
+                ])
+            })
+            .collect();
+        let lookups = c.map_hits + c.map_misses;
+        let hit_rate =
+            if lookups == 0 { 0.0 } else { c.map_hits as f64 / lookups as f64 };
+        Json::obj(vec![
+            ("op", Json::str("stats")),
+            ("requests", Json::Num(c.requests as f64)),
+            ("hits", Json::Num(c.map_hits as f64)),
+            ("misses", Json::Num(c.map_misses as f64)),
+            ("hit_rate", Json::Num(hit_rate)),
+            ("stale_hits", Json::Num(c.stale_hits as f64)),
+            ("coalesced", Json::Num(c.coalesced as f64)),
+            ("errors", Json::Num(c.errors as f64)),
+            ("background_jobs", Json::Num(c.background_jobs as f64)),
+            ("polishes", Json::Num(c.polishes as f64)),
+            ("publishes", Json::Num(s.publishes as f64)),
+            ("rejected_publishes", Json::Num(s.rejected_publishes as f64)),
+            ("evictions", Json::Num(s.evictions as f64)),
+            ("cache_entries", Json::Num(s.entries as f64)),
+            ("cache_capacity", Json::Num(s.capacity as f64)),
+            ("warm_starts", Json::Num(c.warm_starts as f64)),
+            ("warm_rejected", Json::Num(c.warm_rejected as f64)),
+            ("queue_depth", Json::Num(self.queue.len() as f64)),
+            ("entries", Json::Arr(entries)),
+        ])
+    }
+
+    // ---- background refinement ---------------------------------------------
+
+    fn worker_loop(&self) {
+        while let Some(job) = self.queue.pop() {
+            if !self.stop.load(Ordering::SeqCst) {
+                self.run_refine_job(&job);
+            }
+            self.in_flight.lock().expect("in-flight poisoned").remove(&job.fp);
+        }
+    }
+
+    /// One background job: chunked best-of-9 refinement, publishing the
+    /// noise-free best through the monotone cache rule whenever it
+    /// improves, stopping at budget exhaustion, convergence or shutdown.
+    fn run_refine_job(&self, job: &RefineJob) {
+        let (env, _) = self.env_for(job.workload);
+        let mut refiner = AnytimeRefiner::new(&env, &job.start, job.seed);
+        let mut last_published = refiner.best_true_latency_s();
+        let mut unaccounted = 0u64;
+        loop {
+            if self.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            let remaining = job.budget.saturating_sub(refiner.moves());
+            if remaining < MoveBatch::MOVES {
+                break;
+            }
+            let out = refiner.step_chunk(BACKGROUND_CHUNK.min(remaining));
+            unaccounted += out.spent;
+            if out.spent == 0 {
+                break;
+            }
+            if out.improved && refiner.best_true_latency_s() < last_published {
+                let lat = refiner.best_true_latency_s();
+                self.cache.publish_if_better(
+                    job.fp,
+                    refiner.best_map(),
+                    lat,
+                    env.baseline_true_latency_s / lat,
+                    unaccounted,
+                    refiner.converged(),
+                );
+                last_published = lat;
+                unaccounted = 0;
+            }
+            if out.converged {
+                break;
+            }
+        }
+        if unaccounted > 0 || refiner.converged() {
+            // Final publish attempt carries the residual iteration
+            // accounting (and the converged flag) even when the map did
+            // not improve.
+            let lat = refiner.best_true_latency_s();
+            self.cache.publish_if_better(
+                job.fp,
+                refiner.best_map(),
+                lat,
+                env.baseline_true_latency_s / lat,
+                unaccounted,
+                refiner.converged(),
+            );
+        }
+    }
+
+    // ---- serving loops -----------------------------------------------------
+
+    /// Run `body` on the calling thread with the background workers
+    /// alive; closes the job queue (joining the workers) when it
+    /// returns. The close lives in a drop guard so a panic inside
+    /// `body` still releases the workers — otherwise `thread::scope`
+    /// would wait forever on threads blocked in [`JobQueue::pop`],
+    /// turning a crash into a silent hang. On a panicking unwind the
+    /// guard also raises the stop flag, so workers abandon in-progress
+    /// jobs at the next chunk boundary instead of draining the backlog.
+    fn with_workers<T>(&self, body: impl FnOnce() -> T) -> T {
+        struct CloseOnDrop<'b>(&'b Broker);
+        impl Drop for CloseOnDrop<'_> {
+            fn drop(&mut self) {
+                if std::thread::panicking() {
+                    self.0.stop.store(true, Ordering::SeqCst);
+                }
+                self.0.queue.close();
+            }
+        }
+        std::thread::scope(|scope| {
+            for _ in 0..self.opts.workers {
+                scope.spawn(|| self.worker_loop());
+            }
+            let _close = CloseOnDrop(self);
+            body()
+        })
+    }
+
+    fn serve_connection<R: BufRead, W: Write>(
+        &self,
+        reader: R,
+        writer: &mut W,
+    ) -> anyhow::Result<()> {
+        for line in reader.lines() {
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let resp = self.handle(&line);
+            writeln!(writer, "{resp}")?;
+            writer.flush()?;
+            if self.stop.load(Ordering::SeqCst) {
+                break;
+            }
+        }
+        Ok(())
+    }
+
+    /// Serve one request stream (background workers included). Returns
+    /// on EOF or `shutdown`.
+    pub fn serve<R: BufRead, W: Write>(&self, reader: R, writer: &mut W) -> anyhow::Result<()> {
+        self.with_workers(|| self.serve_connection(reader, writer))
+    }
+
+    /// Serve JSON-lines over stdin/stdout (the CI smoke mode).
+    pub fn serve_stdio(&self) -> anyhow::Result<()> {
+        let stdin = std::io::stdin();
+        let stdout = std::io::stdout();
+        self.serve(stdin.lock(), &mut stdout.lock())
+    }
+
+    /// Serve JSON-lines over a TCP listener, one connection at a time,
+    /// until a `shutdown` request arrives. A dropped connection is
+    /// logged, not fatal.
+    pub fn serve_tcp(&self, listener: TcpListener) -> anyhow::Result<()> {
+        self.with_workers(|| {
+            for stream in listener.incoming() {
+                match stream {
+                    Ok(stream) => {
+                        let mut writer = match stream.try_clone() {
+                            Ok(w) => w,
+                            Err(e) => {
+                                eprintln!("serve: clone failed: {e}");
+                                continue;
+                            }
+                        };
+                        if let Err(e) = self.serve_connection(BufReader::new(stream), &mut writer)
+                        {
+                            eprintln!("serve: connection error: {e:#}");
+                        }
+                    }
+                    Err(e) => eprintln!("serve: accept error: {e}"),
+                }
+                if self.stop.load(Ordering::SeqCst) {
+                    break;
+                }
+            }
+            Ok(())
+        })
+    }
+
+    // ---- disk warm start / save --------------------------------------------
+
+    /// Load `egrl-map-v1` artifacts (with embedded fingerprints) from a
+    /// directory into the warm-start pool. Artifacts are fully validated
+    /// lazily, against the live environment, on the first `map` miss for
+    /// their fingerprint. Returns how many were loaded; unreadable or
+    /// fingerprint-less files are counted as `warm_rejected`.
+    pub fn warm_start_dir(&self, dir: &Path) -> anyhow::Result<usize> {
+        let mut paths: Vec<_> = std::fs::read_dir(dir)
+            .map_err(|e| anyhow::anyhow!("reading warm-start dir '{}': {e}", dir.display()))?
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| p.extension().and_then(|x| x.to_str()) == Some("json"))
+            .collect();
+        paths.sort();
+        let mut loaded = 0usize;
+        for path in paths {
+            let ok = std::fs::read_to_string(&path)
+                .ok()
+                .and_then(|text| parse(&text).ok())
+                .and_then(|j| {
+                    let fp = Fingerprint::from_hex(j.get("fingerprint")?.as_str()?).ok()?;
+                    let map = MemoryMap::from_json(&j).ok()?;
+                    Some((fp, map))
+                });
+            match ok {
+                Some((fp, map)) => {
+                    self.warm.lock().expect("warm pool poisoned").insert(fp, map);
+                    loaded += 1;
+                }
+                None => self.bump(|c| c.warm_rejected += 1),
+            }
+        }
+        Ok(loaded)
+    }
+
+    /// Persist every cache entry as an extended `egrl-map-v1` artifact
+    /// (actions + fingerprint + provenance) usable by
+    /// [`Self::warm_start_dir`] and by `egrl polish --map`.
+    pub fn save_dir(&self, dir: &Path) -> anyhow::Result<usize> {
+        std::fs::create_dir_all(dir)?;
+        let fpw = self.fp_workload.lock().expect("fp index poisoned").clone();
+        let mut written = 0usize;
+        for (fp, e) in self.cache.snapshot() {
+            let wname = fpw.get(&fp).map(|w| w.name()).unwrap_or("unknown");
+            let mut payload = match e.map.to_json() {
+                Json::Obj(m) => m,
+                _ => unreachable!("map artifact is an object"),
+            };
+            payload.insert("fingerprint".into(), Json::str(fp.hex()));
+            payload.insert("workload".into(), Json::str(wname));
+            payload.insert("true_latency_s".into(), Json::Num(e.true_latency_s));
+            payload.insert("speedup".into(), Json::Num(e.speedup));
+            payload.insert("refine_iters".into(), Json::Num(e.refine_iters as f64));
+            payload.insert("version".into(), Json::Num(e.version as f64));
+            let name = format!("{}-{}.json", wname, &fp.hex()[..12]);
+            std::fs::write(dir.join(name), Json::Obj(payload).to_string_pretty())?;
+            written += 1;
+        }
+        Ok(written)
+    }
+}
+
+/// Build one `map` response line.
+fn map_response(
+    w: Workload,
+    fp: Fingerprint,
+    cache: &str,
+    source: Option<&str>,
+    entry: &CacheEntry,
+    refining: bool,
+    return_map: bool,
+) -> Json {
+    let mut fields = vec![
+        ("op", Json::str("map")),
+        ("workload", Json::str(w.name())),
+        ("fingerprint", Json::str(fp.hex())),
+        ("cache", Json::str(cache)),
+        ("speedup", Json::Num(entry.speedup)),
+        ("true_latency_s", Json::Num(entry.true_latency_s)),
+        ("version", Json::Num(entry.version as f64)),
+        ("refine_iters", Json::Num(entry.refine_iters as f64)),
+        ("converged", Json::Bool(entry.converged)),
+        ("refining", Json::Bool(refining)),
+    ];
+    if let Some(s) = source {
+        fields.push(("source", Json::str(s)));
+    }
+    if return_map {
+        fields.push((
+            "actions",
+            Json::arr(entry.map.placements.iter().map(|p| {
+                Json::arr([
+                    Json::Num(p.weight.index() as f64),
+                    Json::Num(p.activation.index() as f64),
+                ])
+            })),
+        ));
+    }
+    Json::obj(fields)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn opts(workers: usize, deadline_ms: u64, budget: u64) -> ServeOptions {
+        ServeOptions {
+            cache_cap: 8,
+            deadline_ms,
+            refine_budget: budget,
+            workers,
+            seed: 7,
+            env: EnvConfig::default(),
+        }
+    }
+
+    fn req(line: &str, broker: &Broker) -> Json {
+        parse(&broker.handle(line)).expect("response must be valid JSON")
+    }
+
+    fn get_str<'j>(j: &'j Json, k: &str) -> &'j str {
+        j.get(k).and_then(Json::as_str).unwrap_or_else(|| panic!("missing '{k}' in {j:?}"))
+    }
+
+    fn get_num(j: &Json, k: &str) -> f64 {
+        j.get(k).and_then(Json::as_f64).unwrap_or_else(|| panic!("missing '{k}' in {j:?}"))
+    }
+
+    #[test]
+    fn miss_then_hit_and_metrics() {
+        let b = Broker::new(opts(0, 0, 900));
+        let first = req(r#"{"op":"map","workload":"resnet50"}"#, &b);
+        assert_eq!(get_str(&first, "cache"), "miss");
+        assert_eq!(get_str(&first, "source"), "compiler");
+        // deadline 0: no inline refinement — the compiler map verbatim.
+        assert_eq!(get_num(&first, "refine_iters"), 0.0);
+        assert!((get_num(&first, "speedup") - 1.0).abs() < 1e-9);
+        let second = req(r#"{"op":"map","workload":"resnet50"}"#, &b);
+        assert_eq!(get_str(&second, "cache"), "hit");
+        assert_eq!(get_str(&second, "fingerprint"), get_str(&first, "fingerprint"));
+        let stats = req(r#"{"op":"stats"}"#, &b);
+        assert_eq!(get_num(&stats, "hits"), 1.0);
+        assert_eq!(get_num(&stats, "misses"), 1.0);
+        assert!((get_num(&stats, "hit_rate") - 0.5).abs() < 1e-12);
+        assert_eq!(get_num(&stats, "cache_entries"), 1.0);
+    }
+
+    #[test]
+    fn deadline_bounded_inline_refinement_spends_the_budget() {
+        // A generous wall-clock deadline with a tiny move budget: the
+        // inline phase must spend exactly the budget, deterministically.
+        let b = Broker::new(opts(0, 10_000, 90));
+        let resp = req(r#"{"op":"map","workload":"resnet50"}"#, &b);
+        assert_eq!(get_str(&resp, "cache"), "miss");
+        assert_eq!(get_num(&resp, "refine_iters"), 90.0);
+        assert!(get_num(&resp, "speedup") > 0.0);
+        assert!(!resp.get("refining").unwrap().as_bool().unwrap(), "workers=0 must not enqueue");
+    }
+
+    #[test]
+    fn return_map_includes_valid_actions() {
+        let b = Broker::new(opts(0, 0, 900));
+        let resp = req(r#"{"op":"map","workload":"resnet50","return_map":true}"#, &b);
+        let actions = resp.get("actions").and_then(Json::as_arr).expect("actions array");
+        let map = MemoryMap::from_json(resp.get("actions").unwrap()).unwrap();
+        let (env, _) = b.env_for(Workload::ResNet50);
+        assert_eq!(actions.len(), env.num_nodes());
+        assert!(env.compiler.is_valid(&env.graph, &env.liveness, &map));
+    }
+
+    #[test]
+    fn evict_forces_a_fresh_miss() {
+        let b = Broker::new(opts(0, 0, 900));
+        req(r#"{"op":"map","workload":"resnet50"}"#, &b);
+        let ev = req(r#"{"op":"evict","workload":"resnet50"}"#, &b);
+        assert!(ev.get("evicted").unwrap().as_bool().unwrap());
+        let ev2 = req(r#"{"op":"evict","workload":"resnet50"}"#, &b);
+        assert!(!ev2.get("evicted").unwrap().as_bool().unwrap());
+        let resp = req(r#"{"op":"map","workload":"resnet50"}"#, &b);
+        assert_eq!(get_str(&resp, "cache"), "miss");
+    }
+
+    #[test]
+    fn lru_capacity_evicts_oldest_workload() {
+        let mut o = opts(0, 0, 900);
+        o.cache_cap = 1;
+        let b = Broker::new(o);
+        req(r#"{"op":"map","workload":"resnet50"}"#, &b);
+        req(r#"{"op":"map","workload":"resnet101"}"#, &b);
+        // resnet50 was evicted by capacity; resnet101 is resident.
+        let r101 = req(r#"{"op":"map","workload":"resnet101"}"#, &b);
+        assert_eq!(get_str(&r101, "cache"), "hit");
+        let r50 = req(r#"{"op":"map","workload":"resnet50"}"#, &b);
+        assert_eq!(get_str(&r50, "cache"), "miss");
+    }
+
+    #[test]
+    fn malformed_requests_answer_errors_without_dying() {
+        let b = Broker::new(opts(0, 0, 900));
+        for bad in [
+            "not json",
+            r#"{"workload":"resnet50"}"#,
+            r#"{"op":"frobnicate"}"#,
+            r#"{"op":"map"}"#,
+            r#"{"op":"map","workload":"vgg"}"#,
+            r#"{"op":"polish","workload":"resnet50","budget":3}"#,
+        ] {
+            let resp = req(bad, &b);
+            assert!(resp.get("error").is_some(), "no error for {bad}: {resp:?}");
+        }
+        // The broker still serves after the error burst.
+        let ok = req(r#"{"op":"map","workload":"resnet50"}"#, &b);
+        assert_eq!(get_str(&ok, "cache"), "miss");
+        let stats = req(r#"{"op":"stats"}"#, &b);
+        assert_eq!(get_num(&stats, "errors"), 6.0);
+    }
+
+    #[test]
+    fn polish_publishes_monotone_anytime_curve() {
+        let b = Broker::new(opts(0, 0, 9000));
+        req(r#"{"op":"map","workload":"resnet50"}"#, &b);
+        let mut before = f64::NAN;
+        let mut total_moves = 0u64;
+        for i in 0..4 {
+            let p = req(r#"{"op":"polish","workload":"resnet50","budget":900}"#, &b);
+            let moves = get_num(&p, "moves") as u64;
+            // A polish may stop early on convergence, but it always runs
+            // whole batches and never overshoots its budget.
+            assert!(moves >= 9 && moves <= 900 && moves % 9 == 0, "bad spend {moves}");
+            total_moves += moves;
+            if i == 0 {
+                before = get_num(&p, "speedup_before");
+            }
+        }
+        let fp = b.fingerprint_of(Workload::ResNet50);
+        let entry = b.cache.peek(fp).unwrap();
+        assert!(entry.speedup >= before, "polish regressed the published map");
+        assert_eq!(entry.refine_iters, total_moves, "iteration accounting lost moves");
+        let curve = b.cache.curve(fp);
+        assert!(!curve.is_empty());
+        for pair in curve.windows(2) {
+            assert!(
+                pair[1].1 < pair[0].1 && pair[1].0 >= pair[0].0,
+                "anytime curve not monotone: {curve:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn duplicate_in_flight_fingerprints_coalesce() {
+        // workers = 1 but serve() is never entered, so the queued job is
+        // never drained: the in-flight reservation stays set and the
+        // second request must coalesce instead of double-enqueueing.
+        let b = Broker::new(opts(1, 0, 9000));
+        let first = req(r#"{"op":"map","workload":"resnet50"}"#, &b);
+        assert!(first.get("refining").unwrap().as_bool().unwrap());
+        let second = req(r#"{"op":"map","workload":"resnet50"}"#, &b);
+        assert_eq!(get_str(&second, "cache"), "hit");
+        assert!(second.get("refining").unwrap().as_bool().unwrap());
+        let stats = req(r#"{"op":"stats"}"#, &b);
+        assert_eq!(get_num(&stats, "background_jobs"), 1.0, "duplicate job enqueued");
+        assert_eq!(get_num(&stats, "coalesced"), 1.0);
+        assert_eq!(get_num(&stats, "stale_hits"), 1.0);
+        assert_eq!(get_num(&stats, "queue_depth"), 1.0);
+    }
+
+    #[test]
+    fn serve_stream_end_to_end_with_background_workers() {
+        let b = Broker::new(opts(1, 0, 1800));
+        let script = concat!(
+            r#"{"op":"map","workload":"resnet50"}"#, "\n",
+            r#"{"op":"map","workload":"resnet50"}"#, "\n",
+            "\n", // blank lines are skipped
+            r#"{"op":"stats"}"#, "\n",
+            r#"{"op":"shutdown"}"#, "\n",
+            r#"{"op":"map","workload":"bert"}"#, "\n", // after shutdown: unread
+        );
+        let mut out = Vec::new();
+        b.serve(script.as_bytes(), &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<Json> =
+            text.lines().map(|l| parse(l).expect("response line parses")).collect();
+        assert_eq!(lines.len(), 4, "shutdown must stop the stream: {text}");
+        assert_eq!(get_str(&lines[0], "cache"), "miss");
+        assert_eq!(get_str(&lines[1], "cache"), "hit");
+        assert_eq!(get_str(&lines[2], "op"), "stats");
+        assert!(lines[3].get("ok").unwrap().as_bool().unwrap());
+        // Workers have joined: the background job either ran or was
+        // abandoned at shutdown, and the in-flight set is empty.
+        assert!(b.in_flight.lock().unwrap().is_empty());
+    }
+
+    #[test]
+    fn background_refinement_publishes_improvements() {
+        // One worker, blocking drain: run serve over a script that
+        // triggers refinement, then wait for the join and check the
+        // published entry improved and its curve is monotone.
+        let b = Broker::new(opts(1, 0, 4500));
+        let script = concat!(
+            r#"{"op":"map","workload":"resnet50"}"#, "\n",
+            r#"{"op":"shutdown"}"#, "\n",
+        );
+        let mut out = Vec::new();
+        b.serve(script.as_bytes(), &mut out).unwrap();
+        // serve() closed the queue; the worker drained the job unless
+        // shutdown raced it away. Run the remainder synchronously via
+        // polish to make the assertion deterministic.
+        let p = parse(&b.handle(r#"{"op":"polish","workload":"resnet50","budget":4500}"#)).unwrap();
+        assert!(get_num(&p, "speedup") >= get_num(&p, "speedup_before"));
+        let fp = b.fingerprint_of(Workload::ResNet50);
+        let curve = b.cache.curve(fp);
+        for pair in curve.windows(2) {
+            assert!(pair[1].1 < pair[0].1, "published curve regressed: {curve:?}");
+        }
+        let entry = b.cache.peek(fp).unwrap();
+        // The published map can never fall below the compiler start, and
+        // every publish past the insert must be a strict improvement.
+        assert!(entry.speedup >= 1.0, "published map regressed below the start");
+        assert_eq!(entry.version as usize, curve.len() - 1, "version must count publishes");
+        if entry.version > 0 {
+            assert!(entry.speedup > 1.0, "a publish happened without improving");
+        }
+    }
+
+    #[test]
+    fn warm_start_roundtrip_and_rejection() {
+        let dir = std::env::temp_dir().join(format!("egrl-serve-warm-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+
+        // Producer broker: refine a little, save artifacts.
+        let a = Broker::new(opts(0, 10_000, 900));
+        req(r#"{"op":"map","workload":"resnet50"}"#, &a);
+        let saved = a.save_dir(&dir).unwrap();
+        assert_eq!(saved, 1);
+        let a_speedup = a.cache.peek(a.fingerprint_of(Workload::ResNet50)).unwrap().speedup;
+
+        // A corrupt artifact alongside: must be rejected, not fatal.
+        std::fs::write(dir.join("junk.json"), "{\"schema\": \"egrl-map-v1\"").unwrap();
+
+        // Consumer broker: warm start, then serve the same workload with
+        // no inline refinement — the warm map arrives verbatim.
+        let c = Broker::new(opts(0, 0, 900));
+        let loaded = c.warm_start_dir(&dir).unwrap();
+        assert_eq!(loaded, 1);
+        let resp = req(r#"{"op":"map","workload":"resnet50"}"#, &c);
+        assert_eq!(get_str(&resp, "cache"), "miss");
+        assert_eq!(get_str(&resp, "source"), "warm");
+        assert!((get_num(&resp, "speedup") - a_speedup).abs() < 1e-9);
+        let stats = req(r#"{"op":"stats"}"#, &c);
+        assert_eq!(get_num(&stats, "warm_starts"), 1.0);
+        assert_eq!(get_num(&stats, "warm_rejected"), 1.0);
+
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn tcp_listener_serves_and_shuts_down() {
+        use std::io::{BufRead as _, Write as _};
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind ephemeral port");
+        let addr = listener.local_addr().unwrap();
+        let b = Broker::new(opts(0, 0, 900));
+        std::thread::scope(|scope| {
+            let server = scope.spawn(|| b.serve_tcp(listener));
+            let mut stream = std::net::TcpStream::connect(addr).expect("connect");
+            stream
+                .write_all(
+                    concat!(
+                        r#"{"op":"map","workload":"resnet50"}"#, "\n",
+                        r#"{"op":"shutdown"}"#, "\n",
+                    )
+                    .as_bytes(),
+                )
+                .unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            let resp = parse(&line).unwrap();
+            assert_eq!(resp.get("cache").unwrap().as_str().unwrap(), "miss");
+            line.clear();
+            reader.read_line(&mut line).unwrap();
+            assert!(parse(&line).unwrap().get("ok").unwrap().as_bool().unwrap());
+            server.join().unwrap().unwrap();
+        });
+    }
+}

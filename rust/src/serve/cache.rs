@@ -1,0 +1,355 @@
+//! The fingerprint-keyed map cache: the memory of the serving subsystem.
+//!
+//! Each entry holds the best known map for one workload fingerprint,
+//! its **noise-free** latency/speedup, how many refinement iterations
+//! have been invested in it (the §9 accounting currency), and a
+//! monotonically-increasing version. Entries are LRU-bounded; every
+//! lookup, insertion, publish and eviction is counted so `stats`
+//! requests can report hit/miss/staleness rates.
+//!
+//! Coherence with the background refiners is one rule, enforced here:
+//! [`MapCache::publish_if_better`] replaces an entry's map only when the
+//! candidate's noise-free latency is **strictly lower** than the
+//! published one. Refiners search on noisy measured rewards, but they
+//! publish the noise-free re-measured best — so the per-entry anytime
+//! curve (`(refine_iters, true_latency_s)` at every publish) is monotone
+//! non-increasing by construction, and a reader can never observe a
+//! regression. All state lives behind one mutex; a publish is atomic
+//! with respect to concurrent `get`s.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::mapping::MemoryMap;
+
+use super::fingerprint::Fingerprint;
+
+/// One cached placement result.
+#[derive(Clone, Debug)]
+pub struct CacheEntry {
+    /// The best published map (always valid for its environment).
+    pub map: MemoryMap,
+    /// Noise-free latency of `map` (seconds).
+    pub true_latency_s: f64,
+    /// Noise-free speedup vs. the native compiler baseline.
+    pub speedup: f64,
+    /// Refinement move evaluations invested in this entry so far —
+    /// every one consumed one environment iteration (DESIGN.md §9/§11).
+    pub refine_iters: u64,
+    /// Bumped on every successful publish; 0 = the initial insert.
+    pub version: u64,
+    /// The refiner reported a full no-improvement sweep: further
+    /// background budget would be wasted.
+    pub converged: bool,
+}
+
+/// Aggregate cache counters (monotone over the cache's lifetime).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub insertions: u64,
+    pub publishes: u64,
+    /// Publish attempts that did not improve (or whose entry was gone).
+    pub rejected_publishes: u64,
+    pub evictions: u64,
+    /// Current number of resident entries.
+    pub entries: usize,
+    pub capacity: usize,
+}
+
+impl CacheStats {
+    /// Hits over lookups (0 when the cache was never consulted).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+struct Slot {
+    entry: CacheEntry,
+    /// Recency stamp for LRU eviction.
+    last_used: u64,
+    /// Anytime-improvement curve: `(refine_iters, true_latency_s)` at
+    /// the insert and at every publish. Monotone non-increasing in
+    /// latency by the publish rule.
+    curve: Vec<(u64, f64)>,
+}
+
+#[derive(Default)]
+struct Inner {
+    slots: HashMap<Fingerprint, Slot>,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+    insertions: u64,
+    publishes: u64,
+    rejected_publishes: u64,
+    evictions: u64,
+}
+
+/// LRU-bounded, mutex-protected map cache. Cheap to share by reference
+/// across the broker thread and the background refinement workers.
+pub struct MapCache {
+    cap: usize,
+    inner: Mutex<Inner>,
+}
+
+impl MapCache {
+    /// `cap` ≥ 1 entries (asserted — a zero-capacity cache would turn
+    /// every publish into a rejected orphan).
+    pub fn new(cap: usize) -> MapCache {
+        assert!(cap >= 1, "cache capacity must be >= 1");
+        MapCache { cap, inner: Mutex::new(Inner::default()) }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().expect("map cache poisoned")
+    }
+
+    /// Serving lookup: counts a hit or a miss and refreshes recency.
+    pub fn get(&self, fp: Fingerprint) -> Option<CacheEntry> {
+        let mut inner = self.lock();
+        inner.tick += 1;
+        let tick = inner.tick;
+        match inner.slots.get_mut(&fp) {
+            Some(slot) => {
+                slot.last_used = tick;
+                let entry = slot.entry.clone();
+                inner.hits += 1;
+                Some(entry)
+            }
+            None => {
+                inner.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Metric-free lookup (internal bookkeeping paths).
+    pub fn peek(&self, fp: Fingerprint) -> Option<CacheEntry> {
+        self.lock().slots.get(&fp).map(|s| s.entry.clone())
+    }
+
+    /// Insert a fresh entry (replacing any previous one for `fp`),
+    /// evicting the least-recently-used entry if the cache is full.
+    pub fn insert(&self, fp: Fingerprint, entry: CacheEntry) {
+        let mut inner = self.lock();
+        inner.tick += 1;
+        let tick = inner.tick;
+        inner.insertions += 1;
+        let curve = vec![(entry.refine_iters, entry.true_latency_s)];
+        inner.slots.insert(fp, Slot { entry, last_used: tick, curve });
+        while inner.slots.len() > self.cap {
+            // O(entries) victim scan — the cache is small by design.
+            let victim = inner
+                .slots
+                .iter()
+                .min_by_key(|(_, s)| s.last_used)
+                .map(|(k, _)| *k)
+                .expect("non-empty cache over capacity");
+            inner.slots.remove(&victim);
+            inner.evictions += 1;
+        }
+    }
+
+    /// Publish a refinement result. The entry's iteration accounting and
+    /// convergence flag are always updated (the search was paid for
+    /// whether or not it won), but the **map** is replaced only when
+    /// `true_latency_s` strictly improves on the published one — the
+    /// cache never regresses, and the anytime curve stays monotone.
+    /// Returns `true` iff the map was published. A publish for an
+    /// entry that has been evicted in the meantime is dropped (counted
+    /// as rejected).
+    pub fn publish_if_better(
+        &self,
+        fp: Fingerprint,
+        map: &MemoryMap,
+        true_latency_s: f64,
+        speedup: f64,
+        spent_iters: u64,
+        converged: bool,
+    ) -> bool {
+        let mut inner = self.lock();
+        let Some(slot) = inner.slots.get_mut(&fp) else {
+            inner.rejected_publishes += 1;
+            return false;
+        };
+        slot.entry.refine_iters += spent_iters;
+        slot.entry.converged = slot.entry.converged || converged;
+        if true_latency_s < slot.entry.true_latency_s {
+            slot.entry.map.placements.clone_from(&map.placements);
+            slot.entry.true_latency_s = true_latency_s;
+            slot.entry.speedup = speedup;
+            slot.entry.version += 1;
+            let point = (slot.entry.refine_iters, true_latency_s);
+            slot.curve.push(point);
+            inner.publishes += 1;
+            true
+        } else {
+            inner.rejected_publishes += 1;
+            false
+        }
+    }
+
+    /// Drop an entry. Returns whether it existed.
+    pub fn evict(&self, fp: Fingerprint) -> bool {
+        let mut inner = self.lock();
+        let existed = inner.slots.remove(&fp).is_some();
+        if existed {
+            inner.evictions += 1;
+        }
+        existed
+    }
+
+    /// The anytime-improvement curve of an entry (empty when absent).
+    pub fn curve(&self, fp: Fingerprint) -> Vec<(u64, f64)> {
+        self.lock().slots.get(&fp).map(|s| s.curve.clone()).unwrap_or_default()
+    }
+
+    /// Aggregate counters.
+    pub fn stats(&self) -> CacheStats {
+        let inner = self.lock();
+        CacheStats {
+            hits: inner.hits,
+            misses: inner.misses,
+            insertions: inner.insertions,
+            publishes: inner.publishes,
+            rejected_publishes: inner.rejected_publishes,
+            evictions: inner.evictions,
+            entries: inner.slots.len(),
+            capacity: self.cap,
+        }
+    }
+
+    /// Snapshot of every resident entry (for `stats` responses and the
+    /// disk save path).
+    pub fn snapshot(&self) -> Vec<(Fingerprint, CacheEntry)> {
+        let mut out: Vec<(Fingerprint, CacheEntry)> =
+            self.lock().slots.iter().map(|(fp, s)| (*fp, s.entry.clone())).collect();
+        out.sort_by_key(|(fp, _)| *fp);
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.lock().slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapping::MemKind;
+
+    fn fp(n: u64) -> Fingerprint {
+        Fingerprint([n, !n])
+    }
+
+    fn entry(latency: f64) -> CacheEntry {
+        CacheEntry {
+            map: MemoryMap::constant(4, MemKind::Dram),
+            true_latency_s: latency,
+            speedup: 1.0 / latency,
+            refine_iters: 0,
+            version: 0,
+            converged: false,
+        }
+    }
+
+    #[test]
+    fn hit_and_miss_counting() {
+        let c = MapCache::new(4);
+        assert!(c.get(fp(1)).is_none());
+        c.insert(fp(1), entry(2.0));
+        assert!(c.get(fp(1)).is_some());
+        assert!(c.get(fp(2)).is_none());
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.insertions), (1, 2, 1));
+        assert!((s.hit_rate() - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let c = MapCache::new(2);
+        c.insert(fp(1), entry(1.0));
+        c.insert(fp(2), entry(1.0));
+        // Touch 1 so 2 becomes the LRU victim.
+        assert!(c.get(fp(1)).is_some());
+        c.insert(fp(3), entry(1.0));
+        assert_eq!(c.len(), 2);
+        assert!(c.peek(fp(1)).is_some(), "recently-used entry evicted");
+        assert!(c.peek(fp(2)).is_none(), "LRU entry survived");
+        assert!(c.peek(fp(3)).is_some());
+        assert_eq!(c.stats().evictions, 1);
+    }
+
+    #[test]
+    fn publish_requires_strict_improvement() {
+        let c = MapCache::new(2);
+        c.insert(fp(1), entry(2.0));
+        let better = MemoryMap::constant(4, MemKind::Sram);
+        // Equal latency: rejected, but the iteration spend still lands.
+        assert!(!c.publish_if_better(fp(1), &better, 2.0, 0.5, 90, false));
+        let e = c.peek(fp(1)).unwrap();
+        assert_eq!(e.version, 0);
+        assert_eq!(e.refine_iters, 90);
+        assert_eq!(e.map.placements[0].weight, MemKind::Dram);
+        // Strict improvement: published, version bumped.
+        assert!(c.publish_if_better(fp(1), &better, 1.5, 2.0 / 1.5, 90, true));
+        let e = c.peek(fp(1)).unwrap();
+        assert_eq!(e.version, 1);
+        assert_eq!(e.refine_iters, 180);
+        assert!(e.converged);
+        assert_eq!(e.map.placements[0].weight, MemKind::Sram);
+        assert_eq!(e.true_latency_s, 1.5);
+        let s = c.stats();
+        assert_eq!((s.publishes, s.rejected_publishes), (1, 1));
+    }
+
+    #[test]
+    fn publish_to_evicted_entry_is_dropped() {
+        let c = MapCache::new(2);
+        c.insert(fp(1), entry(2.0));
+        assert!(c.evict(fp(1)));
+        assert!(!c.evict(fp(1)));
+        let m = MemoryMap::constant(4, MemKind::Llc);
+        assert!(!c.publish_if_better(fp(1), &m, 0.1, 20.0, 9, false));
+        assert!(c.peek(fp(1)).is_none(), "rejected publish resurrected an evicted entry");
+    }
+
+    #[test]
+    fn curve_is_monotone_under_publish_rule() {
+        let c = MapCache::new(2);
+        c.insert(fp(7), entry(4.0));
+        // Publishes in non-monotone order: only improvements land.
+        for (lat, _ok) in [(3.0, true), (3.5, false), (2.0, true), (2.0, false)] {
+            c.publish_if_better(fp(7), &entry(1.0).map, lat, 4.0 / lat, 9, false);
+        }
+        let curve = c.curve(fp(7));
+        assert_eq!(curve.len(), 3, "insert + 2 publishes");
+        for pair in curve.windows(2) {
+            assert!(pair[1].1 < pair[0].1, "curve not strictly improving: {curve:?}");
+            assert!(pair[1].0 >= pair[0].0, "iteration accounting went backwards");
+        }
+        assert!(c.curve(fp(9)).is_empty());
+    }
+
+    #[test]
+    fn snapshot_lists_entries() {
+        let c = MapCache::new(4);
+        c.insert(fp(2), entry(1.0));
+        c.insert(fp(1), entry(2.0));
+        let snap = c.snapshot();
+        assert_eq!(snap.len(), 2);
+        assert!(snap[0].0 < snap[1].0, "snapshot must be deterministically ordered");
+        assert!(!c.is_empty());
+    }
+}

@@ -1,0 +1,195 @@
+//! Workload fingerprinting: the serving cache key.
+//!
+//! A [`Fingerprint`] is a stable 128-bit hash over everything that
+//! determines the memory-placement problem — the graph topology
+//! (canonically-sorted edge list), every node's placement-relevant
+//! quantities (op kind, weight bytes, output-activation bytes, MACs) and
+//! the full [`ChipSpec`] (capacities, bandwidths, compute rate, launch
+//! overhead, noise model). Two requests with equal fingerprints are the
+//! *same* mapping problem, so a cached map for one is exactly reusable
+//! for the other; any change to sizes, topology or chip generation flips
+//! the fingerprint and the cache misses instead of serving a stale map.
+//!
+//! The hash is hand-rolled (SplitMix64-style finalizers over two
+//! independently-seeded lanes) rather than `std::hash`, because the
+//! fingerprint is persisted inside `egrl-map-v1` artifacts for the
+//! disk-backed warm start: it must be identical across processes, runs
+//! and toolchain versions.
+
+use crate::graph::Graph;
+use crate::sim::spec::ChipSpec;
+
+/// 128-bit stable workload fingerprint (two independent 64-bit lanes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Fingerprint(pub [u64; 2]);
+
+impl Fingerprint {
+    /// Lower-case 32-hex-char rendering — the on-disk / wire format.
+    pub fn hex(&self) -> String {
+        format!("{:016x}{:016x}", self.0[0], self.0[1])
+    }
+
+    /// Parse the [`Self::hex`] rendering.
+    pub fn from_hex(s: &str) -> anyhow::Result<Fingerprint> {
+        anyhow::ensure!(s.len() == 32, "fingerprint must be 32 hex chars, got {}", s.len());
+        let a = u64::from_str_radix(&s[..16], 16)
+            .map_err(|_| anyhow::anyhow!("bad fingerprint hex '{}'", &s[..16]))?;
+        let b = u64::from_str_radix(&s[16..], 16)
+            .map_err(|_| anyhow::anyhow!("bad fingerprint hex '{}'", &s[16..]))?;
+        Ok(Fingerprint([a, b]))
+    }
+}
+
+impl std::fmt::Display for Fingerprint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.hex())
+    }
+}
+
+/// SplitMix64 finalizer — the avalanche stage only (the additive stream
+/// constant lives in the hasher state instead).
+#[inline]
+fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Two-lane streaming hasher with stable, documented behavior: each
+/// `write_u64` folds the value into both lanes through different
+/// round constants, so the lanes stay independent.
+#[derive(Clone, Debug)]
+pub struct StableHasher {
+    a: u64,
+    b: u64,
+}
+
+impl StableHasher {
+    pub fn new() -> StableHasher {
+        // First 128 fractional bits of π (hex) as lane seeds.
+        StableHasher { a: 0x243F_6A88_85A3_08D3, b: 0x1319_8A2E_0370_7344 }
+    }
+
+    #[inline]
+    pub fn write_u64(&mut self, v: u64) {
+        self.a = mix64(self.a.wrapping_add(0x9E37_79B9_7F4A_7C15) ^ v);
+        self.b = mix64(self.b.rotate_left(29) ^ v.wrapping_mul(0xC2B2_AE3D_27D4_EB4F));
+    }
+
+    #[inline]
+    pub fn write_f64(&mut self, v: f64) {
+        self.write_u64(v.to_bits());
+    }
+
+    pub fn finish(&self) -> Fingerprint {
+        // One extra avalanche round per lane so short inputs still
+        // diffuse into both halves.
+        Fingerprint([mix64(self.a ^ self.b.rotate_left(17)), mix64(self.b ^ self.a.rotate_left(47))])
+    }
+}
+
+impl Default for StableHasher {
+    fn default() -> Self {
+        StableHasher::new()
+    }
+}
+
+/// Fingerprint one (graph, chip) mapping problem. Edges are hashed in
+/// sorted order so the fingerprint depends on the topology, not on the
+/// builder's emission order; node names are deliberately *excluded* —
+/// renaming a layer does not change the placement problem.
+pub fn fingerprint(g: &Graph, chip: &ChipSpec) -> Fingerprint {
+    let mut h = StableHasher::new();
+    // Domain tags + lengths guard against ambiguous concatenations.
+    h.write_u64(0x4547_524C_5356_0001); // "EGRLSV" v1
+    h.write_u64(g.len() as u64);
+    for node in &g.nodes {
+        h.write_u64(node.op.id() as u64);
+        h.write_u64(node.weight_bytes);
+        h.write_u64(node.ofm_bytes());
+        h.write_u64(node.macs);
+    }
+    let mut edges: Vec<(usize, usize)> = g.edges.clone();
+    edges.sort_unstable();
+    h.write_u64(edges.len() as u64);
+    for (s, d) in edges {
+        h.write_u64(((s as u64) << 32) | d as u64);
+    }
+    for mem in &chip.mems {
+        h.write_u64(mem.capacity);
+        h.write_f64(mem.read_bw);
+        h.write_f64(mem.write_bw);
+    }
+    h.write_f64(chip.peak_macs_per_s);
+    h.write_f64(chip.node_overhead_s);
+    h.write_f64(chip.noise_std);
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::Workload;
+
+    #[test]
+    fn deterministic_across_builds() {
+        let chip = ChipSpec::nnpi();
+        let a = fingerprint(&Workload::ResNet50.build(), &chip);
+        let b = fingerprint(&Workload::ResNet50.build(), &chip);
+        assert_eq!(a, b, "same workload + chip must fingerprint identically");
+    }
+
+    #[test]
+    fn distinct_workloads_distinct_fingerprints() {
+        let chip = ChipSpec::nnpi();
+        let fps: Vec<Fingerprint> = [Workload::ResNet50, Workload::ResNet101, Workload::Bert]
+            .iter()
+            .map(|w| fingerprint(&w.build(), &chip))
+            .collect();
+        for (i, a) in fps.iter().enumerate() {
+            for b in &fps[i + 1..] {
+                assert_ne!(a, b);
+            }
+        }
+    }
+
+    #[test]
+    fn chip_change_flips_fingerprint() {
+        let g = Workload::ResNet50.build();
+        let base = fingerprint(&g, &ChipSpec::nnpi());
+        let mut shrunk = ChipSpec::nnpi();
+        shrunk.mems[2].capacity /= 2;
+        assert_ne!(base, fingerprint(&g, &shrunk), "capacity change must miss the cache");
+        let mut slower = ChipSpec::nnpi();
+        slower.peak_macs_per_s *= 0.5;
+        assert_ne!(base, fingerprint(&g, &slower));
+    }
+
+    #[test]
+    fn node_size_change_flips_fingerprint() {
+        let chip = ChipSpec::nnpi();
+        let mut g = Workload::ResNet50.build();
+        let base = fingerprint(&g, &chip);
+        g.nodes[10].weight_bytes += 1;
+        assert_ne!(base, fingerprint(&g, &chip));
+    }
+
+    #[test]
+    fn node_rename_keeps_fingerprint() {
+        let chip = ChipSpec::nnpi();
+        let mut g = Workload::ResNet50.build();
+        let base = fingerprint(&g, &chip);
+        g.nodes[0].name = "renamed".to_string();
+        assert_eq!(base, fingerprint(&g, &chip), "names are not part of the problem");
+    }
+
+    #[test]
+    fn hex_roundtrip() {
+        let fp = fingerprint(&Workload::Bert.build(), &ChipSpec::nnpi());
+        let hex = fp.hex();
+        assert_eq!(hex.len(), 32);
+        assert_eq!(Fingerprint::from_hex(&hex).unwrap(), fp);
+        assert!(Fingerprint::from_hex("xyz").is_err());
+        assert!(Fingerprint::from_hex(&hex[..31]).is_err());
+    }
+}

@@ -1,0 +1,28 @@
+//! The placement-serving subsystem (DESIGN.md §11).
+//!
+//! Turns the batched incremental search engine into an anytime,
+//! cache-fronted service: workload requests are keyed by a stable
+//! [`fingerprint`](fingerprint::fingerprint) of the mapping problem
+//! (graph topology + tensor sizes + chip spec), served from an
+//! LRU-bounded [`cache::MapCache`], and continuously improved by
+//! background [`refiner::AnytimeRefiner`] workers that publish strictly
+//! better (noise-free re-measured) maps through a monotone cache rule.
+//! The [`broker::Broker`] front end speaks JSON-lines over stdin/stdout
+//! or TCP (`egrl serve`); `benches/serve_bench.rs` replays a
+//! Zipf-distributed workload mix against it and writes
+//! `BENCH_serve.json`.
+//!
+//! Layering: `serve` sits strictly *above* `env`/`agents` (it consumes
+//! the public engine API — `search_state`/`try_move_batch`/`commit_move`)
+//! and strictly *below* `main` (the CLI only parses flags and hands the
+//! broker a stream).
+
+pub mod fingerprint;
+pub mod cache;
+pub mod refiner;
+pub mod broker;
+
+pub use broker::{Broker, ServeOptions};
+pub use cache::{CacheEntry, CacheStats, MapCache};
+pub use fingerprint::{fingerprint, Fingerprint};
+pub use refiner::AnytimeRefiner;

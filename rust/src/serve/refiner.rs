@@ -1,0 +1,230 @@
+//! Anytime refinement: the serving-side consumer of the batched
+//! move-evaluation engine.
+//!
+//! [`AnytimeRefiner`] wraps a persistent [`SearchState`] so refinement
+//! can be *resumed* across arbitrarily small budget chunks — the broker
+//! slices work against a request deadline (inline phase) or between
+//! stop-flag checks (background workers) without paying the O(n) state
+//! rebuild that re-entering [`crate::agents::local_search::refine`]
+//! would cost per slice.
+//!
+//! The search rule is the §10 best-of-9 hill climber: each node visit
+//! prices all nine placements in one batched pass, re-measures the
+//! incumbent (winner's-curse guard), and accepts the best candidate when
+//! its *measured* reward beats the incumbent's fresh measurement. What
+//! gets **published** is different from what gets *accepted*: the
+//! refiner tracks the best map by **noise-free** latency (the
+//! incrementally-maintained `SearchState::true_latency_s`, bit-consistent
+//! with a full walk — property-tested in `env`), so a lucky noisy draw
+//! can never push a worse map into the cache (DESIGN.md §11).
+//!
+//! Iteration accounting stays the §9 policy: every priced placement is
+//! one environment iteration, nine per node visit, identical currency to
+//! training — `moves()` is exactly the env-iteration spend.
+
+use crate::env::{MappingEnv, MoveBatch, SearchState};
+use crate::mapping::MemoryMap;
+use crate::utils::Rng;
+
+/// Outcome of one [`AnytimeRefiner::step_chunk`] call.
+#[derive(Clone, Copy, Debug)]
+pub struct ChunkOutcome {
+    /// Move evaluations spent in this chunk (multiple of 9; may be 0
+    /// when the budget was below one batch or the refiner converged).
+    pub spent: u64,
+    /// The noise-free best improved during this chunk.
+    pub improved: bool,
+    /// A full sweep passed with no accepted move — further budget on
+    /// this entry is wasted.
+    pub converged: bool,
+}
+
+/// Resumable best-of-9 hill climber over one environment.
+pub struct AnytimeRefiner<'e> {
+    env: &'e MappingEnv,
+    st: SearchState,
+    rng: Rng,
+    /// Round-robin node cursor, persisted across chunks.
+    next_node: usize,
+    /// Consecutive node visits without an accepted move; ≥ n ⇔ converged.
+    visits_since_accept: usize,
+    best_map: MemoryMap,
+    best_true_latency_s: f64,
+    moves: u64,
+}
+
+impl<'e> AnytimeRefiner<'e> {
+    /// Start from a **valid** map (the capacity build asserts validity).
+    pub fn new(env: &'e MappingEnv, start: &MemoryMap, seed: u64) -> AnytimeRefiner<'e> {
+        let st = env.search_state(start);
+        let best_true_latency_s = st.true_latency_s();
+        AnytimeRefiner {
+            env,
+            st,
+            rng: Rng::new(seed),
+            next_node: 0,
+            visits_since_accept: 0,
+            best_map: start.clone(),
+            best_true_latency_s,
+            moves: 0,
+        }
+    }
+
+    /// Best map seen so far, by noise-free latency.
+    pub fn best_map(&self) -> &MemoryMap {
+        &self.best_map
+    }
+
+    /// Noise-free latency of [`Self::best_map`].
+    pub fn best_true_latency_s(&self) -> f64 {
+        self.best_true_latency_s
+    }
+
+    /// Move evaluations (== env iterations) consumed so far.
+    pub fn moves(&self) -> u64 {
+        self.moves
+    }
+
+    /// Has a full no-accept sweep been observed?
+    pub fn converged(&self) -> bool {
+        self.visits_since_accept >= self.env.num_nodes()
+    }
+
+    /// Run up to `max_moves` further move evaluations (whole batches of
+    /// 9 only) and return what was spent. Resumable: the node cursor,
+    /// search state and RNG stream all persist across calls, so
+    /// `step_chunk(a); step_chunk(b)` explores exactly the trajectory
+    /// `step_chunk(a + b)` would (tested).
+    pub fn step_chunk(&mut self, max_moves: u64) -> ChunkOutcome {
+        let n = self.env.num_nodes();
+        let mut spent = 0u64;
+        let mut improved = false;
+        while spent + MoveBatch::MOVES <= max_moves && !self.converged() {
+            let node = self.next_node;
+            self.next_node = (node + 1) % n;
+            let batch = self.env.try_move_batch(&mut self.st, node, &mut self.rng);
+            spent += MoveBatch::MOVES;
+            let current = self.st.map().placements[node];
+            let here = batch.price(current).expect("current placement must be valid");
+            let accepted = match batch.best_excluding(current) {
+                Some((cand, price)) if price.reward > here.reward => {
+                    self.env.commit_move(&mut self.st, node, cand);
+                    true
+                }
+                _ => false,
+            };
+            if accepted {
+                self.visits_since_accept = 0;
+                if self.st.true_latency_s() < self.best_true_latency_s {
+                    self.best_true_latency_s = self.st.true_latency_s();
+                    self.best_map.placements.clone_from(&self.st.map().placements);
+                    improved = true;
+                }
+            } else {
+                self.visits_since_accept += 1;
+            }
+        }
+        self.moves += spent;
+        ChunkOutcome { spent, improved, converged: self.converged() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::Workload;
+
+    fn env() -> MappingEnv {
+        MappingEnv::nnpi(Workload::ResNet50.build(), 31)
+    }
+
+    #[test]
+    fn refiner_improves_over_all_dram_and_tracks_noise_free_best() {
+        let e = env();
+        let start = MemoryMap::all_dram(e.num_nodes());
+        let mut r = AnytimeRefiner::new(&e, &start, 5);
+        let start_latency = e.cost_table.latency(&start);
+        assert_eq!(r.best_true_latency_s(), start_latency);
+        let out = r.step_chunk(3000);
+        assert!(out.spent > 0 && out.spent % 9 == 0);
+        assert!(out.improved, "no improvement from all-DRAM?");
+        assert!(r.best_true_latency_s() < start_latency);
+        // The tracked best is exactly the noise-free latency of the map.
+        assert_eq!(
+            r.best_true_latency_s().to_bits(),
+            e.cost_table.latency(r.best_map()).to_bits()
+        );
+        assert!(e.compiler.is_valid(&e.graph, &e.liveness, r.best_map()));
+        assert_eq!(r.moves(), out.spent);
+        assert_eq!(e.iterations(), out.spent, "every priced placement is one iteration");
+    }
+
+    #[test]
+    fn chunked_equals_single_run() {
+        let run_chunked = |chunks: &[u64]| {
+            let e = env();
+            let start = e.compiler_map.clone();
+            let mut r = AnytimeRefiner::new(&e, &start, 9);
+            for &c in chunks {
+                r.step_chunk(c);
+            }
+            (r.best_map().clone(), r.best_true_latency_s(), r.moves())
+        };
+        let one = run_chunked(&[1800]);
+        let many = run_chunked(&[900, 450, 270, 180]);
+        assert_eq!(one.0, many.0, "chunking changed the trajectory");
+        assert_eq!(one.1.to_bits(), many.1.to_bits());
+        assert_eq!(one.2, many.2);
+    }
+
+    #[test]
+    fn best_latency_is_monotone_across_chunks() {
+        let e = env();
+        let start = MemoryMap::all_dram(e.num_nodes());
+        let mut r = AnytimeRefiner::new(&e, &start, 3);
+        let mut last = r.best_true_latency_s();
+        for _ in 0..20 {
+            r.step_chunk(90);
+            assert!(r.best_true_latency_s() <= last, "anytime best regressed");
+            last = r.best_true_latency_s();
+        }
+    }
+
+    #[test]
+    fn sub_batch_budget_spends_nothing() {
+        let e = env();
+        let mut r = AnytimeRefiner::new(&e, &e.compiler_map.clone(), 1);
+        let out = r.step_chunk(8);
+        assert_eq!(out.spent, 0);
+        assert!(!out.improved);
+        assert_eq!(e.iterations(), 0);
+    }
+
+    #[test]
+    fn converged_refiner_stops_spending() {
+        // Zero noise: hill climbing reaches a local optimum and then a
+        // full sweep accepts nothing — converged must latch and further
+        // chunks must be free.
+        let e = MappingEnv::new(
+            Workload::ResNet50.build(),
+            crate::sim::spec::ChipSpec::nnpi(),
+            crate::env::EnvConfig { noise_std: 0.0, ..Default::default() },
+            7,
+        );
+        let mut r = AnytimeRefiner::new(&e, &e.compiler_map.clone(), 2);
+        let mut guard = 0;
+        while !r.converged() {
+            let out = r.step_chunk(9000);
+            guard += 1;
+            assert!(guard < 1000, "refiner never converged on a noise-free env");
+            if out.spent == 0 {
+                break;
+            }
+        }
+        assert!(r.converged());
+        let before = r.moves();
+        let out = r.step_chunk(900);
+        assert_eq!(out.spent, 0, "converged refiner kept spending");
+        assert_eq!(r.moves(), before);
+    }
+}

@@ -160,22 +160,96 @@ fn fits_given_peaks(
     true
 }
 
-/// Evaluate all nine candidate placements of `node` against one shared
-/// peak set. Indexed `weight.index() * 3 + activation.index()`.
+/// Adaptive-pricing prefilter: **necessary** feasibility conditions for
+/// one candidate move using only the weight residency `W[m]` and the
+/// whole-run root peaks — O(1), no interval queries. Returns `true` when
+/// the candidate is *certainly* infeasible; `false` says nothing (the
+/// exact [`fits_given_peaks`] check still runs). Soundness, per
+/// constrained memory `m`:
+///
+/// * gaining `m`'s activation: the exact new peak is
+///   `max(all_peak, in_peak + a) ≥ max(all_peak, a)` (every interval
+///   step gains `a`, and steps outside the interval are untouched), so
+///   `W'[m] + max(all_peak, a) > cap` already proves the exact check
+///   fails;
+/// * losing `m`'s activation while the weight grows: the reduced peak is
+///   ≥ 0, so only the weight floor `W'[m] > cap` is certain;
+/// * uninvolved activation profile with growing weight: the peak is
+///   unchanged, so `W'[m] + all_peak > cap` is the exact condition
+///   itself.
+fn cheap_infeasible(
+    chip: &ChipSpec,
+    w_used: &[u64; 3],
+    all_peak: &[u64; 3],
+    w: u64,
+    a: u64,
+    old: NodePlacement,
+    cand: NodePlacement,
+) -> bool {
+    let mut dw = [0i64; 3];
+    if w > 0 && cand.weight != old.weight {
+        dw[old.weight.index()] -= w as i64;
+        dw[cand.weight.index()] += w as i64;
+    }
+    let act_moved = a > 0 && cand.activation != old.activation;
+    // DRAM (index 0) is skipped: want-DRAM placements never spill.
+    for mi in 1..3 {
+        let capacity = chip.mems[mi].capacity;
+        let w_new = (w_used[mi] as i64 + dw[mi]) as u64;
+        if act_moved && cand.activation.index() == mi {
+            if w_new + all_peak[mi].max(a) > capacity {
+                return true;
+            }
+        } else if act_moved && old.activation.index() == mi {
+            if dw[mi] > 0 && w_new > capacity {
+                return true;
+            }
+        } else if dw[mi] > 0 && w_new + all_peak[mi] > capacity {
+            return true;
+        }
+    }
+    false
+}
+
+/// Evaluate all nine candidate placements of `node`, prefiltering with
+/// the O(1) [`cheap_infeasible`] bounds before paying for the interval
+/// peak set: `get_peaks` is invoked **only** when at least one non-trivial
+/// candidate survives the prefilter (on tight-memory graphs many batches
+/// resolve entirely from `W[m]` + root peaks — the ROADMAP's adaptive
+/// batch pricing). Results are identical to running [`fits_given_peaks`]
+/// on every candidate (the prefilter is sound; property-tested against
+/// the per-candidate probes and the rectify ground truth). Indexed
+/// `weight.index() * 3 + activation.index()`.
 fn fits_all(
     chip: &ChipSpec,
     w_used: &[u64; 3],
+    all_peak: &[u64; 3],
     g: &Graph,
     map: &MemoryMap,
     node: usize,
-    peaks: &NodePeaks,
+    get_peaks: impl FnOnce() -> NodePeaks,
 ) -> [bool; 9] {
     let old = map.placements[node];
     let w = g.nodes[node].weight_bytes;
     let a = g.nodes[node].ofm_bytes();
     let mut out = [false; 9];
+    let mut pending = [false; 9];
+    let mut any_pending = false;
     for (k, &cand) in NodePlacement::ALL.iter().enumerate() {
-        out[k] = fits_given_peaks(chip, w_used, w, a, old, cand, peaks);
+        if cand == old {
+            out[k] = true;
+        } else if !cheap_infeasible(chip, w_used, all_peak, w, a, old, cand) {
+            pending[k] = true;
+            any_pending = true;
+        }
+    }
+    if any_pending {
+        let peaks = get_peaks();
+        for (k, &cand) in NodePlacement::ALL.iter().enumerate() {
+            if pending[k] {
+                out[k] = fits_given_peaks(chip, w_used, w, a, old, cand, &peaks);
+            }
+        }
     }
     out
 }
@@ -300,7 +374,9 @@ impl ScanCapacityState {
         true
     }
 
-    /// Batched 9-way probe: one shared peak pass, nine closed-form checks.
+    /// Batched 9-way probe: O(1) cheap-bound prefilter, then (only when
+    /// a candidate survives) one shared peak pass and the closed-form
+    /// checks.
     pub fn move_fits_all(
         &self,
         chip: &ChipSpec,
@@ -309,8 +385,9 @@ impl ScanCapacityState {
         map: &MemoryMap,
         node: usize,
     ) -> [bool; 9] {
-        let peaks = self.node_peaks(lv.step_of[node], lv.last_use[node], lv.order.len());
-        fits_all(chip, &self.w_used, g, map, node, &peaks)
+        fits_all(chip, &self.w_used, &self.peak_act, g, map, node, || {
+            self.node_peaks(lv.step_of[node], lv.last_use[node], lv.order.len())
+        })
     }
 
     /// Commit a single-node move. O(live interval) plus an O(n) peak
@@ -427,8 +504,9 @@ impl TreeCapacityState {
         )
     }
 
-    /// Batched 9-way probe: one shared O(log n) peak query set, nine
-    /// closed-form checks.
+    /// Batched 9-way probe: O(1) cheap-bound prefilter against the root
+    /// peaks, then (only when a candidate survives) one shared O(log n)
+    /// peak query set and the closed-form checks.
     pub fn move_fits_all(
         &self,
         chip: &ChipSpec,
@@ -437,8 +515,10 @@ impl TreeCapacityState {
         map: &MemoryMap,
         node: usize,
     ) -> [bool; 9] {
-        let peaks = self.node_peaks(lv.step_of[node], lv.last_use[node], lv.order.len());
-        fits_all(chip, &self.w_used, g, map, node, &peaks)
+        let all_peak = [0, self.act[1].root_max(), self.act[2].root_max()];
+        fits_all(chip, &self.w_used, &all_peak, g, map, node, || {
+            self.node_peaks(lv.step_of[node], lv.last_use[node], lv.order.len())
+        })
     }
 
     /// Commit a single-node move: two O(log n) range-adds.
@@ -1163,6 +1243,73 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// Adaptive batch pricing (ROADMAP satellite): a node whose weight
+    /// and activation overflow every constrained memory resolves its
+    /// whole batch from the O(1) `W[m]` + root-peak bounds — the exact
+    /// interval peak pass must never be requested — and the prefiltered
+    /// answer must still equal the rectify ground truth.
+    #[test]
+    fn prefilter_resolves_hopeless_batches_without_peak_queries() {
+        let c = tiny_compiler();
+        // tiny chip: SRAM 1 KB, LLC 4 KB; 8 KB tensors fit only in DRAM.
+        let g = Graph::new("one", vec![test_node(0, 8 << 10, 8 << 10)], vec![]).unwrap();
+        let lv = Liveness::analyze(&g);
+        let start = MemoryMap::all_dram(1);
+        let scan = c.scan_capacity_state(&g, &lv, &start);
+        let fits = fits_all(&c.chip, &scan.w_used, &scan.peak_act, &g, &start, 0, || {
+            panic!("peak pass requested for a cheap-resolved batch")
+        });
+        let mut expected = [false; 9];
+        expected[0] = true; // the current (all-DRAM) placement
+        assert_eq!(fits, expected);
+        for (k, &cand) in NodePlacement::ALL.iter().enumerate() {
+            let mut moved = start.clone();
+            moved.placements[0] = cand;
+            assert_eq!(fits[k], c.rectify(&g, &lv, &moved).valid(), "candidate {k}");
+        }
+    }
+
+    /// The prefilter must be *sound* on graphs that sit right at the
+    /// capacity edge: batched answers ≡ per-candidate `move_fits` ≡
+    /// rectify truth, on tight-memory random DAGs where the cheap bounds
+    /// actually fire.
+    #[test]
+    fn prop_prefiltered_batch_agrees_with_singles_on_tight_graphs() {
+        let c = tiny_compiler();
+        check(
+            "prefiltered move_fits_all ≡ 9 × move_fits ≡ rectify truth",
+            300,
+            |gen| {
+                // Sizes chosen so SRAM (1 KB) and LLC (4 KB) are
+                // genuinely contested.
+                let n = gen.usize_in(2, 16);
+                let w = gen.usize_in(200, 2500) as u64;
+                let a = gen.usize_in(100, 1200) as u64;
+                let g = chain(n, w, a);
+                let actions: Vec<[usize; 2]> =
+                    (0..n).map(|_| [gen.usize_in(0, 2), gen.usize_in(0, 2)]).collect();
+                let node = gen.usize_in(0, n - 1);
+                ((g, MemoryMap::from_actions(&actions), node), ())
+            },
+            |(g, proposal, node), _| {
+                let lv = Liveness::analyze(g);
+                let start = c.rectify(g, &lv, proposal).map;
+                let cap = c.capacity_state(g, &lv, &start);
+                let batch = c.move_fits_all(g, &lv, &cap, &start, *node);
+                for (k, &cand) in NodePlacement::ALL.iter().enumerate() {
+                    let single = c.move_fits(g, &lv, &cap, &start, *node, cand);
+                    let mut moved = start.clone();
+                    moved.placements[*node] = cand;
+                    let truth = c.rectify(g, &lv, &moved).valid();
+                    if batch[k] != truth || single != truth {
+                        return false;
+                    }
+                }
+                true
+            },
+        );
     }
 
     #[test]

@@ -331,7 +331,32 @@ impl CostTable {
         totals: &[f64],
         skip_scratch: &mut Vec<bool>,
     ) -> [f64; 9] {
+        self.probe_placements_masked(map, node, totals, skip_scratch, &[true; 9])
+    }
+
+    /// Masked variant of [`Self::probe_all_placements`] — the latency
+    /// half of **adaptive batch pricing** (ROADMAP): the capacity
+    /// prefilter has already ruled placements out, so only entries with
+    /// `mask[k]` set are priced. Work the mask saves: consumer terms are
+    /// recomputed only for activation memories with at least one
+    /// surviving candidate, and dead combinations skip their final
+    /// accumulation entirely. Priced entries are **bit-identical** to
+    /// the unfiltered batch (the shared base sum, input term and
+    /// surviving consumer lanes run the exact same float operations in
+    /// the exact same order — property-tested); masked-out entries
+    /// return 0.0 and must not be read.
+    pub fn probe_placements_masked(
+        &self,
+        map: &MemoryMap,
+        node: usize,
+        totals: &[f64],
+        skip_scratch: &mut Vec<bool>,
+        mask: &[bool; 9],
+    ) -> [f64; 9] {
         debug_assert_eq!(totals.len(), self.n);
+        if !mask.iter().any(|&m| m) {
+            return [0.0; 9];
+        }
         skip_scratch.clear();
         skip_scratch.resize(self.n, false);
         skip_scratch[node] = true;
@@ -359,8 +384,19 @@ impl CostTable {
         // per-node, and the slot-based `probe_move_latency` path writes a
         // duplicated consumer once — this sum must agree with it.
         let succ = &self.succ_idx[cs..ce];
+        // Activation memories with at least one surviving candidate —
+        // dead lanes skip their consumer recompute entirely.
+        let mut act_alive = [false; 3];
+        for (k, &m) in mask.iter().enumerate() {
+            if m {
+                act_alive[k % 3] = true;
+            }
+        }
         let mut consumer_s = [0.0f64; 3];
         for (ai, slot) in consumer_s.iter_mut().enumerate() {
+            if !act_alive[ai] {
+                continue;
+            }
             let ovr = Some((
                 node,
                 NodePlacement {
@@ -380,6 +416,9 @@ impl CostTable {
         let mut out = [0.0f64; 9];
         for wi in 0..3 {
             for ai in 0..3 {
+                if !mask[wi * 3 + ai] {
+                    continue;
+                }
                 let mem = self.weight_s[wi][node] + input + self.output_s[ai][node];
                 let own = self.compute_s[node].max(mem) + self.overhead_s;
                 let mut total = base;
@@ -823,6 +862,61 @@ mod tests {
                 (here - table.latency(map)).abs() <= 1e-9 * here
             },
         );
+    }
+
+    /// The adaptive-pricing contract (ISSUE 4 satellite): for ANY mask,
+    /// every surviving entry of the masked batch must be **bit-identical**
+    /// to the unfiltered 9-way batch — the prefilter may only skip work,
+    /// never change a priced result.
+    #[test]
+    fn prop_masked_probe_bit_identical_on_survivors() {
+        let chip = ChipSpec::nnpi();
+        check(
+            "probe_placements_masked ≡ probe_all_placements on surviving set (bits)",
+            200,
+            |gen| {
+                let g = random_dag(gen);
+                let map = random_map(gen, g.len());
+                let node = gen.usize_in(0, g.len() - 1);
+                let mut mask = [false; 9];
+                for slot in mask.iter_mut() {
+                    *slot = gen.bool();
+                }
+                ((g, map, node, mask), ())
+            },
+            |(g, map, node, mask), _| {
+                let table = CostTable::new(g, &chip);
+                let mut totals = Vec::new();
+                table.node_totals_into(map, &mut totals);
+                let mut skip = Vec::new();
+                let full = table.probe_all_placements(map, *node, &totals, &mut skip);
+                let masked =
+                    table.probe_placements_masked(map, *node, &totals, &mut skip, mask);
+                for k in 0..9 {
+                    if mask[k] {
+                        if masked[k].to_bits() != full[k].to_bits() {
+                            return false;
+                        }
+                    } else if masked[k] != 0.0 {
+                        return false; // dead entries must stay unpriced
+                    }
+                }
+                true
+            },
+        );
+    }
+
+    #[test]
+    fn masked_probe_all_dead_mask_prices_nothing() {
+        let chip = ChipSpec::nnpi();
+        let g = chain(4, 1 << 12, 1 << 10);
+        let table = CostTable::new(&g, &chip);
+        let map = MemoryMap::all_dram(4);
+        let mut totals = Vec::new();
+        table.node_totals_into(&map, &mut totals);
+        let mut skip = Vec::new();
+        let out = table.probe_placements_masked(&map, 1, &totals, &mut skip, &[false; 9]);
+        assert_eq!(out, [0.0; 9]);
     }
 
     /// `Graph::new` permits parallel edges (it only rejects

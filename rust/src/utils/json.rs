@@ -94,6 +94,14 @@ impl Json {
         out
     }
 
+    /// Single-line rendering (no whitespace) — the JSON-lines wire
+    /// format of the serving broker, where one value must be one line.
+    pub fn to_string_compact(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, 0, false);
+        out
+    }
+
     fn write(&self, out: &mut String, indent: usize, pretty: bool) {
         let pad = |n: usize| "  ".repeat(n);
         match self {
@@ -398,5 +406,17 @@ mod tests {
     fn integers_print_without_fraction() {
         assert_eq!(Json::Num(5.0).to_string_pretty(), "5");
         assert_eq!(Json::Num(5.5).to_string_pretty(), "5.5");
+    }
+
+    #[test]
+    fn compact_is_single_line_and_roundtrips() {
+        let j = Json::obj(vec![
+            ("a", Json::num_arr([1.0, 2.0].iter())),
+            ("b", Json::obj(vec![("c", Json::str("x\ny"))])),
+        ]);
+        let s = j.to_string_compact();
+        assert!(!s.contains('\n'), "compact output spilled onto multiple lines: {s}");
+        assert_eq!(s, r#"{"a":[1,2],"b":{"c":"x\ny"}}"#);
+        assert_eq!(parse(&s).unwrap(), j);
     }
 }

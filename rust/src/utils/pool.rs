@@ -12,13 +12,18 @@
 //! * [`map_parallel_mut`]  — same, plus exclusive `&mut` access to one
 //!   slot of an item slice per call — the rollout engine's shape: each
 //!   episode rectifies its proposal buffer in place.
+//! * [`JobQueue`]          — a blocking MPMC work queue (mutex + condvar)
+//!   for long-lived worker threads; the serving broker's background
+//!   refinement workers drain one (DESIGN.md §11).
 //!
 //! Work is claimed dynamically through an atomic counter, so callers that
 //! need determinism must not couple results to *which worker* ran an
 //! index — per-item state (RNG streams in particular) must be derived
 //! from the index, never from the worker (DESIGN.md §8).
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
 
 /// Run `f(i)` for every `i in 0..n`, spread over up to `threads` OS threads,
 /// returning results in index order. Falls back to a plain sequential loop
@@ -140,6 +145,88 @@ struct SendPtr<T>(*mut T);
 unsafe impl<T: Send> Sync for SendPtr<T> {}
 unsafe impl<T: Send> Send for SendPtr<T> {}
 
+struct QueueState<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// A blocking multi-producer multi-consumer job queue for long-lived
+/// worker threads (the scoped `map_parallel*` helpers cover batch
+/// fan-out; this covers *streams* of work arriving over time, e.g. the
+/// serving broker's background refinement jobs).
+///
+/// Lifecycle: producers [`JobQueue::push`] until someone calls
+/// [`JobQueue::close`]; consumers loop on [`JobQueue::pop`], which blocks
+/// while the queue is open and empty and returns `None` once it is
+/// closed **and** drained — so a `while let Some(job) = q.pop()` worker
+/// loop terminates cleanly without losing queued work.
+pub struct JobQueue<T> {
+    state: Mutex<QueueState<T>>,
+    cv: Condvar,
+}
+
+impl<T> JobQueue<T> {
+    pub fn new() -> JobQueue<T> {
+        JobQueue {
+            state: Mutex::new(QueueState { items: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, QueueState<T>> {
+        self.state.lock().expect("job queue poisoned")
+    }
+
+    /// Enqueue a job. Returns `false` (dropping the job) if the queue
+    /// has been closed.
+    pub fn push(&self, item: T) -> bool {
+        let mut s = self.lock();
+        if s.closed {
+            return false;
+        }
+        s.items.push_back(item);
+        self.cv.notify_one();
+        true
+    }
+
+    /// Dequeue the next job, blocking while the queue is open and empty.
+    /// `None` ⇔ closed and fully drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut s = self.lock();
+        loop {
+            if let Some(item) = s.items.pop_front() {
+                return Some(item);
+            }
+            if s.closed {
+                return None;
+            }
+            s = self.cv.wait(s).expect("job queue poisoned");
+        }
+    }
+
+    /// Close the queue: further pushes are refused, blocked consumers
+    /// wake, queued jobs still drain.
+    pub fn close(&self) {
+        self.lock().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Jobs currently queued (racy by nature; for metrics only).
+    pub fn len(&self) -> usize {
+        self.lock().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<T> Default for JobQueue<T> {
+    fn default() -> Self {
+        JobQueue::new()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -244,6 +331,55 @@ mod tests {
             })
         });
         assert!(result.is_err(), "mut-path worker panic was swallowed");
+    }
+
+    #[test]
+    fn job_queue_drains_across_threads() {
+        let q = JobQueue::new();
+        let total = 500usize;
+        let consumed = std::sync::Mutex::new(Vec::new());
+        std::thread::scope(|scope| {
+            for _ in 0..3 {
+                scope.spawn(|| {
+                    while let Some(x) = q.pop() {
+                        consumed.lock().unwrap().push(x);
+                    }
+                });
+            }
+            for i in 0..total {
+                assert!(q.push(i));
+            }
+            q.close();
+        });
+        let mut got = consumed.into_inner().unwrap();
+        got.sort_unstable();
+        assert_eq!(got, (0..total).collect::<Vec<_>>(), "jobs lost or duplicated");
+    }
+
+    #[test]
+    fn job_queue_close_refuses_pushes_but_drains_backlog() {
+        let q = JobQueue::new();
+        assert!(q.push(1));
+        assert!(q.push(2));
+        q.close();
+        assert!(!q.push(3), "push accepted after close");
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None, "drained closed queue must return None");
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn job_queue_close_wakes_blocked_consumer() {
+        let q = JobQueue::<u32>::new();
+        std::thread::scope(|scope| {
+            let h = scope.spawn(|| q.pop());
+            // Give the consumer a moment to block, then close.
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            q.close();
+            assert_eq!(h.join().unwrap(), None);
+        });
     }
 
     #[test]
