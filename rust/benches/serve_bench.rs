@@ -13,12 +13,18 @@
 //! other bench in this repo):
 //! * cache-hit p99 ≥ **100×** faster than the mean cold (miss) path;
 //! * the anytime curve is monotone **non-increasing** in latency —
-//!   background publication never regresses a served map.
+//!   background publication never regresses a served map;
+//! * the **multi-client TCP sweep** (ISSUE 5) shows throughput
+//!   increasing with client count (thread-per-connection scale-out);
+//! * an evicted-then-requested fingerprint is served from the **spill
+//!   tier** without re-running the cold search path.
 //!
 //! Background workers are disabled (`workers: 0`) so the replay is
 //! deterministic; the curve is produced by the same refinement engine
 //! the workers run, driven synchronously via `polish`.
 
+use std::io::{BufRead, BufReader, Write as _};
+use std::net::{TcpListener, TcpStream};
 use std::time::Instant;
 
 use egrl::env::EnvConfig;
@@ -76,6 +82,8 @@ fn main() -> anyhow::Result<()> {
         refine_budget: 36_000,
         workers: 0,
         seed: 1,
+        spill_dir: None,
+        priority_refine: true,
         env: EnvConfig::default(),
     });
 
@@ -142,6 +150,140 @@ fn main() -> anyhow::Result<()> {
     let stats_line = broker.handle(r#"{"op":"stats"}"#);
     let stats = parse(&stats_line)?;
 
+    // ---- multi-client TCP sweep (ISSUE 5 tentpole acceptance) ----------
+    // Fresh broker per client count (identical pre-warmed cache state),
+    // thread-per-connection server, every client replaying the same hot
+    // request mix with `return_map` (the serialization work happens
+    // outside every lock, which is what the thread-per-conn design
+    // parallelizes).
+    println!("\n== multi-client TCP sweep ==");
+    let hot_mix = [Workload::ResNet50, Workload::Bert, Workload::ResNet101];
+    const PER_CLIENT: usize = 150;
+    let sweep = [1usize, 2, 4, 8];
+    let mut sweep_rows: Vec<Json> = Vec::new();
+    let mut sweep_rps: Vec<f64> = Vec::new();
+    for &clients in &sweep {
+        let b = Broker::new(ServeOptions {
+            cache_cap: 16,
+            deadline_ms: 0,
+            refine_budget: 36_000,
+            workers: 0,
+            seed: 1,
+            spill_dir: None,
+            priority_refine: true,
+            env: EnvConfig::default(),
+        });
+        // Pre-warm so the sweep measures pure hit-path throughput.
+        for w in &hot_mix {
+            let resp = b.handle(&format!(r#"{{"op":"map","workload":"{}"}}"#, w.name()));
+            anyhow::ensure!(parse(&resp)?.get("error").is_none(), "warm failed: {resp}");
+        }
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        let wall_s = std::thread::scope(|scope| -> anyhow::Result<f64> {
+            let server = scope.spawn(|| b.serve_tcp(listener));
+            let t0 = Instant::now();
+            let handles: Vec<_> = (0..clients)
+                .map(|_| {
+                    scope.spawn(move || -> anyhow::Result<()> {
+                        let stream = TcpStream::connect(addr)?;
+                        let mut writer = stream.try_clone()?;
+                        let mut reader = BufReader::new(stream);
+                        let mut line = String::new();
+                        for i in 0..PER_CLIENT {
+                            let w = hot_mix[i % hot_mix.len()];
+                            writeln!(
+                                writer,
+                                r#"{{"op":"map","workload":"{}","return_map":true}}"#,
+                                w.name()
+                            )?;
+                            line.clear();
+                            reader.read_line(&mut line)?;
+                            anyhow::ensure!(
+                                parse(&line)?.get("error").is_none(),
+                                "sweep request failed: {line}"
+                            );
+                        }
+                        Ok(())
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().expect("client thread panicked")?;
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            // Shut the server down over a control connection.
+            let stream = TcpStream::connect(addr)?;
+            let mut writer = stream.try_clone()?;
+            let mut reader = BufReader::new(stream);
+            writeln!(writer, r#"{{"op":"shutdown"}}"#)?;
+            let mut line = String::new();
+            reader.read_line(&mut line)?;
+            server.join().expect("server thread panicked")?;
+            Ok(wall)
+        })?;
+        let total = (clients * PER_CLIENT) as f64;
+        let rps = total / wall_s;
+        println!("  {clients:>2} client(s): {total:>5.0} requests in {wall_s:.3} s  ({rps:>8.0} req/s)");
+        sweep_rps.push(rps);
+        sweep_rows.push(Json::obj(vec![
+            ("clients", Json::Num(clients as f64)),
+            ("requests", Json::Num(total)),
+            ("wall_s", Json::Num(wall_s)),
+            ("throughput_rps", Json::Num(rps)),
+        ]));
+    }
+    let best_concurrent = sweep_rps[1..].iter().cloned().fold(f64::NAN, f64::max);
+    let multi_client_scaling = best_concurrent > sweep_rps[0];
+    println!(
+        "  scaling: 1-client {:.0} req/s -> best concurrent {:.0} req/s (increasing: {multi_client_scaling})",
+        sweep_rps[0], best_concurrent
+    );
+
+    // ---- spill tier round trip (ISSUE 5 tentpole acceptance) -----------
+    // Cold-map, force-evict (demotes to disk), re-request: the entry must
+    // come back from the spill tier with its refinement investment
+    // intact, without re-running the cold search path.
+    println!("\n== spill tier round trip ==");
+    let spill_path = std::env::temp_dir().join(format!("egrl-serve-bench-spill-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&spill_path);
+    let sb = Broker::new(ServeOptions {
+        cache_cap: 16,
+        deadline_ms: 10,
+        refine_budget: 36_000,
+        workers: 0,
+        seed: 1,
+        spill_dir: Some(spill_path.clone()),
+        priority_refine: true,
+        env: EnvConfig::default(),
+    });
+    let t0 = Instant::now();
+    let cold = parse(&sb.handle(r#"{"op":"map","workload":"resnet50"}"#))?;
+    let cold_ms = t0.elapsed().as_secs_f64() * 1e3;
+    anyhow::ensure!(
+        cold.get("cache").and_then(Json::as_str) == Some("miss"),
+        "spill phase expected a cold miss: {cold:?}"
+    );
+    let cold_iters = cold.get("refine_iters").and_then(Json::as_f64).unwrap_or(0.0);
+    let ev = parse(&sb.handle(r#"{"op":"evict","workload":"resnet50"}"#))?;
+    anyhow::ensure!(
+        ev.get("spilled").and_then(Json::as_bool) == Some(true),
+        "eviction did not spill: {ev:?}"
+    );
+    let t0 = Instant::now();
+    let restored = parse(&sb.handle(r#"{"op":"map","workload":"resnet50"}"#))?;
+    let restore_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let served_from_spill = restored.get("cache").and_then(Json::as_str) == Some("spill");
+    let restored_iters = restored.get("refine_iters").and_then(Json::as_f64).unwrap_or(-1.0);
+    let spill_stats = parse(&sb.handle(r#"{"op":"stats"}"#))?;
+    let spill_hits = spill_stats.get("spill_hits").and_then(Json::as_f64).unwrap_or(0.0);
+    println!(
+        "  cold {cold_ms:.1} ms ({cold_iters:.0} iters) -> evict -> restore {restore_ms:.1} ms \
+         (from spill: {served_from_spill}, iters preserved: {})",
+        restored_iters == cold_iters
+    );
+    let _ = std::fs::remove_dir_all(&spill_path);
+
     let json = Json::obj(vec![
         ("schema", Json::str("egrl-bench-serve-v1")),
         (
@@ -169,6 +311,18 @@ fn main() -> anyhow::Result<()> {
         ),
         ("curve_monotone", Json::Bool(curve_monotone)),
         ("final_speedup", Json::Num(final_entry.speedup)),
+        ("multi_client", Json::Arr(sweep_rows)),
+        ("multi_client_scaling", Json::Bool(multi_client_scaling)),
+        (
+            "spill",
+            Json::obj(vec![
+                ("cold_ms", Json::Num(cold_ms)),
+                ("restore_ms", Json::Num(restore_ms)),
+                ("served_from_spill", Json::Bool(served_from_spill)),
+                ("refine_iters_preserved", Json::Bool(restored_iters == cold_iters)),
+                ("spill_hits", Json::Num(spill_hits)),
+            ]),
+        ),
         ("broker_stats", stats),
     ]);
     std::fs::write("BENCH_serve.json", json.to_string_pretty())?;
@@ -176,6 +330,10 @@ fn main() -> anyhow::Result<()> {
     println!(
         "targets (ISSUE 4): hit p99 {}x faster than cold (>= 100x: {}), anytime curve monotone: {}",
         cold_over_hit_p99 as i64, latency_target_met, curve_monotone
+    );
+    println!(
+        "targets (ISSUE 5): throughput increases with clients: {multi_client_scaling}, \
+         spill restore without cold search: {served_from_spill}"
     );
     Ok(())
 }

@@ -108,17 +108,25 @@ SUBCOMMANDS:
              --config FILE    key=value config file
   serve      Placement-serving broker: JSON-lines requests (one object
              per line) against a fingerprint-keyed map cache with
-             background anytime refinement
-             ops: {\"op\":\"map\",\"workload\":W[,\"return_map\":true]}
+             background anytime refinement (hot entries first) — wire
+             protocol reference: docs/SERVE_PROTOCOL.md
+             ops: {\"op\":\"map\",\"workload\":W[,\"return_map\":true]
+                                       [,\"deadline_ms\":N]}
                   {\"op\":\"polish\",\"workload\":W[,\"budget\":N]}
                   {\"op\":\"stats\"} | {\"op\":\"evict\",\"workload\":W}
                   {\"op\":\"shutdown\"}
-             --tcp ADDR       serve a TCP listener instead of stdin/stdout
+             --tcp ADDR       serve a TCP listener (concurrent
+                              connections, thread per connection)
+                              instead of stdin/stdout
              --warm DIR       warm-start the cache from saved artifacts
              --save DIR       persist cache entries as artifacts on exit
+             --spill DIR      disk spill tier: evictions are demoted to
+                              DIR and misses probe it before the cold
+                              path (same as --set serve_spill_dir=DIR)
              --seed N                              (default 0)
              --set key=value  serve_cache_cap=64 serve_deadline_ms=25
                               serve_refine_budget=18000 serve_workers=1
+                              serve_spill_dir= serve_priority_refine=true
   polish     Online serving path: refine a precompiled mapping artifact
              with the batched local-search engine
              --workload ...   workload the map belongs to

@@ -99,6 +99,14 @@ pub struct EgrlConfig {
     /// `egrl serve`: background anytime-refinement worker threads; 0
     /// disables background refinement (deadline-phase and `polish` only).
     pub serve_workers: usize,
+    /// `egrl serve`: disk spill tier directory. Cache evictions write
+    /// their entry as a fingerprinted `egrl-map-v1` artifact here, and
+    /// misses probe it before running the cold search path. Empty
+    /// (default) disables the spill tier.
+    pub serve_spill_dir: String,
+    /// `egrl serve`: drain the background refinement queue hottest-entry
+    /// first (weighted by cache hit count). `false` falls back to FIFO.
+    pub serve_priority_refine: bool,
 }
 
 impl Default for EgrlConfig {
@@ -139,6 +147,8 @@ impl Default for EgrlConfig {
             serve_deadline_ms: 25,
             serve_refine_budget: 18_000,
             serve_workers: 1,
+            serve_spill_dir: String::new(),
+            serve_priority_refine: true,
         }
     }
 }
@@ -274,6 +284,9 @@ impl EgrlConfig {
             "serve_deadline_ms" => self.serve_deadline_ms = p(key, value)?,
             "serve_refine_budget" => self.serve_refine_budget = p(key, value)?,
             "serve_workers" => self.serve_workers = p(key, value)?,
+            // An empty value disables the spill tier (the default).
+            "serve_spill_dir" => self.serve_spill_dir = value.to_string(),
+            "serve_priority_refine" => self.serve_priority_refine = p(key, value)?,
             other => anyhow::bail!("unknown config key '{other}'"),
         }
         Ok(())
@@ -485,6 +498,23 @@ mod tests {
         assert_eq!(c.serve_workers, 0);
         assert!(c.set("serve_cache_cap", "0").is_err());
         assert!(c.set("serve_refine_budget", "abc").is_err());
+    }
+
+    /// ISSUE 5: the spill-tier and priority-refinement keys.
+    #[test]
+    fn serve_spill_and_priority_keys_wired() {
+        let mut c = EgrlConfig::default();
+        assert!(c.serve_spill_dir.is_empty(), "spill tier must default off");
+        assert!(c.serve_priority_refine, "priority refinement must default on");
+        c.set("serve_spill_dir", "/tmp/egrl-spill").unwrap();
+        assert_eq!(c.serve_spill_dir, "/tmp/egrl-spill");
+        c.set("serve_spill_dir", "").unwrap(); // empty clears it
+        assert!(c.serve_spill_dir.is_empty());
+        c.set("serve_priority_refine", "false").unwrap();
+        assert!(!c.serve_priority_refine);
+        c.set("serve_priority_refine", "true").unwrap();
+        assert!(c.serve_priority_refine);
+        assert!(c.set("serve_priority_refine", "maybe").is_err());
     }
 
     #[test]

@@ -166,19 +166,32 @@ fn cmd_train(cli: &Cli) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// The placement-serving subsystem (DESIGN.md §11): a JSON-lines broker
-/// over stdin/stdout (default) or a TCP listener, with a
-/// fingerprint-keyed LRU map cache, per-request deadlines and background
-/// anytime refinement workers.
+/// The placement-serving subsystem (DESIGN.md §11–§12): a JSON-lines
+/// broker (wire protocol: docs/SERVE_PROTOCOL.md) over stdin/stdout
+/// (default) or a concurrent thread-per-connection TCP listener, with a
+/// fingerprint-keyed LRU map cache, a disk spill tier beyond it,
+/// per-request deadlines and hit-count-prioritized background anytime
+/// refinement workers.
 fn cmd_serve(cli: &Cli) -> anyhow::Result<()> {
     let mut cfg = EgrlConfig { seed: cli.get_u64("seed", 0)?, ..EgrlConfig::default() };
     cli.apply_overrides(&mut cfg)?;
+    if let Some(dir) = cli.get("spill") {
+        cfg.set("serve_spill_dir", dir)?;
+    }
     // Fail fast on invariant-breaking configs — never panic in the pool.
     cfg.validate()?;
     let opts = ServeOptions::from_config(&cfg);
     eprintln!(
-        "egrl serve: cache {} entries, deadline {} ms, refine budget {} moves, {} workers",
-        opts.cache_cap, opts.deadline_ms, opts.refine_budget, opts.workers
+        "egrl serve: cache {} entries, deadline {} ms, refine budget {} moves, {} workers{}{}",
+        opts.cache_cap,
+        opts.deadline_ms,
+        opts.refine_budget,
+        opts.workers,
+        if opts.priority_refine { " (hot-first)" } else { " (fifo)" },
+        match &opts.spill_dir {
+            Some(d) => format!(", spill tier {}", d.display()),
+            None => String::new(),
+        }
     );
     let broker = Broker::new(opts);
     if let Some(dir) = cli.get("warm") {

@@ -32,15 +32,30 @@
 //! reader can never observe a regression, and the per-entry anytime
 //! curve is monotone non-increasing (DESIGN.md §11).
 //!
-//! Malformed requests produce `{"error": ...}` responses; they never
-//! take the broker down.
+//! **Scale-out** (DESIGN.md §12): the TCP front end is
+//! thread-per-connection over the `&self`-threadsafe broker; concurrent
+//! cold misses for one fingerprint are *coalesced across connections*
+//! (one connection runs the expensive cold path, the others wait on a
+//! condvar and serve its published entry — `coalesced_misses`); requests
+//! may carry a per-request `"deadline_ms"` overriding the global
+//! `serve_deadline_ms`; background refinement drains a hit-count-weighted
+//! priority queue so hot entries refine first; and cache evictions demote
+//! entries to a disk **spill tier** (`serve_spill_dir`) that misses probe
+//! before re-running the cold search path (`spill_hits`/`spill_writes`/
+//! `spill_rejected` in `stats`).
+//!
+//! Malformed or unknown requests produce one structured
+//! `{"ok":false,"error":...}` response line; they never close the stream
+//! or take the broker down. Successful responses carry `"ok":true`.
+//! The wire protocol is documented normatively in
+//! `docs/SERVE_PROTOCOL.md`.
 
 use std::collections::{HashMap, HashSet};
 use std::io::{BufRead, BufReader, Write};
-use std::net::TcpListener;
-use std::path::Path;
+use std::net::{TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::config::EgrlConfig;
@@ -48,7 +63,7 @@ use crate::env::{EnvConfig, MappingEnv, MoveBatch};
 use crate::mapping::MemoryMap;
 use crate::sim::spec::ChipSpec;
 use crate::utils::json::{parse, Json};
-use crate::utils::pool::JobQueue;
+use crate::utils::pool::PriorityJobQueue;
 use crate::workloads::Workload;
 
 use super::cache::{CacheEntry, MapCache};
@@ -62,6 +77,10 @@ const INLINE_CHUNK: u64 = 4 * MoveBatch::MOVES;
 /// Background refinement slice: 32 node visits between stop-flag checks
 /// and publish opportunities.
 const BACKGROUND_CHUNK: u64 = 32 * MoveBatch::MOVES;
+/// TCP read-poll interval: an idle connection re-checks the shutdown
+/// flag at this cadence, bounding how long a quiet client can pin the
+/// accept scope open after `shutdown`.
+const TCP_POLL: Duration = Duration::from_millis(50);
 
 /// Serving configuration, lifted from the `serve_*` keys of
 /// [`EgrlConfig`].
@@ -80,6 +99,13 @@ pub struct ServeOptions {
     pub workers: usize,
     /// Base RNG seed (environments and refiners derive from it).
     pub seed: u64,
+    /// Disk spill tier: evicted cache entries are written here as
+    /// fingerprinted `egrl-map-v1` artifacts and misses probe it before
+    /// running the cold path. `None` disables the tier.
+    pub spill_dir: Option<PathBuf>,
+    /// Drain the background refinement queue hottest-entry-first
+    /// (weighted by cache hit count); `false` degrades to FIFO.
+    pub priority_refine: bool,
     /// Environment (reward/noise) configuration.
     pub env: EnvConfig,
 }
@@ -92,6 +118,12 @@ impl ServeOptions {
             refine_budget: cfg.serve_refine_budget,
             workers: cfg.serve_workers,
             seed: cfg.seed,
+            spill_dir: if cfg.serve_spill_dir.is_empty() {
+                None
+            } else {
+                Some(PathBuf::from(&cfg.serve_spill_dir))
+            },
+            priority_refine: cfg.serve_priority_refine,
             env: cfg.env_config(),
         }
     }
@@ -123,11 +155,24 @@ struct Counters {
     /// Requests that wanted refinement while a job for the same
     /// fingerprint was already in flight (duplicate coalescing).
     coalesced: u64,
+    /// Misses that arrived while another connection was already running
+    /// the cold path for the same fingerprint: they waited for its entry
+    /// instead of re-running the search (cross-connection coalescing).
+    coalesced_misses: u64,
     errors: u64,
     background_jobs: u64,
     polishes: u64,
     warm_starts: u64,
     warm_rejected: u64,
+    /// Evicted entries demoted to the disk spill tier.
+    spill_writes: u64,
+    /// Misses served by restoring a spill artifact (no cold search).
+    spill_hits: u64,
+    /// Spill artifacts that existed but failed validation against the
+    /// live environment (corrupt, truncated, or fingerprint-mismatched).
+    spill_rejected: u64,
+    /// Request streams accepted (stdio counts as one).
+    connections: u64,
 }
 
 /// The placement-serving broker. All methods take `&self`; the broker is
@@ -140,15 +185,36 @@ pub struct Broker {
     cache: MapCache,
     /// Fingerprints with a background job queued or running.
     in_flight: Mutex<HashSet<Fingerprint>>,
+    /// Fingerprints whose cold (miss) path is currently running on some
+    /// connection. Concurrent misses for the same fingerprint wait on
+    /// [`Self::cold_cv`] instead of duplicating the search (§12).
+    cold_in_flight: Mutex<HashSet<Fingerprint>>,
+    cold_cv: Condvar,
     /// Reverse index for stats/save responses.
     fp_workload: Mutex<HashMap<Fingerprint, Workload>>,
     /// Disk warm-start pool: artifact maps awaiting first use, keyed by
     /// the fingerprint persisted inside them (validated lazily against
     /// the live environment).
     warm: Mutex<HashMap<Fingerprint, MemoryMap>>,
-    queue: JobQueue<RefineJob>,
+    queue: PriorityJobQueue<RefineJob>,
     stop: AtomicBool,
     counters: Mutex<Counters>,
+}
+
+/// RAII claim on the cold path for one fingerprint: created by the
+/// connection that wins the race, dropped (panic-safely) once its entry
+/// is in the cache — waking every coalesced waiter on
+/// [`Broker::cold_cv`].
+struct ColdClaim<'b> {
+    broker: &'b Broker,
+    fp: Fingerprint,
+}
+
+impl Drop for ColdClaim<'_> {
+    fn drop(&mut self) {
+        self.broker.cold_in_flight.lock().expect("cold set poisoned").remove(&self.fp);
+        self.broker.cold_cv.notify_all();
+    }
 }
 
 impl Broker {
@@ -159,9 +225,11 @@ impl Broker {
             envs: Mutex::new(HashMap::new()),
             cache,
             in_flight: Mutex::new(HashSet::new()),
+            cold_in_flight: Mutex::new(HashSet::new()),
+            cold_cv: Condvar::new(),
             fp_workload: Mutex::new(HashMap::new()),
             warm: Mutex::new(HashMap::new()),
-            queue: JobQueue::new(),
+            queue: PriorityJobQueue::new(),
             stop: AtomicBool::new(false),
             counters: Mutex::new(Counters::default()),
         }
@@ -215,14 +283,21 @@ impl Broker {
 
     // ---- request handling --------------------------------------------------
 
-    /// Handle one request line; always returns one response line.
+    /// Handle one request line; always returns exactly one response
+    /// line. Malformed or unknown requests get a structured
+    /// `{"ok":false,"error":...}` line — the stream never closes on bad
+    /// input (regression-tested with garbage interleaved among valid
+    /// ops).
     pub fn handle(&self, line: &str) -> String {
         self.bump(|c| c.requests += 1);
         let resp = match self.handle_inner(line) {
             Ok(j) => j,
             Err(e) => {
                 self.bump(|c| c.errors += 1);
-                Json::obj(vec![("error", Json::str(format!("{e:#}")))])
+                Json::obj(vec![
+                    ("ok", Json::Bool(false)),
+                    ("error", Json::str(format!("{e:#}"))),
+                ])
             }
         };
         resp.to_string_compact()
@@ -241,7 +316,7 @@ impl Broker {
             "evict" => self.op_evict(&req),
             "shutdown" => {
                 self.stop.store(true, Ordering::SeqCst);
-                Ok(Json::obj(vec![("op", Json::str("shutdown")), ("ok", Json::Bool(true))]))
+                Ok(Json::obj(vec![("ok", Json::Bool(true)), ("op", Json::str("shutdown"))]))
             }
             other => anyhow::bail!("unknown op '{other}' (expected map|polish|stats|evict|shutdown)"),
         }
@@ -255,29 +330,106 @@ impl Broker {
         Workload::parse(name)
     }
 
+    /// Per-request `"deadline_ms"` (overrides the global
+    /// `serve_deadline_ms`; 0 answers a miss immediately with the best
+    /// available map).
+    fn req_deadline_ms(&self, req: &Json) -> anyhow::Result<u64> {
+        match req.get("deadline_ms") {
+            None => Ok(self.opts.deadline_ms),
+            Some(j) => {
+                let x = j
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("'deadline_ms' must be a number"))?;
+                anyhow::ensure!(
+                    x.is_finite() && x >= 0.0,
+                    "'deadline_ms' must be finite and >= 0, got {x}"
+                );
+                Ok(x as u64)
+            }
+        }
+    }
+
+    /// Background refinement priority for an entry: its cache hit count
+    /// (hot entries refine first), or 0 everywhere when
+    /// `serve_priority_refine` is off (FIFO).
+    fn refine_priority(&self, fp: Fingerprint) -> u64 {
+        if self.opts.priority_refine {
+            self.cache.hit_count(fp)
+        } else {
+            0
+        }
+    }
+
     fn op_map(&self, req: &Json) -> anyhow::Result<Json> {
         let t0 = Instant::now();
         let w = self.req_workload(req)?;
         let return_map = req.get("return_map").and_then(Json::as_bool).unwrap_or(false);
+        let deadline_ms = self.req_deadline_ms(req)?;
         let (env, fp) = self.env_for(w);
 
-        if let Some(entry) = self.cache.get(fp) {
-            self.bump(|c| c.map_hits += 1);
-            if self.refining(fp) {
-                self.bump(|c| c.stale_hits += 1);
+        // Lookup under the cross-connection cold-path claim: concurrent
+        // misses for one fingerprint run the expensive cold path once —
+        // the other connections wait on `cold_cv` and are served the
+        // claimant's entry (counted `coalesced_misses`, §12).
+        let mut counted_coalesce = false;
+        let _claim = loop {
+            if let Some(entry) = self.cache.get(fp) {
+                self.bump(|c| c.map_hits += 1);
+                if self.refining(fp) {
+                    self.bump(|c| c.stale_hits += 1);
+                }
+                // Hot-entry top-up: hits keep feeding background budget
+                // until the entry converges or exhausts the budget.
+                let refining =
+                    if !entry.converged && entry.refine_iters < self.opts.refine_budget {
+                        let remaining = self.opts.refine_budget - entry.refine_iters;
+                        let prio = self.refine_priority(fp);
+                        self.maybe_enqueue(w, fp, entry.map.clone(), remaining, prio)
+                    } else {
+                        self.refining(fp)
+                    };
+                return Ok(map_response(w, fp, "hit", None, &entry, refining, return_map));
             }
-            // Hot-entry top-up: hits keep feeding background budget until
-            // the entry converges or exhausts `serve_refine_budget`.
+            let mut cold = self.cold_in_flight.lock().expect("cold set poisoned");
+            if cold.contains(&fp) {
+                if !counted_coalesce {
+                    counted_coalesce = true;
+                    self.bump(|c| c.coalesced_misses += 1);
+                }
+                while cold.contains(&fp) {
+                    cold = self.cold_cv.wait(cold).expect("cold set poisoned");
+                }
+                drop(cold);
+                continue; // claimant finished — re-check the cache
+            }
+            // Re-check under the claim lock: an insert may have raced in
+            // between the lookup above and taking the lock (loop back to
+            // the metric-counting hit path rather than double-counting).
+            if self.cache.peek(fp).is_some() {
+                drop(cold);
+                continue;
+            }
+            cold.insert(fp);
+            break ColdClaim { broker: self, fp };
+        };
+        self.bump(|c| c.map_misses += 1);
+
+        // Spill tier first: a previously evicted entry restores from
+        // disk — refinement investment intact — without re-running the
+        // cold search path.
+        if let Some(entry) = self.spill_probe(fp, &env) {
+            self.bump(|c| c.spill_hits += 1);
+            self.spill_victims(self.cache.insert(fp, entry.clone()));
             let refining =
                 if !entry.converged && entry.refine_iters < self.opts.refine_budget {
                     let remaining = self.opts.refine_budget - entry.refine_iters;
-                    self.maybe_enqueue(w, fp, entry.map.clone(), remaining)
+                    let prio = self.refine_priority(fp);
+                    self.maybe_enqueue(w, fp, entry.map.clone(), remaining, prio)
                 } else {
                     self.refining(fp)
                 };
-            return Ok(map_response(w, fp, "hit", None, &entry, refining, return_map));
+            return Ok(map_response(w, fp, "spill", Some("spill"), &entry, refining, return_map));
         }
-        self.bump(|c| c.map_misses += 1);
 
         // Best-available start: a fingerprint-matching warm artifact
         // (validated against the live environment now) or the compiler map.
@@ -300,8 +452,8 @@ impl Broker {
         // Inline anytime phase: refine until the per-request deadline
         // (or the whole budget / convergence, whichever first).
         let mut refiner = AnytimeRefiner::new(&env, &start, self.opts.seed ^ fp.0[1]);
-        if self.opts.deadline_ms > 0 {
-            let deadline = t0 + Duration::from_millis(self.opts.deadline_ms);
+        if deadline_ms > 0 {
+            let deadline = t0 + Duration::from_millis(deadline_ms);
             loop {
                 let remaining = self.opts.refine_budget.saturating_sub(refiner.moves());
                 if remaining < MoveBatch::MOVES || Instant::now() >= deadline {
@@ -322,21 +474,30 @@ impl Broker {
             version: 0,
             converged: refiner.converged(),
         };
-        self.cache.insert(fp, entry.clone());
+        self.spill_victims(self.cache.insert(fp, entry.clone()));
         let remaining = self.opts.refine_budget.saturating_sub(refiner.moves());
         let refining = if refiner.converged() {
             false
         } else {
-            self.maybe_enqueue(w, fp, entry.map.clone(), remaining)
+            let prio = self.refine_priority(fp);
+            self.maybe_enqueue(w, fp, entry.map.clone(), remaining, prio)
         };
         Ok(map_response(w, fp, "miss", Some(source), &entry, refining, return_map))
     }
 
-    /// Enqueue a background refinement job unless one is already in
-    /// flight for `fp` (**duplicate in-flight coalescing**), workers are
-    /// disabled, or the remaining budget is below one batch. Returns
-    /// whether a refinement is in flight after the call.
-    fn maybe_enqueue(&self, w: Workload, fp: Fingerprint, start: MemoryMap, budget: u64) -> bool {
+    /// Enqueue a background refinement job at `priority` (hit-count
+    /// weight — higher drains first) unless one is already in flight for
+    /// `fp` (**duplicate in-flight coalescing**), workers are disabled,
+    /// or the remaining budget is below one batch. Returns whether a
+    /// refinement is in flight after the call.
+    fn maybe_enqueue(
+        &self,
+        w: Workload,
+        fp: Fingerprint,
+        start: MemoryMap,
+        budget: u64,
+        priority: u64,
+    ) -> bool {
         if budget < MoveBatch::MOVES {
             return self.refining(fp);
         }
@@ -359,12 +520,105 @@ impl Broker {
                 ^ fp.0[0].rotate_left(13)
                 ^ c.background_jobs.wrapping_mul(0x9E37_79B9_7F4A_7C15)
         };
-        if !self.queue.push(RefineJob { workload: w, fp, start, budget, seed }) {
+        if !self.queue.push(RefineJob { workload: w, fp, start, budget, seed }, priority) {
             // Queue already closed (shutdown): roll the reservation back.
             self.in_flight.lock().expect("in-flight poisoned").remove(&fp);
             return false;
         }
         true
+    }
+
+    // ---- disk spill tier ---------------------------------------------------
+
+    fn spill_path(&self, fp: Fingerprint) -> Option<PathBuf> {
+        self.opts.spill_dir.as_ref().map(|d| d.join(format!("{}.json", fp.hex())))
+    }
+
+    /// Demote an evicted entry to the spill tier. Overwrites any older
+    /// artifact for the fingerprint — publishes only ever improve, so
+    /// latest-wins preserves the monotone guarantee across demotions
+    /// (§12). Disk errors are logged, never fatal to serving. Returns
+    /// whether the artifact was written.
+    fn spill_write(&self, fp: Fingerprint, entry: &CacheEntry) -> bool {
+        let Some(path) = self.spill_path(fp) else { return false };
+        let dir = self.opts.spill_dir.as_ref().expect("spill dir configured");
+        let wname = self
+            .fp_workload
+            .lock()
+            .expect("fp index poisoned")
+            .get(&fp)
+            .map(|w| w.name())
+            .unwrap_or("unknown");
+        let payload = artifact_payload(fp, wname, entry);
+        // Write-to-temp + rename so a concurrent `spill_probe` (or a
+        // crash mid-write) can never observe a half-written artifact —
+        // the rename is atomic within the spill dir.
+        let tmp = path.with_extension("json.tmp");
+        let write = std::fs::create_dir_all(dir)
+            .and_then(|()| std::fs::write(&tmp, payload.to_string_pretty()))
+            .and_then(|()| std::fs::rename(&tmp, &path));
+        match write {
+            Ok(()) => {
+                self.bump(|c| c.spill_writes += 1);
+                true
+            }
+            Err(e) => {
+                eprintln!("serve: spill write '{}' failed: {e}", path.display());
+                false
+            }
+        }
+    }
+
+    /// Spill every capacity-eviction victim an insert produced.
+    fn spill_victims(&self, victims: Vec<(Fingerprint, CacheEntry)>) {
+        for (fp, entry) in victims {
+            self.spill_write(fp, &entry);
+        }
+    }
+
+    /// Probe the spill tier for `fp`. A readable, fingerprint-matching,
+    /// environment-valid artifact restores as a cache entry with its
+    /// refinement accounting intact; its noise-free latency is
+    /// **re-measured** against the live cost table (the publish-rule
+    /// invariants are re-derived, never trusted from disk). An absent
+    /// file is a plain miss; an invalid one counts `spill_rejected` and
+    /// falls through to the cold path.
+    fn spill_probe(&self, fp: Fingerprint, env: &MappingEnv) -> Option<CacheEntry> {
+        let path = self.spill_path(fp)?;
+        let text = std::fs::read_to_string(&path).ok()?;
+        let parsed = parse(&text).ok().and_then(|j| {
+            let stored = Fingerprint::from_hex(j.get("fingerprint")?.as_str()?).ok()?;
+            if stored != fp {
+                return None;
+            }
+            let map = MemoryMap::from_json(&j).ok()?;
+            if map.len() != env.num_nodes()
+                || !env.compiler.is_valid(&env.graph, &env.liveness, &map)
+            {
+                return None;
+            }
+            let refine_iters = j.get("refine_iters").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+            let version = j.get("version").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+            let converged = j.get("converged").and_then(Json::as_bool).unwrap_or(false);
+            Some((map, refine_iters, version, converged))
+        });
+        match parsed {
+            Some((map, refine_iters, version, converged)) => {
+                let lat = env.cost_table.latency(&map);
+                Some(CacheEntry {
+                    map,
+                    true_latency_s: lat,
+                    speedup: env.baseline_true_latency_s / lat,
+                    refine_iters,
+                    version,
+                    converged,
+                })
+            }
+            None => {
+                self.bump(|c| c.spill_rejected += 1);
+                None
+            }
+        }
     }
 
     fn op_polish(&self, req: &Json) -> anyhow::Result<Json> {
@@ -380,20 +634,32 @@ impl Broker {
             "polish budget {budget} is below one batch ({} placements)",
             MoveBatch::MOVES
         );
-        // Polishing an uncached workload seeds the entry first.
+        // Polishing an uncached workload seeds the entry first (from the
+        // spill tier when a matching artifact exists, else the compiler
+        // map).
         let entry = match self.cache.peek(fp) {
             Some(e) => e,
             None => {
-                let lat = env.cost_table.latency(&env.compiler_map);
-                let e = CacheEntry {
-                    map: env.compiler_map.clone(),
-                    true_latency_s: lat,
-                    speedup: env.baseline_true_latency_s / lat,
-                    refine_iters: 0,
-                    version: 0,
-                    converged: false,
+                let e = match self.spill_probe(fp, &env) {
+                    Some(e) => {
+                        // Same accounting as a `map` restore: the disk
+                        // tier served this entry.
+                        self.bump(|c| c.spill_hits += 1);
+                        e
+                    }
+                    None => {
+                        let lat = env.cost_table.latency(&env.compiler_map);
+                        CacheEntry {
+                            map: env.compiler_map.clone(),
+                            true_latency_s: lat,
+                            speedup: env.baseline_true_latency_s / lat,
+                            refine_iters: 0,
+                            version: 0,
+                            converged: false,
+                        }
+                    }
                 };
-                self.cache.insert(fp, e.clone());
+                self.spill_victims(self.cache.insert(fp, e.clone()));
                 e
             }
         };
@@ -416,6 +682,7 @@ impl Broker {
         );
         let after = self.cache.peek(fp).map(|e| e.speedup).unwrap_or(speedup_before);
         Ok(Json::obj(vec![
+            ("ok", Json::Bool(true)),
             ("op", Json::str("polish")),
             ("workload", Json::str(w.name())),
             ("fingerprint", Json::str(fp.hex())),
@@ -430,12 +697,18 @@ impl Broker {
     fn op_evict(&self, req: &Json) -> anyhow::Result<Json> {
         let w = self.req_workload(req)?;
         let (_, fp) = self.env_for(w);
-        let evicted = self.cache.evict(fp);
+        let taken = self.cache.take(fp);
+        let spilled = match &taken {
+            Some(entry) => self.spill_write(fp, entry),
+            None => false,
+        };
         Ok(Json::obj(vec![
+            ("ok", Json::Bool(true)),
             ("op", Json::str("evict")),
             ("workload", Json::str(w.name())),
             ("fingerprint", Json::str(fp.hex())),
-            ("evicted", Json::Bool(evicted)),
+            ("evicted", Json::Bool(taken.is_some())),
+            ("spilled", Json::Bool(spilled)),
         ]))
     }
 
@@ -467,13 +740,19 @@ impl Broker {
         let hit_rate =
             if lookups == 0 { 0.0 } else { c.map_hits as f64 / lookups as f64 };
         Json::obj(vec![
+            ("ok", Json::Bool(true)),
             ("op", Json::str("stats")),
             ("requests", Json::Num(c.requests as f64)),
+            ("connections", Json::Num(c.connections as f64)),
             ("hits", Json::Num(c.map_hits as f64)),
             ("misses", Json::Num(c.map_misses as f64)),
             ("hit_rate", Json::Num(hit_rate)),
             ("stale_hits", Json::Num(c.stale_hits as f64)),
             ("coalesced", Json::Num(c.coalesced as f64)),
+            ("coalesced_misses", Json::Num(c.coalesced_misses as f64)),
+            ("spill_writes", Json::Num(c.spill_writes as f64)),
+            ("spill_hits", Json::Num(c.spill_hits as f64)),
+            ("spill_rejected", Json::Num(c.spill_rejected as f64)),
             ("errors", Json::Num(c.errors as f64)),
             ("background_jobs", Json::Num(c.background_jobs as f64)),
             ("polishes", Json::Num(c.polishes as f64)),
@@ -560,8 +839,9 @@ impl Broker {
     /// alive; closes the job queue (joining the workers) when it
     /// returns. The close lives in a drop guard so a panic inside
     /// `body` still releases the workers — otherwise `thread::scope`
-    /// would wait forever on threads blocked in [`JobQueue::pop`],
-    /// turning a crash into a silent hang. On a panicking unwind the
+    /// would wait forever on threads blocked in
+    /// [`PriorityJobQueue::pop`], turning a crash into a silent hang.
+    /// On a panicking unwind the
     /// guard also raises the stop flag, so workers abandon in-progress
     /// jobs at the next chunk boundary instead of draining the backlog.
     fn with_workers<T>(&self, body: impl FnOnce() -> T) -> T {
@@ -588,6 +868,7 @@ impl Broker {
         reader: R,
         writer: &mut W,
     ) -> anyhow::Result<()> {
+        self.bump(|c| c.connections += 1);
         for line in reader.lines() {
             let line = line?;
             if line.trim().is_empty() {
@@ -598,6 +879,70 @@ impl Broker {
             writer.flush()?;
             if self.stop.load(Ordering::SeqCst) {
                 break;
+            }
+        }
+        Ok(())
+    }
+
+    /// One TCP connection: the same request loop as
+    /// [`Self::serve_connection`], but reads poll at [`TCP_POLL`] so a
+    /// quiet client cannot pin the accept scope open after another
+    /// connection's `shutdown`. The line is accumulated as **bytes**
+    /// (`read_until`), not via `read_line`: a poll timeout that splits a
+    /// multi-byte UTF-8 character would make `read_line`'s validity
+    /// guard discard the bytes it had already consumed, corrupting the
+    /// stream — `read_until` keeps every consumed byte in the buffer
+    /// across polls, and UTF-8 is only decoded once the full line is
+    /// assembled (invalid bytes then just fail to parse as JSON and get
+    /// a structured error line).
+    fn serve_tcp_connection(&self, stream: TcpStream) -> anyhow::Result<()> {
+        self.bump(|c| c.connections += 1);
+        stream.set_read_timeout(Some(TCP_POLL))?;
+        let mut writer = stream.try_clone()?;
+        let mut reader = BufReader::new(stream);
+        let mut raw: Vec<u8> = Vec::new();
+        loop {
+            match reader.read_until(b'\n', &mut raw) {
+                Ok(0) => {
+                    // Client EOF. A partial line accumulated across
+                    // earlier poll ticks still gets its response.
+                    let line = String::from_utf8_lossy(&raw);
+                    let trimmed = line.trim();
+                    if !trimmed.is_empty() {
+                        let resp = self.handle(trimmed);
+                        writeln!(writer, "{resp}")?;
+                        writer.flush()?;
+                    }
+                    break;
+                }
+                Ok(_) => {
+                    // No trailing newline ⇔ EOF cut the final line short.
+                    let eof = !raw.ends_with(b"\n");
+                    {
+                        let line = String::from_utf8_lossy(&raw);
+                        let trimmed = line.trim();
+                        if !trimmed.is_empty() {
+                            let resp = self.handle(trimmed);
+                            writeln!(writer, "{resp}")?;
+                            writer.flush()?;
+                        }
+                    }
+                    raw.clear();
+                    if eof || self.stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                }
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    // Poll tick: any partial line stays in `raw` — just
+                    // re-check the stop flag.
+                    if self.stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                }
+                Err(e) => return Err(e.into()),
             }
         }
         Ok(())
@@ -616,33 +961,55 @@ impl Broker {
         self.serve(stdin.lock(), &mut stdout.lock())
     }
 
-    /// Serve JSON-lines over a TCP listener, one connection at a time,
-    /// until a `shutdown` request arrives. A dropped connection is
-    /// logged, not fatal.
+    /// Serve JSON-lines over a TCP listener, **one thread per
+    /// connection** over the shared `&self` broker, until a `shutdown`
+    /// request arrives on any connection. Connections are processed
+    /// concurrently (cache, cold-claim, in-flight and counter state are
+    /// all mutex-protected — §12); responses on each connection stay in
+    /// its request order because each connection is one thread. A
+    /// dropped or errored connection is logged, not fatal. On shutdown
+    /// the handling thread wakes the acceptor with a loopback connect so
+    /// the accept loop observes the stop flag promptly.
     pub fn serve_tcp(&self, listener: TcpListener) -> anyhow::Result<()> {
+        let addr = listener.local_addr()?;
+        // The shutdown wake-up must dial a *connectable* address: a
+        // wildcard bind (0.0.0.0 / ::) is not one on every platform, so
+        // swap in the matching loopback at the bound port.
+        let wake_addr = match addr.ip() {
+            std::net::IpAddr::V4(ip) if ip.is_unspecified() => std::net::SocketAddr::new(
+                std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST),
+                addr.port(),
+            ),
+            std::net::IpAddr::V6(ip) if ip.is_unspecified() => std::net::SocketAddr::new(
+                std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST),
+                addr.port(),
+            ),
+            _ => addr,
+        };
         self.with_workers(|| {
-            for stream in listener.incoming() {
-                match stream {
-                    Ok(stream) => {
-                        let mut writer = match stream.try_clone() {
-                            Ok(w) => w,
-                            Err(e) => {
-                                eprintln!("serve: clone failed: {e}");
-                                continue;
-                            }
-                        };
-                        if let Err(e) = self.serve_connection(BufReader::new(stream), &mut writer)
-                        {
-                            eprintln!("serve: connection error: {e:#}");
-                        }
+            std::thread::scope(|scope| {
+                for stream in listener.incoming() {
+                    if self.stop.load(Ordering::SeqCst) {
+                        break;
                     }
-                    Err(e) => eprintln!("serve: accept error: {e}"),
+                    match stream {
+                        Ok(stream) => {
+                            scope.spawn(move || {
+                                if let Err(e) = self.serve_tcp_connection(stream) {
+                                    eprintln!("serve: connection error: {e:#}");
+                                }
+                                if self.stop.load(Ordering::SeqCst) {
+                                    // Unblock the accept loop so it can
+                                    // see the flag and stop.
+                                    let _ = TcpStream::connect(wake_addr);
+                                }
+                            });
+                        }
+                        Err(e) => eprintln!("serve: accept error: {e}"),
+                    }
                 }
-                if self.stop.load(Ordering::SeqCst) {
-                    break;
-                }
-            }
-            Ok(())
+                Ok(())
+            })
         })
     }
 
@@ -691,22 +1058,31 @@ impl Broker {
         let mut written = 0usize;
         for (fp, e) in self.cache.snapshot() {
             let wname = fpw.get(&fp).map(|w| w.name()).unwrap_or("unknown");
-            let mut payload = match e.map.to_json() {
-                Json::Obj(m) => m,
-                _ => unreachable!("map artifact is an object"),
-            };
-            payload.insert("fingerprint".into(), Json::str(fp.hex()));
-            payload.insert("workload".into(), Json::str(wname));
-            payload.insert("true_latency_s".into(), Json::Num(e.true_latency_s));
-            payload.insert("speedup".into(), Json::Num(e.speedup));
-            payload.insert("refine_iters".into(), Json::Num(e.refine_iters as f64));
-            payload.insert("version".into(), Json::Num(e.version as f64));
+            let payload = artifact_payload(fp, wname, &e);
             let name = format!("{}-{}.json", wname, &fp.hex()[..12]);
-            std::fs::write(dir.join(name), Json::Obj(payload).to_string_pretty())?;
+            std::fs::write(dir.join(name), payload.to_string_pretty())?;
             written += 1;
         }
         Ok(written)
     }
+}
+
+/// Extended `egrl-map-v1` artifact for one cache entry: the map plus
+/// fingerprint, provenance and refinement accounting. One format for the
+/// save dir, the warm-start pool and the spill tier.
+fn artifact_payload(fp: Fingerprint, workload: &str, e: &CacheEntry) -> Json {
+    let mut payload = match e.map.to_json() {
+        Json::Obj(m) => m,
+        _ => unreachable!("map artifact is an object"),
+    };
+    payload.insert("fingerprint".into(), Json::str(fp.hex()));
+    payload.insert("workload".into(), Json::str(workload));
+    payload.insert("true_latency_s".into(), Json::Num(e.true_latency_s));
+    payload.insert("speedup".into(), Json::Num(e.speedup));
+    payload.insert("refine_iters".into(), Json::Num(e.refine_iters as f64));
+    payload.insert("version".into(), Json::Num(e.version as f64));
+    payload.insert("converged".into(), Json::Bool(e.converged));
+    Json::Obj(payload)
 }
 
 /// Build one `map` response line.
@@ -720,6 +1096,7 @@ fn map_response(
     return_map: bool,
 ) -> Json {
     let mut fields = vec![
+        ("ok", Json::Bool(true)),
         ("op", Json::str("map")),
         ("workload", Json::str(w.name())),
         ("fingerprint", Json::str(fp.hex())),
@@ -759,8 +1136,18 @@ mod tests {
             refine_budget: budget,
             workers,
             seed: 7,
+            spill_dir: None,
+            priority_refine: true,
             env: EnvConfig::default(),
         }
+    }
+
+    /// Unique per-test spill directory (tests run concurrently in one
+    /// process, so the pid alone is not enough).
+    fn spill_dir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("egrl-spill-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
     }
 
     fn req(line: &str, broker: &Broker) -> Json {
@@ -806,6 +1193,38 @@ mod tests {
         assert!(!resp.get("refining").unwrap().as_bool().unwrap(), "workers=0 must not enqueue");
     }
 
+    /// ISSUE 5: `"deadline_ms"` on the request overrides the global
+    /// `serve_deadline_ms` in both directions, and malformed values are
+    /// structured errors.
+    #[test]
+    fn per_request_deadline_overrides_global() {
+        // Global deadline 0 (answer misses immediately): a request-level
+        // deadline turns inline refinement ON for that request only.
+        let b = Broker::new(opts(0, 0, 90));
+        let r = req(r#"{"op":"map","workload":"resnet50","deadline_ms":10000}"#, &b);
+        assert_eq!(get_str(&r, "cache"), "miss");
+        assert_eq!(get_num(&r, "refine_iters"), 90.0, "request deadline must refine");
+        assert!(r.get("ok").unwrap().as_bool().unwrap());
+
+        // The other direction: global deadline on, request deadline 0
+        // answers immediately with the compiler map.
+        let b = Broker::new(opts(0, 10_000, 90));
+        let r = req(r#"{"op":"map","workload":"bert","deadline_ms":0}"#, &b);
+        assert_eq!(get_num(&r, "refine_iters"), 0.0, "deadline_ms:0 must skip refinement");
+
+        // Malformed deadlines: one structured error line, stream alive.
+        for bad in [
+            r#"{"op":"map","workload":"bert","deadline_ms":"soon"}"#,
+            r#"{"op":"map","workload":"bert","deadline_ms":-5}"#,
+        ] {
+            let r = req(bad, &b);
+            assert!(!r.get("ok").unwrap().as_bool().unwrap(), "accepted {bad}");
+            assert!(r.get("error").is_some());
+        }
+        let ok = req(r#"{"op":"map","workload":"bert"}"#, &b);
+        assert_eq!(get_str(&ok, "cache"), "miss");
+    }
+
     #[test]
     fn return_map_includes_valid_actions() {
         let b = Broker::new(opts(0, 0, 900));
@@ -823,6 +1242,7 @@ mod tests {
         req(r#"{"op":"map","workload":"resnet50"}"#, &b);
         let ev = req(r#"{"op":"evict","workload":"resnet50"}"#, &b);
         assert!(ev.get("evicted").unwrap().as_bool().unwrap());
+        assert!(!ev.get("spilled").unwrap().as_bool().unwrap(), "no spill dir configured");
         let ev2 = req(r#"{"op":"evict","workload":"resnet50"}"#, &b);
         assert!(!ev2.get("evicted").unwrap().as_bool().unwrap());
         let resp = req(r#"{"op":"map","workload":"resnet50"}"#, &b);
@@ -856,6 +1276,10 @@ mod tests {
         ] {
             let resp = req(bad, &b);
             assert!(resp.get("error").is_some(), "no error for {bad}: {resp:?}");
+            assert!(
+                !resp.get("ok").unwrap().as_bool().unwrap(),
+                "error response must carry ok:false: {resp:?}"
+            );
         }
         // The broker still serves after the error burst.
         let ok = req(r#"{"op":"map","workload":"resnet50"}"#, &b);
@@ -1000,6 +1424,283 @@ mod tests {
         assert_eq!(get_num(&stats, "warm_starts"), 1.0);
         assert_eq!(get_num(&stats, "warm_rejected"), 1.0);
 
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// ISSUE 5 bugfix satellite: garbage lines interleaved with valid
+    /// ops each get one structured `{"ok":false,...}` response line —
+    /// nothing is dropped and the stream survives to serve the rest.
+    #[test]
+    fn garbage_lines_get_structured_errors_and_stream_survives() {
+        let b = Broker::new(opts(0, 0, 900));
+        let script = concat!(
+            "this is not json\n",
+            r#"{"op":"map","workload":"resnet50"}"#, "\n",
+            r#"{"op":"frobnicate"}"#, "\n",
+            "{\"half\": \n",
+            r#"{"workload":"resnet50"}"#, "\n",
+            r#"{"op":"map","workload":"resnet50"}"#, "\n",
+            r#"{"op":"shutdown"}"#, "\n",
+        );
+        let mut out = Vec::new();
+        b.serve(script.as_bytes(), &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<Json> =
+            text.lines().map(|l| parse(l).expect("every response line is JSON")).collect();
+        assert_eq!(lines.len(), 7, "one response per request line, none dropped: {text}");
+        let expect_ok = [false, true, false, false, false, true, true];
+        for (i, (line, ok)) in lines.iter().zip(expect_ok).enumerate() {
+            assert_eq!(
+                line.get("ok").and_then(Json::as_bool),
+                Some(ok),
+                "line {i} wrong ok flag: {line:?}"
+            );
+            if !ok {
+                let msg = line.get("error").and_then(Json::as_str).unwrap_or("");
+                assert!(!msg.is_empty(), "line {i} error must be descriptive");
+            }
+        }
+        assert_eq!(get_str(&lines[1], "cache"), "miss");
+        assert_eq!(get_str(&lines[5], "cache"), "hit", "broker state survived the garbage");
+    }
+
+    /// ISSUE 5 tentpole: evict → spill artifact on disk → next request
+    /// restores from the spill tier without re-running the cold search.
+    #[test]
+    fn spill_tier_evict_restore_roundtrip() {
+        let dir = spill_dir("roundtrip");
+        let mut o = opts(0, 10_000, 900);
+        o.spill_dir = Some(dir.clone());
+        let b = Broker::new(o);
+
+        let first = req(r#"{"op":"map","workload":"resnet50"}"#, &b);
+        assert_eq!(get_str(&first, "cache"), "miss");
+        // The inline phase spends whole batches up to the budget (it may
+        // stop early only on convergence).
+        let spent = get_num(&first, "refine_iters");
+        assert!(spent > 0.0 && spent <= 900.0 && spent % 9.0 == 0.0, "bad spend {spent}");
+
+        let ev = req(r#"{"op":"evict","workload":"resnet50"}"#, &b);
+        assert!(ev.get("evicted").unwrap().as_bool().unwrap());
+        assert!(ev.get("spilled").unwrap().as_bool().unwrap());
+        let fp = b.fingerprint_of(Workload::ResNet50);
+        assert!(dir.join(format!("{}.json", fp.hex())).exists());
+
+        let (env, _) = b.env_for(Workload::ResNet50);
+        let iters_before = env.iterations();
+        let restored = req(r#"{"op":"map","workload":"resnet50"}"#, &b);
+        assert_eq!(get_str(&restored, "cache"), "spill");
+        assert_eq!(get_str(&restored, "source"), "spill");
+        assert_eq!(
+            get_num(&restored, "refine_iters"),
+            spent,
+            "refinement investment must survive the spill round trip"
+        );
+        assert!(
+            (get_num(&restored, "speedup") - get_num(&first, "speedup")).abs() < 1e-9,
+            "restored speedup must match the evicted entry"
+        );
+        assert_eq!(
+            env.iterations(),
+            iters_before,
+            "a spill restore must not re-run the cold search path"
+        );
+
+        let stats = req(r#"{"op":"stats"}"#, &b);
+        assert_eq!(get_num(&stats, "spill_writes"), 1.0);
+        assert_eq!(get_num(&stats, "spill_hits"), 1.0);
+        assert_eq!(get_num(&stats, "misses"), 2.0, "spill restores count as misses");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// LRU capacity pressure demotes victims to the spill tier and they
+    /// restore on their next request — the cache+spill pair behaves as a
+    /// two-level store.
+    #[test]
+    fn capacity_eviction_spills_and_restores() {
+        let dir = spill_dir("capacity");
+        let mut o = opts(0, 0, 900);
+        o.cache_cap = 1;
+        o.spill_dir = Some(dir.clone());
+        let b = Broker::new(o);
+        assert_eq!(get_str(&req(r#"{"op":"map","workload":"resnet50"}"#, &b), "cache"), "miss");
+        // bert displaces resnet50 → resnet50 spilled to disk.
+        assert_eq!(get_str(&req(r#"{"op":"map","workload":"bert"}"#, &b), "cache"), "miss");
+        // resnet50 restores from spill (displacing bert → bert spilled).
+        let r50 = req(r#"{"op":"map","workload":"resnet50"}"#, &b);
+        assert_eq!(get_str(&r50, "cache"), "spill");
+        // And bert now restores from spill too.
+        let bert = req(r#"{"op":"map","workload":"bert"}"#, &b);
+        assert_eq!(get_str(&bert, "cache"), "spill");
+        let stats = req(r#"{"op":"stats"}"#, &b);
+        assert_eq!(get_num(&stats, "spill_hits"), 2.0);
+        assert!(get_num(&stats, "spill_writes") >= 2.0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Corrupt or mismatched spill artifacts are rejected (counted) and
+    /// the request falls back to the cold path instead of erroring.
+    #[test]
+    fn corrupt_spill_artifact_falls_back_to_cold_path() {
+        let dir = spill_dir("corrupt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut o = opts(0, 0, 900);
+        o.spill_dir = Some(dir.clone());
+        let b = Broker::new(o);
+        let fp = b.fingerprint_of(Workload::ResNet50);
+        // Garbage bytes under resnet50's spill key.
+        std::fs::write(dir.join(format!("{}.json", fp.hex())), "{not json").unwrap();
+        let r = req(r#"{"op":"map","workload":"resnet50"}"#, &b);
+        assert_eq!(get_str(&r, "cache"), "miss", "corrupt spill must fall through");
+        // A parseable artifact whose map is the wrong length: also rejected.
+        let fp_bert = b.fingerprint_of(Workload::Bert);
+        std::fs::write(
+            dir.join(format!("{}.json", fp_bert.hex())),
+            format!(
+                r#"{{"schema":"egrl-map-v1","nodes":2,"actions":[[0,0],[0,0]],"fingerprint":"{}"}}"#,
+                fp_bert.hex()
+            ),
+        )
+        .unwrap();
+        let r = req(r#"{"op":"map","workload":"bert"}"#, &b);
+        assert_eq!(get_str(&r, "cache"), "miss");
+        let stats = req(r#"{"op":"stats"}"#, &b);
+        assert_eq!(get_num(&stats, "spill_rejected"), 2.0);
+        assert_eq!(get_num(&stats, "spill_hits"), 0.0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// ISSUE 5 tentpole: the background queue drains hottest-entry
+    /// first. Jobs are enqueued with the entry's hit count as priority;
+    /// with `priority_refine` off the queue degrades to FIFO.
+    #[test]
+    fn background_queue_is_hit_count_weighted() {
+        // workers = 1 but serve() never runs, so jobs stay queued and the
+        // test can observe the drain order directly. (`queue.pop()` on an
+        // open empty queue blocks, so drains are counted, never looped.)
+        let b = Broker::new(opts(1, 0, 9000));
+        // Cold misses enqueue at priority 0 (no hits yet).
+        req(r#"{"op":"map","workload":"bert"}"#, &b);
+        req(r#"{"op":"map","workload":"resnet50"}"#, &b);
+        assert_eq!(b.queue.len(), 2);
+        // Simulate both jobs completing: release the in-flight
+        // reservations and drain the two queued jobs.
+        b.in_flight.lock().unwrap().clear();
+        b.queue.pop().expect("first cold job");
+        b.queue.pop().expect("second cold job");
+        // Heat the entries: bert to hit count 1, resnet50 to hit count 2
+        // (releasing resnet50's reservation in between so the hotter
+        // re-enqueue lands).
+        req(r#"{"op":"map","workload":"bert"}"#, &b); // bert job @ prio 1 (oldest)
+        req(r#"{"op":"map","workload":"resnet50"}"#, &b); // resnet50 job @ prio 1
+        b.in_flight.lock().unwrap().remove(&b.fingerprint_of(Workload::ResNet50));
+        req(r#"{"op":"map","workload":"resnet50"}"#, &b); // resnet50 job @ prio 2 (newest)
+        assert_eq!(b.queue.len(), 3);
+        // Hit-count weighting: the newest job (resnet50 @ 2) must drain
+        // before the strictly older priority-1 jobs, which then drain
+        // FIFO (bert before resnet50).
+        let order: Vec<&str> =
+            (0..3).map(|_| b.queue.pop().expect("job queued").workload.name()).collect();
+        assert_eq!(
+            order,
+            vec!["resnet50", "bert", "resnet50"],
+            "hot entry must refine first, ties FIFO"
+        );
+        assert_eq!(b.queue.len(), 0);
+    }
+
+    /// ISSUE 5 satellite: N concurrent TCP clients over one broker —
+    /// per-connection response ordering, ≥1 cross-connection coalesce on
+    /// the shared fingerprint set, and a spill restore after a forced
+    /// eviction; the scope joining is itself the no-deadlock assertion.
+    #[test]
+    fn concurrent_tcp_clients_coalesce_order_and_spill() {
+        use std::io::Write as _;
+        const CLIENTS: usize = 4;
+        let dir = spill_dir("tcp");
+        let mut o = opts(0, 200, 9_000_000);
+        o.spill_dir = Some(dir.clone());
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind ephemeral port");
+        let addr = listener.local_addr().unwrap();
+        let b = Broker::new(o);
+        let barrier = std::sync::Barrier::new(CLIENTS);
+        let seq = ["resnet50", "bert", "resnet50", "resnet50", "bert", "resnet50"];
+
+        let collected: Vec<Vec<Json>> = std::thread::scope(|scope| {
+            let server = scope.spawn(|| b.serve_tcp(listener));
+            let clients: Vec<_> = (0..CLIENTS)
+                .map(|_| {
+                    scope.spawn(|| {
+                        let stream = std::net::TcpStream::connect(addr).expect("connect");
+                        let mut writer = stream.try_clone().unwrap();
+                        let mut reader = BufReader::new(stream);
+                        // All clients fire their first request together:
+                        // one runs the (≥200 ms) cold path, the rest
+                        // must coalesce onto it.
+                        barrier.wait();
+                        seq.iter()
+                            .map(|w| {
+                                writeln!(writer, "{{\"op\":\"map\",\"workload\":\"{w}\"}}")
+                                    .unwrap();
+                                let mut line = String::new();
+                                reader.read_line(&mut line).unwrap();
+                                parse(&line).expect("response parses")
+                            })
+                            .collect::<Vec<Json>>()
+                    })
+                })
+                .collect();
+            let collected: Vec<Vec<Json>> =
+                clients.into_iter().map(|c| c.join().expect("client panicked")).collect();
+
+            // Control connection: forced evict → spill → restore → stats
+            // → shutdown.
+            let stream = std::net::TcpStream::connect(addr).expect("connect control");
+            let mut writer = stream.try_clone().unwrap();
+            let mut reader = BufReader::new(stream);
+            let mut send = |line: &str| -> Json {
+                writeln!(writer, "{line}").unwrap();
+                let mut out = String::new();
+                reader.read_line(&mut out).unwrap();
+                parse(&out).expect("control response parses")
+            };
+            let ev = send(r#"{"op":"evict","workload":"resnet50"}"#);
+            assert!(ev.get("evicted").unwrap().as_bool().unwrap());
+            assert!(ev.get("spilled").unwrap().as_bool().unwrap());
+            let sp = send(r#"{"op":"map","workload":"resnet50"}"#);
+            assert_eq!(get_str(&sp, "cache"), "spill", "forced eviction must restore from spill");
+            assert!(get_num(&sp, "refine_iters") > 0.0, "spill preserved the inline investment");
+            let stats = send(r#"{"op":"stats"}"#);
+            assert!(
+                get_num(&stats, "coalesced_misses") >= 1.0,
+                "concurrent first requests must coalesce across connections: {stats:?}"
+            );
+            assert_eq!(get_num(&stats, "spill_hits"), 1.0);
+            assert_eq!(get_num(&stats, "misses"), 3.0, "two cold paths + one spill restore");
+            assert_eq!(
+                get_num(&stats, "connections"),
+                (CLIENTS + 1) as f64,
+                "every client stream counted"
+            );
+            let sd = send(r#"{"op":"shutdown"}"#);
+            assert!(sd.get("ok").unwrap().as_bool().unwrap());
+            server.join().expect("server panicked").expect("server errored");
+            collected
+        });
+
+        // Per-connection ordering: each client's responses come back in
+        // its own request order.
+        for (ci, responses) in collected.iter().enumerate() {
+            assert_eq!(responses.len(), seq.len());
+            for (ri, (resp, want)) in responses.iter().zip(seq).enumerate() {
+                assert!(resp.get("ok").unwrap().as_bool().unwrap(), "client {ci} line {ri}");
+                assert_eq!(
+                    get_str(resp, "workload"),
+                    want,
+                    "client {ci} got response {ri} out of order"
+                );
+            }
+        }
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -16,6 +16,14 @@
 //! non-increasing by construction, and a reader can never observe a
 //! regression. All state lives behind one mutex; a publish is atomic
 //! with respect to concurrent `get`s.
+//!
+//! The cache also feeds the two scale-out mechanisms layered above it
+//! (DESIGN.md §12): per-entry **hit counts** ([`MapCache::hit_count`])
+//! weight the background refinement priority queue so hot entries refine
+//! first, and every eviction — LRU capacity pressure in
+//! [`MapCache::insert`] or an explicit [`MapCache::take`] — hands the
+//! victim entry back to the caller so the broker can demote it to the
+//! disk **spill tier** instead of dropping the refinement investment.
 
 use std::collections::HashMap;
 use std::sync::Mutex;
@@ -74,6 +82,9 @@ struct Slot {
     entry: CacheEntry,
     /// Recency stamp for LRU eviction.
     last_used: u64,
+    /// Lifetime [`MapCache::get`] hits on this entry — the background
+    /// refinement priority weight (hot entries refine first, §12).
+    hits: u64,
     /// Anytime-improvement curve: `(refine_iters, true_latency_s)` at
     /// the insert and at every publish. Monotone non-increasing in
     /// latency by the publish rule.
@@ -119,6 +130,7 @@ impl MapCache {
         match inner.slots.get_mut(&fp) {
             Some(slot) => {
                 slot.last_used = tick;
+                slot.hits += 1;
                 let entry = slot.entry.clone();
                 inner.hits += 1;
                 Some(entry)
@@ -135,15 +147,26 @@ impl MapCache {
         self.lock().slots.get(&fp).map(|s| s.entry.clone())
     }
 
+    /// Lifetime hit count of an entry (0 when absent) — the background
+    /// refinement priority weight.
+    pub fn hit_count(&self, fp: Fingerprint) -> u64 {
+        self.lock().slots.get(&fp).map(|s| s.hits).unwrap_or(0)
+    }
+
     /// Insert a fresh entry (replacing any previous one for `fp`),
-    /// evicting the least-recently-used entry if the cache is full.
-    pub fn insert(&self, fp: Fingerprint, entry: CacheEntry) {
+    /// evicting least-recently-used entries while the cache is over
+    /// capacity. The victims are **returned** (fingerprint + entry, in
+    /// eviction order) rather than dropped, so the caller can demote
+    /// them to the disk spill tier (§12).
+    #[must_use = "capacity-evicted entries must be spilled or deliberately dropped"]
+    pub fn insert(&self, fp: Fingerprint, entry: CacheEntry) -> Vec<(Fingerprint, CacheEntry)> {
         let mut inner = self.lock();
         inner.tick += 1;
         let tick = inner.tick;
         inner.insertions += 1;
         let curve = vec![(entry.refine_iters, entry.true_latency_s)];
-        inner.slots.insert(fp, Slot { entry, last_used: tick, curve });
+        inner.slots.insert(fp, Slot { entry, last_used: tick, hits: 0, curve });
+        let mut victims = Vec::new();
         while inner.slots.len() > self.cap {
             // O(entries) victim scan — the cache is small by design.
             let victim = inner
@@ -152,9 +175,11 @@ impl MapCache {
                 .min_by_key(|(_, s)| s.last_used)
                 .map(|(k, _)| *k)
                 .expect("non-empty cache over capacity");
-            inner.slots.remove(&victim);
+            let slot = inner.slots.remove(&victim).expect("victim resident");
             inner.evictions += 1;
+            victims.push((victim, slot.entry));
         }
+        victims
     }
 
     /// Publish a refinement result. The entry's iteration accounting and
@@ -196,14 +221,18 @@ impl MapCache {
         }
     }
 
+    /// Remove an entry and hand it back (an explicit eviction — counted
+    /// like a capacity one). The caller decides whether to spill it.
+    pub fn take(&self, fp: Fingerprint) -> Option<CacheEntry> {
+        let mut inner = self.lock();
+        let slot = inner.slots.remove(&fp)?;
+        inner.evictions += 1;
+        Some(slot.entry)
+    }
+
     /// Drop an entry. Returns whether it existed.
     pub fn evict(&self, fp: Fingerprint) -> bool {
-        let mut inner = self.lock();
-        let existed = inner.slots.remove(&fp).is_some();
-        if existed {
-            inner.evictions += 1;
-        }
-        existed
+        self.take(fp).is_some()
     }
 
     /// The anytime-improvement curve of an entry (empty when absent).
@@ -268,7 +297,7 @@ mod tests {
     fn hit_and_miss_counting() {
         let c = MapCache::new(4);
         assert!(c.get(fp(1)).is_none());
-        c.insert(fp(1), entry(2.0));
+        assert!(c.insert(fp(1), entry(2.0)).is_empty());
         assert!(c.get(fp(1)).is_some());
         assert!(c.get(fp(2)).is_none());
         let s = c.stats();
@@ -279,22 +308,52 @@ mod tests {
     #[test]
     fn lru_evicts_least_recently_used() {
         let c = MapCache::new(2);
-        c.insert(fp(1), entry(1.0));
-        c.insert(fp(2), entry(1.0));
+        assert!(c.insert(fp(1), entry(1.0)).is_empty());
+        assert!(c.insert(fp(2), entry(1.0)).is_empty());
         // Touch 1 so 2 becomes the LRU victim.
         assert!(c.get(fp(1)).is_some());
-        c.insert(fp(3), entry(1.0));
+        let victims = c.insert(fp(3), entry(1.0));
         assert_eq!(c.len(), 2);
         assert!(c.peek(fp(1)).is_some(), "recently-used entry evicted");
         assert!(c.peek(fp(2)).is_none(), "LRU entry survived");
         assert!(c.peek(fp(3)).is_some());
+        assert_eq!(c.stats().evictions, 1);
+        // The victim comes back to the caller for spilling.
+        assert_eq!(victims.len(), 1);
+        assert_eq!(victims[0].0, fp(2));
+        assert_eq!(victims[0].1.true_latency_s, 1.0);
+    }
+
+    #[test]
+    fn hit_count_tracks_gets_not_peeks() {
+        let c = MapCache::new(2);
+        assert!(c.insert(fp(1), entry(1.0)).is_empty());
+        assert_eq!(c.hit_count(fp(1)), 0);
+        assert!(c.get(fp(1)).is_some());
+        assert!(c.get(fp(1)).is_some());
+        let _ = c.peek(fp(1)); // bookkeeping reads don't heat the entry
+        assert_eq!(c.hit_count(fp(1)), 2);
+        assert_eq!(c.hit_count(fp(9)), 0, "absent entries are cold");
+        // Reinsertion resets the weight (a fresh entry is a fresh life).
+        assert!(c.insert(fp(1), entry(0.5)).is_empty());
+        assert_eq!(c.hit_count(fp(1)), 0);
+    }
+
+    #[test]
+    fn take_returns_entry_and_counts_eviction() {
+        let c = MapCache::new(2);
+        assert!(c.insert(fp(1), entry(2.0)).is_empty());
+        let taken = c.take(fp(1)).expect("entry resident");
+        assert_eq!(taken.true_latency_s, 2.0);
+        assert!(c.take(fp(1)).is_none());
+        assert!(c.peek(fp(1)).is_none());
         assert_eq!(c.stats().evictions, 1);
     }
 
     #[test]
     fn publish_requires_strict_improvement() {
         let c = MapCache::new(2);
-        c.insert(fp(1), entry(2.0));
+        assert!(c.insert(fp(1), entry(2.0)).is_empty());
         let better = MemoryMap::constant(4, MemKind::Sram);
         // Equal latency: rejected, but the iteration spend still lands.
         assert!(!c.publish_if_better(fp(1), &better, 2.0, 0.5, 90, false));
@@ -317,7 +376,7 @@ mod tests {
     #[test]
     fn publish_to_evicted_entry_is_dropped() {
         let c = MapCache::new(2);
-        c.insert(fp(1), entry(2.0));
+        assert!(c.insert(fp(1), entry(2.0)).is_empty());
         assert!(c.evict(fp(1)));
         assert!(!c.evict(fp(1)));
         let m = MemoryMap::constant(4, MemKind::Llc);
@@ -328,7 +387,7 @@ mod tests {
     #[test]
     fn curve_is_monotone_under_publish_rule() {
         let c = MapCache::new(2);
-        c.insert(fp(7), entry(4.0));
+        assert!(c.insert(fp(7), entry(4.0)).is_empty());
         // Publishes in non-monotone order: only improvements land.
         for (lat, _ok) in [(3.0, true), (3.5, false), (2.0, true), (2.0, false)] {
             c.publish_if_better(fp(7), &entry(1.0).map, lat, 4.0 / lat, 9, false);
@@ -345,8 +404,8 @@ mod tests {
     #[test]
     fn snapshot_lists_entries() {
         let c = MapCache::new(4);
-        c.insert(fp(2), entry(1.0));
-        c.insert(fp(1), entry(2.0));
+        assert!(c.insert(fp(2), entry(1.0)).is_empty());
+        assert!(c.insert(fp(1), entry(2.0)).is_empty());
         let snap = c.snapshot();
         assert_eq!(snap.len(), 2);
         assert!(snap[0].0 < snap[1].0, "snapshot must be deterministically ordered");

@@ -1,4 +1,4 @@
-//! The placement-serving subsystem (DESIGN.md §11).
+//! The placement-serving subsystem (DESIGN.md §11–§12).
 //!
 //! Turns the batched incremental search engine into an anytime,
 //! cache-fronted service: workload requests are keyed by a stable
@@ -6,11 +6,15 @@
 //! (graph topology + tensor sizes + chip spec), served from an
 //! LRU-bounded [`cache::MapCache`], and continuously improved by
 //! background [`refiner::AnytimeRefiner`] workers that publish strictly
-//! better (noise-free re-measured) maps through a monotone cache rule.
-//! The [`broker::Broker`] front end speaks JSON-lines over stdin/stdout
-//! or TCP (`egrl serve`); `benches/serve_bench.rs` replays a
-//! Zipf-distributed workload mix against it and writes
-//! `BENCH_serve.json`.
+//! better (noise-free re-measured) maps through a monotone cache rule
+//! (§11). The [`broker::Broker`] front end speaks the JSON-lines wire
+//! protocol (normative reference: `docs/SERVE_PROTOCOL.md`) over
+//! stdin/stdout or a **concurrent, thread-per-connection** TCP listener
+//! (`egrl serve --tcp`), with cross-connection duplicate-fingerprint
+//! coalescing, per-request deadlines, hit-count-weighted priority
+//! refinement and a disk spill tier beyond the LRU (§12);
+//! `benches/serve_bench.rs` replays a Zipf-distributed workload mix and
+//! a multi-client TCP sweep against it and writes `BENCH_serve.json`.
 //!
 //! Layering: `serve` sits strictly *above* `env`/`agents` (it consumes
 //! the public engine API — `search_state`/`try_move_batch`/`commit_move`)

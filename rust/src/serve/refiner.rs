@@ -3,10 +3,11 @@
 //!
 //! [`AnytimeRefiner`] wraps a persistent [`SearchState`] so refinement
 //! can be *resumed* across arbitrarily small budget chunks — the broker
-//! slices work against a request deadline (inline phase) or between
-//! stop-flag checks (background workers) without paying the O(n) state
+//! slices work against a request deadline (inline phase, per-request
+//! overridable — DESIGN.md §12) or between stop-flag checks (the
+//! priority-queue background workers) without paying the O(n) state
 //! rebuild that re-entering [`crate::agents::local_search::refine`]
-//! would cost per slice.
+//! would cost per slice (§11–§12).
 //!
 //! The search rule is the §10 best-of-9 hill climber: each node visit
 //! prices all nine placements in one batched pass, re-measures the

@@ -13,15 +13,18 @@
 //!   slot of an item slice per call — the rollout engine's shape: each
 //!   episode rectifies its proposal buffer in place.
 //! * [`JobQueue`]          — a blocking MPMC work queue (mutex + condvar)
-//!   for long-lived worker threads; the serving broker's background
-//!   refinement workers drain one (DESIGN.md §11).
+//!   for long-lived worker threads (FIFO order).
+//! * [`PriorityJobQueue`]  — the same lifecycle with a max-priority pop
+//!   order (ties broken FIFO by enqueue sequence); the serving broker's
+//!   background refinement workers drain one so *hot* cache entries —
+//!   weighted by hit count — refine before cold ones (DESIGN.md §12).
 //!
 //! Work is claimed dynamically through an atomic counter, so callers that
 //! need determinism must not couple results to *which worker* ran an
 //! index — per-item state (RNG streams in particular) must be derived
 //! from the index, never from the worker (DESIGN.md §8).
 
-use std::collections::VecDeque;
+use std::collections::{BinaryHeap, VecDeque};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
 
@@ -227,6 +230,120 @@ impl<T> Default for JobQueue<T> {
     }
 }
 
+/// Heap node for [`PriorityJobQueue`]: max-ordered by `priority`, ties
+/// broken FIFO by the enqueue sequence number (lower `seq` pops first),
+/// so equal-priority producers degrade to exactly [`JobQueue`] order.
+struct PqItem<T> {
+    priority: u64,
+    seq: u64,
+    item: T,
+}
+
+impl<T> PartialEq for PqItem<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.priority == other.priority && self.seq == other.seq
+    }
+}
+impl<T> Eq for PqItem<T> {}
+impl<T> PartialOrd for PqItem<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<T> Ord for PqItem<T> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // BinaryHeap is a max-heap: higher priority wins; within a
+        // priority the *older* (smaller seq) item must surface first,
+        // so the sequence compares reversed.
+        self.priority.cmp(&other.priority).then(other.seq.cmp(&self.seq))
+    }
+}
+
+struct PriorityState<T> {
+    items: BinaryHeap<PqItem<T>>,
+    next_seq: u64,
+    closed: bool,
+}
+
+/// [`JobQueue`] with a priority pop order: consumers always receive the
+/// highest-priority queued job (ties FIFO). Priorities are frozen at
+/// enqueue time — the queue never re-weighs a queued job; callers that
+/// want fresher weights re-enqueue (the broker's coalescing rule keeps
+/// at most one job per fingerprint queued, so staleness is bounded by
+/// one job's lifetime — DESIGN.md §12).
+pub struct PriorityJobQueue<T> {
+    state: Mutex<PriorityState<T>>,
+    cv: Condvar,
+}
+
+impl<T> PriorityJobQueue<T> {
+    pub fn new() -> PriorityJobQueue<T> {
+        PriorityJobQueue {
+            state: Mutex::new(PriorityState {
+                items: BinaryHeap::new(),
+                next_seq: 0,
+                closed: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, PriorityState<T>> {
+        self.state.lock().expect("priority job queue poisoned")
+    }
+
+    /// Enqueue a job at `priority` (higher pops first). Returns `false`
+    /// (dropping the job) if the queue has been closed.
+    pub fn push(&self, item: T, priority: u64) -> bool {
+        let mut s = self.lock();
+        if s.closed {
+            return false;
+        }
+        let seq = s.next_seq;
+        s.next_seq += 1;
+        s.items.push(PqItem { priority, seq, item });
+        self.cv.notify_one();
+        true
+    }
+
+    /// Dequeue the highest-priority job, blocking while the queue is
+    /// open and empty. `None` ⇔ closed and fully drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut s = self.lock();
+        loop {
+            if let Some(node) = s.items.pop() {
+                return Some(node.item);
+            }
+            if s.closed {
+                return None;
+            }
+            s = self.cv.wait(s).expect("priority job queue poisoned");
+        }
+    }
+
+    /// Close the queue: further pushes are refused, blocked consumers
+    /// wake, queued jobs still drain (highest priority first).
+    pub fn close(&self) {
+        self.lock().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Jobs currently queued (racy by nature; for metrics only).
+    pub fn len(&self) -> usize {
+        self.lock().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<T> Default for PriorityJobQueue<T> {
+    fn default() -> Self {
+        PriorityJobQueue::new()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -376,6 +493,90 @@ mod tests {
         std::thread::scope(|scope| {
             let h = scope.spawn(|| q.pop());
             // Give the consumer a moment to block, then close.
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            q.close();
+            assert_eq!(h.join().unwrap(), None);
+        });
+    }
+
+    #[test]
+    fn priority_queue_pops_hottest_first() {
+        let q = PriorityJobQueue::new();
+        assert!(q.push("cold", 1));
+        assert!(q.push("hot", 10));
+        assert!(q.push("warm", 5));
+        q.close();
+        assert_eq!(q.pop(), Some("hot"));
+        assert_eq!(q.pop(), Some("warm"));
+        assert_eq!(q.pop(), Some("cold"));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn priority_queue_equal_priorities_are_fifo() {
+        // priority 0 everywhere ⇒ exactly JobQueue order; this is the
+        // `serve_priority_refine = false` degradation path.
+        let q = PriorityJobQueue::new();
+        for i in 0..100u64 {
+            assert!(q.push(i, 0));
+        }
+        q.close();
+        let drained: Vec<u64> = std::iter::from_fn(|| q.pop()).collect();
+        assert_eq!(drained, (0..100).collect::<Vec<_>>(), "ties must drain FIFO");
+    }
+
+    #[test]
+    fn priority_queue_interleaves_priority_then_seq() {
+        let q = PriorityJobQueue::new();
+        q.push(('a', 0), 2);
+        q.push(('b', 1), 7);
+        q.push(('c', 2), 2);
+        q.push(('d', 3), 7);
+        q.close();
+        let drained: Vec<(char, u64)> = std::iter::from_fn(|| q.pop()).collect();
+        assert_eq!(drained, vec![('b', 1), ('d', 3), ('a', 0), ('c', 2)]);
+    }
+
+    #[test]
+    fn priority_queue_close_refuses_pushes_but_drains_backlog() {
+        let q = PriorityJobQueue::new();
+        assert!(q.push(1, 0));
+        q.close();
+        assert!(!q.push(2, 99), "push accepted after close");
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), None);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn priority_queue_drains_across_threads_without_loss() {
+        let q = PriorityJobQueue::new();
+        let total = 500usize;
+        let consumed = std::sync::Mutex::new(Vec::new());
+        std::thread::scope(|scope| {
+            for _ in 0..3 {
+                scope.spawn(|| {
+                    while let Some(x) = q.pop() {
+                        consumed.lock().unwrap().push(x);
+                    }
+                });
+            }
+            for i in 0..total {
+                assert!(q.push(i, (i % 7) as u64));
+            }
+            q.close();
+        });
+        let mut got = consumed.into_inner().unwrap();
+        got.sort_unstable();
+        assert_eq!(got, (0..total).collect::<Vec<_>>(), "jobs lost or duplicated");
+    }
+
+    #[test]
+    fn priority_queue_close_wakes_blocked_consumer() {
+        let q = PriorityJobQueue::<u32>::new();
+        std::thread::scope(|scope| {
+            let h = scope.spawn(|| q.pop());
             std::thread::sleep(std::time::Duration::from_millis(10));
             q.close();
             assert_eq!(h.join().unwrap(), None);
