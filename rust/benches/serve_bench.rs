@@ -84,6 +84,9 @@ fn main() -> anyhow::Result<()> {
         seed: 1,
         spill_dir: None,
         priority_refine: true,
+        max_connections: 0,
+        queue_depth: 0,
+        spill_max_bytes: 0,
         env: EnvConfig::default(),
     });
 
@@ -171,6 +174,9 @@ fn main() -> anyhow::Result<()> {
             seed: 1,
             spill_dir: None,
             priority_refine: true,
+            max_connections: 0,
+            queue_depth: 0,
+            spill_max_bytes: 0,
             env: EnvConfig::default(),
         });
         // Pre-warm so the sweep measures pure hit-path throughput.
@@ -255,6 +261,9 @@ fn main() -> anyhow::Result<()> {
         seed: 1,
         spill_dir: Some(spill_path.clone()),
         priority_refine: true,
+        max_connections: 0,
+        queue_depth: 0,
+        spill_max_bytes: 0,
         env: EnvConfig::default(),
     });
     let t0 = Instant::now();

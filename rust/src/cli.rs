@@ -114,7 +114,7 @@ SUBCOMMANDS:
                                        [,\"deadline_ms\":N]}
                   {\"op\":\"polish\",\"workload\":W[,\"budget\":N]}
                   {\"op\":\"stats\"} | {\"op\":\"evict\",\"workload\":W}
-                  {\"op\":\"shutdown\"}
+                  {\"op\":\"drain\"} | {\"op\":\"shutdown\"}
              --tcp ADDR       serve a TCP listener (concurrent
                               connections, thread per connection)
                               instead of stdin/stdout
@@ -127,6 +127,9 @@ SUBCOMMANDS:
              --set key=value  serve_cache_cap=64 serve_deadline_ms=25
                               serve_refine_budget=18000 serve_workers=1
                               serve_spill_dir= serve_priority_refine=true
+                              serve_max_connections=64 serve_queue_depth=256
+                              serve_spill_max_bytes=0 (0 = unbounded;
+                              overload -> {\"error\":\"overloaded\"})
   polish     Online serving path: refine a precompiled mapping artifact
              with the batched local-search engine
              --workload ...   workload the map belongs to

@@ -6,6 +6,12 @@ pub mod parser;
 
 use crate::env::EnvConfig;
 
+/// Upper bound on serving deadlines (24 h in ms), shared by the config
+/// guard and the broker's per-request validation. Keeps
+/// `Instant + Duration::from_millis(deadline)` far away from the
+/// `Instant` overflow panic that absurd deadlines used to reach.
+pub const MAX_DEADLINE_MS: u64 = 86_400_000;
+
 /// All trainer hyperparameters. Defaults reproduce Table 2 of the paper
 /// exactly (asserted by `table2_defaults` below).
 #[derive(Clone, Debug)]
@@ -90,8 +96,9 @@ pub struct EgrlConfig {
     /// `egrl serve`: map-cache capacity in entries (LRU beyond it).
     pub serve_cache_cap: usize,
     /// `egrl serve`: per-request deadline (ms) for inline refinement on
-    /// a cache miss; 0 answers misses immediately with the best
-    /// available (warm/compiler) map.
+    /// a cache miss. Bounded to `1..=MAX_DEADLINE_MS` at the config and
+    /// wire surfaces (the programmatic `ServeOptions` field keeps 0 as
+    /// an "answer immediately" sentinel for benches and tests).
     pub serve_deadline_ms: u64,
     /// `egrl serve`: total refinement move budget per cache entry
     /// (inline + background), in environment iterations.
@@ -107,6 +114,17 @@ pub struct EgrlConfig {
     /// `egrl serve`: drain the background refinement queue hottest-entry
     /// first (weighted by cache hit count). `false` falls back to FIFO.
     pub serve_priority_refine: bool,
+    /// `egrl serve --tcp`: maximum concurrently-served connections;
+    /// beyond it new connections receive one structured `overloaded`
+    /// response and are closed (load shedding). 0 = unbounded.
+    pub serve_max_connections: usize,
+    /// `egrl serve`: background refinement queue depth bound; at the
+    /// bound new jobs are shed (the request still answers, the entry
+    /// just refines later on re-request). 0 = unbounded.
+    pub serve_queue_depth: usize,
+    /// `egrl serve`: spill-tier size bound in bytes; beyond it the
+    /// oldest artifacts are deleted (spill LRU). 0 = unbounded.
+    pub serve_spill_max_bytes: u64,
 }
 
 impl Default for EgrlConfig {
@@ -149,6 +167,9 @@ impl Default for EgrlConfig {
             serve_workers: 1,
             serve_spill_dir: String::new(),
             serve_priority_refine: true,
+            serve_max_connections: 64,
+            serve_queue_depth: 256,
+            serve_spill_max_bytes: 0,
         }
     }
 }
@@ -281,12 +302,27 @@ impl EgrlConfig {
                 anyhow::ensure!(v >= 1, "serve_cache_cap must be >= 1, got {v}");
                 self.serve_cache_cap = v;
             }
-            "serve_deadline_ms" => self.serve_deadline_ms = p(key, value)?,
+            "serve_deadline_ms" => {
+                // A 0 deadline on the operator surface is always a typo
+                // (it would answer every miss with the unrefined start
+                // map); absurd values used to overflow `Instant + Duration`
+                // deep in the miss path. Both are config errors. Parsing
+                // through u64 keeps the bound check itself overflow-safe.
+                let v: u64 = p(key, value)?;
+                anyhow::ensure!(
+                    (1..=MAX_DEADLINE_MS).contains(&v),
+                    "serve_deadline_ms must be in 1..={MAX_DEADLINE_MS} (got {v})"
+                );
+                self.serve_deadline_ms = v;
+            }
             "serve_refine_budget" => self.serve_refine_budget = p(key, value)?,
             "serve_workers" => self.serve_workers = p(key, value)?,
             // An empty value disables the spill tier (the default).
             "serve_spill_dir" => self.serve_spill_dir = value.to_string(),
             "serve_priority_refine" => self.serve_priority_refine = p(key, value)?,
+            "serve_max_connections" => self.serve_max_connections = p(key, value)?,
+            "serve_queue_depth" => self.serve_queue_depth = p(key, value)?,
+            "serve_spill_max_bytes" => self.serve_spill_max_bytes = p(key, value)?,
             other => anyhow::bail!("unknown config key '{other}'"),
         }
         Ok(())
@@ -321,6 +357,11 @@ impl EgrlConfig {
             self.serve_cache_cap >= 1,
             "serve_cache_cap must be >= 1, got {}",
             self.serve_cache_cap
+        );
+        anyhow::ensure!(
+            (1..=MAX_DEADLINE_MS).contains(&self.serve_deadline_ms),
+            "serve_deadline_ms must be in 1..={MAX_DEADLINE_MS} (got {})",
+            self.serve_deadline_ms
         );
         Ok(())
     }
@@ -498,6 +539,49 @@ mod tests {
         assert_eq!(c.serve_workers, 0);
         assert!(c.set("serve_cache_cap", "0").is_err());
         assert!(c.set("serve_refine_budget", "abc").is_err());
+    }
+
+    /// ISSUE 6 satellite: `serve_deadline_ms = 0` used to parse fine and
+    /// silently answer every miss unrefined, and absurd values could
+    /// overflow `Instant + Duration` in the miss path. Both directions
+    /// (config key here; the wire-side `deadline_ms` twin is tested in
+    /// the broker) must be hard errors.
+    #[test]
+    fn serve_deadline_rejects_zero_and_absurd_values() {
+        let mut c = EgrlConfig::default();
+        let err = c.set("serve_deadline_ms", "0").unwrap_err().to_string();
+        assert!(err.contains("serve_deadline_ms"), "unhelpful error: {err}");
+        assert_eq!(c.serve_deadline_ms, 25, "rejected set must not clobber");
+        // One past the 24 h bound, and a value that would overflow u64
+        // parsing entirely — both rejected, overflow-free.
+        assert!(c.set("serve_deadline_ms", "86400001").is_err());
+        assert!(c.set("serve_deadline_ms", "99999999999999999999999").is_err());
+        assert!(c.set("serve_deadline_ms", "-5").is_err());
+        c.set("serve_deadline_ms", "1").unwrap(); // the minimum
+        c.set("serve_deadline_ms", "86400000").unwrap(); // the maximum
+        assert_eq!(c.serve_deadline_ms, MAX_DEADLINE_MS);
+        // Struct-literal construction is caught by validate().
+        let bad = EgrlConfig { serve_deadline_ms: 0, ..Default::default() };
+        assert!(bad.validate().unwrap_err().to_string().contains("serve_deadline_ms"));
+        let bad = EgrlConfig { serve_deadline_ms: u64::MAX, ..Default::default() };
+        assert!(bad.validate().is_err());
+    }
+
+    /// ISSUE 6: the fault-tolerance keys (load shedding + spill bound).
+    #[test]
+    fn serve_overload_and_spill_bound_keys_wired() {
+        let mut c = EgrlConfig::default();
+        assert_eq!(c.serve_max_connections, 64);
+        assert_eq!(c.serve_queue_depth, 256);
+        assert_eq!(c.serve_spill_max_bytes, 0, "spill bound must default off");
+        c.set("serve_max_connections", "8").unwrap();
+        c.set("serve_queue_depth", "0").unwrap(); // 0 = unbounded
+        c.set("serve_spill_max_bytes", "1048576").unwrap();
+        assert_eq!(c.serve_max_connections, 8);
+        assert_eq!(c.serve_queue_depth, 0);
+        assert_eq!(c.serve_spill_max_bytes, 1_048_576);
+        assert!(c.set("serve_max_connections", "-1").is_err());
+        assert!(c.set("serve_spill_max_bytes", "lots").is_err());
     }
 
     /// ISSUE 5: the spill-tier and priority-refinement keys.

@@ -160,8 +160,20 @@ fn cmd_train(cli: &Cli) -> anyhow::Result<()> {
         println!("curve written to {path}");
     }
     if let Some(path) = cli.get("save-map") {
-        std::fs::write(path, best_map.to_json().to_string_pretty())?;
-        println!("best map written to {path} (feed it to `egrl polish --map {path}`)");
+        // Embed the workload fingerprint so the artifact is directly
+        // loadable by `egrl serve --warm` (and still by `polish --map`).
+        let mut payload = match best_map.to_json() {
+            Json::Obj(m) => m,
+            _ => unreachable!("map artifact is an object"),
+        };
+        let fp = egrl::serve::fingerprint(&env.graph, &env.compiler.chip);
+        payload.insert("fingerprint".into(), Json::str(fp.hex()));
+        payload.insert("workload".into(), Json::str(workload.name()));
+        std::fs::write(path, Json::Obj(payload).to_string_pretty())?;
+        println!(
+            "best map written to {path} (feed it to `egrl polish --map {path}` \
+             or a `egrl serve --warm` dir)"
+        );
     }
     Ok(())
 }
@@ -193,7 +205,15 @@ fn cmd_serve(cli: &Cli) -> anyhow::Result<()> {
             None => String::new(),
         }
     );
-    let broker = Broker::new(opts);
+    if opts.max_connections > 0 || opts.queue_depth > 0 {
+        eprintln!(
+            "egrl serve: overload bounds — max {} connections, queue depth {} (0 = unbounded)",
+            opts.max_connections, opts.queue_depth
+        );
+    }
+    // `open` (vs `new`) validates the spill dir and runs startup spill
+    // hygiene (tmp cleanup, quarantine, size bound) before serving.
+    let broker = Broker::open(opts)?;
     if let Some(dir) = cli.get("warm") {
         let loaded = broker.warm_start_dir(std::path::Path::new(dir))?;
         eprintln!("egrl serve: warm-started {loaded} artifact(s) from {dir}");
@@ -287,6 +307,8 @@ fn cmd_polish(cli: &Cli) -> anyhow::Result<()> {
         _ => unreachable!("map artifact is an object"),
     };
     payload.insert("polish_schema".into(), Json::str("egrl-polish-v1"));
+    let fp = egrl::serve::fingerprint(&env.graph, &env.compiler.chip);
+    payload.insert("fingerprint".into(), Json::str(fp.hex()));
     payload.insert("workload".into(), Json::str(workload.name()));
     payload.insert("moves".into(), Json::Num(res.moves as f64));
     payload.insert("start_speedup".into(), Json::Num(start_speedup));

@@ -119,7 +119,13 @@ impl MapCache {
     }
 
     fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
-        self.inner.lock().expect("map cache poisoned")
+        // Poison recovery per the utils::sync policy: every mutation
+        // under this lock is a whole-Slot insert/remove or a single
+        // field store, so a panicking holder can lose at most its own
+        // bookkeeping bump — never leave a torn entry. The publish rule
+        // (strict improvement on the noise-free latency) re-validates
+        // anything that matters on the next write.
+        crate::utils::sync::lock_recover(&self.inner)
     }
 
     /// Serving lookup: counts a hit or a miss and refreshes recency.

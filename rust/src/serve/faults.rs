@@ -1,0 +1,319 @@
+//! Deterministic fault injection for the serving tier (DESIGN.md §13).
+//!
+//! A seeded [`FaultPlan`] is installed for the duration of a chaos test
+//! and consulted through a per-broker [`Hooks`] handle from three hook
+//! classes wired into the broker: spill IO ([`Hooks::on_spill_write`] /
+//! [`Hooks::on_spill_probe`]), worker execution and connection handling
+//! ([`Hooks::maybe_panic`]). Each hook draws from one shared seeded RNG
+//! stream, so a given `(plan, request schedule)` replays the same fault
+//! sequence — the chaos test is a regression test, not a fuzzer.
+//!
+//! The plan is scoped to the broker that carries the handle: brokers in
+//! other concurrently-running tests hold the default (empty) handle and
+//! observe nothing. Only the panic-reporting silencer is process-wide,
+//! which is why [`install`] holds a global lock for the lifetime of the
+//! returned [`FaultGuard`] — panic-injecting tests serialize against
+//! each other while fault-free tests stay fully parallel.
+//!
+//! **Inert in release builds**: the plan state only compiles under
+//! `cfg(test)` or the opt-in `fault-injection` cargo feature; otherwise
+//! [`Hooks`] is a zero-sized type whose methods are inlined no-ops and
+//! the serving hot path carries zero branches for this module. Nothing
+//! here is reachable from production configuration.
+
+#![cfg_attr(not(any(test, feature = "fault-injection")), allow(dead_code))]
+
+use std::time::Duration;
+
+/// Probabilities (each in `[0, 1]`) and magnitudes for the injected
+/// fault mix. All default to zero — an empty plan injects nothing.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FaultPlan {
+    /// RNG seed for the fault stream.
+    pub seed: u64,
+    /// P(spill write is torn): a truncated artifact is left at the
+    /// *final* path — the on-disk state an OS crash mid-write of a
+    /// non-atomic writer would leave — and the write reports failure.
+    pub torn_spill_write: f64,
+    /// P(spill write fails outright with an IO error).
+    pub spill_io_error: f64,
+    /// P(a spill read/write is delayed by `slow_io_ms`).
+    pub slow_io: f64,
+    /// Delay applied on a slow-IO draw.
+    pub slow_io_ms: u64,
+    /// P(a background refinement worker panics at job start).
+    pub worker_panic: f64,
+    /// P(the cold-path claimant panics right after taking the claim).
+    pub claimant_panic: f64,
+    /// P(a request handler panics before dispatch).
+    pub handler_panic: f64,
+}
+
+/// What [`Hooks::on_spill_write`] asked the writer to do.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpillWriteFault {
+    /// Proceed normally.
+    None,
+    /// Leave a torn (truncated) artifact at the final path and fail.
+    Torn,
+    /// Fail with an IO error (write nothing).
+    Error,
+    /// Sleep this long, then proceed normally.
+    Slow(Duration),
+}
+
+/// Counters for every fault actually injected (not merely possible).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    pub torn_writes: u64,
+    pub io_errors: u64,
+    pub slow_ios: u64,
+    pub worker_panics: u64,
+    pub claimant_panics: u64,
+    pub handler_panics: u64,
+}
+
+impl FaultStats {
+    /// Total faults injected under the active plan.
+    pub fn total(&self) -> u64 {
+        self.torn_writes
+            + self.io_errors
+            + self.slow_ios
+            + self.worker_panics
+            + self.claimant_panics
+            + self.handler_panics
+    }
+}
+
+/// Per-broker fault hook handle. The default handle is empty — every
+/// hook is a no-op — and in builds without the harness the type is
+/// zero-sized.
+#[derive(Clone, Default)]
+pub struct Hooks {
+    #[cfg(any(test, feature = "fault-injection"))]
+    state: Option<std::sync::Arc<active::State>>,
+}
+
+impl Hooks {
+    /// Hook: the broker's spill writer consults this before writing.
+    #[inline(always)]
+    pub fn on_spill_write(&self) -> SpillWriteFault {
+        #[cfg(any(test, feature = "fault-injection"))]
+        if let Some(s) = &self.state {
+            return s.on_spill_write();
+        }
+        SpillWriteFault::None
+    }
+
+    /// Hook: the spill prober consults this before reading; `Some` =
+    /// sleep that long first.
+    #[inline(always)]
+    pub fn on_spill_probe(&self) -> Option<Duration> {
+        #[cfg(any(test, feature = "fault-injection"))]
+        if let Some(s) = &self.state {
+            return s.on_spill_probe();
+        }
+        None
+    }
+
+    /// Hook: panic here with probability `plan.<site>_panic`. Sites:
+    /// `"worker"`, `"claimant"`, `"handler"`.
+    #[inline(always)]
+    pub fn maybe_panic(&self, site: &'static str) {
+        #[cfg(any(test, feature = "fault-injection"))]
+        if let Some(s) = &self.state {
+            s.maybe_panic(site);
+        }
+        #[cfg(not(any(test, feature = "fault-injection")))]
+        let _ = site;
+    }
+}
+
+#[cfg(any(test, feature = "fault-injection"))]
+mod active {
+    use super::{FaultPlan, FaultStats, Hooks, SpillWriteFault};
+    use crate::utils::sync::lock_recover;
+    use crate::utils::Rng;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+    use std::time::Duration;
+
+    pub struct State {
+        plan: FaultPlan,
+        rng: Mutex<Rng>,
+        torn_writes: AtomicU64,
+        io_errors: AtomicU64,
+        slow_ios: AtomicU64,
+        worker_panics: AtomicU64,
+        claimant_panics: AtomicU64,
+        handler_panics: AtomicU64,
+    }
+
+    impl State {
+        fn draw(&self, p: f64) -> bool {
+            p > 0.0 && lock_recover(&self.rng).chance(p)
+        }
+
+        pub fn on_spill_write(&self) -> SpillWriteFault {
+            if self.draw(self.plan.torn_spill_write) {
+                self.torn_writes.fetch_add(1, Ordering::SeqCst);
+                return SpillWriteFault::Torn;
+            }
+            if self.draw(self.plan.spill_io_error) {
+                self.io_errors.fetch_add(1, Ordering::SeqCst);
+                return SpillWriteFault::Error;
+            }
+            if self.draw(self.plan.slow_io) {
+                self.slow_ios.fetch_add(1, Ordering::SeqCst);
+                return SpillWriteFault::Slow(Duration::from_millis(self.plan.slow_io_ms));
+            }
+            SpillWriteFault::None
+        }
+
+        pub fn on_spill_probe(&self) -> Option<Duration> {
+            if self.draw(self.plan.slow_io) {
+                self.slow_ios.fetch_add(1, Ordering::SeqCst);
+                return Some(Duration::from_millis(self.plan.slow_io_ms));
+            }
+            None
+        }
+
+        pub fn maybe_panic(&self, site: &'static str) {
+            let (p, counter) = match site {
+                "worker" => (self.plan.worker_panic, &self.worker_panics),
+                "claimant" => (self.plan.claimant_panic, &self.claimant_panics),
+                "handler" => (self.plan.handler_panic, &self.handler_panics),
+                _ => return,
+            };
+            if self.draw(p) {
+                counter.fetch_add(1, Ordering::SeqCst);
+                panic!("injected fault: {site} panic");
+            }
+        }
+    }
+
+    /// Serializes panic-hook-silencing tests: held for a [`FaultGuard`]'s
+    /// lifetime. Injected panics routinely poison it; recovery is
+    /// exactly the utils::sync policy.
+    fn test_lock() -> &'static Mutex<()> {
+        static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+        LOCK.get_or_init(|| Mutex::new(()))
+    }
+
+    /// Owns one plan's state; hands out [`Hooks`] for brokers under
+    /// test, and restores the default panic hook on drop.
+    pub struct FaultGuard {
+        state: Arc<State>,
+        _exclusive: MutexGuard<'static, ()>,
+    }
+
+    impl FaultGuard {
+        /// A handle carrying this plan, for wiring into a broker.
+        pub fn hooks(&self) -> Hooks {
+            Hooks { state: Some(self.state.clone()) }
+        }
+
+        /// Snapshot the injected-fault counters.
+        pub fn stats(&self) -> FaultStats {
+            FaultStats {
+                torn_writes: self.state.torn_writes.load(Ordering::SeqCst),
+                io_errors: self.state.io_errors.load(Ordering::SeqCst),
+                slow_ios: self.state.slow_ios.load(Ordering::SeqCst),
+                worker_panics: self.state.worker_panics.load(Ordering::SeqCst),
+                claimant_panics: self.state.claimant_panics.load(Ordering::SeqCst),
+                handler_panics: self.state.handler_panics.load(Ordering::SeqCst),
+            }
+        }
+    }
+
+    impl Drop for FaultGuard {
+        fn drop(&mut self) {
+            // take_hook() restores the default hook as a side effect,
+            // undoing the silencing in install().
+            drop(std::panic::take_hook());
+        }
+    }
+
+    /// Create a seeded fault plan. Blocks while another plan holds the
+    /// silencer lock. Injected panics are an expected part of a chaos
+    /// run, so the default "thread panicked" stderr reporting is
+    /// silenced for the guard's lifetime (assertion failures still
+    /// surface through the test harness's payload downcast).
+    pub fn install(plan: FaultPlan) -> FaultGuard {
+        let exclusive = test_lock().lock().unwrap_or_else(|e| e.into_inner());
+        let state = State {
+            plan,
+            rng: Mutex::new(Rng::new(plan.seed ^ 0xFA17_FA17_FA17_FA17)),
+            torn_writes: AtomicU64::new(0),
+            io_errors: AtomicU64::new(0),
+            slow_ios: AtomicU64::new(0),
+            worker_panics: AtomicU64::new(0),
+            claimant_panics: AtomicU64::new(0),
+            handler_panics: AtomicU64::new(0),
+        };
+        std::panic::set_hook(Box::new(|_| {}));
+        FaultGuard { state: Arc::new(state), _exclusive: exclusive }
+    }
+}
+
+#[cfg(any(test, feature = "fault-injection"))]
+pub use active::{install, FaultGuard};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_hooks_inject_nothing() {
+        let h = Hooks::default();
+        assert_eq!(h.on_spill_write(), SpillWriteFault::None);
+        assert_eq!(h.on_spill_probe(), None);
+        h.maybe_panic("handler"); // must not panic
+    }
+
+    #[test]
+    fn plan_replays_deterministically_and_counts() {
+        let plan = FaultPlan {
+            seed: 42,
+            torn_spill_write: 0.5,
+            spill_io_error: 0.25,
+            slow_io: 0.5,
+            slow_io_ms: 0,
+            handler_panic: 0.3,
+            ..Default::default()
+        };
+        let run = || {
+            let g = install(plan);
+            let h = g.hooks();
+            let writes: Vec<SpillWriteFault> = (0..64).map(|_| h.on_spill_write()).collect();
+            let panics = (0..64)
+                .filter(|_| {
+                    let h = h.clone();
+                    std::panic::catch_unwind(move || h.maybe_panic("handler")).is_err()
+                })
+                .count();
+            (writes, panics, g.stats())
+        };
+        let (w1, p1, s1) = run();
+        let (w2, p2, s2) = run();
+        assert_eq!(w1, w2, "same plan+schedule must replay the same faults");
+        assert_eq!(p1, p2);
+        assert_eq!(s1, s2);
+        assert!(s1.torn_writes > 0 && s1.io_errors > 0 && s1.slow_ios > 0);
+        assert_eq!(s1.handler_panics as usize, p1);
+        assert_eq!(
+            s1.total(),
+            s1.torn_writes + s1.io_errors + s1.slow_ios + s1.handler_panics
+        );
+        // A fresh install starts a fresh counter set.
+        let g = install(FaultPlan::default());
+        assert_eq!(g.stats().total(), 0);
+    }
+
+    #[test]
+    fn unknown_site_is_ignored() {
+        let g = install(FaultPlan { seed: 1, worker_panic: 1.0, ..Default::default() });
+        g.hooks().maybe_panic("nosuchsite"); // must not panic or draw
+        assert_eq!(g.stats().total(), 0);
+    }
+}

@@ -15,6 +15,13 @@
 //! refinement and a disk spill tier beyond the LRU (§12);
 //! `benches/serve_bench.rs` replays a Zipf-distributed workload mix and
 //! a multi-client TCP sweep against it and writes `BENCH_serve.json`.
+//! The tier is fault-tolerant by construction (DESIGN.md §13): spill
+//! artifacts are checksummed and atomically written with corrupt files
+//! quarantined, panics are isolated behind `catch_unwind` boundaries
+//! with poisoned-lock recovery ([`crate::utils::sync`]), overload sheds
+//! structured `overloaded` responses instead of queueing unboundedly,
+//! and a `drain` op flushes the hot cache to spill for rolling
+//! restarts — all exercised by the seeded [`faults`] chaos harness.
 //!
 //! Layering: `serve` sits strictly *above* `env`/`agents` (it consumes
 //! the public engine API — `search_state`/`try_move_batch`/`commit_move`)
@@ -25,6 +32,7 @@ pub mod fingerprint;
 pub mod cache;
 pub mod refiner;
 pub mod broker;
+pub mod faults;
 
 pub use broker::{Broker, ServeOptions};
 pub use cache::{CacheEntry, CacheStats, MapCache};

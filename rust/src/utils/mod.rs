@@ -12,6 +12,7 @@ pub mod math;
 pub mod stats;
 pub mod json;
 pub mod pool;
+pub mod sync;
 pub mod timer;
 
 pub use rng::Rng;

@@ -24,6 +24,7 @@
 //! index — per-item state (RNG streams in particular) must be derived
 //! from the index, never from the worker (DESIGN.md §8).
 
+use crate::utils::sync::{lock_recover, wait_recover};
 use std::collections::{BinaryHeap, VecDeque};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
@@ -177,7 +178,9 @@ impl<T> JobQueue<T> {
     }
 
     fn lock(&self) -> std::sync::MutexGuard<'_, QueueState<T>> {
-        self.state.lock().expect("job queue poisoned")
+        // Poison recovery per utils::sync: queue items are pushed whole,
+        // so a panicking holder can never leave a half-formed job.
+        lock_recover(&self.state)
     }
 
     /// Enqueue a job. Returns `false` (dropping the job) if the queue
@@ -203,7 +206,7 @@ impl<T> JobQueue<T> {
             if s.closed {
                 return None;
             }
-            s = self.cv.wait(s).expect("job queue poisoned");
+            s = wait_recover(&self.cv, s);
         }
     }
 
@@ -259,6 +262,19 @@ impl<T> Ord for PqItem<T> {
     }
 }
 
+/// Outcome of a [`PriorityJobQueue::push`]: distinguishes a queue that
+/// is at capacity (caller should shed load and may retry later) from one
+/// that has been closed for good (caller should stop producing).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Push {
+    /// The job was enqueued.
+    Queued,
+    /// The queue is at its depth bound; the job was dropped (load shed).
+    Full,
+    /// The queue has been closed; the job was dropped.
+    Closed,
+}
+
 struct PriorityState<T> {
     items: BinaryHeap<PqItem<T>>,
     next_seq: u64,
@@ -271,13 +287,27 @@ struct PriorityState<T> {
 /// want fresher weights re-enqueue (the broker's coalescing rule keeps
 /// at most one job per fingerprint queued, so staleness is bounded by
 /// one job's lifetime — DESIGN.md §12).
+///
+/// The queue may be *bounded* ([`PriorityJobQueue::bounded`]): at the
+/// depth bound, `push` refuses with [`Push::Full`] instead of letting
+/// the backlog grow without limit. Overload protection, not back-pressure
+/// — the producer (the broker's miss path) sheds the job and reports it,
+/// rather than blocking a live request on background work.
 pub struct PriorityJobQueue<T> {
     state: Mutex<PriorityState<T>>,
     cv: Condvar,
+    /// Maximum queued jobs; `0` = unbounded.
+    capacity: usize,
 }
 
 impl<T> PriorityJobQueue<T> {
     pub fn new() -> PriorityJobQueue<T> {
+        PriorityJobQueue::bounded(0)
+    }
+
+    /// A queue refusing pushes beyond `capacity` queued jobs (`0` =
+    /// unbounded).
+    pub fn bounded(capacity: usize) -> PriorityJobQueue<T> {
         PriorityJobQueue {
             state: Mutex::new(PriorityState {
                 items: BinaryHeap::new(),
@@ -285,25 +315,32 @@ impl<T> PriorityJobQueue<T> {
                 closed: false,
             }),
             cv: Condvar::new(),
+            capacity,
         }
     }
 
     fn lock(&self) -> std::sync::MutexGuard<'_, PriorityState<T>> {
-        self.state.lock().expect("priority job queue poisoned")
+        // Poison recovery per utils::sync: heap pushes are single-call
+        // whole-item operations, never observably half-done.
+        lock_recover(&self.state)
     }
 
-    /// Enqueue a job at `priority` (higher pops first). Returns `false`
-    /// (dropping the job) if the queue has been closed.
-    pub fn push(&self, item: T, priority: u64) -> bool {
+    /// Enqueue a job at `priority` (higher pops first). The job is
+    /// dropped on [`Push::Full`] (depth bound reached) and
+    /// [`Push::Closed`] outcomes.
+    pub fn push(&self, item: T, priority: u64) -> Push {
         let mut s = self.lock();
         if s.closed {
-            return false;
+            return Push::Closed;
+        }
+        if self.capacity > 0 && s.items.len() >= self.capacity {
+            return Push::Full;
         }
         let seq = s.next_seq;
         s.next_seq += 1;
         s.items.push(PqItem { priority, seq, item });
         self.cv.notify_one();
-        true
+        Push::Queued
     }
 
     /// Dequeue the highest-priority job, blocking while the queue is
@@ -317,7 +354,7 @@ impl<T> PriorityJobQueue<T> {
             if s.closed {
                 return None;
             }
-            s = self.cv.wait(s).expect("priority job queue poisoned");
+            s = wait_recover(&self.cv, s);
         }
     }
 
@@ -502,9 +539,9 @@ mod tests {
     #[test]
     fn priority_queue_pops_hottest_first() {
         let q = PriorityJobQueue::new();
-        assert!(q.push("cold", 1));
-        assert!(q.push("hot", 10));
-        assert!(q.push("warm", 5));
+        assert_eq!(q.push("cold", 1), Push::Queued);
+        assert_eq!(q.push("hot", 10), Push::Queued);
+        assert_eq!(q.push("warm", 5), Push::Queued);
         q.close();
         assert_eq!(q.pop(), Some("hot"));
         assert_eq!(q.pop(), Some("warm"));
@@ -518,7 +555,7 @@ mod tests {
         // `serve_priority_refine = false` degradation path.
         let q = PriorityJobQueue::new();
         for i in 0..100u64 {
-            assert!(q.push(i, 0));
+            assert_eq!(q.push(i, 0), Push::Queued);
         }
         q.close();
         let drained: Vec<u64> = std::iter::from_fn(|| q.pop()).collect();
@@ -540,13 +577,40 @@ mod tests {
     #[test]
     fn priority_queue_close_refuses_pushes_but_drains_backlog() {
         let q = PriorityJobQueue::new();
-        assert!(q.push(1, 0));
+        assert_eq!(q.push(1, 0), Push::Queued);
         q.close();
-        assert!(!q.push(2, 99), "push accepted after close");
+        assert_eq!(q.push(2, 99), Push::Closed, "push accepted after close");
         assert_eq!(q.len(), 1);
         assert_eq!(q.pop(), Some(1));
         assert_eq!(q.pop(), None);
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn bounded_priority_queue_sheds_at_capacity_and_recovers() {
+        let q = PriorityJobQueue::bounded(2);
+        assert_eq!(q.push('a', 1), Push::Queued);
+        assert_eq!(q.push('b', 9), Push::Queued);
+        // At the depth bound: refused, job dropped, queue untouched.
+        assert_eq!(q.push('c', 99), Push::Full);
+        assert_eq!(q.len(), 2);
+        // Draining one slot re-opens capacity.
+        assert_eq!(q.pop(), Some('b'));
+        assert_eq!(q.push('d', 5), Push::Queued);
+        q.close();
+        assert_eq!(q.push('e', 5), Push::Closed, "closed must outrank full");
+        assert_eq!(q.pop(), Some('d'));
+        assert_eq!(q.pop(), Some('a'));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn bounded_zero_means_unbounded() {
+        let q = PriorityJobQueue::bounded(0);
+        for i in 0..1000u64 {
+            assert_eq!(q.push(i, 0), Push::Queued);
+        }
+        assert_eq!(q.len(), 1000);
     }
 
     #[test]
@@ -563,7 +627,7 @@ mod tests {
                 });
             }
             for i in 0..total {
-                assert!(q.push(i, (i % 7) as u64));
+                assert_eq!(q.push(i, (i % 7) as u64), Push::Queued);
             }
             q.close();
         });

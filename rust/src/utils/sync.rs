@@ -1,0 +1,89 @@
+//! Poisoned-lock recovery (DESIGN.md §13).
+//!
+//! The serving broker isolates panics with `catch_unwind`, which means a
+//! thread *can* die while holding one of the shared mutexes. `std`'s
+//! default response — every later `lock()` returns `Err(Poisoned)` —
+//! would turn one caught panic into a broker-wide outage, the exact
+//! failure mode the isolation exists to prevent.
+//!
+//! Recovery is safe here because every critical section in the serving
+//! tier keeps its invariants at every mutation point:
+//!
+//! - `MapCache` mutates under the lock only through whole-`Slot`
+//!   insert/remove and field stores that are individually valid; there
+//!   is no multi-step state that can be observed half-written.
+//! - `cold_in_flight` / `cold_progress` hold plain collections of
+//!   self-contained values; `in_flight` likewise.
+//! - `PriorityJobQueue` pushes fully-formed items; a heap is never left
+//!   mid-sift because `BinaryHeap::push` completes or panics before the
+//!   guard is taken (allocation) — and the queue's own operations do not
+//!   panic between mutations.
+//! - Counters are monotonic bumps; worst case a panic loses one bump.
+//!
+//! So the worst a recovered lock can observe is *slightly stale
+//! accounting*, never a torn map. The one place that could violate this
+//! — publishing a placement — revalidates through
+//! [`crate::serve::MapCache::publish_if_better`]'s strict-improvement
+//! check and the artifact checksum on the spill path.
+
+use std::sync::{Condvar, Mutex, MutexGuard, WaitTimeoutResult};
+use std::time::Duration;
+
+/// Lock a mutex, recovering the guard if a previous holder panicked.
+#[inline]
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// `Condvar::wait` with poison recovery.
+#[inline]
+pub fn wait_recover<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(|e| e.into_inner())
+}
+
+/// `Condvar::wait_timeout` with poison recovery.
+#[inline]
+pub fn wait_timeout_recover<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    dur: Duration,
+) -> (MutexGuard<'a, T>, WaitTimeoutResult) {
+    cv.wait_timeout(guard, dur).unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn lock_recover_survives_a_poisoning_panic() {
+        let m = Arc::new(Mutex::new(vec![1, 2, 3]));
+        let m2 = Arc::clone(&m);
+        let t = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("die while holding the lock");
+        });
+        assert!(t.join().is_err());
+        assert!(m.is_poisoned(), "panic in holder should poison");
+        // Plain lock() refuses; recovery hands the state back intact.
+        assert!(m.lock().is_err());
+        let g = lock_recover(&m);
+        assert_eq!(*g, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn wait_timeout_recover_times_out_on_a_poisoned_pair() {
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        let p2 = Arc::clone(&pair);
+        let t = std::thread::spawn(move || {
+            let _g = p2.0.lock().unwrap();
+            panic!("poison the condvar's mutex");
+        });
+        assert!(t.join().is_err());
+        let g = lock_recover(&pair.0);
+        let (g, timed_out) = wait_timeout_recover(&pair.1, g, Duration::from_millis(5));
+        assert!(timed_out.timed_out());
+        assert!(!*g);
+    }
+}
