@@ -1,34 +1,46 @@
-//! Scaling benchmark of the incremental-cost core (ISSUE 3 tentpole):
-//! old vs. new paths swept over synthetic graphs of n ∈ {1k, 4k, 10k}
-//! nodes, through one deterministic generator (`sized_synthetic`).
+//! Scaling benchmark of the incremental-cost core: old vs. new paths
+//! swept over synthetic graphs of n ∈ {1k, 4k, 10k, 40k, 100k} nodes,
+//! through one deterministic generator (`sized_synthetic`).
 //!
-//! Two comparisons per size:
+//! Three comparisons per size:
 //!
 //! * **capacity**: the reference scan `CapacityState` vs. the
 //!   segment-tree backend, both answering the same 9-way
 //!   `move_fits_all` probes (O(n)-ish vs. O(log n));
-//! * **pricing**: the per-move `MappingEnv::try_move` loop (nine calls,
-//!   each with its own O(n) re-sum — and a full rectify walk on every
-//!   invalid candidate) vs. the batched `try_move_batch` (one shared
-//!   peak-query set + one shared compensated-sum pass for all nine).
+//! * **batch probe** (ISSUE 7 tentpole): the refold path
+//!   (`probe_placements_masked` — per-batch O(n) compensated re-sum of
+//!   `totals`) vs. the incremental path
+//!   (`probe_placements_masked_cached` — O(degree) deltas against the
+//!   `TotalsCache` running total, DESIGN.md §14);
+//! * **pricing**: nine `MappingEnv::try_move` calls vs. one
+//!   `try_move_batch`, both on the incremental engine (the remaining
+//!   gap is shared peak queries + shared noise draws).
 //!
 //! Besides the stdout report, writes `BENCH_scaling.json`
-//! (`schema: egrl-bench-scaling-v1`, uploaded by CI). Acceptance target:
-//! the batched path prices **≥ 5×** more placements/sec than per-move
-//! `try_move` at n = 10k.
+//! (`schema: egrl-bench-scaling-v2`, uploaded and regression-checked by
+//! CI against the committed `benches/baselines/BENCH_scaling.json`).
+//! Acceptance target (ISSUE 7): the cached batch-probe cost grows ≤ 2×
+//! from 10k → 100k nodes while the refold path grows near-linearly.
+//! (The old ISSUE 3 "batch ≥ 5× per-move" gate is retired: `try_move`
+//! itself now runs on the incremental engine, so that ratio measures
+//! batching overhead amortization, not the removed O(n) re-sum.)
 
 use egrl::bench_harness::Bench;
 use egrl::env::MappingEnv;
 use egrl::mapping::NodePlacement;
+use egrl::sim::latency::TotalsCache;
 use egrl::utils::json::Json;
 use egrl::utils::Rng;
 use egrl::workloads::synthetic::sized_synthetic;
 
 fn main() -> anyhow::Result<()> {
-    let sizes = [1000usize, 4000, 10_000];
+    let sizes = [1000usize, 4000, 10_000, 40_000, 100_000];
     let mut b = Bench::new("perf_scaling: incremental-cost core, old vs new");
     let mut rows: Vec<Json> = Vec::new();
     let mut speedup_at_10k = f64::NAN;
+    let mut cached_mean_at = [f64::NAN; 2]; // [10k, 100k]
+    let mut refold_mean_at = [f64::NAN; 2];
+    let mut refold_over_cached_at_100k = f64::NAN;
 
     for &n in &sizes {
         let env = MappingEnv::nnpi(sized_synthetic(n), 1);
@@ -62,6 +74,37 @@ fn main() -> anyhow::Result<()> {
             ));
         });
 
+        // ---- batch probe: O(n) refold vs incremental running total --------
+        // Identical 9-way latency pricing at the `CostTable` layer; the
+        // refold path re-sums all n totals per batch, the cached path
+        // prices against the maintained compensated running sum.
+        let mut totals = Vec::new();
+        env.cost_table.node_totals_into(&base, &mut totals);
+        let mut skip = Vec::new();
+        let mask = [true; 9];
+        let mut i_refold = 0usize;
+        b.measure_throughput(&format!("batch probe refold (n={n})"), 9.0, 10, 0.3, || {
+            let node = i_refold % n;
+            i_refold += 1;
+            std::hint::black_box(env.cost_table.probe_placements_masked(
+                &base,
+                node,
+                &totals,
+                &mut skip,
+                &mask,
+            ));
+        });
+        let mut cache = TotalsCache::default();
+        cache.rebuild(&env.cost_table, &base);
+        let mut i_cached = 0usize;
+        b.measure_throughput(&format!("batch probe cached (n={n})"), 9.0, 10, 0.3, || {
+            let node = i_cached % n;
+            i_cached += 1;
+            std::hint::black_box(env.cost_table.probe_placements_masked_cached(
+                &base, node, &cache, &mask,
+            ));
+        });
+
         // ---- pricing: nine try_move calls vs one try_move_batch ------------
         // Same node stream, same placements (the full 9 per node), no
         // commits — both paths price the identical work.
@@ -88,17 +131,28 @@ fn main() -> anyhow::Result<()> {
         let mean = |label: String| b.mean_s(&label).unwrap_or(f64::NAN);
         let scan_s = mean(format!("capacity 9-way scan (n={n})"));
         let tree_s = mean(format!("capacity 9-way segtree (n={n})"));
+        let refold_s = mean(format!("batch probe refold (n={n})"));
+        let cached_s = mean(format!("batch probe cached (n={n})"));
         let single_s = mean(format!("pricing try_move ×9 (n={n})"));
         let batch_s = mean(format!("pricing try_move_batch (n={n})"));
         let capacity_speedup = scan_s / tree_s;
+        let probe_speedup = refold_s / cached_s;
         let pricing_speedup = single_s / batch_s;
         let single_pps = 9.0 / single_s;
         let batch_pps = 9.0 / batch_s;
         if n == 10_000 {
             speedup_at_10k = pricing_speedup;
+            refold_mean_at[0] = refold_s;
+            cached_mean_at[0] = cached_s;
+        }
+        if n == 100_000 {
+            refold_mean_at[1] = refold_s;
+            cached_mean_at[1] = cached_s;
+            refold_over_cached_at_100k = probe_speedup;
         }
         println!(
             "\nn={n}: capacity segtree {capacity_speedup:.1}x vs scan; \
+             batch probe cached {probe_speedup:.1}x vs refold; \
              pricing {batch_pps:.0}/s batched vs {single_pps:.0}/s per-move ({pricing_speedup:.1}x)"
         );
         rows.push(Json::obj(vec![
@@ -106,25 +160,40 @@ fn main() -> anyhow::Result<()> {
             ("capacity_scan_mean_s", Json::Num(scan_s)),
             ("capacity_segtree_mean_s", Json::Num(tree_s)),
             ("capacity_segtree_speedup", Json::Num(capacity_speedup)),
+            ("batch_probe_refold_mean_s", Json::Num(refold_s)),
+            ("batch_probe_cached_mean_s", Json::Num(cached_s)),
+            ("batch_probe_cached_speedup", Json::Num(probe_speedup)),
             ("placements_per_sec_try_move", Json::Num(single_pps)),
             ("placements_per_sec_batch", Json::Num(batch_pps)),
             ("batch_pricing_speedup", Json::Num(pricing_speedup)),
         ]));
     }
 
+    // Growth of per-batch cost from 10k → 100k: the sublinearity proof.
+    // The cached path must stay ≤ 2×; the refold path is the near-10×
+    // control arm (it re-sums all n totals every batch).
+    let cached_growth = cached_mean_at[1] / cached_mean_at[0];
+    let refold_growth = refold_mean_at[1] / refold_mean_at[0];
+
     let json = Json::obj(vec![
-        ("schema", Json::str("egrl-bench-scaling-v1")),
+        ("schema", Json::str("egrl-bench-scaling-v2")),
         ("workload_generator", Json::str("sized_synthetic")),
         ("sizes", Json::arr(sizes.iter().map(|&n| Json::Num(n as f64)))),
         ("per_size", Json::Arr(rows)),
+        // Informational since ISSUE 7: both arms share the incremental
+        // engine, so this is batching amortization, not old-vs-new.
         ("batch_pricing_speedup_at_10k", Json::Num(speedup_at_10k)),
-        ("target_speedup_at_10k", Json::Num(5.0)),
-        ("meets_target", Json::Bool(speedup_at_10k >= 5.0)),
+        ("batch_probe_cached_growth_100k_over_10k", Json::Num(cached_growth)),
+        ("batch_probe_refold_growth_100k_over_10k", Json::Num(refold_growth)),
+        ("target_cached_growth_100k_over_10k", Json::Num(2.0)),
+        ("meets_growth_target", Json::Bool(cached_growth <= 2.0)),
+        ("batch_probe_cached_speedup_at_100k", Json::Num(refold_over_cached_at_100k)),
     ]);
     std::fs::write("BENCH_scaling.json", json.to_string_pretty())?;
     println!("\nwrote BENCH_scaling.json");
     println!(
-        "target (ISSUE 3): batched pricing ≥ 5x per-move try_move at n=10k — measured {speedup_at_10k:.1}x"
+        "target (ISSUE 7): cached batch-probe cost grows ≤ 2x from 10k to 100k — \
+         measured {cached_growth:.2}x (refold control arm: {refold_growth:.2}x)"
     );
     Ok(())
 }

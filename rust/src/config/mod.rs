@@ -93,6 +93,13 @@ pub struct EgrlConfig {
     /// rungs across the elites. Empty (the default) falls back to the
     /// single global `refine_temp`.
     pub refine_temps: Vec<f64>,
+    /// Replica-exchange parallel tempering across the `refine_temps`
+    /// ladder: after each generation's refinement pass, adjacent rungs
+    /// propose a Metropolis swap of their refined incumbents on
+    /// noise-free latency (deterministic per-rank RNG streams, so the
+    /// §8 thread-count bit-identity contract holds). No-op unless at
+    /// least two elites sit on distinct-temperature rungs.
+    pub refine_exchange: bool,
     /// `egrl serve`: map-cache capacity in entries (LRU beyond it).
     pub serve_cache_cap: usize,
     /// `egrl serve`: per-request deadline (ms) for inline refinement on
@@ -161,6 +168,7 @@ impl Default for EgrlConfig {
             refine_moves: 200,
             refine_temp: 0.0,
             refine_temps: Vec::new(),
+            refine_exchange: false,
             serve_cache_cap: 64,
             serve_deadline_ms: 25,
             serve_refine_budget: 18_000,
@@ -297,6 +305,7 @@ impl EgrlConfig {
                 }
                 self.refine_temps = temps;
             }
+            "refine_exchange" => self.refine_exchange = p(key, value)?,
             "serve_cache_cap" => {
                 let v: usize = p(key, value)?;
                 anyhow::ensure!(v >= 1, "serve_cache_cap must be >= 1, got {v}");
@@ -473,6 +482,18 @@ mod tests {
         // Empty value clears it (falls back to the global refine_temp).
         c.set("refine_temps", "").unwrap();
         assert!(c.refine_temps.is_empty());
+    }
+
+    #[test]
+    fn refine_exchange_key_wired() {
+        let mut c = EgrlConfig::default();
+        assert!(!c.refine_exchange, "replica exchange must default off");
+        c.set("refine_exchange", "true").unwrap();
+        assert!(c.refine_exchange);
+        assert!(c.set("refine_exchange", "maybe").is_err());
+        assert!(c.refine_exchange, "rejected set must not clobber the value");
+        c.set("refine_exchange", "false").unwrap();
+        assert!(!c.refine_exchange);
     }
 
     /// ISSUE 4 satellite: `threads = 0` and `refine_elites > pop_size`

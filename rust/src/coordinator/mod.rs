@@ -285,6 +285,16 @@ impl Trainer {
     /// `refine_temps[j % len]`), so e.g. `[0.0, 0.5]` alternates pure
     /// hill-climb and annealing rungs across the refined elites instead
     /// of one global temperature. Empty list → the global `refine_temp`.
+    ///
+    /// Replica exchange (`cfg.refine_exchange`): after the refinement
+    /// pass, adjacent rungs propose swapping their refined incumbents
+    /// under the standard parallel-tempering Metropolis rule on
+    /// **noise-free** latency, `p = min(1, exp((βⱼ − βⱼ₊₁)(Eⱼ − Eⱼ₊₁)))`
+    /// with `β = 1/T` (`T = 0` is an infinitely cold, greedy rung), so
+    /// good maps migrate toward cold rungs while hot rungs keep
+    /// exploring. The exchange RNG stream is forked from the trainer RNG
+    /// in rank order *before* the worker pool starts and the sweep runs
+    /// serially, so the §8 thread-count bit-identity contract holds.
     fn refine_elites(&mut self) {
         let k = self.cfg.refine_elites.min(self.pop.len());
         if k == 0 || self.cfg.refine_moves == 0 {
@@ -293,6 +303,12 @@ impl Trainer {
         let ranking = self.pop.ranking();
         let elites: Vec<usize> = ranking[..k].to_vec();
         let seeds: Vec<u64> = (0..k).map(|_| self.rng.next_u64()).collect();
+        // Fork the exchange stream alongside the worker seeds, before any
+        // worker starts: the serial trainer RNG never races the pool, so
+        // results stay bit-identical for any thread count (§8). The fork
+        // is config-gated, which is constant over a run.
+        let exchange_seed =
+            (self.cfg.refine_exchange && k >= 2).then(|| self.rng.next_u64());
         let temps: Vec<f64> = (0..k)
             .map(|j| {
                 if self.cfg.refine_temps.is_empty() {
@@ -310,10 +326,32 @@ impl Trainer {
         let proposals: &[MemoryMap] = &self.proposals;
         let elite_idx = &elites;
         let temp_rungs = &temps;
-        let results: Vec<RefineResult> = map_parallel(k, self.cfg.threads, move |j| {
+        let mut results: Vec<RefineResult> = map_parallel(k, self.cfg.threads, move |j| {
             let mut rng = Rng::new(seeds[j]);
             refine(env, &proposals[elite_idx[j]], budget, temp_rungs[j], &mut rng, |_, _| {})
         });
+        // Replica-exchange sweep over adjacent rungs, serial and before
+        // the serial write-back. Energy = noise-free latency of the
+        // refined incumbent (never the noisy measured reward, which
+        // would let a lucky draw migrate to a cold rung).
+        if let Some(seed) = exchange_seed {
+            let mut ex_rng = Rng::new(seed);
+            let mut energy: Vec<f64> =
+                results.iter().map(|r| env.cost_table.latency(&r.map)).collect();
+            let beta = |t: f64| if t > 0.0 { 1.0 / t } else { f64::INFINITY };
+            for j in 0..k - 1 {
+                // Equal temperatures (or equal energies) make the swap a
+                // no-op permutation — skip to keep ∞·0 out of the rule.
+                if temps[j] == temps[j + 1] || energy[j] == energy[j + 1] {
+                    continue;
+                }
+                let ln_p = (beta(temps[j]) - beta(temps[j + 1])) * (energy[j] - energy[j + 1]);
+                if ln_p >= 0.0 || ex_rng.chance(ln_p.exp()) {
+                    results.swap(j, j + 1);
+                    energy.swap(j, j + 1);
+                }
+            }
+        }
         for (j, res) in results.iter().enumerate() {
             let i = elites[j];
             self.pop.members[i].fitness = res.reward;
@@ -740,6 +778,49 @@ mod tests {
         assert_eq!(serial.1, parallel.1, "ladder best_map differs across thread counts");
         assert_eq!(serial.2, parallel.2, "ladder RunLog differs across thread counts");
         assert!(serial.0 > 0.0, "ladder run never found a valid map");
+    }
+
+    /// Replica exchange on a two-rung ladder (hill-climb + annealing):
+    /// letting good incumbents migrate to the cold rung must find at
+    /// least the no-exchange best on a seeded workload, and the exchange
+    /// sweep must preserve the §8 thread-count bit-identity contract
+    /// (the Metropolis draws come from a serially forked stream).
+    #[test]
+    fn replica_exchange_finds_at_least_no_exchange_best() {
+        let run = |refine_exchange: bool, threads: usize| {
+            let env = Arc::new(MappingEnv::nnpi(Workload::ResNet50.build(), 33));
+            let cfg = EgrlConfig {
+                threads,
+                seed: 33,
+                total_steps: 900,
+                pop_size: 10,
+                elites: 2,
+                refine_elites: 4,
+                refine_moves: 36,
+                refine_temps: vec![0.0, 0.4],
+                refine_exchange,
+                ..Default::default()
+            };
+            let mut t = Trainer::new(env, cfg, Mode::EaOnly, None).unwrap();
+            let mut log = RunLog::new("resnet50", "ea", 33);
+            let res = t.run(&mut log).unwrap();
+            (res.best_speedup, res.best_map)
+        };
+        let plain = run(false, 1);
+        let exchanged = run(true, 1);
+        assert!(
+            exchanged.0 >= plain.0,
+            "exchange ({}) fell below no-exchange ({}) on the seeded workload",
+            exchanged.0,
+            plain.0
+        );
+        let parallel = run(true, 4);
+        assert_eq!(
+            exchanged.0.to_bits(),
+            parallel.0.to_bits(),
+            "exchange best_speedup differs across thread counts"
+        );
+        assert_eq!(exchanged.1, parallel.1, "exchange best_map differs across thread counts");
     }
 
     #[test]

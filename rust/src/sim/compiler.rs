@@ -18,7 +18,7 @@
 use crate::graph::Graph;
 use crate::mapping::{MemKind, MemoryMap, NodePlacement};
 use super::liveness::Liveness;
-use super::segtree::MaxSegTree;
+use super::segtree::{Fenwick, MaxSegTree, MinSegTree};
 use super::spec::ChipSpec;
 
 /// Result of compiling (rectifying) an agent-proposed map.
@@ -555,6 +555,431 @@ impl PartialEq for TreeCapacityState {
 }
 
 impl Eq for TreeCapacityState {}
+
+/// Non-member marker in the per-step slack trees: far above any real
+/// slack or spill delta, far below `i64::MAX` so accumulated range-add
+/// tags can never overflow it.
+const SLACK_SENTINEL: i64 = i64::MAX / 4;
+
+/// Incremental rectification for single-node move pricing (DESIGN.md
+/// §14). [`Compiler::rectify_in_place`] walks the whole graph to price an
+/// *invalid* move's ε; this replays only where the moved proposal
+/// *diverges* from the (valid) base map, which is the moved node's own
+/// tensors plus the spill cascade they trigger — O(cascade · log n)
+/// instead of O(n).
+///
+/// Core observation: rectification of the base map is the identity, so
+/// every `fit_weight`/`fit_act` decision of a full walk over the moved
+/// map can be reconstructed from *baseline* aggregates plus a small
+/// difference term:
+///
+/// * **Phase 1 (weights, topo order).** The replay's lane usage at step
+///   `s` is `P[m](s) + Δ[m]`, where `P[m](s)` is the base map's
+///   prefix-weight usage (a [`Fenwick`] per constrained lane) and `Δ[m]`
+///   accumulates the bytes moved in/out of `m` by events at steps `< s`.
+///   Nodes before the moved node's step see `Δ = 0` and fit identically;
+///   after it, a base member of lane `m` spills iff its baseline slack
+///   `cap[m] − P[m](s) − w_s` drops below `Δ[m]` — a
+///   [`MinSegTree::first_below`] query per lane finds the earliest such
+///   step, and each spill updates `Δ` and repeats. Lanes with `Δ ≤ 0`
+///   can never violate; processing events in step order makes the walk
+///   exact.
+/// * **Phase 2 (activations, execution order).** Weight residency
+///   changes lane-wide thresholds (`cap[m] − W_new[m]`), so the whole
+///   step axis is in play — but the load profile only differs from the
+///   base by a handful of interval **overlay pieces** (±`a` over a live
+///   interval: the moved node leaving its old lane, each spilled node
+///   moving lanes). The effective load is `A_base[s][m] + D[m](s)` with
+///   `A_base` already in the capacity state's [`MaxSegTree`]s; the
+///   earliest violating step is a [`MaxSegTree::first_above`] per
+///   constant-`D` segment. A violation can only surface at the insertion
+///   step of a lane member (the profile only rises there), which is
+///   exactly where `rectify_in_place` runs its check — so replaying
+///   violations in step order reproduces the full walk's decisions,
+///   including `reassigned_bytes` to the byte and therefore ε to the
+///   bit.
+///
+/// Long cascades stop paying for themselves; past
+/// [`Self::MAX_SPILL_EVENTS`] the pricing bails with `None` and the
+/// caller falls back to the full walk. Phase-1 baselines are owned here
+/// and maintained by [`Self::apply_commit`]; phase-2 baselines are read
+/// from the caller's [`TreeCapacityState`], which the search loop already
+/// keeps current.
+#[derive(Clone, Debug)]
+pub struct IncrementalRectifier {
+    /// Σ weights + Σ activations over all nodes — `rectify_in_place`'s
+    /// denominator is map-independent, so ε = reassigned / total needs no
+    /// walk.
+    total_bytes: u64,
+    /// Per constrained lane (index 0 = LLC, 1 = SRAM): base weight bytes
+    /// at each execution step (0 for non-members).
+    w_prefix: [Fenwick; 2],
+    /// Per constrained lane: baseline slack `cap − P(s) − w_s` at each
+    /// weighted member's step, [`SLACK_SENTINEL`] elsewhere.
+    w_slack: [MinSegTree; 2],
+    /// Phase-2 overlay pieces `(s_lo, s_hi, ±bytes)` per constrained
+    /// lane; scratch, rebuilt per priced move.
+    pieces: [Vec<(usize, usize, i64)>; 2],
+    /// Scratch segment boundaries for the piecewise violation search.
+    cuts: Vec<usize>,
+    /// Divergences of the last priced move vs the moved proposal:
+    /// `(node, final weight lane)`.
+    weight_changes: Vec<(usize, MemKind)>,
+    /// `(node, final activation lane)`.
+    act_changes: Vec<(usize, MemKind)>,
+}
+
+/// Sum of overlay pieces covering step `s`.
+fn overlay_delta_at(pieces: &[(usize, usize, i64)], s: usize) -> i64 {
+    pieces.iter().filter(|&&(lo, hi, _)| lo <= s && s <= hi).map(|&(_, _, d)| d).sum()
+}
+
+impl IncrementalRectifier {
+    /// Spill-cascade bound beyond which pricing falls back to the full
+    /// walk: past this the replay's per-event log factors cost more than
+    /// one linear pass, and a cascade this wide means ε is enormous
+    /// anyway.
+    pub const MAX_SPILL_EVENTS: usize = 64;
+
+    /// Build the phase-1 baselines for a **valid** `map`. O(n log n).
+    pub fn new(chip: &ChipSpec, g: &Graph, lv: &Liveness, map: &MemoryMap) -> IncrementalRectifier {
+        let n = g.len();
+        let mut total_bytes = 0u64;
+        for node in &g.nodes {
+            total_bytes += node.weight_bytes + node.ofm_bytes();
+        }
+        let mut pref = [vec![0i64; n], vec![0i64; n]];
+        let mut slack = [vec![SLACK_SENTINEL; n], vec![SLACK_SENTINEL; n]];
+        let mut run = [0i64; 2];
+        for (s, &i) in lv.order.iter().enumerate() {
+            let w = g.nodes[i].weight_bytes as i64;
+            if w == 0 {
+                continue;
+            }
+            let lane = map.placements[i].weight.index();
+            if lane == 0 {
+                continue; // DRAM is unconstrained
+            }
+            let li = lane - 1;
+            pref[li][s] = w;
+            slack[li][s] = chip.mems[lane].capacity as i64 - run[li] - w;
+            run[li] += w;
+        }
+        let [p0, p1] = pref;
+        let [s0, s1] = slack;
+        IncrementalRectifier {
+            total_bytes,
+            w_prefix: [Fenwick::build(&p0), Fenwick::build(&p1)],
+            w_slack: [MinSegTree::build(&s0), MinSegTree::build(&s1)],
+            pieces: [Vec::new(), Vec::new()],
+            cuts: Vec::new(),
+            weight_changes: Vec::new(),
+            act_changes: Vec::new(),
+        }
+    }
+
+    /// Keep the phase-1 baselines describing the live base map: call
+    /// alongside [`Compiler::apply_move`] when a move commits. O(log n).
+    pub fn apply_commit(
+        &mut self,
+        chip: &ChipSpec,
+        g: &Graph,
+        lv: &Liveness,
+        node: usize,
+        old: NodePlacement,
+        new: NodePlacement,
+    ) {
+        let w = g.nodes[node].weight_bytes;
+        if w == 0 || new.weight == old.weight {
+            return; // activation moves don't touch phase-1 state
+        }
+        let n = lv.order.len();
+        let t = lv.step_of[node];
+        let wi = w as i64;
+        if old.weight != MemKind::Dram {
+            let li = old.weight.index() - 1;
+            self.w_prefix[li].add(t, -wi);
+            if t + 1 < n {
+                // Later members' prefix usage drops, slack grows.
+                self.w_slack[li].range_add(t + 1, n - 1, wi);
+            }
+            self.w_slack[li].point_set(t, SLACK_SENTINEL);
+        }
+        if new.weight != MemKind::Dram {
+            let li = new.weight.index() - 1;
+            self.w_prefix[li].add(t, wi);
+            if t + 1 < n {
+                self.w_slack[li].range_add(t + 1, n - 1, -wi);
+            }
+            let cap = chip.mems[new.weight.index()].capacity as i64;
+            let slack = cap - self.w_prefix[li].prefix(t) - wi;
+            self.w_slack[li].point_set(t, slack);
+        }
+    }
+
+    /// Price moving `node` to `p` on top of the valid base `map`:
+    /// the stats `rectify_in_place` would report for the moved proposal,
+    /// bit-identical in ε, without walking the graph. `cap` must describe
+    /// `map`. Returns `None` when the spill cascade exceeds
+    /// [`Self::MAX_SPILL_EVENTS`] (caller falls back to the full walk).
+    /// The divergences from the moved proposal are recorded in
+    /// [`Self::weight_changes`]/[`Self::act_changes`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn price_move(
+        &mut self,
+        chip: &ChipSpec,
+        g: &Graph,
+        lv: &Liveness,
+        cap: &TreeCapacityState,
+        map: &MemoryMap,
+        node: usize,
+        p: NodePlacement,
+    ) -> Option<RectifyStats> {
+        self.weight_changes.clear();
+        self.act_changes.clear();
+        self.pieces[0].clear();
+        self.pieces[1].clear();
+        let n = g.len();
+        if n == 0 {
+            return None;
+        }
+        let old = map.placements[node];
+        let w = g.nodes[node].weight_bytes;
+        let a = g.nodes[node].ofm_bytes();
+        let mut reassigned = 0u64;
+        let mut events = 0usize;
+
+        // ---- Phase 1: weights, topo order ----
+        // Lane deltas vs the base walk, accumulated from replay events.
+        let mut dw = [0i64; 3];
+        if w > 0 && p.weight != old.weight {
+            let t0 = lv.step_of[node];
+            let got = self.fit_weight_replay(chip, p.weight, w, t0, &dw);
+            if got != p.weight {
+                reassigned += w;
+                self.weight_changes.push((node, got));
+            }
+            if got != old.weight {
+                dw[old.weight.index()] -= w as i64;
+                dw[got.index()] += w as i64;
+            }
+            let mut cur = t0;
+            loop {
+                let mut best: Option<(usize, usize)> = None;
+                for mi in 1..3 {
+                    if dw[mi] <= 0 || cur + 2 > n {
+                        continue;
+                    }
+                    if let Some(s) = self.w_slack[mi - 1].first_below(cur + 1, n - 1, dw[mi]) {
+                        if best.is_none_or(|(bs, _)| s < bs) {
+                            best = Some((s, mi));
+                        }
+                    }
+                }
+                let Some((v, mi)) = best else { break };
+                events += 1;
+                if events > Self::MAX_SPILL_EVENTS {
+                    return None;
+                }
+                let j = lv.order[v];
+                let wj = g.nodes[j].weight_bytes;
+                let want_j = map.placements[j].weight;
+                debug_assert!(wj > 0 && want_j.index() == mi, "slack entry without a member");
+                // `want_j` is known to fail (that's the violation), and the
+                // spill chain is strictly downward, so start one level on.
+                let got_j = match want_j.spill_target() {
+                    Some(next) => self.fit_weight_replay(chip, next, wj, v, &dw),
+                    None => MemKind::Dram,
+                };
+                reassigned += wj;
+                self.weight_changes.push((j, got_j));
+                dw[mi] -= wj as i64;
+                dw[got_j.index()] += wj as i64;
+                cur = v;
+            }
+        }
+
+        // ---- Phase 2: activations, execution order ----
+        // Post-phase-1 weight residency shifts whole-lane headroom.
+        let mut thr = [i64::MAX; 3];
+        for mi in 1..3 {
+            let w_new = cap.w_used[mi] as i64 + dw[mi];
+            thr[mi] = chip.mems[mi].capacity as i64 - w_new;
+            debug_assert!(thr[mi] >= 0, "phase-1 replay left a lane over capacity");
+        }
+        let (is0, is1) = (lv.step_of[node], lv.last_use[node]);
+        let act_changed = a > 0 && p.activation != old.activation;
+        if act_changed && old.activation != MemKind::Dram {
+            // Remove the moved node's base contribution so `A_base + D`
+            // reads "live before own" in every lane at its step.
+            self.pieces[old.activation.index() - 1].push((is0, is1, -(a as i64)));
+        }
+        let mut moved_pending = act_changed;
+        let mut cur = 0usize;
+        loop {
+            let mut best: Option<(usize, usize)> = None;
+            for mi in 1..3 {
+                // A lane can only violate if its weight headroom shrank or
+                // an overlay piece adds load.
+                let base_thr = chip.mems[mi].capacity as i64 - cap.w_used[mi] as i64;
+                if thr[mi] >= base_thr && !self.pieces[mi - 1].iter().any(|&(_, _, d)| d > 0) {
+                    continue;
+                }
+                if let Some(s) = self.find_act_violation(cap, mi, cur, n - 1, thr[mi]) {
+                    if best.is_none_or(|(bs, _)| s < bs) {
+                        best = Some((s, mi));
+                    }
+                }
+            }
+            if moved_pending && best.is_none_or(|(v, _)| is0 <= v) {
+                // The moved node's own insertion is the next event in step
+                // order (a violation can never land exactly on `is0`: no
+                // lane's profile rises there while the insert is pending).
+                let got = self.fit_act_replay(chip, cap, p.activation, a, is0, &thr);
+                if got != p.activation {
+                    reassigned += a;
+                    self.act_changes.push((node, got));
+                }
+                if got != MemKind::Dram {
+                    self.pieces[got.index() - 1].push((is0, is1, a as i64));
+                }
+                moved_pending = false;
+                cur = is0;
+                continue;
+            }
+            let Some((v, mi)) = best else { break };
+            events += 1;
+            if events > Self::MAX_SPILL_EVENTS {
+                return None;
+            }
+            let j = lv.order[v];
+            let aj = g.nodes[j].ofm_bytes();
+            let want_j = map.placements[j].activation;
+            debug_assert_eq!(
+                want_j.index(),
+                mi,
+                "activation profile can only rise at a lane member's insertion"
+            );
+            // The violated check *is* `want_j`'s own (self-inclusive) fit,
+            // so resume the spill chain one level down.
+            let got_j = match want_j.spill_target() {
+                Some(next) => self.fit_act_replay(chip, cap, next, aj, v, &thr),
+                None => MemKind::Dram,
+            };
+            let last_j = lv.last_use[j];
+            self.pieces[mi - 1].push((v, last_j, -(aj as i64)));
+            if got_j != MemKind::Dram {
+                self.pieces[got_j.index() - 1].push((v, last_j, aj as i64));
+            }
+            reassigned += aj;
+            self.act_changes.push((j, got_j));
+            cur = v;
+        }
+
+        let total = self.total_bytes;
+        let epsilon = if total == 0 { 0.0 } else { reassigned as f64 / total as f64 };
+        Some(RectifyStats { epsilon, reassigned_bytes: reassigned, total_bytes: total })
+    }
+
+    /// Weight divergences `(node, final lane)` of the last
+    /// [`Self::price_move`] vs the moved proposal it priced.
+    pub fn weight_changes(&self) -> &[(usize, MemKind)] {
+        &self.weight_changes
+    }
+
+    /// Activation divergences of the last [`Self::price_move`].
+    pub fn act_changes(&self) -> &[(usize, MemKind)] {
+        &self.act_changes
+    }
+
+    /// `fit_weight` over replay state: base prefix + lane delta. The
+    /// DRAM arm needs no usage check — the original loop returns DRAM
+    /// whether or not its capacity test passes (spilling past DRAM goes
+    /// nowhere).
+    fn fit_weight_replay(
+        &self,
+        chip: &ChipSpec,
+        want: MemKind,
+        bytes: u64,
+        s: usize,
+        dw: &[i64; 3],
+    ) -> MemKind {
+        let mut m = want;
+        loop {
+            if m == MemKind::Dram {
+                return m;
+            }
+            let used = self.w_prefix[m.index() - 1].prefix(s) + dw[m.index()];
+            if used + bytes as i64 <= chip.mems[m.index()].capacity as i64 {
+                return m;
+            }
+            m = m.spill_target().unwrap_or(MemKind::Dram);
+        }
+    }
+
+    /// `fit_act` over replay state: baseline per-step load + overlay
+    /// pieces, against the post-phase-1 weight headroom. Callers
+    /// guarantee no lane in the chain self-includes the fitted bytes in
+    /// `A_base + D` (the moved node via the initial removal piece, spill
+    /// victims by starting below their own lane).
+    fn fit_act_replay(
+        &self,
+        chip: &ChipSpec,
+        cap: &TreeCapacityState,
+        want: MemKind,
+        bytes: u64,
+        s: usize,
+        thr: &[i64; 3],
+    ) -> MemKind {
+        let mut m = want;
+        loop {
+            if m == MemKind::Dram {
+                return m;
+            }
+            let mi = m.index();
+            let load = cap.act[mi].range_max(s, s) as i64 + overlay_delta_at(&self.pieces[mi - 1], s);
+            if load + bytes as i64 <= thr[mi] {
+                return m;
+            }
+            m = m.spill_target().unwrap_or(MemKind::Dram);
+        }
+    }
+
+    /// Earliest step in `[lo, hi]` where lane `mi`'s effective load
+    /// `A_base + D` exceeds `thr`: one `first_above` per constant-`D`
+    /// segment of the overlay.
+    fn find_act_violation(
+        &mut self,
+        cap: &TreeCapacityState,
+        mi: usize,
+        lo: usize,
+        hi: usize,
+        thr: i64,
+    ) -> Option<usize> {
+        let pieces = &self.pieces[mi - 1];
+        let cuts = &mut self.cuts;
+        cuts.clear();
+        cuts.push(lo);
+        for &(plo, phi, _) in pieces.iter() {
+            if plo > lo && plo <= hi {
+                cuts.push(plo);
+            }
+            if phi + 1 > lo && phi + 1 <= hi {
+                cuts.push(phi + 1);
+            }
+        }
+        cuts.sort_unstable();
+        cuts.dedup();
+        for (k, &seg_lo) in cuts.iter().enumerate() {
+            let seg_hi = if k + 1 < cuts.len() { cuts[k + 1] - 1 } else { hi };
+            let d = overlay_delta_at(pieces, seg_lo);
+            if let Some(s) = cap.act[mi].first_above(seg_lo, seg_hi, thr - d) {
+                return Some(s);
+            }
+        }
+        None
+    }
+}
 
 /// Reusable scratch state for rectification — avoids per-call allocation
 /// in the trainer's hot loop (thousands of rectifications per generation).
@@ -1385,5 +1810,114 @@ mod tests {
             assert!(!r.valid(), "{} fully fits SRAM?!", w.name());
             assert!(r.epsilon > 0.5, "ε suspiciously small: {}", r.epsilon);
         }
+    }
+
+    #[test]
+    fn incremental_rectifier_prices_weight_spill() {
+        // tiny chip, SRAM = 1 KB: moving the second 800-byte weight into
+        // SRAM next to the first must price exactly one LLC spill.
+        let g = chain(2, 800, 10);
+        let lv = Liveness::analyze(&g);
+        let c = tiny_compiler();
+        let mut map = MemoryMap::all_dram(2);
+        map.placements[0].weight = MemKind::Sram;
+        map.placements[1].weight = MemKind::Llc;
+        let cap = c.tree_capacity_state(&g, &lv, &map);
+        let mut rect = IncrementalRectifier::new(&c.chip, &g, &lv, &map);
+        let p = NodePlacement { weight: MemKind::Sram, activation: MemKind::Dram };
+        let stats = rect.price_move(&c.chip, &g, &lv, &cap, &map, 1, p).unwrap();
+        let mut moved = map.clone();
+        moved.placements[1] = p;
+        let truth = c.rectify(&g, &lv, &moved);
+        assert!(!stats.valid());
+        assert_eq!(stats.reassigned_bytes, truth.reassigned_bytes);
+        assert_eq!(stats.total_bytes, truth.total_bytes);
+        assert_eq!(stats.epsilon.to_bits(), truth.epsilon.to_bits());
+        assert_eq!(rect.weight_changes(), &[(1, MemKind::Llc)]);
+        assert!(rect.act_changes().is_empty());
+    }
+
+    /// The §14 equivalence contract, end to end: pricing any single-node
+    /// move through the incremental rectifier must reproduce
+    /// `rectify_in_place` over the moved proposal — ε **bit-identical**,
+    /// byte counts equal, and the recorded divergences rebuilding the
+    /// identical rectified map — with committed moves interleaved so the
+    /// `apply_commit`-maintained phase-1 baselines (not fresh rebuilds)
+    /// carry the later pricings. Nodes get heterogeneous tensor sizes so
+    /// spill cascades cross lanes in both phases.
+    #[test]
+    fn prop_incremental_rectifier_matches_full_walk() {
+        let c = tiny_compiler();
+        check(
+            "incremental price_move ≡ rectify_in_place across commit chains",
+            150,
+            |gen| {
+                let n = gen.usize_in(3, 24);
+                let nodes = (0..n)
+                    .map(|i| {
+                        test_node(i, gen.usize_in(0, 700) as u64, gen.usize_in(1, 500) as u64)
+                    })
+                    .collect();
+                let mut edges: Vec<(usize, usize)> = (0..n - 1).map(|i| (i, i + 1)).collect();
+                for i in 0..n - 2 {
+                    if gen.bool() {
+                        edges.push((i, gen.usize_in(i + 2, n - 1)));
+                    }
+                }
+                let g = Graph::new("dag", nodes, edges).unwrap();
+                let actions: Vec<[usize; 2]> =
+                    (0..n).map(|_| [gen.usize_in(0, 2), gen.usize_in(0, 2)]).collect();
+                let moves: Vec<(usize, usize)> =
+                    (0..40).map(|_| (gen.usize_in(0, n - 1), gen.usize_in(0, 8))).collect();
+                ((g, MemoryMap::from_actions(&actions), moves), ())
+            },
+            |(g, proposal, moves), _| {
+                let lv = Liveness::analyze(g);
+                let mut map = c.rectify(g, &lv, proposal).map;
+                let mut cap = c.tree_capacity_state(g, &lv, &map);
+                let mut rect = IncrementalRectifier::new(&c.chip, g, &lv, &map);
+                let mut ws = CompilerWorkspace::default();
+                for &(node, pi) in moves {
+                    let p = NodePlacement {
+                        weight: MemKind::from_index(pi / 3),
+                        activation: MemKind::from_index(pi % 3),
+                    };
+                    let old = map.placements[node];
+                    let Some(stats) = rect.price_move(&c.chip, g, &lv, &cap, &map, node, p)
+                    else {
+                        // ≤ 24 nodes can never exceed the cascade bound.
+                        return false;
+                    };
+                    let mut truth_map = map.clone();
+                    truth_map.placements[node] = p;
+                    let truth = c.rectify_in_place(g, &lv, &mut truth_map, &mut ws);
+                    if stats.epsilon.to_bits() != truth.epsilon.to_bits()
+                        || stats.reassigned_bytes != truth.reassigned_bytes
+                        || stats.total_bytes != truth.total_bytes
+                    {
+                        return false;
+                    }
+                    let mut rebuilt = map.clone();
+                    rebuilt.placements[node] = p;
+                    for &(i, m) in rect.weight_changes() {
+                        rebuilt.placements[i].weight = m;
+                    }
+                    for &(i, m) in rect.act_changes() {
+                        rebuilt.placements[i].activation = m;
+                    }
+                    if rebuilt != truth_map {
+                        return false;
+                    }
+                    // Fitting moves commit, so later pricings run against
+                    // maintained baselines.
+                    if stats.valid() {
+                        map.placements[node] = p;
+                        cap.apply(g, &lv, node, old, p);
+                        rect.apply_commit(&c.chip, g, &lv, node, old, p);
+                    }
+                }
+                true
+            },
+        );
     }
 }

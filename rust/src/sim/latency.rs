@@ -257,29 +257,76 @@ impl CostTable {
     /// for the *current* map): only the moved node's term — plus its
     /// consumers' terms when the activation moves — is recomputed, then
     /// the terms are re-summed in index order, so the result is
-    /// bit-identical to [`Self::latency`] on the moved map. `scratch` is
-    /// a reusable buffer (no steady-state allocation).
+    /// bit-identical to [`Self::latency`] on the moved map.
+    ///
+    /// The touched slots are overridden **in place** and restored before
+    /// returning (in reverse save order, so a consumer reached through
+    /// parallel edges lands back on its original value) — no O(n) copy
+    /// per probe; the remaining O(n) is the index-order re-sum that the
+    /// bit-exactness contract requires. The O(degree) ε-bounded
+    /// alternative is [`Self::probe_move_latency_cached`]. `saved` is a
+    /// reusable (slot, old value) buffer (no steady-state allocation).
     pub fn probe_move_latency(
         &self,
         map: &MemoryMap,
         node: usize,
         p: NodePlacement,
-        totals: &[f64],
-        scratch: &mut Vec<f64>,
+        totals: &mut [f64],
+        saved: &mut Vec<(u32, f64)>,
     ) -> f64 {
         debug_assert_eq!(totals.len(), self.n);
-        scratch.clear();
-        scratch.extend_from_slice(totals);
+        saved.clear();
         let ovr = Some((node, p));
-        scratch[node] = self.node_total_s(map, node, ovr);
+        saved.push((node as u32, totals[node]));
+        totals[node] = self.node_total_s(map, node, ovr);
         if map.placements[node].activation != p.activation {
             let (s, e) = (self.succ_start[node] as usize, self.succ_start[node + 1] as usize);
             for &c in &self.succ_idx[s..e] {
                 let c = c as usize;
-                scratch[c] = self.node_total_s(map, c, ovr);
+                saved.push((c as u32, totals[c]));
+                totals[c] = self.node_total_s(map, c, ovr);
             }
         }
-        sum_in_order(scratch)
+        let out = sum_in_order(totals);
+        for &(i, old) in saved.iter().rev() {
+            totals[i as usize] = old;
+        }
+        out
+    }
+
+    /// O(degree) ε-bounded variant of [`Self::probe_move_latency`]: the
+    /// moved map's latency is priced off the cache's incrementally
+    /// maintained compensated running total — subtract the touched
+    /// cached terms, add their overridden recomputes — without walking
+    /// or re-summing the graph. Within the 1e-9 relative contract of the
+    /// bit-exact index-order probe (property-tested; the audited running
+    /// total itself drifts at most [`TotalsCache::MAX_RELATIVE_DRIFT`]
+    /// between rebases). Read-only on the cache.
+    pub fn probe_move_latency_cached(
+        &self,
+        map: &MemoryMap,
+        node: usize,
+        p: NodePlacement,
+        cache: &TotalsCache,
+    ) -> f64 {
+        debug_assert_eq!(cache.len(), self.n);
+        let ovr = Some((node, p));
+        let mut acc = cache.running;
+        acc.add(-cache.totals[node]);
+        acc.add(self.node_total_s(map, node, ovr));
+        if map.placements[node].activation != p.activation {
+            let (s, e) = (self.succ_start[node] as usize, self.succ_start[node + 1] as usize);
+            let succ = &self.succ_idx[s..e];
+            for (k, &c) in succ.iter().enumerate() {
+                if succ[..k].contains(&c) {
+                    continue; // parallel edge: slot already swapped once
+                }
+                let c = c as usize;
+                acc.add(-cache.totals[c]);
+                acc.add(self.node_total_s(map, c, ovr));
+            }
+        }
+        acc.value()
     }
 
     /// Refresh the cached totals after committing a move: `map` must
@@ -300,6 +347,35 @@ impl CostTable {
             for &c in &self.succ_idx[s..e] {
                 let c = c as usize;
                 totals[c] = self.node_total_s(map, c, None);
+            }
+        }
+    }
+
+    /// [`Self::refresh_totals`] against a [`TotalsCache`]: the same slot
+    /// recomputes (so the per-slot terms stay bit-exact forever), routed
+    /// through [`TotalsCache::replace_slot`] so the compensated running
+    /// total follows in O(degree) — this is the commit path that keeps
+    /// `commit_move` free of the O(n) re-sum. Distinct consumers only:
+    /// a parallel-edge duplicate would swap the slot a second time for
+    /// nothing but extra drift budget.
+    pub fn refresh_totals_cached(
+        &self,
+        map: &MemoryMap,
+        node: usize,
+        old: NodePlacement,
+        cache: &mut TotalsCache,
+    ) {
+        debug_assert_eq!(cache.len(), self.n);
+        cache.replace_slot(node, self.node_total_s(map, node, None));
+        if old.activation != map.placements[node].activation {
+            let (s, e) = (self.succ_start[node] as usize, self.succ_start[node + 1] as usize);
+            let succ = &self.succ_idx[s..e];
+            for (k, &c) in succ.iter().enumerate() {
+                if succ[..k].contains(&c) {
+                    continue; // parallel edge: slot already refreshed
+                }
+                let c = c as usize;
+                cache.replace_slot(c, self.node_total_s(map, c, None));
             }
         }
     }
@@ -371,6 +447,69 @@ impl CostTable {
                 base.add(t);
             }
         }
+        self.probe_masked_core(map, node, base, mask)
+    }
+
+    /// O(degree) variant of [`Self::probe_placements_masked`] priced off
+    /// the incrementally maintained running total (DESIGN.md §14): the
+    /// base sum is the cache's compensated total minus the touched terms
+    /// (the node's own slot and each distinct consumer slot), not an
+    /// O(n) refold. Every other float op — input term, consumer lanes,
+    /// per-entry assembly — is shared with the refold path via
+    /// [`Self::probe_masked_core`], so for a fixed base the masked and
+    /// unmasked cached batches are bit-identical on survivors, and each
+    /// priced entry stays within the 1e-9 relative ε contract of the
+    /// bit-exact per-move probe. Read-only on the cache.
+    pub fn probe_placements_masked_cached(
+        &self,
+        map: &MemoryMap,
+        node: usize,
+        cache: &TotalsCache,
+        mask: &[bool; 9],
+    ) -> [f64; 9] {
+        debug_assert_eq!(cache.len(), self.n);
+        if !mask.iter().any(|&m| m) {
+            return [0.0; 9];
+        }
+        let mut base = cache.running;
+        base.add(-cache.totals[node]);
+        let (cs, ce) = (self.succ_start[node] as usize, self.succ_start[node + 1] as usize);
+        let succ = &self.succ_idx[cs..ce];
+        for (k, &c) in succ.iter().enumerate() {
+            if succ[..k].contains(&c) {
+                continue; // parallel edge: slot already subtracted once
+            }
+            base.add(-cache.totals[c as usize]);
+        }
+        self.probe_masked_core(map, node, base, mask)
+    }
+
+    /// All-nine convenience wrapper over
+    /// [`Self::probe_placements_masked_cached`].
+    pub fn probe_all_placements_cached(
+        &self,
+        map: &MemoryMap,
+        node: usize,
+        cache: &TotalsCache,
+    ) -> [f64; 9] {
+        self.probe_placements_masked_cached(map, node, cache, &[true; 9])
+    }
+
+    /// Shared tail of the batched 9-way probe: given the base sum over
+    /// all unaffected nodes (however it was obtained — O(n) refold or
+    /// O(degree) incremental subtraction), compute the node's input
+    /// term, the per-activation consumer lanes, and assemble the masked
+    /// entries. Keeping this single ensures the refold and cached paths
+    /// run the exact same float ops past the base, which is what pins
+    /// masked ≡ unmasked bit-identity for both.
+    fn probe_masked_core(
+        &self,
+        map: &MemoryMap,
+        node: usize,
+        base: Neumaier,
+        mask: &[bool; 9],
+    ) -> [f64; 9] {
+        let (cs, ce) = (self.succ_start[node] as usize, self.succ_start[node + 1] as usize);
         // The node's own input time is independent of its own placement.
         let mut input = 0.0;
         let (ps, pe) = (self.pred_start[node] as usize, self.pred_start[node + 1] as usize);
@@ -452,6 +591,129 @@ impl CostTable {
             }
         }
         delta
+    }
+}
+
+/// Cached per-node wall-second terms plus an **incrementally maintained
+/// compensated running total** (DESIGN.md §14) — the structure that turns
+/// the per-batch O(n) base-sum refold into an O(degree) update.
+///
+/// Two invariants, deliberately split:
+///
+/// * **Slot invariant (bit-exact, forever):** `totals[i]` is always the
+///   exact per-node term [`CostTable::node_totals_into`] would produce
+///   for the current map — slot writes are full recomputes, never
+///   deltas — so [`Self::exact_total_s`] (an index-order refold)
+///   reproduces [`CostTable::latency`] bit-for-bit at any time.
+/// * **Aggregate invariant (ε-audited):** `running` tracks the
+///   compensated sum of the slots through paired subtract/add updates in
+///   [`Self::replace_slot`]. Each paired update costs O(1)·ulp of
+///   error, so the drift after `k` slot swaps is ≤ ~`2k`·ε_machine
+///   relative. A **drift audit** counts updates and re-folds (rebases)
+///   the running sum from the slots after [`Self::REBASE_DRIFT_OPS`]
+///   of them, bounding worst-case drift between rebases to
+///   [`Self::MAX_RELATIVE_DRIFT`] — three orders of magnitude inside
+///   the 1e-9 relative ε contract (§10), for arbitrarily long move
+///   streams.
+#[derive(Clone, Debug, Default)]
+pub struct TotalsCache {
+    totals: Vec<f64>,
+    running: Neumaier,
+    /// Compensated ops folded into `running` since the last rebase.
+    drift_ops: u32,
+    /// Lifetime count of audit-triggered rebases (observability + the
+    /// long-stream drift property test).
+    rebases: u64,
+}
+
+impl TotalsCache {
+    /// Audit threshold: rebase the running sum after this many
+    /// compensated add/subtract ops. At ~1 ulp (≈1.1e-16 relative) of
+    /// worst-case drift per op, 4096 ops bound accumulated drift to
+    /// ~4.5e-13 relative — see [`Self::MAX_RELATIVE_DRIFT`].
+    pub const REBASE_DRIFT_OPS: u32 = 4096;
+
+    /// Documented worst-case relative drift of [`Self::total_s`] against
+    /// a fresh index-order refold between rebases: `REBASE_DRIFT_OPS`
+    /// ops × ~2 ulp each, rounded up an order of magnitude for slack.
+    /// The long-stream drift property test asserts this bound at every
+    /// audit point.
+    pub const MAX_RELATIVE_DRIFT: f64 = 1e-11;
+
+    /// Build (or rebuild) the cache for `map`: recompute every slot and
+    /// fold the running sum fresh. O(n) — done once per search state,
+    /// then amortized away.
+    pub fn rebuild(&mut self, table: &CostTable, map: &MemoryMap) {
+        table.node_totals_into(map, &mut self.totals);
+        self.refold();
+    }
+
+    /// Number of cached slots.
+    pub fn len(&self) -> usize {
+        self.totals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.totals.is_empty()
+    }
+
+    /// The cached per-node terms (each bit-exact for the current map).
+    pub fn totals(&self) -> &[f64] {
+        &self.totals
+    }
+
+    /// The audited compensated running total — ε-equal to
+    /// [`Self::exact_total_s`] within [`Self::MAX_RELATIVE_DRIFT`]. O(1).
+    pub fn total_s(&self) -> f64 {
+        self.running.value()
+    }
+
+    /// Bit-exact index-order refold of the slots — reproduces
+    /// [`CostTable::latency`] on the current map exactly. O(n); for
+    /// publish points that pin bit-identity, not the per-move hot path.
+    pub fn exact_total_s(&self) -> f64 {
+        sum_in_order(&self.totals)
+    }
+
+    /// Compensated ops since the last rebase (audit observability).
+    pub fn drift_ops(&self) -> u32 {
+        self.drift_ops
+    }
+
+    /// Lifetime audit-triggered rebases.
+    pub fn rebases(&self) -> u64 {
+        self.rebases
+    }
+
+    /// Replace slot `i` with a freshly recomputed term, updating the
+    /// running total in O(1) (subtract old, add new) and charging the
+    /// drift audit; rebases when the audit budget is spent. Unchanged
+    /// values (bit-equal) are skipped — no drift charged for no-ops.
+    pub fn replace_slot(&mut self, i: usize, new: f64) {
+        let old = self.totals[i];
+        if old.to_bits() == new.to_bits() {
+            return;
+        }
+        self.totals[i] = new;
+        self.running.add(-old);
+        self.running.add(new);
+        self.drift_ops += 2;
+        if self.drift_ops >= Self::REBASE_DRIFT_OPS {
+            self.refold();
+            self.rebases += 1;
+        }
+    }
+
+    /// Re-fold `running` from the slots (compensated, index order) and
+    /// reset the drift audit. Restores the aggregate to the exactness of
+    /// a fresh fold.
+    fn refold(&mut self) {
+        let mut acc = Neumaier::default();
+        for &t in &self.totals {
+            acc.add(t);
+        }
+        self.running = acc;
+        self.drift_ops = 0;
     }
 }
 
@@ -773,8 +1035,14 @@ mod tests {
                 if sum_in_order(&totals).to_bits() != table.latency(map).to_bits() {
                     return false;
                 }
-                let mut scratch = Vec::new();
-                let probed = table.probe_move_latency(map, *node, *p, &totals, &mut scratch);
+                let mut saved = Vec::new();
+                let before = totals.clone();
+                let probed =
+                    table.probe_move_latency(map, *node, *p, &mut totals, &mut saved);
+                // In-place override must restore the cache exactly.
+                if totals.iter().zip(&before).any(|(a, b)| a.to_bits() != b.to_bits()) {
+                    return false;
+                }
                 let mut moved = map.clone();
                 moved.placements[*node] = *p;
                 if probed.to_bits() != table.latency(&moved).to_bits() {
@@ -840,7 +1108,7 @@ mod tests {
                 table.node_totals_into(map, &mut totals);
                 let mut skip = Vec::new();
                 let batch = table.probe_all_placements(map, *node, &totals, &mut skip);
-                let mut scratch = Vec::new();
+                let mut saved = Vec::new();
                 for wi in 0..3 {
                     for ai in 0..3 {
                         let p = crate::mapping::NodePlacement {
@@ -848,7 +1116,7 @@ mod tests {
                             activation: MemKind::from_index(ai),
                         };
                         let exact =
-                            table.probe_move_latency(map, *node, p, &totals, &mut scratch);
+                            table.probe_move_latency(map, *node, p, &mut totals, &mut saved);
                         let fast = batch[wi * 3 + ai];
                         if (fast - exact).abs() > 1e-9 * exact {
                             return false;
@@ -935,19 +1203,32 @@ mod tests {
         let map = MemoryMap::all_dram(3);
         let mut totals = Vec::new();
         table.node_totals_into(&map, &mut totals);
-        let (mut skip, mut scratch) = (Vec::new(), Vec::new());
+        let (mut skip, mut saved) = (Vec::new(), Vec::new());
         let batch = table.probe_all_placements(&map, 0, &totals, &mut skip);
+        let mut cache = TotalsCache::default();
+        cache.rebuild(&table, &map);
+        let cached_batch = table.probe_all_placements_cached(&map, 0, &cache);
         for wi in 0..3 {
             for ai in 0..3 {
                 let p = crate::mapping::NodePlacement {
                     weight: MemKind::from_index(wi),
                     activation: MemKind::from_index(ai),
                 };
-                let exact = table.probe_move_latency(&map, 0, p, &totals, &mut scratch);
+                let exact = table.probe_move_latency(&map, 0, p, &mut totals, &mut saved);
                 let fast = batch[wi * 3 + ai];
                 assert!(
                     (fast - exact).abs() <= 1e-9 * exact,
                     "parallel-edge batch {fast} vs exact {exact} at ({wi},{ai})"
+                );
+                let inc = cached_batch[wi * 3 + ai];
+                assert!(
+                    (inc - exact).abs() <= 1e-9 * exact,
+                    "parallel-edge cached batch {inc} vs exact {exact} at ({wi},{ai})"
+                );
+                let single = table.probe_move_latency_cached(&map, 0, p, &cache);
+                assert!(
+                    (single - exact).abs() <= 1e-9 * exact,
+                    "parallel-edge cached probe {single} vs exact {exact} at ({wi},{ai})"
                 );
             }
         }
@@ -992,5 +1273,146 @@ mod tests {
         assert_eq!(table.latency_delta(&m, 3, m.placements[3]), 0.0);
         assert_eq!(table.len(), 6);
         assert!(!table.is_empty());
+    }
+
+    // ---- TotalsCache (incremental running total, DESIGN.md §14) ------------
+
+    /// The O(degree) cached probe paths must agree with the bit-exact
+    /// per-move probe within the 1e-9 relative ε contract, and — the
+    /// adaptive-pricing contract carried over — the masked cached batch
+    /// must be bit-identical to the unmasked cached batch on survivors
+    /// (both feed the same incremental base into `probe_masked_core`).
+    #[test]
+    fn prop_cached_probe_paths_match_exact_and_masked_is_bit_identical() {
+        let chip = ChipSpec::nnpi();
+        check(
+            "cached probes ≡ exact probe (ε); masked cached ≡ unmasked cached (bits)",
+            200,
+            |gen| {
+                let g = random_dag(gen);
+                let map = random_map(gen, g.len());
+                let node = gen.usize_in(0, g.len() - 1);
+                let mut mask = [false; 9];
+                for slot in mask.iter_mut() {
+                    *slot = gen.bool();
+                }
+                ((g, map, node, mask), ())
+            },
+            |(g, map, node, mask), _| {
+                let table = CostTable::new(g, &chip);
+                let mut cache = TotalsCache::default();
+                cache.rebuild(&table, map);
+                // Rebuilt cache aggregates exactly: slots refold to the
+                // full-walk latency bit-for-bit, running total ε-close.
+                if cache.exact_total_s().to_bits() != table.latency(map).to_bits() {
+                    return false;
+                }
+                let full = table.probe_all_placements_cached(map, *node, &cache);
+                let masked = table.probe_placements_masked_cached(map, *node, &cache, mask);
+                let mut totals = cache.totals().to_vec();
+                let mut saved = Vec::new();
+                for wi in 0..3 {
+                    for ai in 0..3 {
+                        let k = wi * 3 + ai;
+                        let p = crate::mapping::NodePlacement {
+                            weight: MemKind::from_index(wi),
+                            activation: MemKind::from_index(ai),
+                        };
+                        let exact =
+                            table.probe_move_latency(map, *node, p, &mut totals, &mut saved);
+                        if (full[k] - exact).abs() > 1e-9 * exact {
+                            return false;
+                        }
+                        let single = table.probe_move_latency_cached(map, *node, p, &cache);
+                        if (single - exact).abs() > 1e-9 * exact {
+                            return false;
+                        }
+                        if mask[k] {
+                            if masked[k].to_bits() != full[k].to_bits() {
+                                return false;
+                            }
+                        } else if masked[k] != 0.0 {
+                            return false; // dead entries must stay unpriced
+                        }
+                    }
+                }
+                true
+            },
+        );
+    }
+
+    /// Long-stream drift audit (ISSUE 7 satellite): ≥10k random
+    /// commit/probe cycles on a DAG. At every cycle the incremental
+    /// running total must stay within the documented
+    /// [`TotalsCache::MAX_RELATIVE_DRIFT`] of a fresh index-order
+    /// refold, the per-slot terms must stay bit-exact against the full
+    /// latency walk, the rebase path must actually trigger, and each
+    /// rebase must restore the aggregate to a fresh compensated fold
+    /// bit-for-bit.
+    #[test]
+    fn prop_long_stream_drift_stays_audited_and_rebase_restores_exactness() {
+        let chip = ChipSpec::nnpi();
+        check(
+            "10k-cycle commit/probe stream: drift ≤ documented ε, rebases fire",
+            3,
+            |gen| {
+                let g = random_dag(gen);
+                let map = random_map(gen, g.len());
+                let moves: Vec<(usize, usize, usize)> = (0..4000)
+                    .map(|_| {
+                        (
+                            gen.usize_in(0, g.len() - 1),
+                            gen.usize_in(0, 2),
+                            gen.usize_in(0, 2),
+                        )
+                    })
+                    .collect();
+                ((g, map, moves), ())
+            },
+            |(g, map, moves), _| {
+                let table = CostTable::new(g, &chip);
+                let mut map = map.clone();
+                let mut cache = TotalsCache::default();
+                cache.rebuild(&table, &map);
+                for &(node, wi, ai) in moves {
+                    let p = crate::mapping::NodePlacement {
+                        weight: MemKind::from_index(wi),
+                        activation: MemKind::from_index(ai),
+                    };
+                    // Probe first (read-only on the cache)…
+                    let probed = table.probe_move_latency_cached(&map, node, p, &cache);
+                    let mut moved = map.clone();
+                    moved.placements[node] = p;
+                    let fresh = table.latency(&moved);
+                    if (probed - fresh).abs() > 1e-9 * fresh {
+                        return false;
+                    }
+                    // …then commit and refresh incrementally.
+                    let old = map.placements[node];
+                    map.placements[node] = p;
+                    table.refresh_totals_cached(&map, node, old, &mut cache);
+                    // Audit point: slots bit-exact, aggregate ε-bounded.
+                    let exact = cache.exact_total_s();
+                    if exact.to_bits() != table.latency(&map).to_bits() {
+                        return false;
+                    }
+                    if (cache.total_s() - exact).abs() > TotalsCache::MAX_RELATIVE_DRIFT * exact
+                    {
+                        return false;
+                    }
+                }
+                // The audit must have fired on a stream this long, and a
+                // rebase must land the aggregate exactly on the fresh
+                // compensated fold of the (bit-exact) slots. (Tests live
+                // in-module, so we can drive the private refold path
+                // directly, independent of where mid-commit rebases fell.)
+                if cache.rebases() == 0 {
+                    return false;
+                }
+                cache.refold();
+                cache.total_s().to_bits() == sum_compensated(cache.totals()).to_bits()
+                    && cache.drift_ops() == 0
+            },
+        );
     }
 }

@@ -129,6 +129,237 @@ impl MaxSegTree {
         self.add_rec(2 * v + 1, mid + 1, node_hi, lo, hi, d);
         self.mx[v] = self.mx[2 * v].max(self.mx[2 * v + 1]) + self.add[v];
     }
+
+    /// First index in the inclusive range `[lo, hi]` whose value exceeds
+    /// `threshold` (strictly), or `None`. The incremental rectifier's
+    /// violation finder: "earliest execution step whose load breaks
+    /// capacity". Descends only into subtrees whose max exceeds the
+    /// threshold, so the cost is O(log n) per boundary touched.
+    pub fn first_above(&self, lo: usize, hi: usize, threshold: i64) -> Option<usize> {
+        debug_assert!(lo <= hi && hi < self.n, "range [{lo}, {hi}] out of [0, {})", self.n);
+        self.first_above_rec(1, 0, self.size - 1, lo, hi, threshold, 0)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn first_above_rec(
+        &self,
+        v: usize,
+        node_lo: usize,
+        node_hi: usize,
+        lo: usize,
+        hi: usize,
+        threshold: i64,
+        acc: i64,
+    ) -> Option<usize> {
+        if hi < node_lo || node_hi < lo {
+            return None;
+        }
+        // Subtree max (with ancestor tags applied) can't beat the
+        // threshold anywhere, including on the query intersection.
+        if self.mx[v] + acc <= threshold {
+            return None;
+        }
+        if node_lo == node_hi {
+            return Some(node_lo); // in range, above threshold
+        }
+        let mid = (node_lo + node_hi) / 2;
+        let acc = acc + self.add[v];
+        self.first_above_rec(2 * v, node_lo, mid, lo, hi, threshold, acc)
+            .or_else(|| self.first_above_rec(2 * v + 1, mid + 1, node_hi, lo, hi, threshold, acc))
+    }
+}
+
+/// Lazy range-add / range-**min** tree over `i64` values — the weight-phase
+/// mirror of [`MaxSegTree`]. The incremental rectifier keeps, per
+/// constrained memory, the baseline *slack* of every weighted node at its
+/// execution position (`cap − prefix-weight-usage − w`); "which node
+/// spills first once this lane carries `Δ` extra bytes" is then
+/// [`Self::first_below`] with threshold `Δ`. Same "tags stay where they
+/// land" scheme: `mn[v]` includes v's own pending add; queries accumulate
+/// tags on the way down. [`Self::point_set`] writes an absolute value
+/// through the tags (membership changes on commit).
+#[derive(Clone, Debug)]
+pub struct MinSegTree {
+    n: usize,
+    size: usize,
+    /// `mn[v]` = min of v's subtree, including v's own pending add.
+    mn: Vec<i64>,
+    /// Pending add applying to the whole subtree of v.
+    add: Vec<i64>,
+}
+
+impl MinSegTree {
+    /// Build from initial values. O(n).
+    pub fn build(values: &[i64]) -> MinSegTree {
+        let n = values.len();
+        let size = n.next_power_of_two().max(1);
+        // Padding leaves hold i64::MAX/4: never the min, and far enough
+        // from overflow under any realistic tag stream.
+        let mut mn = vec![i64::MAX / 4; 2 * size];
+        let add = vec![0i64; 2 * size];
+        mn[size..size + n].copy_from_slice(values);
+        for v in (1..size).rev() {
+            mn[v] = mn[2 * v].min(mn[2 * v + 1]);
+        }
+        MinSegTree { n, size, mn, add }
+    }
+
+    /// Number of leaves the tree was built for.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Add `delta` to every value in the inclusive range `[lo, hi]`.
+    /// O(log n).
+    pub fn range_add(&mut self, lo: usize, hi: usize, delta: i64) {
+        debug_assert!(lo <= hi && hi < self.n, "range [{lo}, {hi}] out of [0, {})", self.n);
+        self.add_rec(1, 0, self.size - 1, lo, hi, delta);
+    }
+
+    /// Overwrite position `i` with the absolute value `value`,
+    /// compensating for the pending tags on its root path. O(log n).
+    pub fn point_set(&mut self, i: usize, value: i64) {
+        debug_assert!(i < self.n, "index {i} out of [0, {})", self.n);
+        let leaf = self.size + i;
+        let mut tags = 0i64;
+        let mut v = leaf / 2;
+        while v >= 1 {
+            tags += self.add[v];
+            v /= 2;
+        }
+        // The leaf's own tag is folded into its stored value.
+        self.mn[leaf] = value - tags;
+        self.add[leaf] = 0;
+        let mut v = leaf / 2;
+        while v >= 1 {
+            self.mn[v] = self.mn[2 * v].min(self.mn[2 * v + 1]) + self.add[v];
+            v /= 2;
+        }
+    }
+
+    /// Value at position `i` (test/debug support). O(log n).
+    pub fn value_at(&self, i: usize) -> i64 {
+        debug_assert!(i < self.n, "index {i} out of [0, {})", self.n);
+        let mut v = self.mn[self.size + i];
+        let mut node = (self.size + i) / 2;
+        while node >= 1 {
+            v += self.add[node];
+            node /= 2;
+        }
+        v
+    }
+
+    /// First index in the inclusive range `[lo, hi]` whose value is
+    /// strictly below `threshold`, or `None`.
+    pub fn first_below(&self, lo: usize, hi: usize, threshold: i64) -> Option<usize> {
+        debug_assert!(lo <= hi && hi < self.n, "range [{lo}, {hi}] out of [0, {})", self.n);
+        self.first_below_rec(1, 0, self.size - 1, lo, hi, threshold, 0)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn first_below_rec(
+        &self,
+        v: usize,
+        node_lo: usize,
+        node_hi: usize,
+        lo: usize,
+        hi: usize,
+        threshold: i64,
+        acc: i64,
+    ) -> Option<usize> {
+        if hi < node_lo || node_hi < lo {
+            return None;
+        }
+        if self.mn[v] + acc >= threshold {
+            return None;
+        }
+        if node_lo == node_hi {
+            return Some(node_lo);
+        }
+        let mid = (node_lo + node_hi) / 2;
+        let acc = acc + self.add[v];
+        self.first_below_rec(2 * v, node_lo, mid, lo, hi, threshold, acc)
+            .or_else(|| self.first_below_rec(2 * v + 1, mid + 1, node_hi, lo, hi, threshold, acc))
+    }
+
+    fn add_rec(&mut self, v: usize, node_lo: usize, node_hi: usize, lo: usize, hi: usize, d: i64) {
+        if hi < node_lo || node_hi < lo {
+            return;
+        }
+        if lo <= node_lo && node_hi <= hi {
+            self.add[v] += d;
+            self.mn[v] += d;
+            return;
+        }
+        let mid = (node_lo + node_hi) / 2;
+        self.add_rec(2 * v, node_lo, mid, lo, hi, d);
+        self.add_rec(2 * v + 1, mid + 1, node_hi, lo, hi, d);
+        self.mn[v] = self.mn[2 * v].min(self.mn[2 * v + 1]) + self.add[v];
+    }
+}
+
+/// Fenwick (binary indexed) tree over `i64` — O(log n) point add,
+/// O(log n) prefix sum. The incremental rectifier keeps one per
+/// constrained memory over "weight bytes at each execution position", so
+/// the baseline prefix usage `P[m](s)` any replayed `fit_weight` check
+/// needs is one query instead of a walk.
+#[derive(Clone, Debug)]
+pub struct Fenwick {
+    n: usize,
+    /// 1-indexed partial sums.
+    tree: Vec<i64>,
+}
+
+impl Fenwick {
+    /// Build from initial values. O(n).
+    pub fn build(values: &[i64]) -> Fenwick {
+        let n = values.len();
+        let mut tree = vec![0i64; n + 1];
+        for (i, &v) in values.iter().enumerate() {
+            tree[i + 1] += v;
+            let j = (i + 1) + ((i + 1) & (i + 1).wrapping_neg());
+            if j <= n {
+                let carry = tree[i + 1];
+                tree[j] += carry;
+            }
+        }
+        Fenwick { n, tree }
+    }
+
+    /// Number of positions.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Add `delta` at position `i`. O(log n).
+    pub fn add(&mut self, i: usize, delta: i64) {
+        debug_assert!(i < self.n, "index {i} out of [0, {})", self.n);
+        let mut j = i + 1;
+        while j <= self.n {
+            self.tree[j] += delta;
+            j += j & j.wrapping_neg();
+        }
+    }
+
+    /// Sum of positions strictly before `i` (exclusive prefix). O(log n).
+    pub fn prefix(&self, i: usize) -> i64 {
+        debug_assert!(i <= self.n, "prefix bound {i} out of [0, {}]", self.n);
+        let mut j = i;
+        let mut s = 0i64;
+        while j > 0 {
+            s += self.tree[j];
+            j -= j & j.wrapping_neg();
+        }
+        s
+    }
 }
 
 #[cfg(test)]
@@ -216,6 +447,148 @@ mod tests {
                 }
                 let all = naive_max(&xs, 0, xs.len() - 1);
                 t.root_max() == all && t.leaf_values() == *xs
+            },
+        );
+    }
+
+    #[test]
+    fn first_above_finds_earliest_crossing() {
+        let mut t = MaxSegTree::build(&[1, 5, 2, 5, 9, 0]);
+        assert_eq!(t.first_above(0, 5, 4), Some(1));
+        assert_eq!(t.first_above(2, 5, 4), Some(3));
+        assert_eq!(t.first_above(0, 5, 8), Some(4));
+        assert_eq!(t.first_above(0, 5, 9), None);
+        assert_eq!(t.first_above(5, 5, -1), Some(5));
+        t.range_add(0, 2, 10);
+        assert_eq!(t.first_above(0, 5, 10), Some(0));
+    }
+
+    #[test]
+    fn prop_first_above_matches_linear_scan() {
+        check(
+            "first_above ≡ linear scan under random adds",
+            150,
+            |gen| {
+                let n = gen.usize_in(1, 48);
+                let init: Vec<u64> = (0..n).map(|_| gen.usize_in(0, 200) as u64).collect();
+                let adds: Vec<(usize, usize, i64)> = (0..8)
+                    .map(|_| {
+                        let lo = gen.usize_in(0, n - 1);
+                        let hi = gen.usize_in(lo, n - 1);
+                        (lo, hi, gen.usize_in(0, 100) as i64 - 50)
+                    })
+                    .collect();
+                let queries: Vec<(usize, usize, i64)> = (0..12)
+                    .map(|_| {
+                        let lo = gen.usize_in(0, n - 1);
+                        let hi = gen.usize_in(lo, n - 1);
+                        (lo, hi, gen.usize_in(0, 300) as i64 - 60)
+                    })
+                    .collect();
+                ((init, adds, queries), ())
+            },
+            |(init, adds, queries), _| {
+                let mut xs: Vec<i64> = init.iter().map(|&v| v as i64).collect();
+                let mut t = MaxSegTree::build(init);
+                for &(lo, hi, d) in adds {
+                    t.range_add(lo, hi, d);
+                    for x in &mut xs[lo..=hi] {
+                        *x += d;
+                    }
+                }
+                queries.iter().all(|&(lo, hi, thr)| {
+                    let want = (lo..=hi).find(|&i| xs[i] > thr);
+                    t.first_above(lo, hi, thr) == want
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn min_tree_point_set_and_first_below() {
+        let mut t = MinSegTree::build(&[5, 3, 8, 3, 1]);
+        assert_eq!(t.first_below(0, 4, 4), Some(1));
+        assert_eq!(t.first_below(2, 4, 2), Some(4));
+        assert_eq!(t.first_below(0, 4, 1), None);
+        t.range_add(1, 3, -2);
+        assert_eq!(t.value_at(1), 1);
+        assert_eq!(t.first_below(0, 4, 2), Some(1));
+        // Absolute write must see through the pending tag on [1, 3].
+        t.point_set(1, 100);
+        assert_eq!(t.value_at(1), 100);
+        assert_eq!(t.first_below(0, 4, 2), Some(3));
+        t.point_set(3, i64::MAX / 4);
+        assert_eq!(t.first_below(0, 3, 2), None);
+        assert_eq!(t.first_below(0, 4, 2), Some(4));
+    }
+
+    #[test]
+    fn prop_min_tree_matches_naive_under_random_ops() {
+        check(
+            "min tree ≡ flat array under add/set/first_below streams",
+            150,
+            |gen| {
+                let n = gen.usize_in(1, 48);
+                let init: Vec<i64> = (0..n).map(|_| gen.usize_in(0, 400) as i64 - 100).collect();
+                let ops: Vec<(u8, usize, usize, i64)> = (0..30)
+                    .map(|_| {
+                        let kind = gen.usize_in(0, 2) as u8;
+                        let lo = gen.usize_in(0, n - 1);
+                        let hi = gen.usize_in(lo, n - 1);
+                        (kind, lo, hi, gen.usize_in(0, 400) as i64 - 200)
+                    })
+                    .collect();
+                ((init, ops), ())
+            },
+            |(init, ops), _| {
+                let mut xs = init.clone();
+                let mut t = MinSegTree::build(init);
+                for &(kind, lo, hi, v) in ops {
+                    match kind {
+                        0 => {
+                            t.range_add(lo, hi, v);
+                            for x in &mut xs[lo..=hi] {
+                                *x += v;
+                            }
+                        }
+                        1 => {
+                            t.point_set(lo, v);
+                            xs[lo] = v;
+                        }
+                        _ => {
+                            let want = (lo..=hi).find(|&i| xs[i] < v);
+                            if t.first_below(lo, hi, v) != want {
+                                return false;
+                            }
+                        }
+                    }
+                }
+                (0..xs.len()).all(|i| t.value_at(i) == xs[i])
+            },
+        );
+    }
+
+    #[test]
+    fn prop_fenwick_matches_naive_prefix_sums() {
+        check(
+            "fenwick ≡ naive exclusive prefix sums under point adds",
+            150,
+            |gen| {
+                let n = gen.usize_in(1, 48);
+                let init: Vec<i64> = (0..n).map(|_| gen.usize_in(0, 1000) as i64 - 300).collect();
+                let adds: Vec<(usize, i64)> = (0..20)
+                    .map(|_| (gen.usize_in(0, n - 1), gen.usize_in(0, 600) as i64 - 300))
+                    .collect();
+                ((init, adds), ())
+            },
+            |(init, adds), _| {
+                let mut xs = init.clone();
+                let mut f = Fenwick::build(init);
+                for &(i, d) in adds {
+                    f.add(i, d);
+                    xs[i] += d;
+                }
+                (0..=xs.len()).all(|i| f.prefix(i) == xs[..i].iter().sum::<i64>())
             },
         );
     }
