@@ -1,0 +1,143 @@
+//! Native sparse GNN engine benchmark (ISSUE 8 tentpole): forward cost
+//! of the pure-Rust Graph U-Net over the deterministic scaling family,
+//! plus population-decode throughput serial vs. parallel.
+//!
+//! Three sections:
+//!
+//! * **forward sweep** — one policy forward (`NativeEngine::probs_into`)
+//!   at n ∈ {1k, 10k, 100k}. The engine is O(E·H) per layer with no
+//!   padding, so the *per-node* cost must stay near-flat; the acceptance
+//!   gate is per-node growth ≤ 2× from 10k → 100k.
+//! * **dense control arm** — `dense_reference_probs` (the literal O(n²)
+//!   model.py transcription used as the parity oracle) at 1k, where it
+//!   still fits in the time budget. The sparse/dense ratio at equal n is
+//!   the no-ceiling argument in miniature.
+//! * **population decode** — a mutated 8-member genome population decoded
+//!   serially vs. through the worker pool (`map_parallel_with`, one
+//!   reusable `NativeWorkspace` per worker), the shape the fused rollout
+//!   engine runs every generation.
+//!
+//! Writes `BENCH_gnn.json` (`schema: egrl-bench-gnn-v1`), regression-
+//! checked by CI against the committed ratio-only baseline in
+//! `benches/baselines/BENCH_gnn.json`.
+
+use egrl::bench_harness::Bench;
+use egrl::gnn::native::{self, NativeWorkspace};
+use egrl::gnn::{perturb_params, NativeEngine};
+use egrl::graph::features;
+use egrl::utils::json::Json;
+use egrl::utils::pool::map_parallel_with;
+use egrl::utils::Rng;
+use egrl::workloads::synthetic::sized_synthetic;
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bench::new("perf_gnn: native sparse Graph U-Net engine");
+    let mut rng = Rng::new(7);
+    let params = native::init_actor_params(&mut rng);
+
+    // ---- forward sweep: sparse engine at 1k / 10k / 100k ----------------
+    let sizes = [1000usize, 10_000, 100_000];
+    let mut rows: Vec<Json> = Vec::new();
+    let mut per_node_at = [f64::NAN; 2]; // [10k, 100k]
+    let mut native_mean_at_1k = f64::NAN;
+    for &n in &sizes {
+        let g = sized_synthetic(n);
+        let edges = g.edges.len();
+        let engine = NativeEngine::for_graph(&g);
+        let mut ws = NativeWorkspace::default();
+        let label = format!("native forward (n={n})");
+        // One warm call outside the timer funds the workspace growth.
+        std::hint::black_box(engine.probs_into(&params, &mut ws));
+        b.measure(&label, 3, 0.5, || {
+            std::hint::black_box(engine.probs_into(&params, &mut ws));
+        });
+        let mean_s = b.mean_s(&label).unwrap_or(f64::NAN);
+        let per_node_us = mean_s / n as f64 * 1e6;
+        if n == 1000 {
+            native_mean_at_1k = mean_s;
+        }
+        if n == 10_000 {
+            per_node_at[0] = mean_s / n as f64;
+        }
+        if n == 100_000 {
+            per_node_at[1] = mean_s / n as f64;
+        }
+        println!("    n={n}: {edges} edges, {per_node_us:.3} µs/node");
+        rows.push(Json::obj(vec![
+            ("nodes", Json::Num(n as f64)),
+            ("edges", Json::Num(edges as f64)),
+            ("forward_mean_s", Json::Num(mean_s)),
+            ("per_node_us", Json::Num(per_node_us)),
+        ]));
+    }
+    let per_node_growth = per_node_at[1] / per_node_at[0];
+
+    // ---- dense control arm at 1k ----------------------------------------
+    // The padded-dense oracle prices the same genome over an n×n
+    // adjacency; its cost per forward against the sparse engine's is the
+    // artifact-ceiling argument measured instead of asserted.
+    let dense_mean_at_1k = {
+        let n = 1000usize;
+        let g = sized_synthetic(n);
+        let feats = features::padded_feature_matrix(&g, n);
+        let adj = g.normalized_adjacency(n);
+        let mask = g.node_mask(n);
+        let k = native::pool_k(n);
+        let label = "dense reference forward (n=1000)";
+        b.measure(label, 2, 0.5, || {
+            std::hint::black_box(native::dense_reference_probs(&params, &feats, &adj, &mask, n, k));
+        });
+        b.mean_s(label).unwrap_or(f64::NAN)
+    };
+    let dense_over_native_at_1k = dense_mean_at_1k / native_mean_at_1k;
+
+    // ---- population decode: serial vs worker pool -----------------------
+    let decode_n = 10_000usize;
+    let pop = 8usize;
+    let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(2).min(8);
+    let g = sized_synthetic(decode_n);
+    let engine = NativeEngine::for_graph(&g);
+    let genomes: Vec<Vec<f32>> =
+        (0..pop).map(|_| perturb_params(&params, 0.05, 0.5, &mut rng)).collect();
+    let mut ws = NativeWorkspace::default();
+    let serial_label = format!("decode {pop} members serial (n={decode_n})");
+    b.measure_throughput(&serial_label, pop as f64, 3, 0.5, || {
+        for gp in &genomes {
+            std::hint::black_box(engine.probs_into(gp, &mut ws));
+        }
+    });
+    let par_label = format!("decode {pop} members pool×{threads} (n={decode_n})");
+    b.measure_throughput(&par_label, pop as f64, 3, 0.5, || {
+        let sums = map_parallel_with(pop, threads, NativeWorkspace::default, |w, i| {
+            engine.probs_into(&genomes[i], w).iter().sum::<f32>()
+        });
+        std::hint::black_box(sums);
+    });
+    let serial_s = b.mean_s(&serial_label).unwrap_or(f64::NAN);
+    let par_s = b.mean_s(&par_label).unwrap_or(f64::NAN);
+    let decode_speedup = serial_s / par_s;
+
+    let json = Json::obj(vec![
+        ("schema", Json::str("egrl-bench-gnn-v1")),
+        ("workload_generator", Json::str("sized_synthetic")),
+        ("sizes", Json::arr(sizes.iter().map(|&n| Json::Num(n as f64)))),
+        ("per_size", Json::Arr(rows)),
+        ("native_per_node_growth_100k_over_10k", Json::Num(per_node_growth)),
+        ("target_per_node_growth_100k_over_10k", Json::Num(2.0)),
+        ("meets_growth_target", Json::Bool(per_node_growth <= 2.0)),
+        ("dense_mean_s_at_1k", Json::Num(dense_mean_at_1k)),
+        ("dense_over_native_at_1k", Json::Num(dense_over_native_at_1k)),
+        ("decode_threads", Json::Num(threads as f64)),
+        ("decode_serial_members_per_s", Json::Num(pop as f64 / serial_s)),
+        ("decode_parallel_members_per_s", Json::Num(pop as f64 / par_s)),
+        ("parallel_decode_speedup", Json::Num(decode_speedup)),
+    ]);
+    std::fs::write("BENCH_gnn.json", json.to_string_pretty())?;
+    println!("\nwrote BENCH_gnn.json");
+    println!(
+        "target (ISSUE 8): native per-node forward cost grows ≤ 2x from 10k to 100k — \
+         measured {per_node_growth:.2}x; dense/native at 1k: {dense_over_native_at_1k:.1}x; \
+         parallel decode: {decode_speedup:.2}x over serial on {threads} threads"
+    );
+    Ok(())
+}

@@ -16,8 +16,14 @@
 //!   `try_move_batch`, both on the incremental engine (the remaining
 //!   gap is shared peak queries + shared noise draws).
 //!
+//! A fourth arm (ISSUE 8 satellite, ROADMAP item 4 follow-on) re-runs
+//! the cached batch probe on the **long-skip** (dense-liveness) family
+//! (`sized_synthetic_longskip`: skip edges on ~95% of nodes, arbitrary
+//! reach-back) at {10k, 100k}, charting whether the sublinear 10k→100k
+//! growth gate holds as liveness density rises.
+//!
 //! Besides the stdout report, writes `BENCH_scaling.json`
-//! (`schema: egrl-bench-scaling-v2`, uploaded and regression-checked by
+//! (`schema: egrl-bench-scaling-v3`, uploaded and regression-checked by
 //! CI against the committed `benches/baselines/BENCH_scaling.json`).
 //! Acceptance target (ISSUE 7): the cached batch-probe cost grows ≤ 2×
 //! from 10k → 100k nodes while the refold path grows near-linearly.
@@ -31,7 +37,7 @@ use egrl::mapping::NodePlacement;
 use egrl::sim::latency::TotalsCache;
 use egrl::utils::json::Json;
 use egrl::utils::Rng;
-use egrl::workloads::synthetic::sized_synthetic;
+use egrl::workloads::synthetic::{sized_synthetic, sized_synthetic_longskip};
 
 fn main() -> anyhow::Result<()> {
     let sizes = [1000usize, 4000, 10_000, 40_000, 100_000];
@@ -169,6 +175,30 @@ fn main() -> anyhow::Result<()> {
         ]));
     }
 
+    // ---- long-skip (dense-liveness) arm --------------------------------
+    // Same cached-batch-probe gate on the denser graph family: per-probe
+    // cost is O(degree), so this measures how far liveness density can
+    // rise before the 10k→100k growth bound gives.
+    let mut longskip_cached_at = [f64::NAN; 2]; // [10k, 100k]
+    for (slot, &n) in [10_000usize, 100_000].iter().enumerate() {
+        let env = MappingEnv::nnpi(sized_synthetic_longskip(n), 1);
+        let base = env.compiler_map.clone();
+        let mut cache = TotalsCache::default();
+        cache.rebuild(&env.cost_table, &base);
+        let mask = [true; 9];
+        let mut i = 0usize;
+        let label = format!("batch probe cached longskip (n={n})");
+        b.measure_throughput(&label, 9.0, 10, 0.3, || {
+            let node = i % n;
+            i += 1;
+            std::hint::black_box(env.cost_table.probe_placements_masked_cached(
+                &base, node, &cache, &mask,
+            ));
+        });
+        longskip_cached_at[slot] = b.mean_s(&label).unwrap_or(f64::NAN);
+    }
+    let longskip_growth = longskip_cached_at[1] / longskip_cached_at[0];
+
     // Growth of per-batch cost from 10k → 100k: the sublinearity proof.
     // The cached path must stay ≤ 2×; the refold path is the near-10×
     // control arm (it re-sums all n totals every batch).
@@ -176,7 +206,7 @@ fn main() -> anyhow::Result<()> {
     let refold_growth = refold_mean_at[1] / refold_mean_at[0];
 
     let json = Json::obj(vec![
-        ("schema", Json::str("egrl-bench-scaling-v2")),
+        ("schema", Json::str("egrl-bench-scaling-v3")),
         ("workload_generator", Json::str("sized_synthetic")),
         ("sizes", Json::arr(sizes.iter().map(|&n| Json::Num(n as f64)))),
         ("per_size", Json::Arr(rows)),
@@ -188,12 +218,16 @@ fn main() -> anyhow::Result<()> {
         ("target_cached_growth_100k_over_10k", Json::Num(2.0)),
         ("meets_growth_target", Json::Bool(cached_growth <= 2.0)),
         ("batch_probe_cached_speedup_at_100k", Json::Num(refold_over_cached_at_100k)),
+        ("longskip_cached_mean_s_10k", Json::Num(longskip_cached_at[0])),
+        ("longskip_cached_mean_s_100k", Json::Num(longskip_cached_at[1])),
+        ("longskip_cached_growth_100k_over_10k", Json::Num(longskip_growth)),
     ]);
     std::fs::write("BENCH_scaling.json", json.to_string_pretty())?;
     println!("\nwrote BENCH_scaling.json");
     println!(
         "target (ISSUE 7): cached batch-probe cost grows ≤ 2x from 10k to 100k — \
-         measured {cached_growth:.2}x (refold control arm: {refold_growth:.2}x)"
+         measured {cached_growth:.2}x (refold control arm: {refold_growth:.2}x; \
+         long-skip dense-liveness arm: {longskip_growth:.2}x)"
     );
     Ok(())
 }

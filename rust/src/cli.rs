@@ -92,7 +92,7 @@ USAGE:
 SUBCOMMANDS:
   train      Train an agent on a workload
              --workload resnet50|resnet101|bert|synthetic-large
-                                                  (default resnet50)
+                        |synthetic-huge           (default resnet50)
              --agent egrl|ea|pg|greedy-dp|random|local-search
                                                   (default egrl)
              (EA refinement: --set refine_elites=K --set refine_moves=N
@@ -101,7 +101,13 @@ SUBCOMMANDS:
              --steps N        iteration budget    (default 4000)
              --seed N                              (default 0)
              --artifacts DIR  AOT artifacts        (default artifacts/)
-             --no-artifacts   EA with Boltzmann-only population
+             --no-artifacts   force the artifact-free path (EGRL/PG run
+                              on the native sparse GNN engine; EA keeps
+                              its Boltzmann-only population under
+                              gnn_backend=auto)
+             --set gnn_backend=auto|native|aot
+                              GNN policy backend (default auto: AOT when
+                              artifacts fit the workload, else native)
              --out FILE       write CSV curve
              --save-map FILE  write the best map as a mapping artifact
              --set key=value  config override (repeatable)

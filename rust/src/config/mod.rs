@@ -12,6 +12,34 @@ use crate::env::EnvConfig;
 /// `Instant` overflow panic that absurd deadlines used to reach.
 pub const MAX_DEADLINE_MS: u64 = 86_400_000;
 
+/// GNN policy-evaluation backend (DESIGN.md §15).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GnnBackend {
+    /// Resolve automatically: the AOT artifact path when a PJRT runtime
+    /// is open and the workload fits an artifact variant; the native
+    /// sparse engine otherwise.
+    Auto,
+    /// Pure-Rust sparse engine — no runtime, no artifacts, no size cap.
+    Native,
+    /// AOT PJRT artifacts only; fails fast when no runtime is available.
+    Aot,
+}
+
+impl GnnBackend {
+    /// Parse a config value; unknown values are structured errors that
+    /// name every accepted spelling.
+    pub fn parse(v: &str) -> anyhow::Result<GnnBackend> {
+        match v {
+            "auto" => Ok(GnnBackend::Auto),
+            "native" => Ok(GnnBackend::Native),
+            "aot" => Ok(GnnBackend::Aot),
+            other => anyhow::bail!(
+                "gnn_backend must be one of auto|native|aot, got '{other}'"
+            ),
+        }
+    }
+}
+
 /// All trainer hyperparameters. Defaults reproduce Table 2 of the paper
 /// exactly (asserted by `table2_defaults` below).
 #[derive(Clone, Debug)]
@@ -132,6 +160,12 @@ pub struct EgrlConfig {
     /// `egrl serve`: spill-tier size bound in bytes; beyond it the
     /// oldest artifacts are deleted (spill LRU). 0 = unbounded.
     pub serve_spill_max_bytes: u64,
+    /// GNN policy-evaluation backend: `auto` (default) picks the AOT
+    /// artifact path when a runtime is open and the graph fits an
+    /// artifact, the native sparse engine otherwise; `native` forces the
+    /// pure-Rust engine; `aot` requires a runtime and fails fast without
+    /// one (DESIGN.md §15).
+    pub gnn_backend: GnnBackend,
 }
 
 impl Default for EgrlConfig {
@@ -178,6 +212,7 @@ impl Default for EgrlConfig {
             serve_max_connections: 64,
             serve_queue_depth: 256,
             serve_spill_max_bytes: 0,
+            gnn_backend: GnnBackend::Auto,
         }
     }
 }
@@ -332,6 +367,11 @@ impl EgrlConfig {
             "serve_max_connections" => self.serve_max_connections = p(key, value)?,
             "serve_queue_depth" => self.serve_queue_depth = p(key, value)?,
             "serve_spill_max_bytes" => self.serve_spill_max_bytes = p(key, value)?,
+            // Unknown spellings are rejected before assignment, so a bad
+            // set never clobbers the current backend. `aot` without a
+            // runtime cannot be detected here (the config can't see
+            // whether artifacts exist) — Trainer::new fails fast on it.
+            "gnn_backend" => self.gnn_backend = GnnBackend::parse(value)?,
             other => anyhow::bail!("unknown config key '{other}'"),
         }
         Ok(())
@@ -620,6 +660,29 @@ mod tests {
         c.set("serve_priority_refine", "true").unwrap();
         assert!(c.serve_priority_refine);
         assert!(c.set("serve_priority_refine", "maybe").is_err());
+    }
+
+    /// ISSUE 8 satellite: the `gnn_backend` key — unknown values are
+    /// structured errors naming the accepted set, and a rejected set
+    /// must not clobber the configured backend.
+    #[test]
+    fn gnn_backend_key_wired_with_structured_errors() {
+        let mut c = EgrlConfig::default();
+        assert_eq!(c.gnn_backend, GnnBackend::Auto, "backend must default to auto");
+        c.set("gnn_backend", "native").unwrap();
+        assert_eq!(c.gnn_backend, GnnBackend::Native);
+        c.set("gnn_backend", "aot").unwrap();
+        assert_eq!(c.gnn_backend, GnnBackend::Aot);
+        let err = c.set("gnn_backend", "pjrt").unwrap_err().to_string();
+        assert!(
+            err.contains("auto") && err.contains("native") && err.contains("aot"),
+            "error must name the accepted values: {err}"
+        );
+        assert_eq!(c.gnn_backend, GnnBackend::Aot, "rejected set must not clobber");
+        assert!(c.set("gnn_backend", "").is_err());
+        assert!(c.set("gnn_backend", "Native").is_err(), "values are case-sensitive");
+        c.set("gnn_backend", "auto").unwrap();
+        assert_eq!(c.gnn_backend, GnnBackend::Auto);
     }
 
     #[test]

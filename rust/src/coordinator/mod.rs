@@ -1,7 +1,9 @@
 //! The EGRL trainer (paper Algorithm 2, Figure 2).
 //!
 //! One [`Trainer`] owns: the environment, the mixed EA population, the
-//! shared replay buffer, the SAC learner (PG) and the PJRT policy runner.
+//! shared replay buffer, the SAC learner (PG) and the policy runner —
+//! the latter two resolved to the AOT/PJRT or the pure-Rust native
+//! sparse backend by the `gnn_backend` config key (DESIGN.md §15).
 //! Per generation it
 //!
 //! 1. rolls out every population member (+ one noisy PG rollout), storing
@@ -17,14 +19,18 @@
 //! 5. at the end of each full migration period, migrates the PG actor
 //!    into the population, replacing the weakest member.
 //!
-//! Population rollouts run on the **parallel rollout engine**: every
-//! genome is decoded up front on the main thread (PJRT execution and the
-//! trainer RNG stream are main-thread only), then the batch of proposals
-//! is evaluated across `cfg.threads` workers on the zero-allocation
-//! simulator path ([`MappingEnv::step_in_place`]) — one reusable
-//! [`CompilerWorkspace`] per worker, one RNG stream forked *per member in
-//! member order*, so results are bit-identical for any thread count
-//! (DESIGN.md §8).
+//! Population rollouts run on the **parallel rollout engine**. On the
+//! AOT backend every genome is decoded up front on the main thread
+//! (PJRT execution and the trainer RNG stream are main-thread only),
+//! then the batch of proposals is evaluated across `cfg.threads`
+//! workers on the zero-allocation simulator path
+//! ([`MappingEnv::step_in_place`]). On the native backend the sparse
+//! engine is `Sync`, so decode folds into the workers themselves —
+//! genome → probabilities → proposal → rectified episode as one
+//! parallel pass per member, with a reusable [`NativeWorkspace`] +
+//! [`CompilerWorkspace`] pair per worker. Either way one RNG stream is
+//! forked *per member in member order*, so results are bit-identical
+//! for any thread count (DESIGN.md §8).
 //!
 //! The same struct also drives the paper's ablation baselines: **EA-only**
 //! (no PG learner, no migration) and **PG-only** (no population).
@@ -32,15 +38,17 @@
 use std::sync::Arc;
 
 use crate::agents::local_search::{refine, RefineResult};
-use crate::config::EgrlConfig;
+use crate::config::{EgrlConfig, GnnBackend};
 use crate::ea::population::{EvolveParams, Genome, Population};
 use crate::env::MappingEnv;
-use crate::gnn::PolicyRunner;
-use crate::mapping::MemoryMap;
+use crate::gnn::native::{self, NativeSacLearner};
+use crate::gnn::{NativeEngine, NativeWorkspace, PolicyRunner};
+use crate::mapping::{MemKind, MemoryMap, NodePlacement};
 use crate::metrics::RunLog;
-use crate::rl::{Replay, SacLearner, Transition};
+use crate::rl::{AnySac, Replay, SacLearner, Transition};
 use crate::runtime::Runtime;
 use crate::sim::compiler::CompilerWorkspace;
+use crate::utils::math::argmax;
 use crate::utils::pool::{map_parallel, map_parallel_mut};
 use crate::utils::Rng;
 
@@ -92,7 +100,7 @@ pub struct Trainer {
     pub cfg: EgrlConfig,
     pub mode: Mode,
     runner: Option<PolicyRunner>,
-    sac: Option<SacLearner>,
+    sac: Option<AnySac>,
     pop: Population,
     replay: Replay,
     rng: Rng,
@@ -116,10 +124,18 @@ pub struct Trainer {
 impl Trainer {
     /// Build a trainer.
     ///
-    /// `runtime == None` is supported for artifact-free operation (pure
-    /// simulator tests and fast benches): the population then consists
-    /// entirely of Boltzmann chromosomes and PG is unavailable (EGRL/PG
-    /// modes require a runtime).
+    /// Backend resolution (DESIGN.md §15), driven by `cfg.gnn_backend`:
+    ///
+    /// * with a runtime, `aot` and `auto` run the artifact path as
+    ///   before — except `auto` falls back to the native sparse engine
+    ///   when the workload exceeds every built artifact variant;
+    ///   `native` forces the sparse engine even when artifacts exist;
+    /// * without a runtime, `aot` fails fast with a structured error,
+    ///   `native` builds the sparse engine for any mode, and `auto`
+    ///   keeps the historical artifact-free EA-only contract
+    ///   (all-Boltzmann population, no runner — existing seeds
+    ///   reproduce bit-identically) while giving EGRL/PG the native
+    ///   stack instead of an error.
     pub fn new(
         env: Arc<MappingEnv>,
         cfg: EgrlConfig,
@@ -133,19 +149,35 @@ impl Trainer {
         let mut rng = Rng::new(cfg.seed);
         let (runner, sac, gnn_seed) = match runtime {
             Some(rt) => {
-                let runner = PolicyRunner::for_env(rt, &env)?;
-                let sac = if mode.uses_pg() { Some(SacLearner::new(rt, &env)?) } else { None };
-                let seed = rt.actor_init()?;
-                (Some(runner), sac, Some(seed))
+                let go_native = match cfg.gnn_backend {
+                    GnnBackend::Aot => false,
+                    GnnBackend::Native => true,
+                    GnnBackend::Auto => rt.manifest.size_for(env.num_nodes()).is_err(),
+                };
+                if go_native {
+                    Self::native_stack(&env, &cfg, mode, &mut rng)?
+                } else {
+                    let runner = PolicyRunner::aot_for_env(rt, &env)?;
+                    let sac = if mode.uses_pg() {
+                        let constants =
+                            runner.aot_constants().expect("AOT runner carries constants").clone();
+                        Some(AnySac::Aot(SacLearner::new(rt, env.num_nodes(), &constants)?))
+                    } else {
+                        None
+                    };
+                    let seed = rt.actor_init()?;
+                    (Some(runner), sac, Some(seed))
+                }
             }
-            None => {
-                anyhow::ensure!(
-                    mode == Mode::EaOnly,
-                    "mode {:?} needs the AOT runtime (artifacts/)",
-                    mode
-                );
-                (None, None, None)
-            }
+            None => match cfg.gnn_backend {
+                GnnBackend::Aot => anyhow::bail!(
+                    "gnn_backend=aot requires the AOT runtime (artifacts/) — \
+                     build the artifacts or select gnn_backend=native"
+                ),
+                GnnBackend::Native => Self::native_stack(&env, &cfg, mode, &mut rng)?,
+                GnnBackend::Auto if mode == Mode::EaOnly => (None, None, None),
+                GnnBackend::Auto => Self::native_stack(&env, &cfg, mode, &mut rng)?,
+            },
         };
         let n = env.num_nodes();
         let pop = if mode.uses_population() {
@@ -183,6 +215,36 @@ impl Trainer {
             proposals: Vec::new(),
             scratch: CompilerWorkspace::default(),
         })
+    }
+
+    /// Build the artifact-free native policy stack: sparse-engine
+    /// runner, a freshly initialized actor genome for GNN population
+    /// seeding, and — in PG-bearing modes — a [`NativeSacLearner`]
+    /// sharing the runner's graph cache (one CSR + feature build per
+    /// workload). The init draws come from a stream forked off the
+    /// trainer RNG *inside this branch only*, so artifact-free EA-only
+    /// runs (which never call this) keep their historical draw sequence
+    /// untouched.
+    #[allow(clippy::type_complexity)]
+    fn native_stack(
+        env: &MappingEnv,
+        cfg: &EgrlConfig,
+        mode: Mode,
+        rng: &mut Rng,
+    ) -> anyhow::Result<(Option<PolicyRunner>, Option<AnySac>, Option<Vec<f32>>)> {
+        let runner = PolicyRunner::native_for_env(env);
+        let mut init_rng = rng.fork();
+        let actor0 = native::init_actor_params(&mut init_rng);
+        let sac = if mode.uses_pg() {
+            let critic0 = native::init_critic_params(&mut init_rng);
+            let cache = runner.native_engine().expect("native runner").cache().clone();
+            let learner =
+                NativeSacLearner::new(NativeEngine::from_cache(cache), cfg.batch_size, actor0.clone(), critic0)?;
+            Some(AnySac::Native(Box::new(learner)))
+        } else {
+            None
+        };
+        Ok((Some(runner), sac, Some(actor0)))
     }
 
     /// Number of generations executed.
@@ -223,6 +285,9 @@ impl Trainer {
             self.proposals.push(MemoryMap::all_dram(n));
         }
         self.proposals.truncate(k);
+        if self.runner.as_ref().is_some_and(PolicyRunner::is_native) {
+            return self.rollout_population_fused();
+        }
         for i in 0..k {
             match &self.pop.members[i].genome {
                 Genome::Gnn(params) => {
@@ -252,6 +317,73 @@ impl Trainer {
             },
         );
         for (i, (st, mut tr)) in stats.iter().zip(transitions.drain(..)).enumerate() {
+            self.pop.members[i].fitness = st.reward;
+            tr.reward = st.reward as f32;
+            self.replay.push(tr);
+            if let Some(s) = st.speedup {
+                if s > self.best_measured {
+                    self.best_measured = s;
+                    self.best_map.placements.clone_from(&self.proposals[i].placements);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Native-backend rollout: genome decode folded into the worker pool
+    /// (DESIGN.md §15).
+    ///
+    /// The AOT path must decode serially (PJRT execution is main-thread
+    /// only), but the native sparse engine is `Sync`, so each worker
+    /// decodes its member's genome *and* rolls the proposal out in one
+    /// pass — one reusable [`NativeWorkspace`] + [`CompilerWorkspace`]
+    /// pair per worker, zero decode allocations steady-state.
+    ///
+    /// Determinism (§8): one RNG stream is forked per member in member
+    /// order before the pool starts; Boltzmann decode draws and the
+    /// simulator episode both come from that member stream, so results
+    /// are bit-identical for any thread count. Replay transitions
+    /// capture the *proposed* actions in-worker, before rectification
+    /// mutates the buffer.
+    fn rollout_population_fused(&mut self) -> anyhow::Result<()> {
+        let k = self.pop.len();
+        let seeds: Vec<u64> = (0..k).map(|_| self.rng.next_u64()).collect();
+        let members = &self.pop.members;
+        let env: &MappingEnv = &self.env;
+        let engine = self
+            .runner
+            .as_ref()
+            .and_then(PolicyRunner::native_engine)
+            .expect("fused rollout requires the native backend");
+        let results = map_parallel_mut(
+            &mut self.proposals,
+            self.cfg.threads,
+            || (CompilerWorkspace::default(), NativeWorkspace::default()),
+            move |(cws, nws), i, map| {
+                let mut rng = Rng::new(seeds[i]);
+                match &members[i].genome {
+                    Genome::Gnn(params) => {
+                        // EA GNN members act greedily; exploration lives
+                        // in their weight-space mutations (Appendix C
+                        // "Mixed Exploration").
+                        let probs = engine.probs_into(params, nws);
+                        debug_assert_eq!(map.placements.len(), engine.n());
+                        for (node, pl) in map.placements.iter_mut().enumerate() {
+                            let base = node * native::OUT_DIM;
+                            *pl = NodePlacement {
+                                weight: MemKind::from_index(argmax(&probs[base..base + 3])),
+                                activation: MemKind::from_index(argmax(&probs[base + 3..base + 6])),
+                            };
+                        }
+                    }
+                    Genome::Boltzmann(bz) => bz.sample_map_into(&mut rng, map),
+                }
+                let tr = Transition::from_map(map, 0.0);
+                let st = env.step_in_place(map, &mut rng, cws);
+                (st, tr)
+            },
+        );
+        for (i, (st, mut tr)) in results.into_iter().enumerate() {
             self.pop.members[i].fitness = st.reward;
             tr.reward = st.reward as f32;
             self.replay.push(tr);
@@ -463,11 +595,8 @@ impl Trainer {
             }
             log.push(self.env.iterations(), self.best_true);
             if let Some(sac) = &self.sac {
-                log.sac_curve.push((
-                    self.env.iterations(),
-                    sac.last_metrics.critic_loss,
-                    sac.last_metrics.entropy,
-                ));
+                let m = sac.last_metrics();
+                log.sac_curve.push((self.env.iterations(), m.critic_loss, m.entropy));
             }
         }
         Ok(TrainResult {
@@ -823,10 +952,120 @@ mod tests {
         assert_eq!(exchanged.1, parallel.1, "exchange best_map differs across thread counts");
     }
 
+    /// Backend fail-fast (ISSUE 8 satellite): `gnn_backend = aot`
+    /// without a runtime must be a structured error at construction, not
+    /// a later panic. (The historical "PG needs artifacts" rule is gone —
+    /// EGRL/PG fall back to the native engine, covered below.)
     #[test]
-    fn pg_mode_requires_runtime() {
+    fn aot_backend_without_runtime_fails_fast() {
         let env = Arc::new(MappingEnv::nnpi(Workload::ResNet50.build(), 5));
-        assert!(Trainer::new(env, quick_cfg(10, 5), Mode::PgOnly, None).is_err());
+        let cfg = EgrlConfig { gnn_backend: GnnBackend::Aot, ..quick_cfg(10, 5) };
+        let err = Trainer::new(env, cfg, Mode::PgOnly, None)
+            .err()
+            .expect("gnn_backend=aot accepted without a runtime")
+            .to_string();
+        assert!(err.contains("gnn_backend=aot"), "unhelpful error: {err}");
+    }
+
+    /// Artifact-free native-backend config: small enough that the full
+    /// EGRL stack (GNN members, native SAC, fused parallel decode) stays
+    /// debug-build fast.
+    fn native_cfg(steps: u64, seed: u64) -> EgrlConfig {
+        EgrlConfig {
+            seed,
+            total_steps: steps,
+            pop_size: 6,
+            elites: 2,
+            update_every: 2,
+            batch_size: 8,
+            noise_std: 0.02,
+            ..Default::default()
+        }
+    }
+
+    fn small_synthetic_env(seed: u64) -> Arc<MappingEnv> {
+        use crate::workloads::synthetic::{synthetic, SyntheticConfig};
+        let cfg = SyntheticConfig { nodes: 24, ..Default::default() };
+        let g = synthetic(&cfg, &mut Rng::new(seed));
+        Arc::new(MappingEnv::nnpi(g, seed))
+    }
+
+    /// The tentpole acceptance path in miniature: full `Mode::Egrl` —
+    /// mixed GNN/Boltzmann population, native SAC updates, migration —
+    /// with no runtime and no artifacts.
+    #[test]
+    fn native_egrl_without_artifacts_trains() {
+        let mut t =
+            Trainer::new(small_synthetic_env(41), native_cfg(60, 41), Mode::Egrl, None).unwrap();
+        assert!(t.runner.as_ref().is_some_and(|r| r.is_native()), "expected native backend");
+        assert!(matches!(t.sac, Some(AnySac::Native(_))), "expected native SAC learner");
+        assert!(
+            t.pop.members.iter().any(|m| matches!(m.genome, Genome::Gnn(_))),
+            "native EGRL population has no GNN members"
+        );
+        let mut log = RunLog::new("synthetic", "egrl", 41);
+        let res = t.run(&mut log).unwrap();
+        assert!(res.iterations >= 60);
+        assert!(res.best_speedup > 0.0, "never found a valid map");
+        let ups = t.sac.as_ref().map(|s| s.updates_done()).unwrap_or(0);
+        assert!(ups > 0, "native SAC never took a gradient step");
+        assert!(!log.sac_curve.is_empty(), "SAC curve not logged on the native backend");
+    }
+
+    /// PG-only no longer needs artifacts: `auto` resolves to the native
+    /// stack and the serial PG rollout loop trains through it.
+    #[test]
+    fn pg_only_without_artifacts_trains_natively() {
+        let cfg = EgrlConfig { update_every: 1, ..native_cfg(40, 43) };
+        let mut t = Trainer::new(small_synthetic_env(43), cfg, Mode::PgOnly, None).unwrap();
+        let mut log = RunLog::new("synthetic", "pg", 43);
+        let res = t.run(&mut log).unwrap();
+        assert!(res.iterations >= 40);
+        assert!(
+            t.sac.as_ref().map(|s| s.updates_done()).unwrap_or(0) > 0,
+            "PG-only native run never updated"
+        );
+    }
+
+    /// The §8 thread-count contract on the fused native decode+rollout
+    /// path: decode draws and episode draws come from per-member streams
+    /// forked in member order, so worker count changes nothing.
+    #[test]
+    fn fused_native_rollouts_bit_identical_across_thread_counts() {
+        let run = |threads: usize| {
+            let cfg = EgrlConfig { threads, ..native_cfg(60, 47) };
+            let mut t = Trainer::new(small_synthetic_env(47), cfg, Mode::Egrl, None).unwrap();
+            let mut log = RunLog::new("synthetic", "egrl", 47);
+            let res = t.run(&mut log).unwrap();
+            (res.best_speedup, res.best_map, log.points)
+        };
+        let one = run(1);
+        for threads in [2, 8] {
+            let other = run(threads);
+            assert_eq!(
+                one.0.to_bits(),
+                other.0.to_bits(),
+                "fused best_speedup differs at {threads} threads: {} vs {}",
+                one.0,
+                other.0
+            );
+            assert_eq!(one.1, other.1, "fused best_map differs at {threads} threads");
+            assert_eq!(one.2, other.2, "fused RunLog differs at {threads} threads");
+        }
+    }
+
+    /// `gnn_backend = native` opts EA-only into GNN population members
+    /// without artifacts (weight-space evolution through the sparse
+    /// engine), while still building no PG learner.
+    #[test]
+    fn ea_only_forced_native_uses_gnn_members() {
+        let cfg = EgrlConfig { gnn_backend: GnnBackend::Native, ..native_cfg(40, 53) };
+        let mut t = Trainer::new(small_synthetic_env(53), cfg, Mode::EaOnly, None).unwrap();
+        assert!(t.sac.is_none(), "EA-only must not build a PG learner");
+        assert!(t.pop.members.iter().any(|m| matches!(m.genome, Genome::Gnn(_))));
+        let mut log = RunLog::new("synthetic", "ea", 53);
+        let res = t.run(&mut log).unwrap();
+        assert!(res.best_speedup > 0.0, "forced-native EA never found a valid map");
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //! across encodings, lines 14–19) and Gaussian mutation.
 
 use super::boltzmann::BoltzmannChromosome;
-use crate::gnn::perturb_params;
+use crate::gnn::{perturb_params, perturb_params_into};
 use crate::utils::Rng;
 
 /// A population member's policy encoding.
@@ -168,7 +168,11 @@ impl Population {
             let mut child = Individual { genome: child_genome, fitness: f64::NEG_INFINITY };
             if rng.chance(p.mut_prob) {
                 match &mut child.genome {
-                    Genome::Gnn(g) => *g = perturb_params(g, p.mut_std, p.mut_frac, rng),
+                    // In place: the child genome was just built (crossover
+                    // clone), so there is no reason to allocate a second
+                    // ~19k-gene vector per mutation. Draw order matches
+                    // the allocating version bit-for-bit.
+                    Genome::Gnn(g) => perturb_params_into(g, p.mut_std, p.mut_frac, rng),
                     Genome::Boltzmann(bz) => bz.mutate(p.mut_std, p.mut_frac, rng),
                 }
             }

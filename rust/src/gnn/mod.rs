@@ -2,11 +2,19 @@
 //!
 //! A GNN policy *genome* is the flat f32 parameter vector defined by the
 //! L2 model (`python/compile/model.py`); evolution mutates and crosses it
-//! as a raw gene string, and [`PolicyRunner`] evaluates it by executing
-//! the AOT `policy_fwd_<N>` artifact through PJRT. The environment's
-//! feature matrix / adjacency / mask are constants per workload, so their
-//! literals are built once at runner construction and reused every call —
-//! the per-rollout cost is one parameter upload + one execute.
+//! as a raw gene string, and [`PolicyRunner`] evaluates it against one
+//! workload through one of two backends (DESIGN.md §15):
+//!
+//! * **Aot** — the original PJRT path: executes the `policy_fwd_<N>` AOT
+//!   artifact on a dense padded adjacency. Fixed-shape, O(n²), requires
+//!   built artifacts; kept as the numerical oracle.
+//! * **Native** — [`native::NativeEngine`]: the pure-Rust sparse engine,
+//!   O(E) per layer, no padding, no artifact ceiling. `Send + Sync`, so
+//!   rollout workers decode genomes in parallel.
+//!
+//! The two backends agree within 1e-4 on action probabilities (property
+//! test below, gated on artifacts being built). Backend choice is the
+//! `gnn_backend` config key, resolved in `coordinator::Trainer::new`.
 
 use std::sync::Arc;
 
@@ -18,8 +26,23 @@ use crate::utils::math::clamp;
 use crate::utils::Rng;
 use crate::xla;
 
-/// Evaluates GNN parameter vectors against one workload environment.
-pub struct PolicyRunner {
+pub mod native;
+
+pub use native::{NativeEngine, NativeWorkspace};
+
+/// Untiled dense workload constants an [`AotRunner`] was built from, kept
+/// behind an `Arc` so `SacLearner` can tile them for the update artifact
+/// without recomputing the O(n²) adjacency (ISSUE 8 satellite).
+pub struct AotConstants {
+    pub n_artifact: usize,
+    pub feats: Vec<f32>,
+    pub adj: Vec<f32>,
+    pub mask: Vec<f32>,
+}
+
+/// The PJRT artifact backend: uploads the genome, executes the padded
+/// dense forward. Workload constants are cached literals built once.
+pub struct AotRunner {
     exe: Arc<Executable>,
     /// Artifact (padded) node count.
     pub n_artifact: usize,
@@ -30,34 +53,38 @@ pub struct PolicyRunner {
     feats: xla::Literal,
     adj: xla::Literal,
     mask: xla::Literal,
+    /// The host-side vectors the literals were built from.
+    pub constants: Arc<AotConstants>,
 }
 
-impl PolicyRunner {
+impl AotRunner {
     /// Build a runner for `env`, selecting the smallest artifact variant
     /// that fits the workload.
-    pub fn for_env(rt: &Runtime, env: &MappingEnv) -> anyhow::Result<PolicyRunner> {
+    pub fn for_env(rt: &Runtime, env: &MappingEnv) -> anyhow::Result<AotRunner> {
         let n_real = env.num_nodes();
         let n_artifact = rt.manifest.size_for(n_real)?;
         let exe = rt.policy_fwd(n_real)?;
         let f = rt.manifest.feature_dim;
-        let feats_v = features::padded_feature_matrix(&env.graph, n_artifact);
-        let adj_v = env.graph.normalized_adjacency(n_artifact);
-        let mask_v = env.graph.node_mask(n_artifact);
-        Ok(PolicyRunner {
+        let constants = Arc::new(AotConstants {
+            n_artifact,
+            feats: features::padded_feature_matrix(&env.graph, n_artifact),
+            adj: env.graph.normalized_adjacency(n_artifact),
+            mask: env.graph.node_mask(n_artifact),
+        });
+        Ok(AotRunner {
             exe,
             n_artifact,
             n_real,
             param_len: rt.manifest.actor_size,
-            feats: literal_f32(&feats_v, &[n_artifact, f]),
-            adj: literal_f32(&adj_v, &[n_artifact, n_artifact]),
-            mask: literal_f32(&mask_v, &[n_artifact]),
+            feats: literal_f32(&constants.feats, &[n_artifact, f]),
+            adj: literal_f32(&constants.adj, &[n_artifact, n_artifact]),
+            mask: literal_f32(&constants.mask, &[n_artifact]),
+            constants,
         })
     }
 
     /// Action probabilities `[n_artifact * 2 * 3]` for a parameter vector.
-    /// Only the first `n_real` node rows are meaningful. The workload
-    /// constants (features/adjacency/mask) are cached literals passed by
-    /// reference — the per-call upload is just the parameter vector.
+    /// Only the first `n_real` node rows are meaningful.
     pub fn probs(&self, params: &[f32]) -> anyhow::Result<Vec<f32>> {
         anyhow::ensure!(params.len() == self.param_len, "param length mismatch");
         let params_lit = literal_f32(params, &[params.len()]);
@@ -65,6 +92,93 @@ impl PolicyRunner {
             .exe
             .run_refs(&[&params_lit, &self.feats, &self.adj, &self.mask])?;
         literal_to_f32(&out[0])
+    }
+}
+
+/// Evaluates GNN parameter vectors against one workload environment,
+/// through whichever backend the trainer resolved.
+pub enum PolicyRunner {
+    Aot(AotRunner),
+    Native(NativeEngine),
+}
+
+impl PolicyRunner {
+    /// AOT-backed runner (requires a PJRT runtime + built artifacts).
+    pub fn aot_for_env(rt: &Runtime, env: &MappingEnv) -> anyhow::Result<PolicyRunner> {
+        Ok(PolicyRunner::Aot(AotRunner::for_env(rt, env)?))
+    }
+
+    /// Native sparse runner — no runtime, no artifacts, no size ceiling.
+    pub fn native_for_env(env: &MappingEnv) -> PolicyRunner {
+        PolicyRunner::Native(NativeEngine::for_graph(&env.graph))
+    }
+
+    /// Real node count of the workload.
+    pub fn n_real(&self) -> usize {
+        match self {
+            PolicyRunner::Aot(r) => r.n_real,
+            PolicyRunner::Native(e) => e.n(),
+        }
+    }
+
+    /// Expected parameter vector length.
+    pub fn param_len(&self) -> usize {
+        match self {
+            PolicyRunner::Aot(r) => r.param_len,
+            PolicyRunner::Native(e) => e.param_len(),
+        }
+    }
+
+    /// Artifact (padded) size — `None` on the native backend.
+    pub fn n_artifact(&self) -> Option<usize> {
+        match self {
+            PolicyRunner::Aot(r) => Some(r.n_artifact),
+            PolicyRunner::Native(_) => None,
+        }
+    }
+
+    /// True when decode is a pure in-process function — the precondition
+    /// for folding decode into the parallel rollout workers (§15).
+    pub fn is_native(&self) -> bool {
+        matches!(self, PolicyRunner::Native(_))
+    }
+
+    /// The native engine, when that backend is active.
+    pub fn native_engine(&self) -> Option<&NativeEngine> {
+        match self {
+            PolicyRunner::Native(e) => Some(e),
+            PolicyRunner::Aot(_) => None,
+        }
+    }
+
+    /// The AOT runner's shared dense constants, when that backend is active.
+    pub fn aot_constants(&self) -> Option<&Arc<AotConstants>> {
+        match self {
+            PolicyRunner::Aot(r) => Some(&r.constants),
+            PolicyRunner::Native(_) => None,
+        }
+    }
+
+    /// Action probabilities for a parameter vector. Rows beyond `n_real`
+    /// (AOT padding) are meaningless; consumers index by real node.
+    pub fn probs(&self, params: &[f32]) -> anyhow::Result<Vec<f32>> {
+        match self {
+            PolicyRunner::Aot(r) => r.probs(params),
+            PolicyRunner::Native(e) => e.probs(params),
+        }
+    }
+
+    /// Workspace-reusing variant for hot loops: the native backend runs
+    /// allocation-free into `ws`; the AOT backend ignores it (PJRT owns
+    /// its buffers).
+    pub fn probs_with(&self, params: &[f32], ws: &mut NativeWorkspace) -> anyhow::Result<Vec<f32>> {
+        match self {
+            PolicyRunner::Aot(r) => r.probs(params),
+            PolicyRunner::Native(e) => {
+                anyhow::ensure!(params.len() == e.param_len(), "param length mismatch");
+                Ok(e.probs_into(params, ws).to_vec())
+            }
+        }
     }
 
     /// Greedy (argmax) memory map from policy probabilities.
@@ -81,8 +195,9 @@ impl PolicyRunner {
     /// "Mixed Exploration"): perturb the probabilities with clipped
     /// Gaussian noise, renormalize, then sample.
     pub fn noisy_sample_map(&self, probs: &[f32], noise_std: f32, rng: &mut Rng) -> MemoryMap {
-        let mut actions = Vec::with_capacity(self.n_real);
-        for node in 0..self.n_real {
+        let n_real = self.n_real();
+        let mut actions = Vec::with_capacity(n_real);
+        for node in 0..n_real {
             let mut pair = [0usize; 2];
             for (k, slot) in pair.iter_mut().enumerate() {
                 let base = (node * 2 + k) * 3;
@@ -105,9 +220,10 @@ impl PolicyRunner {
     }
 
     fn map_from_probs(&self, probs: &[f32], mut rng: Option<&mut Rng>) -> MemoryMap {
-        assert!(probs.len() >= self.n_real * 6);
-        let mut actions = Vec::with_capacity(self.n_real);
-        for node in 0..self.n_real {
+        let n_real = self.n_real();
+        assert!(probs.len() >= n_real * 6);
+        let mut actions = Vec::with_capacity(n_real);
+        for node in 0..n_real {
             let mut pair = [0usize; 2];
             for (k, slot) in pair.iter_mut().enumerate() {
                 let base = (node * 2 + k) * 3;
@@ -123,25 +239,30 @@ impl PolicyRunner {
     }
 }
 
-/// Gaussian perturbation of a parameter vector — used both to diversify
-/// the initial EA population from the AOT init and as the GNN mutation
-/// operator (weight-space exploration).
+/// In-place Gaussian perturbation of a parameter vector — the GNN mutation
+/// operator (weight-space exploration). Per-gene draw order (`chance`,
+/// then `normal` on a hit) is identical to the historical allocating
+/// version, so existing seeds reproduce bit-identically.
+pub fn perturb_params_into(params: &mut [f32], std: f32, frac: f64, rng: &mut Rng) {
+    for w in params.iter_mut() {
+        if rng.chance(frac) {
+            *w += (rng.normal() as f32) * std;
+        }
+    }
+}
+
+/// Allocating wrapper over [`perturb_params_into`] — used to diversify the
+/// initial EA population from a seed genome.
 pub fn perturb_params(params: &[f32], std: f32, frac: f64, rng: &mut Rng) -> Vec<f32> {
-    params
-        .iter()
-        .map(|&w| {
-            if rng.chance(frac) {
-                w + (rng.normal() as f32) * std
-            } else {
-                w
-            }
-        })
-        .collect()
+    let mut out = params.to_vec();
+    perturb_params_into(&mut out, std, frac, rng);
+    out
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::workloads::synthetic::{synthetic, SyntheticConfig};
 
     #[test]
     fn perturb_changes_roughly_frac_genes() {
@@ -157,5 +278,73 @@ mod tests {
         let params = vec![1.5f32; 100];
         let mut rng = Rng::new(6);
         assert_eq!(perturb_params(&params, 0.1, 0.0, &mut rng), params);
+    }
+
+    #[test]
+    fn perturb_into_matches_allocating_version() {
+        let mut rng = Rng::new(17);
+        let params: Vec<f32> = (0..500).map(|_| rng.normal() as f32).collect();
+        let mut a_rng = Rng::new(99);
+        let mut b_rng = Rng::new(99);
+        let out = perturb_params(&params, 0.07, 0.4, &mut a_rng);
+        let mut inplace = params.clone();
+        perturb_params_into(&mut inplace, 0.07, 0.4, &mut b_rng);
+        assert_eq!(out, inplace);
+        // The RNG streams advanced identically too.
+        assert_eq!(a_rng.next_u64(), b_rng.next_u64());
+    }
+
+    #[test]
+    fn native_runner_decodes_maps() {
+        let cfg = SyntheticConfig { nodes: 20, ..Default::default() };
+        let g = synthetic(&cfg, &mut Rng::new(3));
+        let env = MappingEnv::nnpi(g, 3);
+        let runner = PolicyRunner::native_for_env(&env);
+        assert!(runner.is_native());
+        assert_eq!(runner.n_real(), 20);
+        assert_eq!(runner.n_artifact(), None);
+        assert_eq!(runner.param_len(), native::ACTOR_SIZE);
+        let params = native::init_actor_params(&mut Rng::new(3));
+        let probs = runner.probs(&params).unwrap();
+        let map = runner.greedy_map(&probs);
+        assert_eq!(map.to_actions().len(), 20);
+        let mut rng = Rng::new(4);
+        let _ = runner.sample_map(&probs, &mut rng);
+        let _ = runner.noisy_sample_map(&probs, 0.1, &mut rng);
+    }
+
+    #[test]
+    fn native_matches_aot_artifact_within_tolerance() {
+        // The backend-parity contract (§15): on a workload that fits the
+        // smallest artifact, native probabilities equal the AOT output
+        // within 1e-4 on all real rows, with the pool size pinned to the
+        // artifact's padded semantics. Gated: needs built artifacts.
+        if !Runtime::default_dir().join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::open(Runtime::default_dir()).unwrap();
+        let cfg = SyntheticConfig { nodes: 48, ..Default::default() };
+        let g = synthetic(&cfg, &mut Rng::new(11));
+        let env = MappingEnv::nnpi(g, 11);
+        let aot = PolicyRunner::aot_for_env(&rt, &env).unwrap();
+        assert_eq!(
+            aot.param_len(),
+            native::ACTOR_SIZE,
+            "manifest actor_size disagrees with the native layout"
+        );
+        let n_real = env.num_nodes();
+        let n_art = aot.n_artifact().unwrap();
+        let k_eff = native::pool_k(n_art).min(n_real);
+        let engine = NativeEngine::for_graph(&env.graph).with_pool_k(k_eff);
+        let actor = rt.actor_init().unwrap();
+        let got = engine.probs(&actor).unwrap();
+        let want = aot.probs(&actor).unwrap();
+        for (i, (&a, &b)) in got.iter().zip(&want[..n_real * 6]).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-4,
+                "native/AOT diverge at {i}: native={a} aot={b}"
+            );
+        }
     }
 }

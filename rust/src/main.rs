@@ -62,8 +62,8 @@ fn open_runtime(cli: &Cli) -> anyhow::Result<Option<Runtime>> {
         .unwrap_or_else(Runtime::default_dir);
     if !dir.join("manifest.json").exists() {
         eprintln!(
-            "note: no artifacts at {} — running artifact-free (EA/Boltzmann only); \
-             run `make artifacts` for the full stack",
+            "note: no artifacts at {} — running artifact-free (EGRL/PG use the \
+             native sparse GNN engine; `make artifacts` enables the AOT backend)",
             dir.display()
         );
         return Ok(None);
@@ -104,10 +104,11 @@ fn cmd_train(cli: &Cli) -> anyhow::Result<()> {
                 "ea" => Mode::EaOnly,
                 _ => Mode::PgOnly,
             };
+            // No artifact gate here: backend resolution (gnn_backend =
+            // auto|native|aot) lives in Trainer::new — EGRL/PG fall back
+            // to the native sparse engine when artifacts are absent, and
+            // a forced `aot` backend fails fast with a structured error.
             let runtime = open_runtime(cli)?;
-            if runtime.is_none() && mode != Mode::EaOnly {
-                anyhow::bail!("agent '{agent}' needs AOT artifacts (run `make artifacts`)");
-            }
             let mut trainer = Trainer::new(env.clone(), cfg, mode, runtime.as_ref())?;
             let res = trainer.run(&mut log)?;
             println!(

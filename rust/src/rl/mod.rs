@@ -10,4 +10,4 @@ pub mod replay;
 pub mod sac;
 
 pub use replay::{Replay, Transition};
-pub use sac::SacLearner;
+pub use sac::{AnySac, SacLearner};

@@ -9,8 +9,8 @@
 
 use std::sync::Arc;
 
-use crate::env::MappingEnv;
-use crate::graph::features;
+use crate::gnn::native::NativeSacLearner;
+use crate::gnn::AotConstants;
 use crate::runtime::{literal_f32, literal_to_f32, Executable, Runtime};
 use crate::utils::math::clamp;
 use crate::utils::Rng;
@@ -55,20 +55,24 @@ pub struct SacLearner {
 }
 
 impl SacLearner {
-    /// Build a learner for `env`, loading the matching artifact variant
-    /// and initial parameters from the AOT pipeline.
-    pub fn new(rt: &Runtime, env: &MappingEnv) -> anyhow::Result<SacLearner> {
-        let n_real = env.num_nodes();
+    /// Build a learner sharing the policy runner's cached dense workload
+    /// constants (no per-learner O(n²) adjacency rebuild — ISSUE 8
+    /// satellite), loading the matching artifact variant and initial
+    /// parameters from the AOT pipeline.
+    pub fn new(rt: &Runtime, n_real: usize, constants: &AotConstants) -> anyhow::Result<SacLearner> {
         let n_art = rt.manifest.size_for(n_real)?;
+        anyhow::ensure!(
+            n_art == constants.n_artifact,
+            "runner constants padded to {} but sac artifact expects {n_art}",
+            constants.n_artifact
+        );
         let exe = rt.sac_update(n_real)?;
         let b = rt.manifest.batch;
         let f = rt.manifest.feature_dim;
         let actor = rt.actor_init()?;
         let critic = rt.critic_init()?;
-        // Tile the workload constants across the batch dimension.
-        let feats1 = features::padded_feature_matrix(&env.graph, n_art);
-        let adj1 = env.graph.normalized_adjacency(n_art);
-        let mask1 = env.graph.node_mask(n_art);
+        // Tile the shared workload constants across the batch dimension.
+        let (feats1, adj1, mask1) = (&constants.feats, &constants.adj, &constants.mask);
         let tile = |v: &[f32]| -> Vec<f32> {
             let mut out = Vec::with_capacity(v.len() * b);
             for _ in 0..b {
@@ -171,6 +175,57 @@ impl SacLearner {
             self.last_metrics.critic_loss
         );
         Ok(self.last_metrics)
+    }
+}
+
+/// Backend-polymorphic SAC learner: the AOT artifact driver or the pure
+/// native implementation ([`NativeSacLearner`]), resolved by the trainer
+/// alongside the policy-runner backend (DESIGN.md §15). Identical method
+/// surface, identical RNG draw order per update.
+pub enum AnySac {
+    Aot(SacLearner),
+    Native(Box<NativeSacLearner>),
+}
+
+impl AnySac {
+    /// Current actor parameter vector (for rollouts and EA migration).
+    pub fn actor_params(&self) -> &[f32] {
+        match self {
+            AnySac::Aot(l) => l.actor_params(),
+            AnySac::Native(l) => l.actor_params(),
+        }
+    }
+
+    /// Minibatch size one update consumes.
+    pub fn batch_size(&self) -> usize {
+        match self {
+            AnySac::Aot(l) => l.batch_size(),
+            AnySac::Native(l) => l.batch_size(),
+        }
+    }
+
+    /// One SAC gradient step.
+    pub fn update(&mut self, minibatch: &[&Transition], rng: &mut Rng) -> anyhow::Result<SacMetrics> {
+        match self {
+            AnySac::Aot(l) => l.update(minibatch, rng),
+            AnySac::Native(l) => l.update(minibatch, rng),
+        }
+    }
+
+    /// Metrics of the most recent update.
+    pub fn last_metrics(&self) -> SacMetrics {
+        match self {
+            AnySac::Aot(l) => l.last_metrics,
+            AnySac::Native(l) => l.last_metrics,
+        }
+    }
+
+    /// Number of updates applied so far.
+    pub fn updates_done(&self) -> u64 {
+        match self {
+            AnySac::Aot(l) => l.updates_done,
+            AnySac::Native(l) => l.updates_done,
+        }
     }
 }
 

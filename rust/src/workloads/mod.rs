@@ -28,6 +28,10 @@ pub enum Workload {
     /// 10k-node deterministic scaling workload (not a paper network —
     /// excluded from [`Workload::all`], which drives the figure benches).
     SyntheticLarge,
+    /// 100k-node top scaling tier — the native-GNN-backend regime
+    /// (ISSUE 8): no AOT artifact exists at this size, so training on it
+    /// exercises the sparse engine end to end.
+    SyntheticHuge,
 }
 
 impl Workload {
@@ -37,6 +41,7 @@ impl Workload {
             Workload::ResNet101 => "resnet101",
             Workload::Bert => "bert",
             Workload::SyntheticLarge => "synthetic-large",
+            Workload::SyntheticHuge => "synthetic-huge",
         }
     }
 
@@ -54,8 +59,10 @@ impl Workload {
             "resnet101" | "r101" => Ok(Workload::ResNet101),
             "bert" | "bert-base" => Ok(Workload::Bert),
             "synthetic-large" | "synthetic_large" | "syn10k" => Ok(Workload::SyntheticLarge),
+            "synthetic-huge" | "synthetic_huge" | "syn100k" => Ok(Workload::SyntheticHuge),
             other => anyhow::bail!(
-                "unknown workload '{other}' (expected resnet50|resnet101|bert|synthetic-large)"
+                "unknown workload '{other}' (expected \
+                 resnet50|resnet101|bert|synthetic-large|synthetic-huge)"
             ),
         }
     }
@@ -67,6 +74,7 @@ impl Workload {
             Workload::ResNet101 => resnet::resnet101(),
             Workload::Bert => bert::bert_base(),
             Workload::SyntheticLarge => synthetic::synthetic_large(),
+            Workload::SyntheticHuge => synthetic::synthetic_huge(),
         }
     }
 
@@ -78,6 +86,7 @@ impl Workload {
             Workload::ResNet101 => 108,
             Workload::Bert => 376,
             Workload::SyntheticLarge => synthetic::SYNTHETIC_LARGE_NODES,
+            Workload::SyntheticHuge => synthetic::SYNTHETIC_HUGE_NODES,
         }
     }
 }
@@ -117,7 +126,11 @@ mod tests {
         assert_eq!(Workload::parse("BERT").unwrap(), Workload::Bert);
         assert_eq!(Workload::parse("synthetic-large").unwrap(), Workload::SyntheticLarge);
         assert_eq!(Workload::parse("syn10k").unwrap(), Workload::SyntheticLarge);
+        assert_eq!(Workload::parse("synthetic-huge").unwrap(), Workload::SyntheticHuge);
+        assert_eq!(Workload::parse("syn100k").unwrap(), Workload::SyntheticHuge);
         assert!(Workload::parse("vgg").is_err());
+        // The scaling tiers stay out of the paper set.
+        assert!(!Workload::all().contains(&Workload::SyntheticHuge));
     }
 
     #[test]

@@ -73,6 +73,29 @@ pub fn sized_synthetic(nodes: usize) -> Graph {
     synthetic(&cfg, &mut Rng::new(SCALING_SEED))
 }
 
+/// Distinct seed for the long-skip (dense-liveness) scaling family, so
+/// its graphs never collide with the plain `sized_synthetic` tiers.
+const LONGSKIP_SEED: u64 = SCALING_SEED ^ 0x9E37_79B9_7F4A_7C15;
+
+/// Long-skip (dense-liveness) variant of [`sized_synthetic`] (ROADMAP
+/// item 4 follow-on): same tensor-size regime, but a skip edge lands on
+/// almost every node (`skip_prob = 0.95`) and may reach arbitrarily far
+/// back, so tensors stay live across long spans and mean degree — the E
+/// in the O(E) engines — rises with it. The `perf_scaling` bench charts
+/// whether the 10k→100k growth gates hold as liveness density rises.
+pub fn sized_synthetic_longskip(nodes: usize) -> Graph {
+    let cfg = SyntheticConfig {
+        nodes,
+        skip_prob: 0.95,
+        weight_log2_range: (8.0, 17.0), // 256 B .. 128 KB
+        act_log2_range: (8.0, 15.0),    // 256 B .. 32 KB
+        ..Default::default()
+    };
+    let mut g = synthetic(&cfg, &mut Rng::new(LONGSKIP_SEED));
+    g.name = format!("synthetic{nodes}-longskip");
+    g
+}
+
 /// Generate a random layered DAG. Node 0 is an input; every other node has
 /// at least one predecessor with a smaller index, so the graph is connected
 /// and already topologically ordered.
@@ -205,6 +228,32 @@ mod tests {
         let max_w = g.nodes.iter().map(|n| n.weight_bytes).max().unwrap();
         assert!(max_w <= (128 << 10), "single weight {max_w} exceeds the 128 KB ceiling");
         assert!(g.total_weight_bytes() > (28 << 20), "no capacity pressure at 100k");
+    }
+
+    #[test]
+    fn longskip_variant_is_denser_distinct_and_deterministic() {
+        let n = 1000;
+        let plain = sized_synthetic(n);
+        let a = sized_synthetic_longskip(n);
+        let b = sized_synthetic_longskip(n);
+        assert_eq!(a.len(), n);
+        assert_eq!(a.edges, b.edges, "longskip generator not deterministic");
+        assert_eq!(a.name, format!("synthetic{n}-longskip"));
+        // Dense liveness: skip edges on ~95% of nodes instead of ~30%
+        // must show up as materially more edges at the same node count.
+        assert!(
+            a.edges.len() > plain.edges.len() + n / 3,
+            "longskip ({}) not denser than plain ({})",
+            a.edges.len(),
+            plain.edges.len()
+        );
+        // And a different graph entirely (distinct seed).
+        assert_ne!(a.edges, plain.edges);
+        // Still a valid connected DAG in the same tensor regime.
+        assert_eq!(a.topo_order().len(), n);
+        assert!((1..n).all(|i| !a.preds(i).is_empty()), "disconnected node");
+        let max_w = a.nodes.iter().map(|x| x.weight_bytes).max().unwrap();
+        assert!(max_w <= (128 << 10));
     }
 
     #[test]
