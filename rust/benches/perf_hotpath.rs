@@ -22,11 +22,12 @@ use egrl::config::EgrlConfig;
 use egrl::coordinator::{Mode, Trainer};
 use egrl::ea::population::{EvolveParams, Genome, Population};
 use egrl::ea::BoltzmannChromosome;
-use egrl::env::MappingEnv;
+use egrl::env::{EnvConfig, MappingEnv};
 use egrl::gnn::PolicyRunner;
 use egrl::mapping::{MemKind, MemoryMap, NodePlacement};
 use egrl::rl::{Replay, SacLearner, Transition};
 use egrl::runtime::Runtime;
+use egrl::serve::{Broker, ServeOptions};
 use egrl::sim::compiler::CompilerWorkspace;
 use egrl::sim::liveness::Liveness;
 use egrl::utils::json::Json;
@@ -281,6 +282,82 @@ fn main() -> anyhow::Result<()> {
     println!("  generation speedup (threads=1 vs seed serial): {gen_speedup_t1:.2}x");
     println!("  latency table vs naive:                        {latency_speedup:.2}x");
     println!("  latency_delta vs full table recompute:         {delta_speedup:.2}x");
+
+    // ---- telemetry overhead: instrumented vs dark serving (ISSUE 9) --------
+    // Two identical brokers replay the same deterministic polish stream;
+    // one appends timed spans to a JSON-lines file sink per request, the
+    // other runs dark (the `Trace` handle is an inlined no-op). Rounds
+    // are interleaved A/B so slow machine drift (thermal, noisy
+    // neighbours) hits both arms equally and cancels in the ratio.
+    {
+        let mk = |trace_path: Option<std::path::PathBuf>| {
+            Broker::new(ServeOptions {
+                cache_cap: 16,
+                deadline_ms: 0,
+                refine_budget: 36_000,
+                workers: 0,
+                seed: 1,
+                spill_dir: None,
+                priority_refine: true,
+                max_connections: 0,
+                queue_depth: 0,
+                spill_max_bytes: 0,
+                trace_path,
+                env: EnvConfig::default(),
+            })
+        };
+        let trace_file =
+            std::env::temp_dir().join(format!("egrl-obs-bench-{}.jsonl", std::process::id()));
+        let dark = mk(None);
+        let instr = mk(Some(trace_file.clone()));
+        // Seed the cache outside the timed region: every timed round is
+        // then one polish op (a full no-improvement refinement sweep at
+        // steady state — identical work in both arms, since the polish
+        // RNG seed depends only on the broker seed and the op ordinal).
+        for b in [&dark, &instr] {
+            std::hint::black_box(b.handle(r#"{"op":"map","workload":"bert"}"#));
+        }
+        let round = |b: &Broker| {
+            std::hint::black_box(b.handle(r#"{"op":"polish","workload":"bert","budget":9000}"#));
+        };
+        const WARMUP: usize = 5;
+        const ROUNDS: usize = 60;
+        for _ in 0..WARMUP {
+            round(&dark);
+            round(&instr);
+        }
+        let mut dark_s = 0.0;
+        let mut instr_s = 0.0;
+        for _ in 0..ROUNDS {
+            let t0 = std::time::Instant::now();
+            round(&dark);
+            dark_s += t0.elapsed().as_secs_f64();
+            let t0 = std::time::Instant::now();
+            round(&instr);
+            instr_s += t0.elapsed().as_secs_f64();
+        }
+        let _ = std::fs::remove_file(&trace_file);
+        let obs_ratio = instr_s / dark_s;
+        let obs_target = 1.05;
+        println!(
+            "\ntelemetry overhead: dark {:.1} µs/req vs instrumented {:.1} µs/req \
+             (ratio {obs_ratio:.3}, target <= {obs_target})",
+            dark_s / ROUNDS as f64 * 1e6,
+            instr_s / ROUNDS as f64 * 1e6
+        );
+        let obs_json = Json::obj(vec![
+            ("schema", Json::str("egrl-bench-obs-v1")),
+            ("workload", Json::str("bert")),
+            ("rounds", Json::Num(ROUNDS as f64)),
+            ("dark_s", Json::Num(dark_s)),
+            ("instrumented_s", Json::Num(instr_s)),
+            ("telemetry_overhead_ratio", Json::Num(obs_ratio)),
+            ("max_ratio", Json::Num(obs_target)),
+            ("meets_target", Json::Bool(obs_ratio <= obs_target)),
+        ]);
+        std::fs::write("BENCH_obs.json", obs_json.to_string_pretty())?;
+        println!("wrote BENCH_obs.json");
+    }
 
     // ---- runtime path (artifacts) ---------------------------------------------
     let dir = Runtime::default_dir();

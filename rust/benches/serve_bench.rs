@@ -28,38 +28,31 @@ use std::net::{TcpListener, TcpStream};
 use std::time::Instant;
 
 use egrl::env::EnvConfig;
+use egrl::obs::Histogram;
 use egrl::serve::{Broker, ServeOptions};
 use egrl::utils::json::{parse, Json};
 use egrl::utils::Rng;
 use egrl::workloads::Workload;
 
-/// Nearest-rank percentile of an ascending-sorted sample.
-fn percentile(sorted: &[f64], p: f64) -> f64 {
-    if sorted.is_empty() {
-        return f64::NAN;
-    }
-    let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
-    sorted[idx.min(sorted.len() - 1)]
-}
-
-fn summary(label: &str, sample: &mut Vec<f64>) -> (Json, f64, f64) {
-    sample.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
-    let mean = if sample.is_empty() {
-        f64::NAN
-    } else {
-        sample.iter().sum::<f64>() / sample.len() as f64
-    };
-    let p50 = percentile(sample, 0.50);
-    let p99 = percentile(sample, 0.99);
+/// Latency summary from an O(1)-per-record log₂ histogram (the same
+/// `obs::Histogram` the broker's `metrics` op serves) — replaces the
+/// sort-the-whole-sample percentile pass. The mean is exact (from the
+/// nanosecond sum); p50/p99 are bucket-interpolated, property-tested
+/// against sorted-sample quantiles in `obs::hist`. Returns
+/// `(json, mean_s, p99_s)`.
+fn summary(label: &str, h: &Histogram) -> (Json, f64, f64) {
+    let mean = if h.count() == 0 { f64::NAN } else { h.mean_ns() / 1e9 };
+    let p50 = h.quantile_ns(0.50) / 1e9;
+    let p99 = h.quantile_ns(0.99) / 1e9;
     println!(
         "  {label:<6} n={:<4} mean {:>9.1} µs   p50 {:>9.1} µs   p99 {:>9.1} µs",
-        sample.len(),
+        h.count(),
         mean * 1e6,
         p50 * 1e6,
         p99 * 1e6
     );
     let json = Json::obj(vec![
-        ("count", Json::Num(sample.len() as f64)),
+        ("count", Json::Num(h.count() as f64)),
         ("mean_us", Json::Num(mean * 1e6)),
         ("p50_us", Json::Num(p50 * 1e6)),
         ("p99_us", Json::Num(p99 * 1e6)),
@@ -87,13 +80,14 @@ fn main() -> anyhow::Result<()> {
         max_connections: 0,
         queue_depth: 0,
         spill_max_bytes: 0,
+        trace_path: None,
         env: EnvConfig::default(),
     });
 
     const REQUESTS: usize = 400;
     let mut rng = Rng::new(42);
-    let mut hit_s: Vec<f64> = Vec::new();
-    let mut cold_s: Vec<f64> = Vec::new();
+    let mut hit_h = Histogram::new();
+    let mut cold_h = Histogram::new();
     let replay_t0 = Instant::now();
     for _ in 0..REQUESTS {
         let mut x = rng.uniform() * zipf_total;
@@ -108,20 +102,20 @@ fn main() -> anyhow::Result<()> {
         let line = format!(r#"{{"op":"map","workload":"{}"}}"#, pick.name());
         let t0 = Instant::now();
         let resp = broker.handle(&line);
-        let dt = t0.elapsed().as_secs_f64();
+        let dt = t0.elapsed();
         let j = parse(&resp)?;
         match j.get("cache").and_then(Json::as_str) {
-            Some("hit") => hit_s.push(dt),
-            Some("miss") => cold_s.push(dt),
+            Some("hit") => hit_h.record(dt),
+            Some("miss") => cold_h.record(dt),
             _ => anyhow::bail!("unexpected serve response: {resp}"),
         }
     }
     let wall_s = replay_t0.elapsed().as_secs_f64();
     let throughput_rps = REQUESTS as f64 / wall_s;
     println!("\nreplayed {REQUESTS} requests in {wall_s:.3} s ({throughput_rps:.0} req/s)");
-    let (hit_json, _hit_mean, hit_p99) = summary("hit", &mut hit_s);
-    let (cold_json, cold_mean, _cold_p99) = summary("cold", &mut cold_s);
-    let hit_rate = hit_s.len() as f64 / REQUESTS as f64;
+    let (hit_json, _hit_mean, hit_p99) = summary("hit", &hit_h);
+    let (cold_json, cold_mean, _cold_p99) = summary("cold", &cold_h);
+    let hit_rate = hit_h.count() as f64 / REQUESTS as f64;
     println!("  hit rate {:.3}", hit_rate);
 
     // Acceptance: cache-hit p99 ≥ 100× faster than cold mapping.
@@ -177,6 +171,7 @@ fn main() -> anyhow::Result<()> {
             max_connections: 0,
             queue_depth: 0,
             spill_max_bytes: 0,
+            trace_path: None,
             env: EnvConfig::default(),
         });
         // Pre-warm so the sweep measures pure hit-path throughput.
@@ -264,6 +259,7 @@ fn main() -> anyhow::Result<()> {
         max_connections: 0,
         queue_depth: 0,
         spill_max_bytes: 0,
+        trace_path: None,
         env: EnvConfig::default(),
     });
     let t0 = Instant::now();

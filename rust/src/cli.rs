@@ -110,6 +110,10 @@ SUBCOMMANDS:
                               artifacts fit the workload, else native)
              --out FILE       write CSV curve
              --save-map FILE  write the best map as a mapping artifact
+             --telemetry FILE write per-generation span records (JSON
+                              lines: rollout/refine/SAC wall time,
+                              population stats) — observe-only, results
+                              are bit-identical with or without it
              --set key=value  config override (repeatable)
              --config FILE    key=value config file
   serve      Placement-serving broker: JSON-lines requests (one object
@@ -119,7 +123,8 @@ SUBCOMMANDS:
              ops: {\"op\":\"map\",\"workload\":W[,\"return_map\":true]
                                        [,\"deadline_ms\":N]}
                   {\"op\":\"polish\",\"workload\":W[,\"budget\":N]}
-                  {\"op\":\"stats\"} | {\"op\":\"evict\",\"workload\":W}
+                  {\"op\":\"stats\"} | {\"op\":\"metrics\"[,\"format\":\"prometheus\"]}
+                  {\"op\":\"evict\",\"workload\":W}
                   {\"op\":\"drain\"} | {\"op\":\"shutdown\"}
              --tcp ADDR       serve a TCP listener (concurrent
                               connections, thread per connection)
@@ -129,6 +134,13 @@ SUBCOMMANDS:
              --spill DIR      disk spill tier: evictions are demoted to
                               DIR and misses probe it before the cold
                               path (same as --set serve_spill_dir=DIR)
+             --trace FILE     span tracing: every request appends timed
+                              JSON-line spans (handler + refine/spill
+                              children under one trace id) to FILE
+                              (same as --set serve_trace_path=FILE)
+             --metrics        print the Prometheus text exposition page
+                              when serving ends (live scrapes: the
+                              \"metrics\" op)
              --seed N                              (default 0)
              --set key=value  serve_cache_cap=64 serve_deadline_ms=25
                               serve_refine_budget=18000 serve_workers=1
@@ -136,6 +148,7 @@ SUBCOMMANDS:
                               serve_max_connections=64 serve_queue_depth=256
                               serve_spill_max_bytes=0 (0 = unbounded;
                               overload -> {\"error\":\"overloaded\"})
+                              serve_trace_path= (empty = tracing off)
   polish     Online serving path: refine a precompiled mapping artifact
              with the batched local-search engine
              --workload ...   workload the map belongs to

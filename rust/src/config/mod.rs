@@ -160,6 +160,12 @@ pub struct EgrlConfig {
     /// `egrl serve`: spill-tier size bound in bytes; beyond it the
     /// oldest artifacts are deleted (spill LRU). 0 = unbounded.
     pub serve_spill_max_bytes: u64,
+    /// `egrl serve`: JSON-lines span-trace sink path (`--trace`). When
+    /// set, every request emits timed spans (handler, inline refine,
+    /// spill restore/write, background refine) tagged with a
+    /// deterministic `trace_id`; empty (default) disables tracing and
+    /// the instrumentation collapses to an inert no-op (DESIGN.md §16).
+    pub serve_trace_path: String,
     /// GNN policy-evaluation backend: `auto` (default) picks the AOT
     /// artifact path when a runtime is open and the graph fits an
     /// artifact, the native sparse engine otherwise; `native` forces the
@@ -212,6 +218,7 @@ impl Default for EgrlConfig {
             serve_max_connections: 64,
             serve_queue_depth: 256,
             serve_spill_max_bytes: 0,
+            serve_trace_path: String::new(),
             gnn_backend: GnnBackend::Auto,
         }
     }
@@ -367,6 +374,8 @@ impl EgrlConfig {
             "serve_max_connections" => self.serve_max_connections = p(key, value)?,
             "serve_queue_depth" => self.serve_queue_depth = p(key, value)?,
             "serve_spill_max_bytes" => self.serve_spill_max_bytes = p(key, value)?,
+            // An empty value disables span tracing (the default).
+            "serve_trace_path" => self.serve_trace_path = value.to_string(),
             // Unknown spellings are rejected before assignment, so a bad
             // set never clobbers the current backend. `aot` without a
             // runtime cannot be detected here (the config can't see
@@ -660,6 +669,18 @@ mod tests {
         c.set("serve_priority_refine", "true").unwrap();
         assert!(c.serve_priority_refine);
         assert!(c.set("serve_priority_refine", "maybe").is_err());
+    }
+
+    /// ISSUE 9 satellite: the `serve_trace_path` key — span tracing is
+    /// off (dark instrumentation) unless a sink path is configured.
+    #[test]
+    fn serve_trace_path_key_wired() {
+        let mut c = EgrlConfig::default();
+        assert!(c.serve_trace_path.is_empty(), "tracing must default off");
+        c.set("serve_trace_path", "/tmp/egrl-trace.jsonl").unwrap();
+        assert_eq!(c.serve_trace_path, "/tmp/egrl-trace.jsonl");
+        c.set("serve_trace_path", "").unwrap(); // empty clears it
+        assert!(c.serve_trace_path.is_empty());
     }
 
     /// ISSUE 8 satellite: the `gnn_backend` key — unknown values are

@@ -45,9 +45,11 @@ use crate::gnn::native::{self, NativeSacLearner};
 use crate::gnn::{NativeEngine, NativeWorkspace, PolicyRunner};
 use crate::mapping::{MemKind, MemoryMap, NodePlacement};
 use crate::metrics::RunLog;
+use crate::obs::{trace_id, Trace};
 use crate::rl::{AnySac, Replay, SacLearner, Transition};
 use crate::runtime::Runtime;
 use crate::sim::compiler::CompilerWorkspace;
+use crate::utils::json::Json;
 use crate::utils::math::argmax;
 use crate::utils::pool::{map_parallel, map_parallel_mut};
 use crate::utils::Rng;
@@ -119,6 +121,12 @@ pub struct Trainer {
     proposals: Vec<MemoryMap>,
     /// Main-thread compiler workspace for the serial PG rollouts.
     scratch: CompilerWorkspace,
+    /// Training telemetry sink (`egrl train --telemetry`): one span
+    /// record per generation with phase wall times and population
+    /// stats. Observe-only — no RNG draws, and clock reads happen only
+    /// when a sink is attached — so the §8 bit-identity contract is
+    /// untouched (regression-tested below). Dark by default.
+    trace: Trace,
 }
 
 impl Trainer {
@@ -214,7 +222,16 @@ impl Trainer {
             generations: 0,
             proposals: Vec::new(),
             scratch: CompilerWorkspace::default(),
+            trace: Trace::off(),
         })
+    }
+
+    /// Attach a telemetry sink: every subsequent generation emits one
+    /// `generation` span record (rollout/refine/evolve/SAC-update wall
+    /// time plus population stats) to it. Pass [`Trace::off`] to go
+    /// dark again.
+    pub fn set_trace(&mut self, trace: Trace) {
+        self.trace = trace;
     }
 
     /// Build the artifact-free native policy stack: sparse-engine
@@ -521,8 +538,16 @@ impl Trainer {
     }
 
     /// One full generation. Returns env steps consumed.
+    ///
+    /// Telemetry: when a sink is attached via [`Self::set_trace`], one
+    /// `generation` span records the rollout / refine / evolve /
+    /// SAC-update phase wall times and population stats. All
+    /// timestamps come from the sink clock and nothing here draws from
+    /// the trainer RNG, so the §8 thread-count bit-identity contract
+    /// holds with telemetry on (regression-tested).
     pub fn generation(&mut self) -> anyhow::Result<u64> {
         let start = self.env.iterations();
+        let t_gen = self.trace.now_ns();
         // --- rollouts ------------------------------------------------------
         if self.mode.uses_population() {
             self.rollout_population()?;
@@ -532,11 +557,13 @@ impl Trainer {
                 self.rollout_pg()?;
             }
         }
+        let t_rollout = self.trace.now_ns();
         // --- memetic elite refinement (before selection, so the sharpened
         // genomes and Lamarckian fitnesses drive this generation's ranking)
         if self.mode.uses_population() {
             self.refine_elites();
         }
+        let t_refine = self.trace.now_ns();
         let steps = self.env.iterations() - start;
         // --- evolution -------------------------------------------------------
         if self.mode.uses_population() {
@@ -554,6 +581,7 @@ impl Trainer {
             let mut rng = self.rng.fork();
             self.pop.evolve(params, &mut rng, &mut posterior);
         }
+        let t_evolve = self.trace.now_ns();
         // --- policy-gradient updates ----------------------------------------
         if let Some(sac) = self.sac.as_mut() {
             let b = sac.batch_size();
@@ -575,6 +603,46 @@ impl Trainer {
             }
         }
         self.generations += 1;
+        if self.trace.on() {
+            // Population stats are f64 folds over already-computed
+            // fitnesses: observe-only, no RNG, no effect on training.
+            let n = self.pop.len();
+            let (best_fit, mean_fit) = if n == 0 {
+                (0.0, 0.0)
+            } else {
+                let mut best = f64::NEG_INFINITY;
+                let mut sum = 0.0;
+                for m in &self.pop.members {
+                    best = best.max(m.fitness);
+                    sum += m.fitness;
+                }
+                (best, sum / n as f64)
+            };
+            self.trace.span(
+                &trace_id(self.cfg.seed, self.generations),
+                "generation",
+                None,
+                t_gen,
+                self.trace.now_ns(),
+                vec![
+                    ("gen", Json::Num(self.generations as f64)),
+                    ("steps", Json::Num(steps as f64)),
+                    ("iterations", Json::Num(self.env.iterations() as f64)),
+                    ("rollout_ns", Json::Num(t_rollout.saturating_sub(t_gen) as f64)),
+                    ("refine_ns", Json::Num(t_refine.saturating_sub(t_rollout) as f64)),
+                    ("evolve_ns", Json::Num(t_evolve.saturating_sub(t_refine) as f64)),
+                    (
+                        "sac_update_ns",
+                        Json::Num(self.trace.now_ns().saturating_sub(t_evolve) as f64),
+                    ),
+                    ("pop_size", Json::Num(n as f64)),
+                    ("pop_best_fitness", Json::Num(best_fit)),
+                    ("pop_mean_fitness", Json::Num(mean_fit)),
+                    ("replay_pushed", Json::Num(self.replay.total_pushed() as f64)),
+                    ("best_measured_speedup", Json::Num(self.best_measured)),
+                ],
+            );
+        }
         Ok(steps)
     }
 
@@ -648,6 +716,62 @@ mod tests {
     fn ea_trainer(steps: u64, seed: u64) -> Trainer {
         let env = Arc::new(MappingEnv::nnpi(Workload::ResNet50.build(), seed));
         Trainer::new(env, quick_cfg(steps, seed), Mode::EaOnly, None).unwrap()
+    }
+
+    /// ISSUE 9 tentpole guard: training telemetry is observe-only, so
+    /// attaching a span sink must not change a single bit of the run
+    /// (§8 bit-identity extended to the instrumented trainer) — while
+    /// still producing one parseable "generation" record per generation.
+    #[test]
+    fn telemetry_does_not_perturb_training() {
+        use crate::obs::{Clock, Trace, TraceSink};
+        use crate::utils::json::parse;
+
+        let dark = {
+            let mut t = ea_trainer(300, 31);
+            let mut log = RunLog::new("resnet50", "ea", 31);
+            let res = t.run(&mut log).unwrap();
+            (res.best_speedup, res.best_map, log.points)
+        };
+        let (sink, buf) = TraceSink::memory(Clock::fake(1_000));
+        let traced = {
+            let mut t = ea_trainer(300, 31);
+            t.set_trace(Trace::to(sink));
+            let mut log = RunLog::new("resnet50", "ea", 31);
+            let res = t.run(&mut log).unwrap();
+            (res.best_speedup, res.best_map, log.points, t.generations())
+        };
+        assert_eq!(
+            dark.0.to_bits(),
+            traced.0.to_bits(),
+            "telemetry changed best_speedup: {} vs {}",
+            dark.0,
+            traced.0
+        );
+        assert_eq!(dark.1, traced.1, "telemetry changed best_map");
+        assert_eq!(dark.2, traced.2, "telemetry changed the RunLog curve");
+
+        let bytes = buf.lock().unwrap().clone();
+        let text = String::from_utf8(bytes).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(
+            lines.len() as u64,
+            traced.3,
+            "expected one generation span per generation"
+        );
+        assert!(traced.3 > 0, "trainer ran zero generations");
+        for (i, line) in lines.iter().enumerate() {
+            let j = parse(line).unwrap();
+            assert_eq!(j.get("span").and_then(Json::as_str), Some("generation"));
+            assert_eq!(
+                j.get("gen").and_then(Json::as_f64),
+                Some((i + 1) as f64),
+                "generation records out of order"
+            );
+            assert!(j.get("trace_id").and_then(Json::as_str).is_some());
+            assert!(j.get("rollout_ns").and_then(Json::as_f64).is_some());
+            assert!(j.get("pop_best_fitness").and_then(Json::as_f64).is_some());
+        }
     }
 
     /// ISSUE 4 satellite regression: a directly-constructed config with

@@ -25,6 +25,7 @@
 
 pub mod xla;
 pub mod utils;
+pub mod obs;
 pub mod testing;
 pub mod graph;
 pub mod workloads;

@@ -110,6 +110,13 @@ fn cmd_train(cli: &Cli) -> anyhow::Result<()> {
             // a forced `aot` backend fails fast with a structured error.
             let runtime = open_runtime(cli)?;
             let mut trainer = Trainer::new(env.clone(), cfg, mode, runtime.as_ref())?;
+            if let Some(path) = cli.get("telemetry") {
+                // Observe-only span sink (DESIGN.md §16): the run is
+                // bit-identical with or without it.
+                let sink = egrl::obs::TraceSink::file(std::path::Path::new(path), egrl::obs::Clock::real())?;
+                trainer.set_trace(egrl::obs::Trace::to(sink));
+                eprintln!("egrl train: telemetry spans -> {path}");
+            }
             let res = trainer.run(&mut log)?;
             println!(
                 "generations: {}  iterations: {}",
@@ -191,6 +198,9 @@ fn cmd_serve(cli: &Cli) -> anyhow::Result<()> {
     if let Some(dir) = cli.get("spill") {
         cfg.set("serve_spill_dir", dir)?;
     }
+    if let Some(path) = cli.get("trace") {
+        cfg.set("serve_trace_path", path)?;
+    }
     // Fail fast on invariant-breaking configs — never panic in the pool.
     cfg.validate()?;
     let opts = ServeOptions::from_config(&cfg);
@@ -206,6 +216,9 @@ fn cmd_serve(cli: &Cli) -> anyhow::Result<()> {
             None => String::new(),
         }
     );
+    if let Some(p) = &opts.trace_path {
+        eprintln!("egrl serve: span tracing -> {}", p.display());
+    }
     if opts.max_connections > 0 || opts.queue_depth > 0 {
         eprintln!(
             "egrl serve: overload bounds — max {} connections, queue depth {} (0 = unbounded)",
@@ -231,6 +244,10 @@ fn cmd_serve(cli: &Cli) -> anyhow::Result<()> {
     if let Some(dir) = cli.get("save") {
         let written = broker.save_dir(std::path::Path::new(dir))?;
         eprintln!("egrl serve: saved {written} cache artifact(s) to {dir}");
+    }
+    if cli.get_bool("metrics") {
+        // Final scrape on stdout; live scrapes use the `metrics` op.
+        print!("{}", broker.prometheus());
     }
     Ok(())
 }

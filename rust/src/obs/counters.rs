@@ -1,0 +1,106 @@
+//! Sharded monotone counters (DESIGN.md §16).
+//!
+//! A [`ShardedCounter`] spreads increments over cache-line-padded
+//! atomic shards keyed by a per-thread index, so hot counters bumped
+//! from every connection thread never contend on one line. Reads sum
+//! the shards — counters are monotone, so a concurrent sum is a valid
+//! (point-in-time per-shard) lower bound of any later read, which is
+//! exactly the contract scrapes need.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+const SHARDS: usize = 16;
+
+/// One atomic on its own cache line.
+#[repr(align(64))]
+struct Shard(AtomicU64);
+
+/// A monotone `u64` counter sharded across cache lines.
+pub struct ShardedCounter {
+    shards: [Shard; SHARDS],
+}
+
+static NEXT_THREAD: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    static THREAD_SHARD: usize = NEXT_THREAD.fetch_add(1, Ordering::Relaxed) % SHARDS;
+}
+
+impl Default for ShardedCounter {
+    fn default() -> Self {
+        ShardedCounter::new()
+    }
+}
+
+impl ShardedCounter {
+    pub fn new() -> ShardedCounter {
+        ShardedCounter { shards: std::array::from_fn(|_| Shard(AtomicU64::new(0))) }
+    }
+
+    /// Add `n` on this thread's shard (relaxed — observe-only).
+    #[inline]
+    pub fn add(&self, n: u64) {
+        let i = THREAD_SHARD.with(|s| *s);
+        self.shards[i].0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Increment by one.
+    #[inline]
+    pub fn incr(&self) {
+        self.add(1);
+    }
+
+    /// Sum of all shards.
+    pub fn get(&self) -> u64 {
+        self.shards.iter().map(|s| s.0.load(Ordering::Relaxed)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_thread_counts_exactly() {
+        let c = ShardedCounter::new();
+        for _ in 0..1000 {
+            c.incr();
+        }
+        c.add(24);
+        assert_eq!(c.get(), 1024);
+    }
+
+    #[test]
+    fn concurrent_increments_are_lossless() {
+        let c = ShardedCounter::new();
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                scope.spawn(|| {
+                    for _ in 0..25_000 {
+                        c.incr();
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(), 200_000);
+    }
+
+    #[test]
+    fn reads_are_monotone_under_writers() {
+        let c = ShardedCounter::new();
+        std::thread::scope(|scope| {
+            let writer = scope.spawn(|| {
+                for _ in 0..100_000 {
+                    c.incr();
+                }
+            });
+            let mut last = 0u64;
+            while !writer.is_finished() {
+                let now = c.get();
+                assert!(now >= last, "counter went backwards: {last} -> {now}");
+                last = now;
+            }
+        });
+        assert_eq!(c.get(), 100_000);
+    }
+}

@@ -1,0 +1,349 @@
+//! Fixed-bucket log₂ latency histograms (DESIGN.md §16).
+//!
+//! 64 buckets, one per power of two of nanoseconds: bucket `i` holds
+//! samples in `[2^i, 2^(i+1))` (bucket 0 additionally absorbs 0 and 1).
+//! Recording is O(1) — a `leading_zeros` and an increment — so the
+//! serving hot path can record every request unconditionally; quantiles
+//! are recovered by rank-walking the buckets with linear interpolation
+//! inside the landing bucket, which pins every estimate to the bucket
+//! of the exact sorted-sample quantile (≤ 2× relative error by
+//! construction, property-tested below). Histograms are mergeable
+//! (fleet aggregation) and exist in two flavors: the plain [`Histogram`]
+//! for single-threaded consumers (benches) and the lock-free
+//! [`AtomicHistogram`] the broker records into concurrently, snapshotted
+//! into a plain one for reporting.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of log₂ buckets: one per bit of a `u64` nanosecond count.
+pub const BUCKETS: usize = 64;
+
+#[inline(always)]
+fn bucket_of(v: u64) -> usize {
+    if v < 2 {
+        0
+    } else {
+        63 - v.leading_zeros() as usize
+    }
+}
+
+/// Inclusive lower bound of bucket `i` in ns.
+#[inline]
+pub fn bucket_lo(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else {
+        1u64 << i
+    }
+}
+
+/// Exclusive upper bound of bucket `i` in ns (saturates at `u64::MAX`).
+#[inline]
+pub fn bucket_hi(i: usize) -> u64 {
+    if i >= 63 {
+        u64::MAX
+    } else {
+        1u64 << (i + 1)
+    }
+}
+
+/// Plain (single-writer) log₂ histogram over nanosecond samples.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Histogram {
+    counts: [u64; BUCKETS],
+    count: u64,
+    sum_ns: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram { counts: [0; BUCKETS], count: 0, sum_ns: 0 }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    /// Record one sample. Zero and `u64::MAX` are both representable
+    /// (bucket 0 and bucket 63 — the overflow bucket — respectively).
+    #[inline]
+    pub fn record_ns(&mut self, v: u64) {
+        self.counts[bucket_of(v)] += 1;
+        self.count += 1;
+        self.sum_ns = self.sum_ns.saturating_add(v);
+    }
+
+    /// Convenience: record a `Duration`'s nanoseconds (saturating).
+    #[inline]
+    pub fn record(&mut self, d: std::time::Duration) {
+        self.record_ns(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    /// Merge another histogram into this one (bucket-wise; exact — the
+    /// merged quantiles are those of the concatenated sample streams
+    /// up to the shared bucket resolution).
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_ns = self.sum_ns.saturating_add(other.sum_ns);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum_ns(&self) -> u64 {
+        self.sum_ns
+    }
+
+    /// Mean in ns (0 for the empty histogram). Exact — the sum is
+    /// tracked alongside the buckets.
+    pub fn mean_ns(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_ns as f64 / self.count as f64
+        }
+    }
+
+    /// Per-bucket counts (for exposition formats).
+    pub fn buckets(&self) -> &[u64; BUCKETS] {
+        &self.counts
+    }
+
+    /// Nearest-rank quantile with linear interpolation inside the
+    /// landing bucket, in ns. `q` is clamped to `[0, 1]`; the empty
+    /// histogram reports 0. The interpolated value always lies inside
+    /// the bucket that contains the exact rank-`⌈q·n⌉` sample, so the
+    /// estimate is within one power of two of the exact sorted-sample
+    /// quantile (property-tested).
+    pub fn quantile_ns(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let target = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for i in 0..BUCKETS {
+            let c = self.counts[i];
+            if c == 0 {
+                continue;
+            }
+            cum += c;
+            if cum >= target {
+                let rank_in_bucket = target - (cum - c); // 1..=c
+                let frac = rank_in_bucket as f64 / c as f64;
+                let lo = bucket_lo(i) as f64;
+                let hi = bucket_hi(i) as f64;
+                return lo + (hi - lo) * frac;
+            }
+        }
+        bucket_hi(BUCKETS - 1) as f64 // unreachable when count > 0
+    }
+
+    /// Quantile in microseconds (reporting convenience).
+    pub fn quantile_us(&self, q: f64) -> f64 {
+        self.quantile_ns(q) / 1e3
+    }
+
+    /// Mean in microseconds.
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns() / 1e3
+    }
+}
+
+/// Lock-free concurrent histogram: relaxed atomic increments per
+/// record (the buckets are independent monotone counters — no
+/// cross-bucket invariant to tear), snapshotted into a plain
+/// [`Histogram`] for quantile math. A snapshot taken while writers are
+/// live is a per-bucket-consistent view: each bucket is exact at some
+/// point during the scan, which is all a monotone counter needs.
+pub struct AtomicHistogram {
+    counts: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+}
+
+impl Default for AtomicHistogram {
+    fn default() -> Self {
+        AtomicHistogram::new()
+    }
+}
+
+impl AtomicHistogram {
+    pub fn new() -> AtomicHistogram {
+        AtomicHistogram {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one sample (relaxed: these are observe-only monotone
+    /// counters; no ordering with any decision path is implied).
+    #[inline]
+    pub fn record_ns(&self, v: u64) {
+        self.counts[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Convenience: record a `Duration`'s nanoseconds (saturating).
+    #[inline]
+    pub fn record(&self, d: std::time::Duration) {
+        self.record_ns(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    /// Copy into a plain histogram for quantiles/merging/exposition.
+    pub fn snapshot(&self) -> Histogram {
+        let mut h = Histogram::new();
+        for (i, c) in self.counts.iter().enumerate() {
+            h.counts[i] = c.load(Ordering::Relaxed);
+        }
+        h.count = self.count.load(Ordering::Relaxed);
+        h.sum_ns = self.sum_ns.load(Ordering::Relaxed);
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::utils::Rng;
+
+    #[test]
+    fn zero_and_overflow_buckets_record() {
+        let mut h = Histogram::new();
+        h.record_ns(0);
+        h.record_ns(1);
+        h.record_ns(u64::MAX);
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.buckets()[0], 2, "0 and 1 both land in bucket 0");
+        assert_eq!(h.buckets()[63], 1, "u64::MAX lands in the overflow bucket");
+        // Quantiles stay finite at both extremes.
+        assert!(h.quantile_ns(0.0) >= 0.0);
+        assert!(h.quantile_ns(1.0).is_finite());
+        assert!(h.quantile_ns(1.0) >= bucket_lo(63) as f64);
+        // The sum saturates instead of wrapping.
+        h.record_ns(u64::MAX);
+        assert_eq!(h.sum_ns(), u64::MAX);
+    }
+
+    #[test]
+    fn bucket_bounds_partition_the_u64_line() {
+        for i in 0..BUCKETS {
+            let lo = bucket_lo(i);
+            assert_eq!(bucket_of(lo), i, "lower bound of bucket {i} must land in it");
+            if i < 63 {
+                assert_eq!(bucket_of(bucket_hi(i) - 1), i);
+                assert_eq!(bucket_hi(i), bucket_lo(i + 1));
+            }
+        }
+        assert_eq!(bucket_of(u64::MAX), 63);
+    }
+
+    #[test]
+    fn merge_of_disjoint_ranges_is_exact() {
+        // One histogram of sub-microsecond samples, one of multi-ms
+        // samples: the merge must report each side's quantiles at the
+        // blended ranks, and count/sum must add exactly.
+        let mut lo = Histogram::new();
+        let mut hi = Histogram::new();
+        for _ in 0..100 {
+            lo.record_ns(500); // bucket 8
+            hi.record_ns(4_000_000); // bucket 21
+        }
+        let mut merged = lo.clone();
+        merged.merge(&hi);
+        assert_eq!(merged.count(), 200);
+        assert_eq!(merged.sum_ns(), lo.sum_ns() + hi.sum_ns());
+        // p25 comes from the low population, p75 from the high one.
+        let p25 = merged.quantile_ns(0.25);
+        assert!((256.0..1024.0).contains(&p25), "p25 in the low bucket: {p25}");
+        let p75 = merged.quantile_ns(0.75);
+        assert!(
+            (2_097_152.0..8_388_608.0).contains(&p75),
+            "p75 in the high bucket: {p75}"
+        );
+        // Merging an empty histogram changes nothing.
+        let before = merged.clone();
+        merged.merge(&Histogram::new());
+        assert_eq!(merged, before);
+    }
+
+    /// Property test: on random samples the interpolated histogram
+    /// quantile lands in the same log₂ bucket as the exact nearest-rank
+    /// sorted-sample quantile — i.e. within one power of two.
+    #[test]
+    fn quantiles_track_exact_sorted_quantiles() {
+        let mut rng = Rng::new(17);
+        for trial in 0..20 {
+            let n = 50 + (trial * 97) % 400;
+            let mut h = Histogram::new();
+            let mut samples: Vec<u64> = (0..n)
+                .map(|_| {
+                    // Log-uniform-ish spread over ~6 decades, the shape
+                    // of real latency distributions.
+                    let exp = rng.below(30) as u32;
+                    let base = 1u64 << exp;
+                    base + rng.below(base.max(1))
+                })
+                .collect();
+            for &s in &samples {
+                h.record_ns(s);
+            }
+            samples.sort_unstable();
+            for q in [0.5, 0.9, 0.99] {
+                let rank = ((q * n as f64).ceil() as usize).clamp(1, n);
+                let exact = samples[rank - 1];
+                let est = h.quantile_ns(q);
+                let (lo, hi) = (bucket_lo(bucket_of(exact)), bucket_hi(bucket_of(exact)));
+                assert!(
+                    est >= lo as f64 && est <= hi as f64,
+                    "trial {trial} q={q}: estimate {est} outside bucket [{lo},{hi}) of exact {exact}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn empty_histogram_reports_zeros() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean_ns(), 0.0);
+        assert_eq!(h.quantile_ns(0.5), 0.0);
+    }
+
+    #[test]
+    fn atomic_histogram_snapshot_matches_plain() {
+        let a = AtomicHistogram::new();
+        let mut p = Histogram::new();
+        let mut rng = Rng::new(3);
+        for _ in 0..1000 {
+            let v = rng.below(1 << 20);
+            a.record_ns(v);
+            p.record_ns(v);
+        }
+        assert_eq!(a.snapshot(), p);
+    }
+
+    #[test]
+    fn concurrent_recording_loses_nothing() {
+        let a = AtomicHistogram::new();
+        std::thread::scope(|scope| {
+            for t in 0..4 {
+                let a = &a;
+                scope.spawn(move || {
+                    for i in 0..10_000u64 {
+                        a.record_ns(t * 1000 + i % 7);
+                    }
+                });
+            }
+        });
+        assert_eq!(a.snapshot().count(), 40_000);
+    }
+}

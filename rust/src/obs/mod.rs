@@ -1,0 +1,91 @@
+//! Observability core (DESIGN.md §16): dependency-free telemetry
+//! threaded through serving and training.
+//!
+//! Four pieces, composed by the broker and the trainer:
+//!
+//! - [`hist`] — fixed-bucket log₂ latency histograms (`record_ns` is
+//!   O(1); p50/p90/p99 by bucket interpolation; mergeable; atomic
+//!   variant for concurrent recording). Always on — recording is two
+//!   relaxed increments, cheap enough for every request.
+//! - [`counters`] — cache-line-sharded monotone counters for hot
+//!   increments shared across connection threads.
+//! - [`trace`] — structured JSON-lines span tracing behind a
+//!   [`Trace`] handle that is an inlined no-op (no clock reads, no
+//!   allocation) when no sink is configured.
+//! - [`prom`] — Prometheus-style text exposition of all of the above.
+//!
+//! The cardinal rule, inherited from the §8 bit-identity and chaos
+//! determinism contracts: telemetry is **observe-only**. Nothing in
+//! this module draws from any RNG, and no decision path may branch on
+//! a clock read made here. Timestamps flow through [`Clock`], which
+//! tests replace with a fake that steps deterministically per read, so
+//! span trees are asserted byte-for-byte under the fault harness.
+
+pub mod counters;
+pub mod hist;
+pub mod prom;
+pub mod trace;
+
+pub use counters::ShardedCounter;
+pub use hist::{AtomicHistogram, Histogram};
+pub use prom::Prom;
+pub use trace::{trace_id, Trace, TraceSink};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// A monotonic nanosecond clock with a deterministic test double.
+///
+/// `Clock::real()` anchors a process-local `Instant` and reports
+/// elapsed nanoseconds. `Clock::fake(step)` returns `step`, `2·step`,
+/// `3·step`, … on successive reads — shared through an `Arc`, so every
+/// clone observes one global read sequence and trace timestamps become
+/// a pure function of the read order, which deterministic tests pin.
+#[derive(Clone)]
+pub enum Clock {
+    Real(Instant),
+    Fake(Arc<AtomicU64>, u64),
+}
+
+impl Clock {
+    /// Wall-clock-backed monotonic time (production).
+    pub fn real() -> Clock {
+        Clock::Real(Instant::now())
+    }
+
+    /// Deterministic clock advancing `step_ns` per read (tests).
+    pub fn fake(step_ns: u64) -> Clock {
+        Clock::Fake(Arc::new(AtomicU64::new(0)), step_ns)
+    }
+
+    /// Nanoseconds since the clock's origin; monotone non-decreasing.
+    pub fn now_ns(&self) -> u64 {
+        match self {
+            Clock::Real(t0) => t0.elapsed().as_nanos().min(u64::MAX as u128) as u64,
+            Clock::Fake(c, step) => c.fetch_add(*step, Ordering::Relaxed) + *step,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fake_clock_steps_deterministically_across_clones() {
+        let c = Clock::fake(250);
+        let d = c.clone();
+        assert_eq!(c.now_ns(), 250);
+        assert_eq!(d.now_ns(), 500, "clones share one read sequence");
+        assert_eq!(c.now_ns(), 750);
+    }
+
+    #[test]
+    fn real_clock_is_monotone() {
+        let c = Clock::real();
+        let a = c.now_ns();
+        let b = c.now_ns();
+        assert!(b >= a);
+    }
+}

@@ -1,0 +1,123 @@
+//! Prometheus-style text exposition (DESIGN.md §16).
+//!
+//! A tiny builder over the exposition format version 0.0.4: `# HELP`
+//! and `# TYPE` comment lines followed by sample lines. Only the three
+//! shapes the broker needs — monotone counters, point-in-time gauges,
+//! and cumulative `le` histograms (log₂ nanosecond buckets rendered as
+//! seconds, the Prometheus convention for latency) — no labels beyond
+//! `le`, no dependencies.
+
+use super::hist::{bucket_hi, Histogram, BUCKETS};
+
+/// Builder for one exposition page.
+#[derive(Default)]
+pub struct Prom {
+    out: String,
+}
+
+impl Prom {
+    pub fn new() -> Prom {
+        Prom::default()
+    }
+
+    fn header(&mut self, name: &str, help: &str, kind: &str) {
+        self.out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+    }
+
+    /// A monotone counter. Prometheus convention: name ends `_total`.
+    pub fn counter(&mut self, name: &str, help: &str, v: u64) {
+        self.header(name, help, "counter");
+        self.out.push_str(&format!("{name} {v}\n"));
+    }
+
+    /// A point-in-time gauge.
+    pub fn gauge(&mut self, name: &str, help: &str, v: f64) {
+        self.header(name, help, "gauge");
+        self.out.push_str(&format!("{name} {v}\n"));
+    }
+
+    /// A log₂ histogram as cumulative `le` buckets in **seconds**.
+    /// Empty buckets above the highest populated one are elided (the
+    /// `+Inf` bucket carries the total), keeping pages compact.
+    pub fn histogram(&mut self, name: &str, help: &str, h: &Histogram) {
+        self.header(name, help, "histogram");
+        let top = h
+            .buckets()
+            .iter()
+            .rposition(|&c| c > 0)
+            .map(|i| i + 1)
+            .unwrap_or(0)
+            .min(BUCKETS);
+        let mut cum = 0u64;
+        for i in 0..top {
+            cum += h.buckets()[i];
+            let le = bucket_hi(i) as f64 / 1e9;
+            self.out.push_str(&format!("{name}_bucket{{le=\"{le}\"}} {cum}\n"));
+        }
+        self.out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {}\n", h.count()));
+        self.out.push_str(&format!("{name}_sum {}\n", h.sum_ns() as f64 / 1e9));
+        self.out.push_str(&format!("{name}_count {}\n", h.count()));
+    }
+
+    /// The finished page.
+    pub fn render(self) -> String {
+        self.out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_render_with_headers() {
+        let mut p = Prom::new();
+        p.counter("egrl_requests_total", "Requests handled.", 42);
+        p.gauge("egrl_cache_entries", "Live cache entries.", 3.0);
+        let page = p.render();
+        assert!(page.contains("# HELP egrl_requests_total Requests handled.\n"));
+        assert!(page.contains("# TYPE egrl_requests_total counter\n"));
+        assert!(page.contains("\negrl_requests_total 42\n") || page.starts_with("# HELP"));
+        assert!(page.contains("egrl_cache_entries 3\n"));
+        assert!(page.contains("# TYPE egrl_cache_entries gauge\n"));
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_and_capped_by_inf() {
+        let mut h = Histogram::new();
+        for _ in 0..10 {
+            h.record_ns(500); // bucket 8, le = 1024ns
+        }
+        for _ in 0..5 {
+            h.record_ns(2000); // bucket 10, le = 4096ns
+        }
+        let mut p = Prom::new();
+        p.histogram("egrl_hit_latency_seconds", "Hit latency.", &h);
+        let page = p.render();
+        assert!(page.contains("# TYPE egrl_hit_latency_seconds histogram\n"));
+        // Cumulative counts: the 1024ns bucket holds 10, 4096ns holds 15.
+        assert!(page.contains("egrl_hit_latency_seconds_bucket{le=\"0.000001024\"} 10\n"));
+        assert!(page.contains("egrl_hit_latency_seconds_bucket{le=\"0.000004096\"} 15\n"));
+        assert!(page.contains("egrl_hit_latency_seconds_bucket{le=\"+Inf\"} 15\n"));
+        assert!(page.contains("egrl_hit_latency_seconds_count 15\n"));
+        // Sum in seconds: 10*500ns + 5*2000ns = 15000ns = 1.5e-5 s.
+        assert!(page.contains("egrl_hit_latency_seconds_sum 0.000015\n"));
+        // Cumulative monotonicity across every bucket line.
+        let mut last = 0u64;
+        for line in page.lines().filter(|l| l.contains("_bucket")) {
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= last, "bucket counts must be cumulative: {line}");
+            last = v;
+        }
+    }
+
+    #[test]
+    fn empty_histogram_renders_only_inf_bucket() {
+        let mut p = Prom::new();
+        p.histogram("egrl_cold_latency_seconds", "Cold latency.", &Histogram::new());
+        let page = p.render();
+        assert!(page.contains("egrl_cold_latency_seconds_bucket{le=\"+Inf\"} 0\n"));
+        assert!(page.contains("egrl_cold_latency_seconds_count 0\n"));
+        assert!(!page.contains("le=\"0."));
+    }
+}

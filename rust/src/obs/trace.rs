@@ -1,0 +1,236 @@
+//! Structured JSON-lines tracing (DESIGN.md §16).
+//!
+//! A [`TraceSink`] serializes timed spans as one compact JSON object
+//! per line to a file (`serve_trace_path`, `train --telemetry`) or an
+//! in-memory buffer (tests). The [`Trace`] handle the instrumented
+//! code holds is an `Option<Arc<TraceSink>>` behind `#[inline(always)]`
+//! accessors: when no sink is configured the handle is `None`, every
+//! call collapses to a null check, and — critically — **no clock is
+//! read**, so the dark path costs nothing and perturbs nothing (the
+//! same inert-when-off shape as `serve/faults.rs`).
+//!
+//! Determinism contract: trace ids derive from the configured seed and
+//! a request ordinal — never from wall clock — so replaying the same
+//! request stream yields the same ids. Timestamps come from the sink's
+//! [`Clock`](super::Clock); tests install a fake clock that steps a
+//! fixed amount per read, making entire span trees byte-stable.
+
+use std::io::Write;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use super::Clock;
+use crate::utils::json::Json;
+use crate::utils::sync::lock_recover;
+
+/// SplitMix64 finalizer — the standard 64-bit avalanche mixer.
+fn mix64(mut x: u64) -> u64 {
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Domain tag so trace ids never collide with other seeded streams.
+const TRACE_DOMAIN: u64 = 0x0B5E_7261_CE1D_0000;
+
+/// Derive a 128-bit trace id (32 hex chars) from the configured seed
+/// and a per-process request ordinal. Pure function of its inputs —
+/// no wall clock — so identical request streams replay identically.
+pub fn trace_id(seed: u64, ordinal: u64) -> String {
+    let a = mix64(seed ^ TRACE_DOMAIN ^ mix64(ordinal));
+    let b = mix64(a ^ 0x9E37_79B9_7F4A_7C15);
+    format!("{a:016x}{b:016x}")
+}
+
+enum Out {
+    File(std::io::BufWriter<std::fs::File>),
+    Memory(Arc<Mutex<Vec<u8>>>),
+}
+
+/// A JSON-lines span sink with its own monotonic [`Clock`].
+pub struct TraceSink {
+    clock: Clock,
+    out: Mutex<Out>,
+}
+
+impl TraceSink {
+    /// Open (truncate) a trace file.
+    pub fn file(path: &Path, clock: Clock) -> anyhow::Result<Arc<TraceSink>> {
+        let f = std::fs::File::create(path)
+            .map_err(|e| anyhow::anyhow!("cannot open trace sink {}: {e}", path.display()))?;
+        Ok(Arc::new(TraceSink { clock, out: Mutex::new(Out::File(std::io::BufWriter::new(f))) }))
+    }
+
+    /// An in-memory sink; the returned buffer handle reads it back.
+    pub fn memory(clock: Clock) -> (Arc<TraceSink>, Arc<Mutex<Vec<u8>>>) {
+        let buf = Arc::new(Mutex::new(Vec::new()));
+        let sink = Arc::new(TraceSink { clock, out: Mutex::new(Out::Memory(buf.clone())) });
+        (sink, buf)
+    }
+
+    /// Read the sink's clock.
+    pub fn now_ns(&self) -> u64 {
+        self.clock.now_ns()
+    }
+
+    /// Append one record as a compact JSON line. IO errors are
+    /// swallowed: telemetry must never take down serving.
+    pub fn emit(&self, record: &Json) {
+        let mut line = record.to_string_compact();
+        line.push('\n');
+        match &mut *lock_recover(&self.out) {
+            Out::File(w) => {
+                let _ = w.write_all(line.as_bytes());
+                let _ = w.flush();
+            }
+            Out::Memory(buf) => lock_recover(buf).extend_from_slice(line.as_bytes()),
+        }
+    }
+}
+
+/// The cheap, cloneable handle instrumented code holds. `Trace::off()`
+/// (the default) makes every method an inlined no-op.
+#[derive(Clone, Default)]
+pub struct Trace(Option<Arc<TraceSink>>);
+
+impl Trace {
+    /// The dark handle: all methods no-ops, no clock reads.
+    pub fn off() -> Trace {
+        Trace(None)
+    }
+
+    /// A live handle writing to `sink`.
+    pub fn to(sink: Arc<TraceSink>) -> Trace {
+        Trace(Some(sink))
+    }
+
+    /// Is a sink attached?
+    #[inline(always)]
+    pub fn on(&self) -> bool {
+        self.0.is_some()
+    }
+
+    /// Current time from the sink's clock, or 0 when dark. The dark
+    /// path reads no clock at all — observe-only by construction.
+    #[inline(always)]
+    pub fn now_ns(&self) -> u64 {
+        match &self.0 {
+            Some(s) => s.now_ns(),
+            None => 0,
+        }
+    }
+
+    /// Emit a timed span. No-op when dark (the field vector is built
+    /// by the caller only after checking `on()`, or passed empty).
+    pub fn span(
+        &self,
+        trace_id: &str,
+        name: &str,
+        parent: Option<&str>,
+        start_ns: u64,
+        end_ns: u64,
+        fields: Vec<(&str, Json)>,
+    ) {
+        let Some(sink) = &self.0 else { return };
+        let mut kv: Vec<(&str, Json)> = vec![
+            ("type", Json::str("span")),
+            ("trace_id", Json::str(trace_id)),
+            ("span", Json::str(name)),
+            ("start_ns", Json::Num(start_ns as f64)),
+            ("end_ns", Json::Num(end_ns as f64)),
+            ("dur_ns", Json::Num(end_ns.saturating_sub(start_ns) as f64)),
+        ];
+        if let Some(p) = parent {
+            kv.push(("parent", Json::str(p)));
+        }
+        kv.extend(fields);
+        sink.emit(&Json::obj(kv));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::utils::json::parse;
+
+    fn field<'a>(j: &'a Json, key: &str) -> &'a Json {
+        j.get(key).unwrap_or_else(|| panic!("missing field {key}"))
+    }
+
+    #[test]
+    fn trace_ids_are_deterministic_and_seed_scoped() {
+        assert_eq!(trace_id(7, 0), trace_id(7, 0));
+        assert_ne!(trace_id(7, 0), trace_id(7, 1));
+        assert_ne!(trace_id(7, 0), trace_id(8, 0));
+        assert_eq!(trace_id(7, 3).len(), 32);
+        assert!(trace_id(7, 3).chars().all(|c| c.is_ascii_hexdigit()));
+    }
+
+    #[test]
+    fn dark_handle_reads_no_clock_and_emits_nothing() {
+        let t = Trace::off();
+        assert!(!t.on());
+        assert_eq!(t.now_ns(), 0);
+        t.span("dead", "handler", None, 0, 0, vec![]); // must not panic
+    }
+
+    #[test]
+    fn memory_sink_round_trips_span_lines() {
+        let (sink, buf) = TraceSink::memory(Clock::fake(1000));
+        let t = Trace::to(sink);
+        assert!(t.on());
+        let s = t.now_ns();
+        let e = t.now_ns();
+        t.span(&trace_id(1, 0), "handler", None, s, e, vec![("op", Json::str("map"))]);
+        t.span(&trace_id(1, 0), "inline_refine", Some("handler"), e, t.now_ns(), vec![]);
+        let bytes = buf.lock().unwrap().clone();
+        let text = String::from_utf8(bytes).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let first = parse(lines[0]).unwrap();
+        assert_eq!(field(&first, "span").as_str().unwrap(), "handler");
+        assert_eq!(field(&first, "start_ns").as_f64().unwrap(), 1000.0);
+        assert_eq!(field(&first, "end_ns").as_f64().unwrap(), 2000.0);
+        assert_eq!(field(&first, "dur_ns").as_f64().unwrap(), 1000.0);
+        let second = parse(lines[1]).unwrap();
+        assert_eq!(field(&second, "parent").as_str().unwrap(), "handler");
+        assert_eq!(
+            field(&second, "trace_id").as_str().unwrap(),
+            field(&first, "trace_id").as_str().unwrap()
+        );
+    }
+
+    #[test]
+    fn fake_clock_makes_spans_byte_stable() {
+        let run = || {
+            let (sink, buf) = TraceSink::memory(Clock::fake(500));
+            let t = Trace::to(sink);
+            for i in 0..5u64 {
+                let s = t.now_ns();
+                let e = t.now_ns();
+                t.span(&trace_id(42, i), "handler", None, s, e, vec![]);
+            }
+            buf.lock().unwrap().clone()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn file_sink_writes_json_lines() {
+        let dir = std::env::temp_dir().join(format!("egrl_trace_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.jsonl");
+        {
+            let sink = TraceSink::file(&path, Clock::fake(10)).unwrap();
+            let t = Trace::to(sink);
+            let s = t.now_ns();
+            t.span(&trace_id(0, 0), "generation", None, s, t.now_ns(), vec![]);
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 1);
+        assert!(parse(text.lines().next().unwrap()).is_ok());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

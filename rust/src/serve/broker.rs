@@ -75,13 +75,14 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::config::{EgrlConfig, MAX_DEADLINE_MS};
 use crate::env::{EnvConfig, MappingEnv, MoveBatch};
 use crate::mapping::MemoryMap;
+use crate::obs::{trace_id, AtomicHistogram, Clock, Histogram, Prom, Trace, TraceSink};
 use crate::sim::spec::ChipSpec;
 use crate::utils::json::{parse, Json};
 use crate::utils::pool::{PriorityJobQueue, Push};
@@ -145,6 +146,9 @@ pub struct ServeOptions {
     /// Spill-tier size bound in bytes (oldest artifacts deleted beyond
     /// it — `spill_evictions`). 0 = unbounded.
     pub spill_max_bytes: u64,
+    /// JSON-lines span-trace sink (`serve_trace_path`). `None` keeps
+    /// the instrumentation dark — an inlined no-op with no clock reads.
+    pub trace_path: Option<PathBuf>,
     /// Environment (reward/noise) configuration.
     pub env: EnvConfig,
 }
@@ -166,6 +170,11 @@ impl ServeOptions {
             max_connections: cfg.serve_max_connections,
             queue_depth: cfg.serve_queue_depth,
             spill_max_bytes: cfg.serve_spill_max_bytes,
+            trace_path: if cfg.serve_trace_path.is_empty() {
+                None
+            } else {
+                Some(PathBuf::from(&cfg.serve_trace_path))
+            },
             env: cfg.env_config(),
         }
     }
@@ -184,6 +193,19 @@ struct RefineJob {
     start: MemoryMap,
     budget: u64,
     seed: u64,
+    /// Trace id of the request that enqueued this job, so the
+    /// background span lands in the same trace as its handler span.
+    /// `None` when tracing is dark.
+    trace_id: Option<String>,
+}
+
+/// Per-request span context: the deterministic trace id (derived from
+/// the broker seed and a request ordinal — never wall clock) plus the
+/// request's start timestamp on the sink clock. `None` end to end when
+/// tracing is dark, so the instrumented paths cost one null check.
+struct ReqSpan {
+    id: String,
+    t0_ns: u64,
 }
 
 #[derive(Clone, Copy, Debug, Default)]
@@ -191,6 +213,11 @@ struct Counters {
     requests: u64,
     map_hits: u64,
     map_misses: u64,
+    /// Misses that ran the full cold search (no cache entry, no spill
+    /// artifact). Conservation law, asserted by the chaos test:
+    /// `map_misses == cold_paths + spill_hits` whenever every spill
+    /// restore came through the `map` path (`polish` also restores).
+    cold_paths: u64,
     /// Hits served while a background refinement of the same entry was
     /// in flight (the served map is one publish behind the search).
     stale_hits: u64,
@@ -274,6 +301,20 @@ pub struct Broker {
     /// Per-broker fault-injection handle (empty and zero-cost outside
     /// chaos tests — see [`faults`]).
     faults: faults::Hooks,
+    /// Broker construction instant — the `uptime_ms` anchor. Observe-
+    /// only: nothing branches on it.
+    started: Instant,
+    /// Hit-path response latency (log₂ ns buckets, always on — two
+    /// relaxed increments per request).
+    hist_hit: AtomicHistogram,
+    /// Cold-path response latency (miss / spill restore / waiter
+    /// snapshot responses).
+    hist_cold: AtomicHistogram,
+    /// Span-trace handle: inert no-op (no clock reads) unless
+    /// `trace_path` configured a sink or a test attached one.
+    trace: Trace,
+    /// Monotone request ordinal feeding deterministic trace ids.
+    trace_seq: AtomicU64,
 }
 
 /// RAII claim on the cold path for one fingerprint: created by the
@@ -302,6 +343,18 @@ impl Broker {
     pub fn new(opts: ServeOptions) -> Broker {
         let cache = MapCache::new(opts.cache_cap);
         let queue = PriorityJobQueue::bounded(opts.queue_depth);
+        // Telemetry must never take the broker down: a bad trace path
+        // logs once and serves dark instead of failing construction.
+        let trace = match &opts.trace_path {
+            Some(p) => match TraceSink::file(p, Clock::real()) {
+                Ok(sink) => Trace::to(sink),
+                Err(e) => {
+                    eprintln!("serve: span tracing disabled: {e:#}");
+                    Trace::off()
+                }
+            },
+            None => Trace::off(),
+        };
         Broker {
             opts,
             envs: Mutex::new(HashMap::new()),
@@ -318,6 +371,11 @@ impl Broker {
             cold_progress: Mutex::new(HashMap::new()),
             counters: Mutex::new(Counters::default()),
             faults: faults::Hooks::default(),
+            started: Instant::now(),
+            hist_hit: AtomicHistogram::new(),
+            hist_cold: AtomicHistogram::new(),
+            trace,
+            trace_seq: AtomicU64::new(0),
         }
     }
 
@@ -391,6 +449,13 @@ impl Broker {
     /// ops).
     pub fn handle(&self, line: &str) -> String {
         self.bump(|c| c.requests += 1);
+        // Span context (None when tracing is dark): the trace id is a
+        // pure function of the broker seed and the request ordinal, so
+        // replaying a request stream replays its ids byte for byte.
+        let span = self.trace.on().then(|| {
+            let ord = self.trace_seq.fetch_add(1, Ordering::Relaxed);
+            ReqSpan { id: trace_id(self.opts.seed, ord), t0_ns: self.trace.now_ns() }
+        });
         // Panic isolation boundary: a panic anywhere in request handling
         // (including an unwinding cold-path claimant — its ColdClaim
         // drop guard has already woken the waiters by the time we're
@@ -398,7 +463,7 @@ impl Broker {
         // the broker serving. AssertUnwindSafe is justified by the
         // utils::sync recovery policy: every shared structure is
         // consistent at each mutation point.
-        let handled = catch_unwind(AssertUnwindSafe(|| self.handle_inner(line)));
+        let handled = catch_unwind(AssertUnwindSafe(|| self.handle_inner(line, span.as_ref())));
         let resp = match handled {
             Ok(Ok(j)) => j,
             Ok(Err(e)) => {
@@ -427,27 +492,46 @@ impl Broker {
         resp.to_string_compact()
     }
 
-    fn handle_inner(&self, line: &str) -> anyhow::Result<Json> {
+    fn handle_inner(&self, line: &str, span: Option<&ReqSpan>) -> anyhow::Result<Json> {
         self.faults.maybe_panic("handler");
         let req = parse(line)?;
         let op = req
             .get("op")
             .and_then(Json::as_str)
             .ok_or_else(|| anyhow::anyhow!("request missing 'op'"))?;
-        match op {
-            "map" => self.op_map(&req),
-            "polish" => self.op_polish(&req),
+        let resp = match op {
+            "map" => self.op_map(&req, span),
+            "polish" => self.op_polish(&req, span),
             "stats" => Ok(self.op_stats()),
-            "evict" => self.op_evict(&req),
+            "metrics" => Ok(self.op_metrics(&req)),
+            "evict" => self.op_evict(&req, span),
             "drain" => Ok(self.op_drain()),
             "shutdown" => {
                 self.stop.store(true, Ordering::SeqCst);
                 Ok(Json::obj(vec![("ok", Json::Bool(true)), ("op", Json::str("shutdown"))]))
             }
             other => {
-                anyhow::bail!("unknown op '{other}' (expected map|polish|stats|evict|drain|shutdown)")
+                anyhow::bail!(
+                    "unknown op '{other}' (expected map|polish|stats|metrics|evict|drain|shutdown)"
+                )
             }
+        };
+        // Root span of the request's tree. Children emitted inside the
+        // ops appear earlier in the sink (spans emit at completion);
+        // requests that fail before dispatch (bad JSON, missing op) or
+        // panic emit no spans — the structured error line is their
+        // record.
+        if let Some(s) = span {
+            self.trace.span(
+                &s.id,
+                "handler",
+                None,
+                s.t0_ns,
+                self.trace.now_ns(),
+                vec![("op", Json::str(op)), ("ok", Json::Bool(resp.is_ok()))],
+            );
         }
+        resp
     }
 
     /// Graceful drain for rolling restarts: raises the stop flag (so
@@ -506,7 +590,7 @@ impl Broker {
         }
     }
 
-    fn op_map(&self, req: &Json) -> anyhow::Result<Json> {
+    fn op_map(&self, req: &Json, span: Option<&ReqSpan>) -> anyhow::Result<Json> {
         let t0 = Instant::now();
         let w = self.req_workload(req)?;
         let return_map = req.get("return_map").and_then(Json::as_bool).unwrap_or(false);
@@ -518,6 +602,7 @@ impl Broker {
         // the other connections wait on `cold_cv` and are served the
         // claimant's entry (counted `coalesced_misses`, §12).
         let mut counted_coalesce = false;
+        let mut wait_start_ns = 0u64;
         let _claim = loop {
             if let Some(entry) = self.cache.get(fp) {
                 self.bump(|c| c.map_hits += 1);
@@ -530,16 +615,18 @@ impl Broker {
                     if !entry.converged && entry.refine_iters < self.opts.refine_budget {
                         let remaining = self.opts.refine_budget - entry.refine_iters;
                         let prio = self.refine_priority(fp);
-                        self.maybe_enqueue(w, fp, entry.map.clone(), remaining, prio)
+                        self.maybe_enqueue(w, fp, entry.map.clone(), remaining, prio, span)
                     } else {
                         self.refining(fp)
                     };
+                self.hist_hit.record(t0.elapsed());
                 return Ok(map_response(w, fp, "hit", None, &entry, refining, return_map));
             }
             let mut cold = lock_recover(&self.cold_in_flight);
             if cold.contains(&fp) {
                 if !counted_coalesce {
                     counted_coalesce = true;
+                    wait_start_ns = self.trace.now_ns();
                     self.bump(|c| c.coalesced_misses += 1);
                 }
                 // Wait for the claimant — but only until OUR deadline.
@@ -558,6 +645,20 @@ impl Broker {
                         {
                             self.bump(|c| c.waiter_snapshots += 1);
                             drop(cold);
+                            if let Some(s) = span {
+                                self.trace.span(
+                                    &s.id,
+                                    "cold_wait",
+                                    Some("handler"),
+                                    wait_start_ns,
+                                    self.trace.now_ns(),
+                                    vec![
+                                        ("fingerprint", Json::str(fp.hex())),
+                                        ("served", Json::str("snapshot")),
+                                    ],
+                                );
+                            }
+                            self.hist_cold.record(t0.elapsed());
                             return Ok(map_response(
                                 w,
                                 fp,
@@ -592,19 +693,35 @@ impl Broker {
         // Spill tier first: a previously evicted entry restores from
         // disk — refinement investment intact — without re-running the
         // cold search path.
+        let spill_start_ns = self.trace.now_ns();
         if let Some(entry) = self.spill_probe(fp, &env) {
             self.bump(|c| c.spill_hits += 1);
+            if let Some(s) = span {
+                self.trace.span(
+                    &s.id,
+                    "spill_restore",
+                    Some("handler"),
+                    spill_start_ns,
+                    self.trace.now_ns(),
+                    vec![("fingerprint", Json::str(fp.hex()))],
+                );
+            }
             self.spill_victims(self.cache.insert(fp, entry.clone()));
             let refining =
                 if !entry.converged && entry.refine_iters < self.opts.refine_budget {
                     let remaining = self.opts.refine_budget - entry.refine_iters;
                     let prio = self.refine_priority(fp);
-                    self.maybe_enqueue(w, fp, entry.map.clone(), remaining, prio)
+                    self.maybe_enqueue(w, fp, entry.map.clone(), remaining, prio, span)
                 } else {
                     self.refining(fp)
                 };
+            self.hist_cold.record(t0.elapsed());
             return Ok(map_response(w, fp, "spill", Some("spill"), &entry, refining, return_map));
         }
+        // Neither cache nor spill: the full cold search runs. Third leg
+        // of the miss conservation law (`misses == cold_paths +
+        // spill_hits` absent polish restores) the chaos test asserts.
+        self.bump(|c| c.cold_paths += 1);
 
         // Best-available start: a fingerprint-matching warm artifact
         // (validated against the live environment now) or the compiler map.
@@ -643,6 +760,7 @@ impl Broker {
             lock_recover(&self.cold_progress).insert(fp, snap);
         };
         publish_progress(&refiner);
+        let inline_start_ns = self.trace.now_ns();
         if deadline_ms > 0 {
             let deadline = t0 + Duration::from_millis(deadline_ms.min(MAX_DEADLINE_MS));
             loop {
@@ -657,6 +775,19 @@ impl Broker {
                 if out.spent == 0 || out.converged {
                     break;
                 }
+            }
+            if let Some(s) = span {
+                self.trace.span(
+                    &s.id,
+                    "inline_refine",
+                    Some("handler"),
+                    inline_start_ns,
+                    self.trace.now_ns(),
+                    vec![
+                        ("fingerprint", Json::str(fp.hex())),
+                        ("moves", Json::Num(refiner.moves() as f64)),
+                    ],
+                );
             }
         }
         let true_latency_s = refiner.best_true_latency_s();
@@ -674,8 +805,9 @@ impl Broker {
             false
         } else {
             let prio = self.refine_priority(fp);
-            self.maybe_enqueue(w, fp, entry.map.clone(), remaining, prio)
+            self.maybe_enqueue(w, fp, entry.map.clone(), remaining, prio, span)
         };
+        self.hist_cold.record(t0.elapsed());
         Ok(map_response(w, fp, "miss", Some(source), &entry, refining, return_map))
     }
 
@@ -691,6 +823,7 @@ impl Broker {
         start: MemoryMap,
         budget: u64,
         priority: u64,
+        span: Option<&ReqSpan>,
     ) -> bool {
         if budget < MoveBatch::MOVES {
             return self.refining(fp);
@@ -714,7 +847,15 @@ impl Broker {
                 ^ fp.0[0].rotate_left(13)
                 ^ c.background_jobs.wrapping_mul(0x9E37_79B9_7F4A_7C15)
         };
-        match self.queue.push(RefineJob { workload: w, fp, start, budget, seed }, priority) {
+        let job = RefineJob {
+            workload: w,
+            fp,
+            start,
+            budget,
+            seed,
+            trace_id: span.map(|s| s.id.clone()),
+        };
+        match self.queue.push(job, priority) {
             Push::Queued => true,
             outcome => {
                 // Depth bound hit (load shed) or queue closed (shutdown):
@@ -943,7 +1084,7 @@ impl Broker {
         }
     }
 
-    fn op_polish(&self, req: &Json) -> anyhow::Result<Json> {
+    fn op_polish(&self, req: &Json, span: Option<&ReqSpan>) -> anyhow::Result<Json> {
         let w = self.req_workload(req)?;
         let (env, fp) = self.env_for(w);
         let budget = req
@@ -991,8 +1132,22 @@ impl Broker {
             c.polishes += 1;
             self.opts.seed ^ fp.0[1].rotate_left(7) ^ c.polishes.wrapping_mul(0xC2B2_AE3D_27D4_EB4F)
         };
+        let refine_start_ns = self.trace.now_ns();
         let mut refiner = AnytimeRefiner::new(&env, &entry.map, seed);
         let out = refiner.step_chunk(budget);
+        if let Some(s) = span {
+            self.trace.span(
+                &s.id,
+                "polish_refine",
+                Some("handler"),
+                refine_start_ns,
+                self.trace.now_ns(),
+                vec![
+                    ("fingerprint", Json::str(fp.hex())),
+                    ("moves", Json::Num(out.spent as f64)),
+                ],
+            );
+        }
         let lat = refiner.best_true_latency_s();
         let published = self.cache.publish_if_better(
             fp,
@@ -1016,14 +1171,28 @@ impl Broker {
         ]))
     }
 
-    fn op_evict(&self, req: &Json) -> anyhow::Result<Json> {
+    fn op_evict(&self, req: &Json, span: Option<&ReqSpan>) -> anyhow::Result<Json> {
         let w = self.req_workload(req)?;
         let (_, fp) = self.env_for(w);
         let taken = self.cache.take(fp);
+        let spill_start_ns = self.trace.now_ns();
         let spilled = match &taken {
             Some(entry) => self.spill_write(fp, entry),
             None => false,
         };
+        if let Some(s) = span {
+            self.trace.span(
+                &s.id,
+                "spill_write",
+                Some("handler"),
+                spill_start_ns,
+                self.trace.now_ns(),
+                vec![
+                    ("fingerprint", Json::str(fp.hex())),
+                    ("written", Json::Bool(spilled)),
+                ],
+            );
+        }
         Ok(Json::obj(vec![
             ("ok", Json::Bool(true)),
             ("op", Json::str("evict")),
@@ -1065,14 +1234,37 @@ impl Broker {
             Some(_) => self.spill_occupancy(),
             None => (0, 0),
         };
+        let hit_h = self.hist_hit.snapshot();
+        let cold_h = self.hist_cold.snapshot();
+        // Resolved-config echo: what this broker is actually running
+        // with, so an operator scraping a fleet can spot a misdeployed
+        // binary without reading its launch flags.
+        let config = Json::obj(vec![
+            ("cache_cap", Json::Num(self.opts.cache_cap as f64)),
+            ("deadline_ms", Json::Num(self.opts.deadline_ms as f64)),
+            ("refine_budget", Json::Num(self.opts.refine_budget as f64)),
+            ("workers", Json::Num(self.opts.workers as f64)),
+            ("max_connections", Json::Num(self.opts.max_connections as f64)),
+            ("queue_bound", Json::Num(self.opts.queue_depth as f64)),
+            ("spill_max_bytes", Json::Num(self.opts.spill_max_bytes as f64)),
+            ("priority_refine", Json::Bool(self.opts.priority_refine)),
+            ("seed", Json::Num(self.opts.seed as f64)),
+        ]);
         Json::obj(vec![
             ("ok", Json::Bool(true)),
             ("op", Json::str("stats")),
+            ("uptime_ms", Json::Num(self.started.elapsed().as_millis() as f64)),
+            ("config", config),
             ("requests", Json::Num(c.requests as f64)),
             ("connections", Json::Num(c.connections as f64)),
             ("hits", Json::Num(c.map_hits as f64)),
             ("misses", Json::Num(c.map_misses as f64)),
+            ("cold_paths", Json::Num(c.cold_paths as f64)),
             ("hit_rate", Json::Num(hit_rate)),
+            ("hit_p50_us", Json::Num(hit_h.quantile_us(0.5))),
+            ("hit_p99_us", Json::Num(hit_h.quantile_us(0.99))),
+            ("cold_p50_us", Json::Num(cold_h.quantile_us(0.5))),
+            ("cold_p99_us", Json::Num(cold_h.quantile_us(0.99))),
             ("stale_hits", Json::Num(c.stale_hits as f64)),
             ("coalesced", Json::Num(c.coalesced as f64)),
             ("coalesced_misses", Json::Num(c.coalesced_misses as f64)),
@@ -1104,6 +1296,134 @@ impl Broker {
         ])
     }
 
+    /// The `metrics` op (DESIGN.md §16): the machine-readable telemetry
+    /// surface — full counter snapshot, hit/cold latency histogram
+    /// summaries, cache/spill occupancy, queue depth. With
+    /// `"format":"prometheus"` the response instead carries the text
+    /// exposition page in `"text"` (see [`Self::prometheus`]).
+    fn op_metrics(&self, req: &Json) -> Json {
+        if req.get("format").and_then(Json::as_str) == Some("prometheus") {
+            return Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("op", Json::str("metrics")),
+                ("format", Json::str("prometheus")),
+                ("text", Json::str(self.prometheus())),
+            ]);
+        }
+        let c = *lock_recover(&self.counters);
+        let s = self.cache.stats();
+        let (spill_files, spill_bytes) = match self.opts.spill_dir {
+            Some(_) => self.spill_occupancy(),
+            None => (0, 0),
+        };
+        let hist_json = |h: &Histogram| {
+            Json::obj(vec![
+                ("count", Json::Num(h.count() as f64)),
+                ("mean_us", Json::Num(h.mean_us())),
+                ("p50_us", Json::Num(h.quantile_us(0.5))),
+                ("p90_us", Json::Num(h.quantile_us(0.9))),
+                ("p99_us", Json::Num(h.quantile_us(0.99))),
+            ])
+        };
+        let counters = Json::obj(vec![
+            ("requests", Json::Num(c.requests as f64)),
+            ("connections", Json::Num(c.connections as f64)),
+            ("hits", Json::Num(c.map_hits as f64)),
+            ("misses", Json::Num(c.map_misses as f64)),
+            ("cold_paths", Json::Num(c.cold_paths as f64)),
+            ("stale_hits", Json::Num(c.stale_hits as f64)),
+            ("coalesced", Json::Num(c.coalesced as f64)),
+            ("coalesced_misses", Json::Num(c.coalesced_misses as f64)),
+            ("waiter_snapshots", Json::Num(c.waiter_snapshots as f64)),
+            ("errors", Json::Num(c.errors as f64)),
+            ("panics_caught", Json::Num(c.panics_caught as f64)),
+            ("shed_requests", Json::Num(c.shed_requests as f64)),
+            ("shed_jobs", Json::Num(c.shed_jobs as f64)),
+            ("background_jobs", Json::Num(c.background_jobs as f64)),
+            ("polishes", Json::Num(c.polishes as f64)),
+            ("warm_starts", Json::Num(c.warm_starts as f64)),
+            ("warm_rejected", Json::Num(c.warm_rejected as f64)),
+            ("spill_writes", Json::Num(c.spill_writes as f64)),
+            ("spill_hits", Json::Num(c.spill_hits as f64)),
+            ("spill_rejected", Json::Num(c.spill_rejected as f64)),
+            ("spill_evictions", Json::Num(c.spill_evictions as f64)),
+            ("quarantined", Json::Num(c.quarantined as f64)),
+            ("drain_flushes", Json::Num(c.drain_flushes as f64)),
+            ("publishes", Json::Num(s.publishes as f64)),
+            ("rejected_publishes", Json::Num(s.rejected_publishes as f64)),
+            ("evictions", Json::Num(s.evictions as f64)),
+        ]);
+        Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("op", Json::str("metrics")),
+            ("uptime_ms", Json::Num(self.started.elapsed().as_millis() as f64)),
+            ("counters", counters),
+            ("hit_latency", hist_json(&self.hist_hit.snapshot())),
+            ("cold_latency", hist_json(&self.hist_cold.snapshot())),
+            (
+                "cache",
+                Json::obj(vec![
+                    ("entries", Json::Num(s.entries as f64)),
+                    ("capacity", Json::Num(s.capacity as f64)),
+                ]),
+            ),
+            (
+                "spill",
+                Json::obj(vec![
+                    ("files", Json::Num(spill_files as f64)),
+                    ("bytes", Json::Num(spill_bytes as f64)),
+                ]),
+            ),
+            ("queue_depth", Json::Num(self.queue.len() as f64)),
+        ])
+    }
+
+    /// Prometheus-style text exposition of the broker's counters,
+    /// gauges and latency histograms (`egrl serve --metrics` prints
+    /// this page when serving ends; the `metrics` op returns it with
+    /// `"format":"prometheus"`).
+    pub fn prometheus(&self) -> String {
+        let c = *lock_recover(&self.counters);
+        let s = self.cache.stats();
+        let (spill_files, spill_bytes) = match self.opts.spill_dir {
+            Some(_) => self.spill_occupancy(),
+            None => (0, 0),
+        };
+        let mut p = Prom::new();
+        p.counter("egrl_requests_total", "Request lines handled.", c.requests);
+        p.counter("egrl_map_hits_total", "Map lookups served from the cache.", c.map_hits);
+        p.counter("egrl_map_misses_total", "Map lookups that missed the cache.", c.map_misses);
+        p.counter("egrl_cold_paths_total", "Misses that ran the full cold search.", c.cold_paths);
+        p.counter("egrl_coalesced_misses_total", "Misses coalesced onto a running cold path.", c.coalesced_misses);
+        p.counter("egrl_waiter_snapshots_total", "Coalesced waiters served a best-so-far snapshot.", c.waiter_snapshots);
+        p.counter("egrl_spill_writes_total", "Entries demoted to the disk spill tier.", c.spill_writes);
+        p.counter("egrl_spill_hits_total", "Misses served by restoring a spill artifact.", c.spill_hits);
+        p.counter("egrl_spill_evictions_total", "Artifacts deleted by the spill size bound.", c.spill_evictions);
+        p.counter("egrl_quarantined_total", "Invalid spill artifacts quarantined.", c.quarantined);
+        p.counter("egrl_panics_caught_total", "Panics caught at isolation boundaries.", c.panics_caught);
+        p.counter("egrl_shed_requests_total", "Connections shed at the connection cap.", c.shed_requests);
+        p.counter("egrl_shed_jobs_total", "Background jobs shed at the queue bound.", c.shed_jobs);
+        p.counter("egrl_errors_total", "Requests answered with a structured error.", c.errors);
+        p.counter("egrl_cache_publishes_total", "Monotone cache publishes accepted.", s.publishes);
+        p.gauge("egrl_cache_entries", "Live map-cache entries.", s.entries as f64);
+        p.gauge("egrl_cache_capacity", "Map-cache capacity.", s.capacity as f64);
+        p.gauge("egrl_spill_files", "Artifacts resident in the spill tier.", spill_files as f64);
+        p.gauge("egrl_spill_bytes", "Bytes resident in the spill tier.", spill_bytes as f64);
+        p.gauge("egrl_queue_depth", "Background refinement jobs queued.", self.queue.len() as f64);
+        p.gauge("egrl_uptime_seconds", "Seconds since broker construction.", self.started.elapsed().as_secs_f64());
+        p.histogram(
+            "egrl_hit_latency_seconds",
+            "Hit-path response latency.",
+            &self.hist_hit.snapshot(),
+        );
+        p.histogram(
+            "egrl_cold_latency_seconds",
+            "Cold-path (miss/spill/snapshot) response latency.",
+            &self.hist_cold.snapshot(),
+        );
+        p.render()
+    }
+
     // ---- background refinement ---------------------------------------------
 
     /// Worker panic policy: a panicking job must not take its thread
@@ -1132,6 +1452,7 @@ impl Broker {
     /// noise-free best through the monotone cache rule whenever it
     /// improves, stopping at budget exhaustion, convergence or shutdown.
     fn run_refine_job(&self, job: &RefineJob) {
+        let bg_start_ns = self.trace.now_ns();
         let (env, _) = self.env_for(job.workload);
         let mut refiner = AnytimeRefiner::new(&env, &job.start, job.seed);
         let mut last_published = refiner.best_true_latency_s();
@@ -1178,6 +1499,22 @@ impl Broker {
                 env.baseline_true_latency_s / lat,
                 unaccounted,
                 refiner.converged(),
+            );
+        }
+        // The background span joins the trace of the request that
+        // enqueued the job, tying the full handler → background-refiner
+        // chain together under one trace id.
+        if let Some(id) = &job.trace_id {
+            self.trace.span(
+                id,
+                "background_refine",
+                Some("handler"),
+                bg_start_ns,
+                self.trace.now_ns(),
+                vec![
+                    ("fingerprint", Json::str(job.fp.hex())),
+                    ("moves", Json::Num(refiner.moves() as f64)),
+                ],
             );
         }
     }
@@ -1652,6 +1989,7 @@ mod tests {
             max_connections: 0,
             queue_depth: 0,
             spill_max_bytes: 0,
+            trace_path: None,
             env: EnvConfig::default(),
         }
     }
@@ -1674,6 +2012,54 @@ mod tests {
 
     fn get_num(j: &Json, k: &str) -> f64 {
         j.get(k).and_then(Json::as_f64).unwrap_or_else(|| panic!("missing '{k}' in {j:?}"))
+    }
+
+    /// ISSUE 9 satellite: counter-coherence laws that must hold at any
+    /// quiescent point, fault plan or not. `misses` is bumped when a
+    /// cold claim is won, *before* the claimant fault site, so under
+    /// injected claimant panics a miss may never reach its spill/cold
+    /// resolution — the gap is bounded by `panics_caught`. Polish ops
+    /// would break the miss law (their spill seeding counts
+    /// `spill_hits` without a miss), so callers must not have issued
+    /// any.
+    fn assert_counter_coherence(stats: &Json, dir: Option<&std::path::Path>) {
+        let hits = get_num(stats, "hits");
+        let misses = get_num(stats, "misses");
+        let requests = get_num(stats, "requests");
+        assert!(
+            hits + misses <= requests,
+            "hits ({hits}) + misses ({misses}) exceed requests ({requests})"
+        );
+        let resolved = get_num(stats, "cold_paths") + get_num(stats, "spill_hits");
+        let panics = get_num(stats, "panics_caught");
+        assert!(
+            resolved <= misses && misses <= resolved + panics,
+            "miss conservation violated: misses={misses}, \
+             cold_paths+spill_hits={resolved}, panics_caught={panics}"
+        );
+        assert!(
+            get_num(stats, "coalesced_misses") >= get_num(stats, "waiter_snapshots"),
+            "more waiter snapshots than coalesced misses: {stats:?}"
+        );
+        if let Some(dir) = dir {
+            // `spill_files` must agree with the actual artifact count
+            // (quarantine lives in a subdirectory and is excluded).
+            let on_disk = std::fs::read_dir(dir)
+                .map(|rd| {
+                    rd.filter_map(|e| e.ok())
+                        .filter(|e| {
+                            e.path().extension().and_then(|x| x.to_str()) == Some("json")
+                                && e.metadata().map(|m| m.is_file()).unwrap_or(false)
+                        })
+                        .count()
+                })
+                .unwrap_or(0);
+            assert_eq!(
+                get_num(stats, "spill_files") as usize,
+                on_disk,
+                "stats spill_files disagrees with the on-disk artifact count"
+            );
+        }
     }
 
     #[test]
@@ -2586,6 +2972,146 @@ mod tests {
         let _ = std::fs::remove_dir_all(&dir);
     }
 
+    /// ISSUE 9 acceptance: a scripted broker session (miss → coalesced
+    /// hit → polish → evict → spill restore → drain) produces a
+    /// deterministic span tree — one trace id per request, children
+    /// joined to their "handler" root — and the sink is byte-stable
+    /// across two same-seed runs (fake clock: timestamps are a pure
+    /// function of the trace-read order).
+    #[test]
+    fn scripted_session_produces_deterministic_span_tree() {
+        // workers=1 is configured but never spawned (no serve loop runs
+        // here): the background job queued by the first miss stays in
+        // flight, so the second map coalesces onto it deterministically.
+        let run = |tag: &str| -> (Vec<u8>, Vec<Json>) {
+            let dir = spill_dir(tag);
+            let mut o = opts(1, 0, 900);
+            o.spill_dir = Some(dir.clone());
+            let (sink, buf) = TraceSink::memory(Clock::fake(1_000));
+            let mut b = Broker::new(o);
+            b.trace = Trace::to(sink);
+            let b = b;
+            let script = [
+                r#"{"op":"map","workload":"resnet50"}"#, // miss: cold path, job queued
+                r#"{"op":"map","workload":"resnet50"}"#, // hit, coalesced onto the job
+                r#"{"op":"polish","workload":"resnet50","budget":90}"#, // refiner stage
+                r#"{"op":"evict","workload":"resnet50"}"#, // spill_write
+                r#"{"op":"map","workload":"resnet50"}"#, // spill_restore
+                r#"{"op":"drain"}"#,
+            ];
+            let responses: Vec<Json> = script
+                .into_iter()
+                .map(|line| {
+                    let resp = parse(&b.handle(line)).unwrap();
+                    assert!(
+                        resp.get("ok").unwrap().as_bool().unwrap(),
+                        "request failed: {line} -> {resp:?}"
+                    );
+                    resp
+                })
+                .collect();
+            let bytes = buf.lock().unwrap().clone();
+            let _ = std::fs::remove_dir_all(&dir);
+            (bytes, responses)
+        };
+
+        let (bytes, responses) = run("trace-a");
+        assert_eq!(get_str(&responses[0], "cache"), "miss");
+        assert_eq!(get_str(&responses[1], "cache"), "hit");
+        assert_eq!(get_str(&responses[4], "cache"), "spill");
+        let text = String::from_utf8(bytes.clone()).unwrap();
+        let spans: Vec<Json> = text.lines().map(|l| parse(l).unwrap()).collect();
+        // 6 handler roots + polish_refine + spill_write + spill_restore.
+        assert_eq!(spans.len(), 9, "unexpected span count:\n{text}");
+
+        // One "handler" root per request, in request order; trace ids
+        // are a pure function of (broker seed, request ordinal).
+        let handlers: Vec<&Json> =
+            spans.iter().filter(|s| get_str(s, "span") == "handler").collect();
+        assert_eq!(handlers.len(), 6, "one handler root per request");
+        let ops: Vec<&str> = handlers.iter().map(|s| get_str(s, "op")).collect();
+        assert_eq!(ops, ["map", "map", "polish", "evict", "map", "drain"]);
+        for (i, h) in handlers.iter().enumerate() {
+            assert_eq!(get_str(h, "trace_id"), trace_id(7, i as u64), "request {i} id");
+            assert!(h.get("parent").is_none(), "handler must be a root span");
+        }
+
+        // Children emit before their root and join their request's id.
+        let child = |name: &str| {
+            spans
+                .iter()
+                .find(|s| get_str(s, "span") == name)
+                .unwrap_or_else(|| panic!("missing {name} span:\n{text}"))
+        };
+        let polish = child("polish_refine");
+        assert_eq!(get_str(polish, "trace_id"), trace_id(7, 2));
+        assert_eq!(get_str(polish, "parent"), "handler");
+        assert_eq!(get_num(polish, "moves"), get_num(&responses[2], "moves"));
+        let write = child("spill_write");
+        assert_eq!(get_str(write, "trace_id"), trace_id(7, 3));
+        assert!(write.get("written").unwrap().as_bool().unwrap());
+        let restore = child("spill_restore");
+        assert_eq!(get_str(restore, "trace_id"), trace_id(7, 4));
+        assert_eq!(get_str(restore, "parent"), "handler");
+
+        // Every span is timed by the fake clock: nonzero, well-ordered.
+        for s in &spans {
+            assert!(get_num(s, "start_ns") > 0.0, "dark timestamp leaked: {s:?}");
+            assert!(get_num(s, "end_ns") >= get_num(s, "start_ns"));
+            assert_eq!(
+                get_num(s, "dur_ns"),
+                get_num(s, "end_ns") - get_num(s, "start_ns")
+            );
+        }
+
+        // Byte-for-byte reproducible: fresh broker, fresh fake clock.
+        let (again, _) = run("trace-b");
+        assert_eq!(bytes, again, "trace is not byte-stable across same-seed runs");
+    }
+
+    /// ISSUE 9 tentpole: the `metrics` op — JSON counter/histogram
+    /// snapshot, monotone between scrapes, plus the Prometheus text
+    /// exposition of the same data.
+    #[test]
+    fn metrics_op_reports_counters_histograms_and_prometheus() {
+        let b = Broker::new(opts(0, 10_000, 90));
+        req(r#"{"op":"map","workload":"resnet50"}"#, &b); // cold path
+        req(r#"{"op":"map","workload":"resnet50"}"#, &b); // hit
+        let m = req(r#"{"op":"metrics"}"#, &b);
+        assert!(m.get("ok").unwrap().as_bool().unwrap());
+        let counters = m.get("counters").expect("counters object");
+        assert_eq!(get_num(counters, "requests"), 3.0);
+        assert_eq!(get_num(counters, "hits"), 1.0);
+        assert_eq!(get_num(counters, "misses"), 1.0);
+        assert_eq!(get_num(counters, "cold_paths"), 1.0);
+        let hit_h = m.get("hit_latency").expect("hit histogram");
+        assert_eq!(get_num(hit_h, "count"), 1.0);
+        assert!(get_num(hit_h, "p99_us") >= get_num(hit_h, "p50_us"));
+        let cold_h = m.get("cold_latency").expect("cold histogram");
+        assert_eq!(get_num(cold_h, "count"), 1.0);
+        assert!(get_num(cold_h, "mean_us") > 0.0, "cold path took measurable time");
+        assert_eq!(get_num(m.get("cache").unwrap(), "entries"), 1.0);
+
+        // Counters are monotone between scrapes (the scrape itself is a
+        // request).
+        let m2 = req(r#"{"op":"metrics"}"#, &b);
+        assert!(
+            get_num(m2.get("counters").unwrap(), "requests")
+                > get_num(counters, "requests")
+        );
+
+        // Prometheus exposition of the same counters and histograms.
+        let p = req(r#"{"op":"metrics","format":"prometheus"}"#, &b);
+        let text = get_str(&p, "text");
+        assert!(text.contains("# TYPE egrl_requests_total counter"), "{text}");
+        assert!(text.contains("egrl_map_hits_total 1\n"), "{text}");
+        assert!(text.contains("egrl_cold_paths_total 1\n"), "{text}");
+        assert!(text.contains("# TYPE egrl_hit_latency_seconds histogram"), "{text}");
+        assert!(text.contains("egrl_hit_latency_seconds_bucket{le=\"+Inf\"} 1\n"), "{text}");
+        assert!(text.contains("egrl_cold_latency_seconds_count 1\n"), "{text}");
+        assert!(text.contains("egrl_cache_entries 1\n"), "{text}");
+    }
+
     /// ISSUE 6 acceptance harness: a seeded fault plan (torn/failed/slow
     /// spill IO, worker/claimant/handler panics) driven by concurrent
     /// TCP clients. Asserts: every request gets exactly one response (no
@@ -2723,6 +3249,8 @@ mod tests {
         assert!(injected.handler_panics > 0 && injected.torn_writes > 0);
         let stats = parse(&b.handle(r#"{"op":"stats"}"#)).unwrap();
         assert!(get_num(&stats, "panics_caught") > 0.0, "panic isolation untested: {stats:?}");
+        // ISSUE 9 satellite: counters stay coherent after >=200 faults.
+        assert_counter_coherence(&stats, Some(&dir));
         drop(guard); // restore panic reporting for the phases below
 
         // ---- phase B: deterministic quarantine (faults off) ----
@@ -2790,12 +3318,16 @@ mod tests {
         assert!(get_num(&final_stats, "drain_flushes") >= 1.0);
         assert!(get_num(&final_stats, "shed_requests") >= 1.0);
         assert!(get_num(&final_stats, "quarantined") >= 1.0);
+        // Coherence must survive the whole gauntlet: faults, quarantine,
+        // shedding and the drain flush (ISSUE 9 satellite).
+        assert_counter_coherence(&final_stats, Some(&dir));
 
         let b2 = Broker::open(o).unwrap();
         let restored = req(r#"{"op":"map","workload":"resnet50","return_map":true}"#, &b2);
         assert_eq!(get_str(&restored, "cache"), "spill", "restart must hit the drained spill");
         let restart_stats = parse(&b2.handle(r#"{"op":"stats"}"#)).unwrap();
         assert!(get_num(&restart_stats, "spill_hits") >= 1.0);
+        assert_counter_coherence(&restart_stats, Some(&dir));
 
         // Machine-readable outcome for the CI chaos-smoke artifact.
         let bench = Json::obj(vec![
