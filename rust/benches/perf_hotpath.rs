@@ -304,6 +304,7 @@ fn main() -> anyhow::Result<()> {
                 spill_max_bytes: 0,
                 trace_path,
                 env: EnvConfig::default(),
+                ..ServeOptions::default()
             })
         };
         let trace_file =

@@ -17,7 +17,12 @@
 //! * the **multi-client TCP sweep** (ISSUE 5) shows throughput
 //!   increasing with client count (thread-per-connection scale-out);
 //! * an evicted-then-requested fingerprint is served from the **spill
-//!   tier** without re-running the cold search path.
+//!   tier** without re-running the cold search path;
+//! * the **multi-broker topology sweep** (ISSUE 10) replays a fixed
+//!   client pool against 1–3 fingerprint-sharded proxying brokers over
+//!   one shared spill tier and uploads the aggregate throughput curve
+//!   (`multi_broker`); on a single machine the fleet must retain at
+//!   least half the single-broker rate.
 //!
 //! Background workers are disabled (`workers: 0`) so the replay is
 //! deterministic; the curve is produced by the same refinement engine
@@ -82,6 +87,7 @@ fn main() -> anyhow::Result<()> {
         spill_max_bytes: 0,
         trace_path: None,
         env: EnvConfig::default(),
+        ..ServeOptions::default()
     });
 
     const REQUESTS: usize = 400;
@@ -173,6 +179,7 @@ fn main() -> anyhow::Result<()> {
             spill_max_bytes: 0,
             trace_path: None,
             env: EnvConfig::default(),
+            ..ServeOptions::default()
         });
         // Pre-warm so the sweep measures pure hit-path throughput.
         for w in &hot_mix {
@@ -261,6 +268,7 @@ fn main() -> anyhow::Result<()> {
         spill_max_bytes: 0,
         trace_path: None,
         env: EnvConfig::default(),
+        ..ServeOptions::default()
     });
     let t0 = Instant::now();
     let cold = parse(&sb.handle(r#"{"op":"map","workload":"resnet50"}"#))?;
@@ -288,6 +296,137 @@ fn main() -> anyhow::Result<()> {
         restored_iters == cold_iters
     );
     let _ = std::fs::remove_dir_all(&spill_path);
+
+    // ---- multi-broker topology sweep (ISSUE 10 tentpole) ---------------
+    // Aggregate fleet throughput vs. broker count: N proxying brokers
+    // share one spill directory and shard the fingerprint space; a fixed
+    // client pool spreads persistent connections round-robin across the
+    // members. Every broker is pre-warmed through the forwarding loop
+    // guard, so the replay measures the steady state: owned requests hit
+    // locally, non-owned ones cost one proxy hop. On a single machine
+    // the brokers compete for the same cores and the hop adds work, so
+    // the acceptance bound is loose — the fleet must retain at least
+    // half the single-broker rate (real scale-out needs real machines);
+    // the full curve is uploaded for trending.
+    println!("\n== multi-broker topology sweep ==");
+    const FLEET_CLIENTS: usize = 6;
+    const PER_FLEET_CLIENT: usize = 100;
+    let fleet_spill =
+        std::env::temp_dir().join(format!("egrl-serve-bench-fleet-{}", std::process::id()));
+    let mut fleet_rows: Vec<Json> = Vec::new();
+    let mut fleet_rps: Vec<f64> = Vec::new();
+    for n in 1usize..=3 {
+        let _ = std::fs::remove_dir_all(&fleet_spill);
+        let listeners: Vec<TcpListener> = (0..n)
+            .map(|_| TcpListener::bind("127.0.0.1:0"))
+            .collect::<std::io::Result<_>>()?;
+        let addrs: Vec<String> =
+            listeners.iter().map(|l| Ok(l.local_addr()?.to_string())).collect::<anyhow::Result<_>>()?;
+        let brokers: Vec<Broker> = addrs
+            .iter()
+            .map(|a| {
+                Broker::open(ServeOptions {
+                    cache_cap: 16,
+                    deadline_ms: 0,
+                    refine_budget: 36_000,
+                    workers: 0,
+                    seed: 1,
+                    spill_dir: Some(fleet_spill.clone()),
+                    peers: addrs.clone(),
+                    self_addr: a.clone(),
+                    proxy: true,
+                    ..ServeOptions::default()
+                })
+            })
+            .collect::<anyhow::Result<_>>()?;
+        for b in &brokers {
+            for w in &hot_mix {
+                let resp = b.handle(&format!(
+                    r#"{{"op":"map","workload":"{}","forwarded":true}}"#,
+                    w.name()
+                ));
+                anyhow::ensure!(parse(&resp)?.get("error").is_none(), "fleet warm: {resp}");
+            }
+        }
+        let wall_s = std::thread::scope(|scope| -> anyhow::Result<f64> {
+            let servers: Vec<_> = brokers
+                .iter()
+                .zip(listeners)
+                .map(|(b, l)| scope.spawn(move || b.serve_tcp(l)))
+                .collect();
+            let addrs = &addrs;
+            let t0 = Instant::now();
+            let clients: Vec<_> = (0..FLEET_CLIENTS)
+                .map(|ci| {
+                    scope.spawn(move || -> anyhow::Result<()> {
+                        let stream = TcpStream::connect(addrs[ci % addrs.len()].as_str())?;
+                        let mut writer = stream.try_clone()?;
+                        let mut reader = BufReader::new(stream);
+                        let mut line = String::new();
+                        for i in 0..PER_FLEET_CLIENT {
+                            let w = hot_mix[(ci + i) % hot_mix.len()];
+                            writeln!(
+                                writer,
+                                r#"{{"op":"map","workload":"{}","return_map":true}}"#,
+                                w.name()
+                            )?;
+                            line.clear();
+                            reader.read_line(&mut line)?;
+                            anyhow::ensure!(
+                                parse(&line)?.get("error").is_none(),
+                                "fleet request failed: {line}"
+                            );
+                        }
+                        Ok(())
+                    })
+                })
+                .collect();
+            for c in clients {
+                c.join().expect("fleet client panicked")?;
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            for (addr, server) in addrs.iter().zip(servers) {
+                let stream = TcpStream::connect(addr.as_str())?;
+                let mut writer = stream.try_clone()?;
+                let mut reader = BufReader::new(stream);
+                writeln!(writer, r#"{{"op":"shutdown"}}"#)?;
+                let mut line = String::new();
+                reader.read_line(&mut line)?;
+                server.join().expect("fleet server panicked")?;
+            }
+            Ok(wall)
+        })?;
+        let total = (FLEET_CLIENTS * PER_FLEET_CLIENT) as f64;
+        let rps = total / wall_s;
+        let forwarded: f64 = brokers
+            .iter()
+            .map(|b| {
+                parse(&b.handle(r#"{"op":"stats"}"#))
+                    .ok()
+                    .and_then(|s| s.get("forwarded").and_then(Json::as_f64))
+                    .unwrap_or(0.0)
+            })
+            .sum();
+        println!(
+            "  {n} broker(s): {total:>4.0} requests in {wall_s:.3} s  ({rps:>8.0} req/s, {forwarded:.0} forwarded)"
+        );
+        fleet_rps.push(rps);
+        fleet_rows.push(Json::obj(vec![
+            ("brokers", Json::Num(n as f64)),
+            ("clients", Json::Num(FLEET_CLIENTS as f64)),
+            ("requests", Json::Num(total)),
+            ("wall_s", Json::Num(wall_s)),
+            ("throughput_rps", Json::Num(rps)),
+            ("forwarded", Json::Num(forwarded)),
+        ]));
+    }
+    let _ = std::fs::remove_dir_all(&fleet_spill);
+    let best_fleet = fleet_rps[1..].iter().cloned().fold(f64::NAN, f64::max);
+    let multi_broker_scaling = best_fleet >= fleet_rps[0] * 0.5;
+    println!(
+        "  fleet: 1-broker {:.0} req/s -> best multi-broker {:.0} req/s (>= half single-broker rate: {multi_broker_scaling})",
+        fleet_rps[0], best_fleet
+    );
 
     let json = Json::obj(vec![
         ("schema", Json::str("egrl-bench-serve-v1")),
@@ -318,6 +457,8 @@ fn main() -> anyhow::Result<()> {
         ("final_speedup", Json::Num(final_entry.speedup)),
         ("multi_client", Json::Arr(sweep_rows)),
         ("multi_client_scaling", Json::Bool(multi_client_scaling)),
+        ("multi_broker", Json::Arr(fleet_rows)),
+        ("multi_broker_scaling", Json::Bool(multi_broker_scaling)),
         (
             "spill",
             Json::obj(vec![
@@ -339,6 +480,10 @@ fn main() -> anyhow::Result<()> {
     println!(
         "targets (ISSUE 5): throughput increases with clients: {multi_client_scaling}, \
          spill restore without cold search: {served_from_spill}"
+    );
+    println!(
+        "targets (ISSUE 10): fleet retains >= half the single-broker rate on one machine: \
+         {multi_broker_scaling}"
     );
     Ok(())
 }

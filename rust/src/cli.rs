@@ -138,6 +138,13 @@ SUBCOMMANDS:
                               JSON-line spans (handler + refine/spill
                               children under one trace id) to FILE
                               (same as --set serve_trace_path=FILE)
+             --peers LIST     fleet mode (requires --tcp): comma list of
+                              every broker's TCP address; fingerprints
+                              are sharded by rendezvous hashing and
+                              non-owned requests answer a
+                              {\"moved\":true} redirect, or proxy to the
+                              owner with serve_proxy=true
+                              (same as --set serve_peers=LIST)
              --metrics        print the Prometheus text exposition page
                               when serving ends (live scrapes: the
                               \"metrics\" op)
@@ -148,6 +155,7 @@ SUBCOMMANDS:
                               serve_max_connections=64 serve_queue_depth=256
                               serve_spill_max_bytes=0 (0 = unbounded;
                               overload -> {\"error\":\"overloaded\"})
+                              serve_peers= serve_proxy=false
                               serve_trace_path= (empty = tracing off)
   polish     Online serving path: refine a precompiled mapping artifact
              with the batched local-search engine

@@ -160,6 +160,21 @@ pub struct EgrlConfig {
     /// `egrl serve`: spill-tier size bound in bytes; beyond it the
     /// oldest artifacts are deleted (spill LRU). 0 = unbounded.
     pub serve_spill_max_bytes: u64,
+    /// `egrl serve`: fleet membership — comma-separated TCP addresses
+    /// of every broker in the fleet (this broker's own `--tcp` address
+    /// included or not; membership is canonicalized either way). When
+    /// set, fingerprints are sharded across the fleet by rendezvous
+    /// hashing (DESIGN.md §17): a broker that does not own a requested
+    /// fingerprint answers a `moved` redirect — or proxies to the owner
+    /// when `serve_proxy` is on. Empty (default) = single-broker mode.
+    /// Effective only with `--tcp` (sharding needs a self address).
+    pub serve_peers: Vec<String>,
+    /// `egrl serve`: proxy mode for non-owned fingerprints — forward
+    /// the request to the owning peer over TCP and relay its answer
+    /// instead of returning a `moved` redirect. Forward failures fall
+    /// back to serving locally, so a dying peer degrades throughput,
+    /// never availability.
+    pub serve_proxy: bool,
     /// `egrl serve`: JSON-lines span-trace sink path (`--trace`). When
     /// set, every request emits timed spans (handler, inline refine,
     /// spill restore/write, background refine) tagged with a
@@ -218,6 +233,8 @@ impl Default for EgrlConfig {
             serve_max_connections: 64,
             serve_queue_depth: 256,
             serve_spill_max_bytes: 0,
+            serve_peers: Vec::new(),
+            serve_proxy: false,
             serve_trace_path: String::new(),
             gnn_backend: GnnBackend::Auto,
         }
@@ -374,6 +391,18 @@ impl EgrlConfig {
             "serve_max_connections" => self.serve_max_connections = p(key, value)?,
             "serve_queue_depth" => self.serve_queue_depth = p(key, value)?,
             "serve_spill_max_bytes" => self.serve_spill_max_bytes = p(key, value)?,
+            "serve_peers" => {
+                // Comma-separated fleet membership, e.g.
+                // `serve_peers = 10.0.0.1:7177,10.0.0.2:7177`; an empty
+                // value clears the fleet (single-broker mode).
+                self.serve_peers = value
+                    .split(',')
+                    .map(str::trim)
+                    .filter(|s| !s.is_empty())
+                    .map(str::to_string)
+                    .collect();
+            }
+            "serve_proxy" => self.serve_proxy = p(key, value)?,
             // An empty value disables span tracing (the default).
             "serve_trace_path" => self.serve_trace_path = value.to_string(),
             // Unknown spellings are rejected before assignment, so a bad
@@ -669,6 +698,24 @@ mod tests {
         c.set("serve_priority_refine", "true").unwrap();
         assert!(c.serve_priority_refine);
         assert!(c.set("serve_priority_refine", "maybe").is_err());
+    }
+
+    /// ISSUE 10: the fleet keys — `serve_peers` parses a comma list
+    /// (whitespace-tolerant, empty clears back to single-broker mode)
+    /// and `serve_proxy` is a guarded bool defaulting to redirect mode.
+    #[test]
+    fn serve_fleet_keys_wired() {
+        let mut c = EgrlConfig::default();
+        assert!(c.serve_peers.is_empty(), "fleet must default off");
+        assert!(!c.serve_proxy, "proxy mode must default off (moved redirects)");
+        c.set("serve_peers", "10.0.0.1:7177, 10.0.0.2:7177,,10.0.0.3:7177").unwrap();
+        assert_eq!(c.serve_peers, vec!["10.0.0.1:7177", "10.0.0.2:7177", "10.0.0.3:7177"]);
+        c.set("serve_peers", "").unwrap(); // empty clears the fleet
+        assert!(c.serve_peers.is_empty());
+        c.set("serve_proxy", "true").unwrap();
+        assert!(c.serve_proxy);
+        assert!(c.set("serve_proxy", "sometimes").is_err());
+        assert!(c.serve_proxy, "rejected set must not clobber the flag");
     }
 
     /// ISSUE 9 satellite: the `serve_trace_path` key — span tracing is

@@ -68,7 +68,22 @@ fn open_runtime(cli: &Cli) -> anyhow::Result<Option<Runtime>> {
         );
         return Ok(None);
     }
-    Ok(Some(Runtime::open(dir)?))
+    // Artifacts exist but the runtime may still be unopenable (no PJRT
+    // backend in this build, corrupt manifest). That must not brick the
+    // artifact-free paths — `gnn_backend=auto` is documented to fall
+    // back to the native engine, and a forced `gnn_backend=aot` still
+    // fails fast in Trainer::new because the runtime resolves to None.
+    match Runtime::open(&dir) {
+        Ok(rt) => Ok(Some(rt)),
+        Err(e) => {
+            eprintln!(
+                "note: artifacts at {} present but unusable ({e:#}) — running \
+                 artifact-free on the native sparse GNN engine",
+                dir.display()
+            );
+            Ok(None)
+        }
+    }
 }
 
 fn cmd_train(cli: &Cli) -> anyhow::Result<()> {
@@ -201,9 +216,27 @@ fn cmd_serve(cli: &Cli) -> anyhow::Result<()> {
     if let Some(path) = cli.get("trace") {
         cfg.set("serve_trace_path", path)?;
     }
+    if let Some(list) = cli.get("peers") {
+        cfg.set("serve_peers", list)?;
+    }
     // Fail fast on invariant-breaking configs — never panic in the pool.
     cfg.validate()?;
-    let opts = ServeOptions::from_config(&cfg);
+    let mut opts = ServeOptions::from_config(&cfg);
+    if !opts.peers.is_empty() {
+        // Sharding needs this broker's own advertised address so every
+        // member computes the same ownership map — that address is the
+        // `--tcp` bind address. Without it the peer list is a config
+        // error, not a silently single-broker fleet.
+        let self_addr = cli.get("tcp").ok_or_else(|| {
+            anyhow::anyhow!("--peers/serve_peers requires --tcp ADDR (the fleet self-address)")
+        })?;
+        opts.self_addr = self_addr.to_string();
+        eprintln!(
+            "egrl serve: fleet of {} peer(s), non-owned requests {}",
+            opts.peers.len(),
+            if opts.proxy { "proxied to the owner" } else { "answered with a moved redirect" }
+        );
+    }
     eprintln!(
         "egrl serve: cache {} entries, deadline {} ms, refine budget {} moves, {} workers{}{}",
         opts.cache_cap,

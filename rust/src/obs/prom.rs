@@ -1,11 +1,12 @@
 //! Prometheus-style text exposition (DESIGN.md §16).
 //!
 //! A tiny builder over the exposition format version 0.0.4: `# HELP`
-//! and `# TYPE` comment lines followed by sample lines. Only the three
-//! shapes the broker needs — monotone counters, point-in-time gauges,
-//! and cumulative `le` histograms (log₂ nanosecond buckets rendered as
-//! seconds, the Prometheus convention for latency) — no labels beyond
-//! `le`, no dependencies.
+//! and `# TYPE` comment lines followed by sample lines. Only the
+//! shapes the broker needs — monotone counters (plain and
+//! single-label families, e.g. per-peer forward counts), point-in-time
+//! gauges, and cumulative `le` histograms (log₂ nanosecond buckets
+//! rendered as seconds, the Prometheus convention for latency) — no
+//! dependencies.
 
 use super::hist::{bucket_hi, Histogram, BUCKETS};
 
@@ -34,6 +35,29 @@ impl Prom {
     pub fn gauge(&mut self, name: &str, help: &str, v: f64) {
         self.header(name, help, "gauge");
         self.out.push_str(&format!("{name} {v}\n"));
+    }
+
+    /// A counter family with one `{label="value"}` series per entry
+    /// (the broker's per-peer forward counters). The header is emitted
+    /// once; an empty family emits nothing — Prometheus has no way to
+    /// express "a family exists but has no series". Label values are
+    /// escaped per the exposition format (backslash, quote, newline).
+    pub fn labeled_counter(
+        &mut self,
+        name: &str,
+        help: &str,
+        label: &str,
+        series: &[(String, u64)],
+    ) {
+        if series.is_empty() {
+            return;
+        }
+        self.header(name, help, "counter");
+        for (value, v) in series {
+            let escaped =
+                value.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n");
+            self.out.push_str(&format!("{name}{{{label}=\"{escaped}\"}} {v}\n"));
+        }
     }
 
     /// A log₂ histogram as cumulative `le` buckets in **seconds**.
@@ -80,6 +104,26 @@ mod tests {
         assert!(page.contains("\negrl_requests_total 42\n") || page.starts_with("# HELP"));
         assert!(page.contains("egrl_cache_entries 3\n"));
         assert!(page.contains("# TYPE egrl_cache_entries gauge\n"));
+    }
+
+    /// ISSUE 10: labeled counter families — one header, one series line
+    /// per label value, exposition-format escaping, nothing for an
+    /// empty family.
+    #[test]
+    fn labeled_counter_renders_series_with_escaping() {
+        let mut p = Prom::new();
+        p.labeled_counter(
+            "egrl_peer_forwards_total",
+            "Requests proxied, by owning peer.",
+            "peer",
+            &[("10.0.0.1:7177".to_string(), 7), ("weird\"addr".to_string(), 1)],
+        );
+        p.labeled_counter("egrl_empty_total", "Never emitted.", "peer", &[]);
+        let page = p.render();
+        assert_eq!(page.matches("# TYPE egrl_peer_forwards_total counter").count(), 1);
+        assert!(page.contains("egrl_peer_forwards_total{peer=\"10.0.0.1:7177\"} 7\n"));
+        assert!(page.contains("egrl_peer_forwards_total{peer=\"weird\\\"addr\"} 1\n"));
+        assert!(!page.contains("egrl_empty_total"));
     }
 
     #[test]

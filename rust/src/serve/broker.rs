@@ -94,6 +94,7 @@ use super::faults;
 use super::faults::SpillWriteFault;
 use super::fingerprint::{fingerprint, Fingerprint, StableHasher};
 use super::refiner::AnytimeRefiner;
+use super::shard::ShardMap;
 
 /// Inline (deadline-bounded) refinement slice: 4 node visits between
 /// clock checks, so the deadline is honored at ~tens-of-µs granularity
@@ -112,6 +113,22 @@ const SHED_RETRY_MS: f64 = 100.0;
 /// that failed validation — moved, never re-probed, never deleted by
 /// the size bound.
 const QUARANTINE_DIR: &str = "quarantine";
+/// Socket timeout for proxying a non-owned request to the owning peer.
+/// Generous relative to any inline deadline — on expiry the request
+/// falls back to local serving (`forward_errors`), so a slow owner
+/// costs latency, never availability.
+const FORWARD_TIMEOUT: Duration = Duration::from_secs(10);
+/// How long an advisory spill lock file may exist before a contender
+/// treats it as leaked by a crashed holder and breaks it. Critical
+/// sections under the lock are single-file renames/deletes — orders of
+/// magnitude shorter than this.
+const STALE_LOCK: Duration = Duration::from_secs(30);
+/// Bounded wait for an advisory spill lock: retries × backoff ≈ 100 ms,
+/// after which the operation proceeds unlocked (the tier's atomic
+/// renames keep even unlocked interleavings torn-free; the lock only
+/// serializes same-fingerprint write/quarantine/purge races).
+const LOCK_RETRIES: u32 = 50;
+const LOCK_BACKOFF: Duration = Duration::from_millis(2);
 
 /// Serving configuration, lifted from the `serve_*` keys of
 /// [`EgrlConfig`].
@@ -149,6 +166,18 @@ pub struct ServeOptions {
     /// JSON-lines span-trace sink (`serve_trace_path`). `None` keeps
     /// the instrumentation dark — an inlined no-op with no clock reads.
     pub trace_path: Option<PathBuf>,
+    /// Fleet membership (`serve_peers`): TCP addresses of every broker
+    /// in the fleet. Combined with [`Self::self_addr`] into a
+    /// [`ShardMap`]; empty = single-broker mode, no sharding.
+    pub peers: Vec<String>,
+    /// This broker's own advertised address (its `--tcp` bind address).
+    /// Required for sharding — empty disables the fleet layer even if
+    /// `peers` is set (the CLI enforces the pairing with a hard error).
+    pub self_addr: String,
+    /// Proxy mode (`serve_proxy`): forward non-owned `map`/`polish`
+    /// requests to the owner over TCP and relay the answer instead of
+    /// returning a `moved` redirect.
+    pub proxy: bool,
     /// Environment (reward/noise) configuration.
     pub env: EnvConfig,
 }
@@ -175,6 +204,11 @@ impl ServeOptions {
             } else {
                 Some(PathBuf::from(&cfg.serve_trace_path))
             },
+            peers: cfg.serve_peers.clone(),
+            // The config cannot know the bind address; `egrl serve`
+            // fills it from `--tcp`, tests set it directly.
+            self_addr: String::new(),
+            proxy: cfg.serve_proxy,
             env: cfg.env_config(),
         }
     }
@@ -262,6 +296,23 @@ struct Counters {
     drain_flushes: u64,
     /// Request streams accepted (stdio counts as one).
     connections: u64,
+    /// Non-owned requests answered with a `moved` redirect (fleet mode,
+    /// proxy off). Fleet coherence law, asserted by the fleet chaos
+    /// test: `moved + forwarded + hits + misses ≤ requests` per broker.
+    moved: u64,
+    /// Non-owned requests proxied to the owning peer and answered with
+    /// its relayed response.
+    forwarded: u64,
+    /// Requests that arrived already carrying `"forwarded":true` and
+    /// were therefore served locally regardless of ownership (the
+    /// forwarding-loop guard).
+    forwarded_in: u64,
+    /// Proxy attempts that failed (owner down/unreachable/overloaded);
+    /// each fell back to serving locally.
+    forward_errors: u64,
+    /// Spill artifacts deleted by `evict` with `"purge":true` (the
+    /// resurrection-proof eviction; see `op_evict`).
+    spill_purges: u64,
 }
 
 /// The placement-serving broker. All methods take `&self`; the broker is
@@ -297,6 +348,15 @@ pub struct Broker {
     /// served when its own deadline expires before the claimant
     /// finishes. Removed by the [`ColdClaim`] drop guard.
     cold_progress: Mutex<HashMap<Fingerprint, CacheEntry>>,
+    /// Fleet shard map (DESIGN.md §17): `Some` when this broker has a
+    /// self-address and at least one configured peer. Ownership and the
+    /// membership epoch are pure functions of the peer list, so every
+    /// member computes identical routing with no coordination.
+    shard: Option<ShardMap>,
+    /// Per-peer forward counts (how many requests this broker proxied
+    /// to each owner). Kept out of [`Counters`] so that struct stays
+    /// `Copy`; exposed by `stats` and the `metrics` op.
+    peer_forwards: Mutex<HashMap<String, u64>>,
     counters: Mutex<Counters>,
     /// Per-broker fault-injection handle (empty and zero-cost outside
     /// chaos tests — see [`faults`]).
@@ -339,6 +399,64 @@ impl Drop for ColdClaim<'_> {
     }
 }
 
+/// Advisory cross-**process** lock for one spill-tier key, so N brokers
+/// can share one spill directory as a common cold tier (DESIGN.md §17).
+/// Implemented as a `<fingerprint>.lock` sidecar created with
+/// `create_new` (atomic everywhere, no flock(2) portability caveats)
+/// and unlinked on drop. The `.lock` extension keeps it invisible to
+/// `spill_entries`/occupancy (which filter on `.json`). The lock
+/// serializes same-fingerprint write/quarantine/purge critical
+/// sections across processes; plain reads stay lock-free — the
+/// temp-then-rename write protocol already guarantees a reader never
+/// observes a torn artifact. A holder that crashes leaves its lock
+/// file behind; contenders break any lock older than [`STALE_LOCK`].
+/// Acquisition is bounded ([`LOCK_RETRIES`] × [`LOCK_BACKOFF`]): on
+/// timeout the caller proceeds *unlocked* rather than stalling the
+/// serving path — the lock is an optimization against redundant
+/// cross-broker work and racy counter drift, not a correctness
+/// prerequisite for torn-freedom.
+struct SpillLock {
+    path: PathBuf,
+}
+
+impl SpillLock {
+    /// Try to take the advisory lock for `stem` (a fingerprint hex) in
+    /// `dir`. `None` = bounded wait expired; proceed unlocked.
+    fn acquire(dir: &Path, stem: &str) -> Option<SpillLock> {
+        let path = dir.join(format!("{stem}.lock"));
+        for _ in 0..LOCK_RETRIES {
+            match std::fs::OpenOptions::new().write(true).create_new(true).open(&path) {
+                Ok(_) => return Some(SpillLock { path }),
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                    let stale = std::fs::metadata(&path)
+                        .and_then(|m| m.modified())
+                        .ok()
+                        .and_then(|t| t.elapsed().ok())
+                        .is_some_and(|age| age > STALE_LOCK);
+                    if stale {
+                        // Break the leaked lock and retry immediately;
+                        // if several contenders race the removal, the
+                        // create_new above re-arbitrates.
+                        let _ = std::fs::remove_file(&path);
+                        continue;
+                    }
+                    std::thread::sleep(LOCK_BACKOFF);
+                }
+                // Directory vanished or permissions broke: locking is
+                // advisory, don't add a failure mode of its own.
+                Err(_) => return None,
+            }
+        }
+        None
+    }
+}
+
+impl Drop for SpillLock {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
 impl Broker {
     pub fn new(opts: ServeOptions) -> Broker {
         let cache = MapCache::new(opts.cache_cap);
@@ -355,6 +473,15 @@ impl Broker {
             },
             None => Trace::off(),
         };
+        let shard = (!opts.self_addr.is_empty() && !opts.peers.is_empty())
+            .then(|| ShardMap::new(&opts.self_addr, &opts.peers));
+        if let Some(s) = &shard {
+            eprintln!(
+                "serve: fleet shard map: {} member(s), epoch {}",
+                s.peers().len(),
+                s.epoch()
+            );
+        }
         Broker {
             opts,
             envs: Mutex::new(HashMap::new()),
@@ -369,6 +496,8 @@ impl Broker {
             draining: AtomicBool::new(false),
             active_connections: AtomicUsize::new(0),
             cold_progress: Mutex::new(HashMap::new()),
+            shard,
+            peer_forwards: Mutex::new(HashMap::new()),
             counters: Mutex::new(Counters::default()),
             faults: faults::Hooks::default(),
             started: Instant::now(),
@@ -596,6 +725,14 @@ impl Broker {
         let return_map = req.get("return_map").and_then(Json::as_bool).unwrap_or(false);
         let deadline_ms = self.req_deadline_ms(req)?;
         let (env, fp) = self.env_for(w);
+
+        // Fleet routing (DESIGN.md §17): a fingerprint owned by another
+        // member is redirected or proxied *before* touching the cache
+        // or the cold claim — the owner is the only broker that should
+        // invest search budget in it.
+        if let Some(resp) = self.route_non_owned(req, "map", w, fp, span) {
+            return Ok(resp);
+        }
 
         // Lookup under the cross-connection cold-path claim: concurrent
         // misses for one fingerprint run the expensive cold path once —
@@ -873,6 +1010,113 @@ impl Broker {
         }
     }
 
+    // ---- fleet routing (DESIGN.md §17) -------------------------------------
+
+    /// Fleet routing for `map`/`polish`: `None` means "serve locally" —
+    /// single-broker mode, we own the fingerprint, or the request
+    /// already carries `"forwarded":true` (the forwarding-loop guard: a
+    /// forwarded request is served where it lands, even when a
+    /// mid-rolling-restart membership disagreement makes the two shard
+    /// maps name different owners — one hop, never a cycle). Otherwise
+    /// the returned response is either the owner's relayed answer
+    /// (proxy mode) or a `moved` redirect carrying the owner address
+    /// and membership epoch. A failed proxy hop degrades to local
+    /// serving (`forward_errors`) — a dead owner costs cache
+    /// duplication, never availability.
+    fn route_non_owned(
+        &self,
+        req: &Json,
+        op: &str,
+        w: Workload,
+        fp: Fingerprint,
+        span: Option<&ReqSpan>,
+    ) -> Option<Json> {
+        let shard = self.shard.as_ref()?;
+        if req.get("forwarded").and_then(Json::as_bool).unwrap_or(false) {
+            self.bump(|c| c.forwarded_in += 1);
+            return None;
+        }
+        if shard.owns(fp) {
+            return None;
+        }
+        let owner = shard.owner(fp).to_string();
+        if self.opts.proxy {
+            let fwd_start_ns = self.trace.now_ns();
+            let relayed = self.forward_to(&owner, req);
+            if let Some(s) = span {
+                self.trace.span(
+                    &s.id,
+                    "forward",
+                    Some("handler"),
+                    fwd_start_ns,
+                    self.trace.now_ns(),
+                    vec![
+                        ("fingerprint", Json::str(fp.hex())),
+                        ("peer", Json::str(owner.clone())),
+                        ("ok", Json::Bool(relayed.is_ok())),
+                    ],
+                );
+            }
+            match relayed {
+                Ok(resp) => {
+                    self.bump(|c| c.forwarded += 1);
+                    *lock_recover(&self.peer_forwards).entry(owner).or_insert(0) += 1;
+                    return Some(resp);
+                }
+                Err(e) => {
+                    self.bump(|c| c.forward_errors += 1);
+                    eprintln!("serve: forward to owner {owner} failed ({e:#}); serving locally");
+                    return None;
+                }
+            }
+        }
+        self.bump(|c| c.moved += 1);
+        Some(Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("op", Json::str(op)),
+            ("workload", Json::str(w.name())),
+            ("fingerprint", Json::str(fp.hex())),
+            ("moved", Json::Bool(true)),
+            ("owner", Json::str(owner)),
+            ("epoch", Json::Num(shard.epoch() as f64)),
+        ]))
+    }
+
+    /// One proxied round trip: connect to the owning peer, send the
+    /// request with `"forwarded":true` injected (so the owner serves it
+    /// locally — the loop guard — and both sides' counters stay
+    /// coherent), read exactly one response line and parse it. An
+    /// `overloaded` shed line from the peer is an error here, not a
+    /// relayable answer: the caller falls back to serving locally.
+    fn forward_to(&self, owner: &str, req: &Json) -> anyhow::Result<Json> {
+        let mut fwd = match req {
+            Json::Obj(m) => m.clone(),
+            _ => anyhow::bail!("request is not an object"),
+        };
+        fwd.insert("forwarded".to_string(), Json::Bool(true));
+        let line = Json::Obj(fwd).to_string_compact();
+        let stream = TcpStream::connect(owner)
+            .map_err(|e| anyhow::anyhow!("connecting to {owner}: {e}"))?;
+        stream.set_read_timeout(Some(FORWARD_TIMEOUT))?;
+        stream.set_write_timeout(Some(FORWARD_TIMEOUT))?;
+        let mut writer = stream.try_clone()?;
+        writeln!(writer, "{line}")?;
+        writer.flush()?;
+        let mut reader = BufReader::new(stream);
+        let mut resp_line = String::new();
+        let n = reader
+            .read_line(&mut resp_line)
+            .map_err(|e| anyhow::anyhow!("reading response from {owner}: {e}"))?;
+        anyhow::ensure!(n > 0, "owner {owner} closed the connection before answering");
+        let resp = parse(resp_line.trim_end())
+            .map_err(|e| anyhow::anyhow!("owner {owner} sent unparseable response: {e:#}"))?;
+        anyhow::ensure!(
+            resp.get("error").and_then(Json::as_str) != Some("overloaded"),
+            "owner {owner} is overloaded"
+        );
+        Ok(resp)
+    }
+
     // ---- disk spill tier ---------------------------------------------------
 
     fn spill_path(&self, fp: Fingerprint) -> Option<PathBuf> {
@@ -906,11 +1150,19 @@ impl Broker {
         }
         // Write-to-temp + rename so a concurrent `spill_probe` (or a
         // crash mid-write) can never observe a half-written artifact —
-        // the rename is atomic within the spill dir.
-        let tmp = path.with_extension("json.tmp");
-        let write = std::fs::create_dir_all(dir)
-            .and_then(|()| std::fs::write(&tmp, &payload))
-            .and_then(|()| std::fs::rename(&tmp, &path));
+        // the rename is atomic within the spill dir. The advisory
+        // per-fingerprint lock serializes this against other *brokers*
+        // sharing the dir (two same-fingerprint writers would race
+        // their `.tmp`; a quarantine could rename the artifact out from
+        // under a concurrent rewrite). Held across the rename only.
+        let _ = std::fs::create_dir_all(dir);
+        let _lock = SpillLock::acquire(dir, &fp.hex());
+        // Process-qualified temp name: even in the degraded unlocked
+        // path (lock wait expired) two brokers can never interleave
+        // writes into one temp file — each renames its own complete
+        // payload, and rename itself is atomic.
+        let tmp = path.with_extension(format!("{}.tmp", std::process::id()));
+        let write = std::fs::write(&tmp, &payload).and_then(|()| std::fs::rename(&tmp, &path));
         match write {
             Ok(()) => {
                 self.bump(|c| c.spill_writes += 1);
@@ -930,6 +1182,16 @@ impl Broker {
     fn quarantine(&self, path: &Path) {
         let Some(dir) = self.opts.spill_dir.as_ref() else { return };
         let Some(name) = path.file_name() else { return };
+        let stem = path.file_stem().and_then(|s| s.to_str()).unwrap_or("quarantine");
+        // Advisory lock + existence re-check: when several brokers
+        // sharing the dir probe the same corrupt artifact, exactly one
+        // quarantines (and counts) it — the losers see it already gone
+        // instead of logging a rename failure or racing a concurrent
+        // same-fingerprint rewrite.
+        let _lock = SpillLock::acquire(dir, stem);
+        if !path.exists() {
+            return;
+        }
         let qdir = dir.join(QUARANTINE_DIR);
         let moved =
             std::fs::create_dir_all(&qdir).and_then(|()| std::fs::rename(path, qdir.join(name)));
@@ -995,15 +1257,34 @@ impl Broker {
     pub fn spill_scan(&self) -> SpillScan {
         let mut scan = SpillScan::default();
         let Some(dir) = self.opts.spill_dir.as_ref() else { return scan };
+        // In fleet mode the spill dir is SHARED with live peers: a
+        // `.tmp` (or `.lock`) found at startup may be another broker's
+        // in-flight write, not a crash leftover — only age-expired ones
+        // are swept. A single-broker dir is exclusively ours, so every
+        // leftover is stale by definition.
+        let shared = !self.opts.peers.is_empty();
+        let expired = |path: &Path| {
+            std::fs::metadata(path)
+                .and_then(|m| m.modified())
+                .ok()
+                .and_then(|t| t.elapsed().ok())
+                .is_some_and(|age| age > STALE_LOCK)
+        };
         if let Ok(rd) = std::fs::read_dir(dir) {
             for entry in rd.filter_map(|e| e.ok()) {
                 let path = entry.path();
-                let is_tmp = path
-                    .file_name()
-                    .and_then(|n| n.to_str())
-                    .is_some_and(|n| n.ends_with(".tmp"));
-                if is_tmp && std::fs::remove_file(&path).is_ok() {
-                    scan.removed_tmp += 1;
+                let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+                if name.ends_with(".tmp") && (!shared || expired(&path)) {
+                    if std::fs::remove_file(&path).is_ok() {
+                        scan.removed_tmp += 1;
+                    }
+                } else if name.ends_with(".lock") && (!shared || expired(&path)) {
+                    // Leaked advisory locks from a crashed holder;
+                    // SpillLock::acquire would break them on contact,
+                    // this just keeps the dir tidy.
+                    if std::fs::remove_file(&path).is_ok() {
+                        scan.removed_locks += 1;
+                    }
                 }
             }
         }
@@ -1087,6 +1368,11 @@ impl Broker {
     fn op_polish(&self, req: &Json, span: Option<&ReqSpan>) -> anyhow::Result<Json> {
         let w = self.req_workload(req)?;
         let (env, fp) = self.env_for(w);
+        // Same fleet routing as `map`: polish budget belongs to the
+        // owner's cache entry, not a non-owner's duplicate.
+        if let Some(resp) = self.route_non_owned(req, "polish", w, fp, span) {
+            return Ok(resp);
+        }
         let budget = req
             .get("budget")
             .and_then(Json::as_f64)
@@ -1174,6 +1460,9 @@ impl Broker {
     fn op_evict(&self, req: &Json, span: Option<&ReqSpan>) -> anyhow::Result<Json> {
         let w = self.req_workload(req)?;
         let (_, fp) = self.env_for(w);
+        if req.get("purge").and_then(Json::as_bool).unwrap_or(false) {
+            return Ok(self.evict_purge(w, fp, span));
+        }
         let taken = self.cache.take(fp);
         let spill_start_ns = self.trace.now_ns();
         let spilled = match &taken {
@@ -1201,6 +1490,74 @@ impl Broker {
             ("evicted", Json::Bool(taken.is_some())),
             ("spilled", Json::Bool(spilled)),
         ]))
+    }
+
+    /// ISSUE 10 bugfix: resurrection-proof eviction. A plain `evict`
+    /// *demotes* (cache → spill), so a later miss restoring the entry
+    /// is by design. `{"purge":true}` means "forget this fingerprint
+    /// entirely": the cache entry is taken AND the spill artifact
+    /// deleted. Doing that naively races the miss path — a concurrent
+    /// `map` that has already passed `spill_probe`'s existence check
+    /// holds the parsed artifact in memory and re-inserts it *after*
+    /// the purge completes, resurrecting what the operator explicitly
+    /// evicted. The purge therefore takes the same per-fingerprint
+    /// cold-path claim every miss runs its probe+insert under: once the
+    /// purge holds the claim, no restore is in flight and none can
+    /// start until the claim drops — at which point cache and disk are
+    /// both empty. The artifact delete additionally runs under the
+    /// shared-tier advisory lock so it cannot interleave with another
+    /// broker's same-fingerprint write or quarantine rename.
+    /// (Fleet caveat, docs/OPERATIONS.md: a purge clears THIS broker's
+    /// cache and the shared disk tier; peers' in-memory entries are
+    /// theirs to evict.)
+    fn evict_purge(&self, w: Workload, fp: Fingerprint, span: Option<&ReqSpan>) -> Json {
+        let t0_ns = self.trace.now_ns();
+        let _claim = {
+            let mut cold = lock_recover(&self.cold_in_flight);
+            while cold.contains(&fp) {
+                // Bounded slices; the ColdClaim drop guard guarantees
+                // the claim cannot outlive its (even panicking)
+                // claimant, so this loop always terminates.
+                cold = wait_timeout_recover(&self.cold_cv, cold, TCP_POLL).0;
+            }
+            cold.insert(fp);
+            ColdClaim { broker: self, fp }
+        };
+        let taken = self.cache.take(fp);
+        let purged = match self.spill_path(fp) {
+            Some(path) => {
+                let dir = self.opts.spill_dir.as_ref().expect("spill dir configured");
+                let _lock = SpillLock::acquire(dir, &fp.hex());
+                let removed = std::fs::remove_file(&path).is_ok();
+                if removed {
+                    self.bump(|c| c.spill_purges += 1);
+                }
+                removed
+            }
+            None => false,
+        };
+        if let Some(s) = span {
+            self.trace.span(
+                &s.id,
+                "spill_purge",
+                Some("handler"),
+                t0_ns,
+                self.trace.now_ns(),
+                vec![
+                    ("fingerprint", Json::str(fp.hex())),
+                    ("purged", Json::Bool(purged)),
+                ],
+            );
+        }
+        Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("op", Json::str("evict")),
+            ("workload", Json::str(w.name())),
+            ("fingerprint", Json::str(fp.hex())),
+            ("evicted", Json::Bool(taken.is_some())),
+            ("spilled", Json::Bool(false)),
+            ("purged", Json::Bool(purged)),
+        ])
     }
 
     fn op_stats(&self) -> Json {
@@ -1239,7 +1596,7 @@ impl Broker {
         // Resolved-config echo: what this broker is actually running
         // with, so an operator scraping a fleet can spot a misdeployed
         // binary without reading its launch flags.
-        let config = Json::obj(vec![
+        let mut config_fields = vec![
             ("cache_cap", Json::Num(self.opts.cache_cap as f64)),
             ("deadline_ms", Json::Num(self.opts.deadline_ms as f64)),
             ("refine_budget", Json::Num(self.opts.refine_budget as f64)),
@@ -1249,7 +1606,24 @@ impl Broker {
             ("spill_max_bytes", Json::Num(self.opts.spill_max_bytes as f64)),
             ("priority_refine", Json::Bool(self.opts.priority_refine)),
             ("seed", Json::Num(self.opts.seed as f64)),
-        ]);
+        ];
+        if let Some(shard) = &self.shard {
+            // Fleet echo: membership size + epoch let an operator
+            // scraping every member spot a split-horizon fleet (mixed
+            // peer lists) in one pass — epochs disagree iff memberships
+            // do.
+            config_fields.push(("fleet_peers", Json::Num(shard.peers().len() as f64)));
+            config_fields.push(("fleet_epoch", Json::Num(shard.epoch() as f64)));
+            config_fields.push(("fleet_self", Json::str(shard.self_addr())));
+            config_fields.push(("fleet_proxy", Json::Bool(self.opts.proxy)));
+        }
+        let config = Json::obj(config_fields);
+        let peer_forwards = {
+            let m = lock_recover(&self.peer_forwards);
+            let mut pairs: Vec<(String, u64)> = m.iter().map(|(k, &v)| (k.clone(), v)).collect();
+            pairs.sort();
+            Json::Obj(pairs.into_iter().map(|(k, v)| (k, Json::Num(v as f64))).collect())
+        };
         Json::obj(vec![
             ("ok", Json::Bool(true)),
             ("op", Json::str("stats")),
@@ -1280,6 +1654,12 @@ impl Broker {
             ("shed_jobs", Json::Num(c.shed_jobs as f64)),
             ("waiter_snapshots", Json::Num(c.waiter_snapshots as f64)),
             ("drain_flushes", Json::Num(c.drain_flushes as f64)),
+            ("moved", Json::Num(c.moved as f64)),
+            ("forwarded", Json::Num(c.forwarded as f64)),
+            ("forwarded_in", Json::Num(c.forwarded_in as f64)),
+            ("forward_errors", Json::Num(c.forward_errors as f64)),
+            ("spill_purges", Json::Num(c.spill_purges as f64)),
+            ("peer_forwards", peer_forwards),
             ("draining", Json::Bool(self.draining.load(Ordering::SeqCst))),
             ("errors", Json::Num(c.errors as f64)),
             ("background_jobs", Json::Num(c.background_jobs as f64)),
@@ -1347,17 +1727,32 @@ impl Broker {
             ("spill_hits", Json::Num(c.spill_hits as f64)),
             ("spill_rejected", Json::Num(c.spill_rejected as f64)),
             ("spill_evictions", Json::Num(c.spill_evictions as f64)),
+            ("spill_purges", Json::Num(c.spill_purges as f64)),
             ("quarantined", Json::Num(c.quarantined as f64)),
             ("drain_flushes", Json::Num(c.drain_flushes as f64)),
+            ("moved", Json::Num(c.moved as f64)),
+            ("forwarded", Json::Num(c.forwarded as f64)),
+            ("forwarded_in", Json::Num(c.forwarded_in as f64)),
+            ("forward_errors", Json::Num(c.forward_errors as f64)),
             ("publishes", Json::Num(s.publishes as f64)),
             ("rejected_publishes", Json::Num(s.rejected_publishes as f64)),
             ("evictions", Json::Num(s.evictions as f64)),
         ]);
+        // Per-peer forward counts (fleet proxy mode): which owners this
+        // broker's non-owned traffic went to — the per-peer view the
+        // fleet runbook uses to spot a hot or dead member.
+        let peer_forwards = {
+            let m = lock_recover(&self.peer_forwards);
+            let mut pairs: Vec<(String, u64)> = m.iter().map(|(k, &v)| (k.clone(), v)).collect();
+            pairs.sort();
+            Json::Obj(pairs.into_iter().map(|(k, v)| (k, Json::Num(v as f64))).collect())
+        };
         Json::obj(vec![
             ("ok", Json::Bool(true)),
             ("op", Json::str("metrics")),
             ("uptime_ms", Json::Num(self.started.elapsed().as_millis() as f64)),
             ("counters", counters),
+            ("peer_forwards", peer_forwards),
             ("hit_latency", hist_json(&self.hist_hit.snapshot())),
             ("cold_latency", hist_json(&self.hist_cold.snapshot())),
             (
@@ -1405,11 +1800,31 @@ impl Broker {
         p.counter("egrl_shed_jobs_total", "Background jobs shed at the queue bound.", c.shed_jobs);
         p.counter("egrl_errors_total", "Requests answered with a structured error.", c.errors);
         p.counter("egrl_cache_publishes_total", "Monotone cache publishes accepted.", s.publishes);
+        p.counter("egrl_moved_total", "Non-owned requests answered with a moved redirect.", c.moved);
+        p.counter("egrl_forwarded_total", "Non-owned requests proxied to their owner.", c.forwarded);
+        p.counter("egrl_forwarded_in_total", "Forwarded requests received and served locally.", c.forwarded_in);
+        p.counter("egrl_forward_errors_total", "Proxy attempts that fell back to local serving.", c.forward_errors);
+        p.counter("egrl_spill_purges_total", "Spill artifacts deleted by purge evictions.", c.spill_purges);
+        {
+            let m = lock_recover(&self.peer_forwards);
+            let mut series: Vec<(String, u64)> = m.iter().map(|(k, &v)| (k.clone(), v)).collect();
+            series.sort();
+            p.labeled_counter(
+                "egrl_peer_forwards_total",
+                "Requests proxied, by owning peer.",
+                "peer",
+                &series,
+            );
+        }
         p.gauge("egrl_cache_entries", "Live map-cache entries.", s.entries as f64);
         p.gauge("egrl_cache_capacity", "Map-cache capacity.", s.capacity as f64);
         p.gauge("egrl_spill_files", "Artifacts resident in the spill tier.", spill_files as f64);
         p.gauge("egrl_spill_bytes", "Bytes resident in the spill tier.", spill_bytes as f64);
         p.gauge("egrl_queue_depth", "Background refinement jobs queued.", self.queue.len() as f64);
+        if let Some(shard) = &self.shard {
+            p.gauge("egrl_fleet_peers", "Fleet membership size.", shard.peers().len() as f64);
+            p.gauge("egrl_fleet_epoch", "Fleet membership epoch.", shard.epoch() as f64);
+        }
         p.gauge("egrl_uptime_seconds", "Seconds since broker construction.", self.started.elapsed().as_secs_f64());
         p.histogram(
             "egrl_hit_latency_seconds",
@@ -1926,9 +2341,12 @@ pub struct SpillScan {
     pub bytes: u64,
     /// Invalid artifacts moved to the quarantine sidecar.
     pub quarantined: u64,
-    /// Stale `*.json.tmp` leftovers deleted (a crash between
-    /// write-temp and rename).
+    /// Stale `*.tmp` leftovers deleted (a crash between write-temp and
+    /// rename). In fleet mode only age-expired ones are swept — a
+    /// fresh `.tmp` may be a live peer's in-flight write.
     pub removed_tmp: u64,
+    /// Stale advisory `.lock` files deleted (a crashed holder).
+    pub removed_locks: u64,
     /// Sound artifacts deleted to honor `serve_spill_max_bytes`.
     pub evicted: u64,
 }
@@ -1990,6 +2408,9 @@ mod tests {
             queue_depth: 0,
             spill_max_bytes: 0,
             trace_path: None,
+            peers: Vec::new(),
+            self_addr: String::new(),
+            proxy: false,
             env: EnvConfig::default(),
         }
     }
@@ -3348,6 +3769,610 @@ mod tests {
             ("monotone_curves", Json::Bool(true)),
         ]);
         let _ = std::fs::write("BENCH_chaos.json", bench.to_string_pretty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    // ---- ISSUE 10: fingerprint-sharded fleet -----------------------------
+
+    fn fleet_opts(
+        self_addr: &str,
+        peers: &[String],
+        proxy: bool,
+        dir: Option<&std::path::Path>,
+    ) -> ServeOptions {
+        let mut o = opts(0, 0, 900);
+        o.peers = peers.to_vec();
+        o.self_addr = self_addr.to_string();
+        o.proxy = proxy;
+        o.spill_dir = dir.map(Path::to_path_buf);
+        o
+    }
+
+    /// ISSUE 10 tentpole: fleet routing without proxying — a request for
+    /// a fingerprint owned by another member answers a `moved` redirect
+    /// (owner address + membership epoch) and is never served locally;
+    /// the `forwarded` loop guard forces local service; owned
+    /// fingerprints never see the fleet layer.
+    #[test]
+    fn fleet_moved_redirect_and_forwarded_loop_guard() {
+        let a0 = "127.0.0.1:7101".to_string();
+        let a1 = "127.0.0.1:7102".to_string();
+        let peers = vec![a0.clone(), a1.clone()];
+        // Fingerprints are fleet-independent; probe with a plain broker.
+        let probe = Broker::new(opts(0, 0, 90));
+        let workloads = [Workload::ResNet50, Workload::ResNet101, Workload::Bert];
+        let shard0 = ShardMap::new(&a0, &peers);
+        // Pick a perspective guaranteed NOT to own at least one probed
+        // workload: if a0 owns all three, all three are remote from a1.
+        let (self_addr, remote_w) = workloads
+            .iter()
+            .find(|&&w| shard0.owner(probe.fingerprint_of(w)) != a0)
+            .map(|&w| (a0.clone(), w))
+            .unwrap_or((a1.clone(), workloads[0]));
+        let b = Broker::new(fleet_opts(&self_addr, &peers, false, None));
+        let fp = b.fingerprint_of(remote_w);
+        let shard = ShardMap::new(&self_addr, &peers);
+        assert!(!shard.owns(fp), "test setup: the picked workload must be remote");
+        let owner = shard.owner(fp).to_string();
+        assert_ne!(owner, self_addr);
+
+        let r = req(&format!(r#"{{"op":"map","workload":"{}"}}"#, remote_w.name()), &b);
+        assert!(r.get("ok").unwrap().as_bool().unwrap());
+        assert_eq!(get_str(&r, "op"), "map");
+        assert!(r.get("moved").unwrap().as_bool().unwrap(), "{r:?}");
+        assert_eq!(get_str(&r, "owner"), owner);
+        assert_eq!(get_num(&r, "epoch"), shard.epoch() as f64, "epoch must survive f64");
+        assert_eq!(get_str(&r, "fingerprint"), fp.hex());
+        assert!(r.get("cache").is_none(), "a moved redirect serves nothing: {r:?}");
+
+        // `polish` routes identically.
+        let p =
+            req(&format!(r#"{{"op":"polish","workload":"{}"}}"#, remote_w.name()), &b);
+        assert!(p.get("moved").unwrap().as_bool().unwrap());
+        assert_eq!(get_str(&p, "op"), "polish");
+
+        // Loop guard: the same request marked `forwarded` is served
+        // locally — one hop can never become a cycle, even under
+        // split-horizon membership.
+        let f = req(
+            &format!(r#"{{"op":"map","workload":"{}","forwarded":true}}"#, remote_w.name()),
+            &b,
+        );
+        assert!(f.get("moved").is_none(), "{f:?}");
+        assert_eq!(get_str(&f, "cache"), "miss");
+
+        let stats = req(r#"{"op":"stats"}"#, &b);
+        assert_eq!(get_num(&stats, "moved"), 2.0);
+        assert_eq!(get_num(&stats, "forwarded_in"), 1.0);
+        assert_eq!(get_num(&stats, "forwarded"), 0.0);
+        assert_eq!(get_num(&stats, "misses"), 1.0, "only the forced-local request missed");
+        let cfg = stats.get("config").expect("config echo");
+        assert_eq!(get_num(cfg, "fleet_peers"), 2.0);
+        assert_eq!(get_str(cfg, "fleet_self"), self_addr);
+        assert_eq!(get_num(cfg, "fleet_epoch"), shard.epoch() as f64);
+
+        // An owned workload (when this perspective has one) is served
+        // normally — the fleet layer never intercepts it.
+        if let Some(&w) = workloads.iter().find(|&&w| shard.owns(b.fingerprint_of(w))) {
+            let r = req(&format!(r#"{{"op":"map","workload":"{}"}}"#, w.name()), &b);
+            assert!(r.get("moved").is_none());
+            assert!(r.get("cache").is_some());
+        }
+
+        let text = b.prometheus();
+        assert!(text.contains("egrl_moved_total 2\n"), "{text}");
+        assert!(text.contains("egrl_fleet_peers 2\n"), "{text}");
+    }
+
+    /// ISSUE 10 tentpole: proxy mode — a non-owned request is forwarded
+    /// to the owning peer over TCP, the owner serves it locally (loop
+    /// guard) and the answer is relayed verbatim; per-peer counters
+    /// track the route; a dead owner degrades to local fallback, never
+    /// an outage.
+    #[test]
+    fn fleet_proxy_forwards_to_owner_and_falls_back_when_owner_dies() {
+        let l0 = TcpListener::bind("127.0.0.1:0").unwrap();
+        let l1 = TcpListener::bind("127.0.0.1:0").unwrap();
+        let a0 = l0.local_addr().unwrap().to_string();
+        let a1 = l1.local_addr().unwrap().to_string();
+        let peers = vec![a0.clone(), a1.clone()];
+        let probe = Broker::new(opts(0, 0, 90));
+        let fp = probe.fingerprint_of(Workload::ResNet50);
+        let owner_addr = ShardMap::new(&a0, &peers).owner(fp).to_string();
+        // The broker on the OTHER address forwards to the owner.
+        let (own_l, fwd_self) =
+            if owner_addr == a0 { (l0, a1.clone()) } else { (l1, a0.clone()) };
+        let owner_b = Broker::new(fleet_opts(&owner_addr, &peers, true, None));
+        let fwd_b = Broker::new(fleet_opts(&fwd_self, &peers, true, None));
+
+        std::thread::scope(|scope| {
+            let server = scope.spawn(|| owner_b.serve_tcp(own_l));
+            // Relay of a cold miss, then of the owner's cache hit.
+            let r1 = req(r#"{"op":"map","workload":"resnet50"}"#, &fwd_b);
+            assert_eq!(get_str(&r1, "cache"), "miss", "relayed cold answer: {r1:?}");
+            assert_eq!(get_str(&r1, "fingerprint"), fp.hex());
+            let r2 = req(r#"{"op":"map","workload":"resnet50"}"#, &fwd_b);
+            assert_eq!(get_str(&r2, "cache"), "hit", "owner's cache answers the relay");
+
+            let fs = req(r#"{"op":"stats"}"#, &fwd_b);
+            assert_eq!(get_num(&fs, "forwarded"), 2.0);
+            assert_eq!(get_num(&fs, "moved"), 0.0);
+            assert_eq!(
+                get_num(&fs, "hits") + get_num(&fs, "misses"),
+                0.0,
+                "the forwarder served nothing locally"
+            );
+            let per_peer = fs.get("peer_forwards").expect("per-peer counters");
+            assert_eq!(get_num(per_peer, owner_addr.as_str()), 2.0);
+            let os = req(r#"{"op":"stats"}"#, &owner_b);
+            assert_eq!(get_num(&os, "forwarded_in"), 2.0);
+            assert_eq!(get_num(&os, "hits"), 1.0);
+            assert_eq!(get_num(&os, "misses"), 1.0);
+            let text = fwd_b.prometheus();
+            assert!(
+                text.contains(&format!(
+                    "egrl_peer_forwards_total{{peer=\"{owner_addr}\"}} 2\n"
+                )),
+                "{text}"
+            );
+
+            // Kill the owner over a control connection...
+            let ctl = TcpStream::connect(owner_addr.as_str()).unwrap();
+            ctl.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+            let mut w = ctl.try_clone().unwrap();
+            let mut r = BufReader::new(ctl);
+            writeln!(w, r#"{{"op":"shutdown"}}"#).unwrap();
+            let mut line = String::new();
+            r.read_line(&mut line).unwrap();
+            server.join().unwrap().unwrap();
+        });
+
+        // ...and the forwarder falls back to serving locally.
+        let r3 = req(r#"{"op":"map","workload":"resnet50"}"#, &fwd_b);
+        assert!(r3.get("moved").is_none(), "proxy mode never redirects: {r3:?}");
+        assert_eq!(get_str(&r3, "cache"), "miss", "local fallback runs the cold path");
+        let fs = req(r#"{"op":"stats"}"#, &fwd_b);
+        assert_eq!(get_num(&fs, "forward_errors"), 1.0);
+        assert_eq!(get_num(&fs, "misses"), 1.0);
+    }
+
+    /// ISSUE 10 bugfix regression: a concurrent spill restore must not
+    /// resurrect a purge-evicted fingerprint. The fault plan's
+    /// slow-probe delay holds a restoring `map` inside `spill_probe`
+    /// (cold claim held) while the purge arrives: the purge must wait
+    /// out the claim, then leave cache AND disk empty. Before the
+    /// claim-taking fix the purge's delete ran while the restorer held
+    /// the parsed artifact in memory, and the restorer's insert
+    /// resurrected the explicitly evicted entry.
+    #[test]
+    fn evict_purge_defeats_concurrent_spill_restore() {
+        let dir = spill_dir("purge-race");
+        let mut o = opts(0, 0, 900);
+        o.spill_dir = Some(dir.clone());
+        let mut b = Broker::open(o).unwrap();
+        req(r#"{"op":"map","workload":"resnet50"}"#, &b);
+        let ev = req(r#"{"op":"evict","workload":"resnet50"}"#, &b);
+        assert!(ev.get("spilled").unwrap().as_bool().unwrap());
+        let fp = b.fingerprint_of(Workload::ResNet50);
+        let path = dir.join(format!("{}.json", fp.hex()));
+        assert!(path.exists());
+
+        // Every spill probe now sleeps 150 ms — a deterministic window
+        // in which the restorer holds the cold claim mid-probe.
+        let guard = faults::install(faults::FaultPlan {
+            seed: 11,
+            slow_io: 1.0,
+            slow_io_ms: 150,
+            ..Default::default()
+        });
+        b.faults = guard.hooks();
+        let b = b;
+
+        std::thread::scope(|scope| {
+            let restorer =
+                scope.spawn(|| req(r#"{"op":"map","workload":"resnet50"}"#, &b));
+            // Wait until the restorer holds the claim (it sleeps inside
+            // its probe while holding it) so the interleaving is fixed.
+            let t0 = Instant::now();
+            while !lock_recover(&b.cold_in_flight).contains(&fp) {
+                assert!(t0.elapsed() < Duration::from_secs(10), "restorer never claimed");
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            let purge = req(r#"{"op":"evict","workload":"resnet50","purge":true}"#, &b);
+            // The purge waited out the restore, then evicted its insert
+            // and deleted the artifact: both tiers end empty.
+            assert!(purge.get("evicted").unwrap().as_bool().unwrap(), "{purge:?}");
+            assert!(purge.get("purged").unwrap().as_bool().unwrap(), "{purge:?}");
+            assert!(!purge.get("spilled").unwrap().as_bool().unwrap());
+            let restored = restorer.join().unwrap();
+            assert_eq!(
+                get_str(&restored, "cache"),
+                "spill",
+                "the restore won the race first, then was purged"
+            );
+        });
+        assert!(!path.exists(), "purge must delete the spill artifact");
+        assert!(
+            b.cache.peek(fp).is_none(),
+            "resurrected cache entry: the race this test pins"
+        );
+        drop(guard);
+
+        // The fingerprint is truly forgotten: the next map re-runs the
+        // cold path from the compiler start.
+        let again = req(r#"{"op":"map","workload":"resnet50"}"#, &b);
+        assert_eq!(get_str(&again, "cache"), "miss");
+        assert_eq!(get_str(&again, "source"), "compiler");
+        let stats = req(r#"{"op":"stats"}"#, &b);
+        assert_eq!(get_num(&stats, "spill_purges"), 1.0);
+        assert_eq!(get_num(&stats, "spill_hits"), 1.0);
+        assert_counter_coherence(&stats, Some(&dir));
+
+        // Purging an absent fingerprint is a clean no-op.
+        let noop = req(r#"{"op":"evict","workload":"bert","purge":true}"#, &b);
+        assert!(!noop.get("evicted").unwrap().as_bool().unwrap());
+        assert!(!noop.get("purged").unwrap().as_bool().unwrap());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// ISSUE 10 tentpole: one spill directory as a shared cold tier —
+    /// an artifact demoted by one broker restores on another; both
+    /// brokers' `spill_files` agree with the shared disk state; a fresh
+    /// foreign advisory lock wins the bounded wait, a stale one (crashed
+    /// holder) is broken on contact, and sidecar files never count as
+    /// artifacts.
+    #[test]
+    fn shared_spill_dir_is_a_common_cold_tier_with_advisory_locks() {
+        let dir = spill_dir("shared-tier");
+        let mk = || {
+            let mut o = opts(0, 0, 900);
+            o.spill_dir = Some(dir.clone());
+            Broker::open(o).unwrap()
+        };
+        let ba = mk();
+        let bb = mk();
+        req(r#"{"op":"map","workload":"resnet50"}"#, &ba);
+        let ev = req(r#"{"op":"evict","workload":"resnet50"}"#, &ba);
+        assert!(ev.get("spilled").unwrap().as_bool().unwrap());
+        // The OTHER broker restores the investment from the shared tier.
+        let r = req(r#"{"op":"map","workload":"resnet50"}"#, &bb);
+        assert_eq!(get_str(&r, "cache"), "spill");
+        let sa = req(r#"{"op":"stats"}"#, &ba);
+        let sb = req(r#"{"op":"stats"}"#, &bb);
+        assert_eq!(get_num(&sb, "spill_hits"), 1.0);
+        // Both see the same shared occupancy, and both stay coherent.
+        assert_eq!(get_num(&sa, "spill_files"), 1.0);
+        assert_eq!(get_num(&sb, "spill_files"), 1.0);
+        assert_counter_coherence(&sa, Some(&dir));
+        assert_counter_coherence(&sb, Some(&dir));
+
+        // Advisory lock: a fresh foreign lock wins the bounded wait...
+        let fp = ba.fingerprint_of(Workload::ResNet50);
+        let stem = fp.hex();
+        let lock_path = dir.join(format!("{stem}.lock"));
+        std::fs::write(&lock_path, b"").unwrap();
+        assert!(SpillLock::acquire(&dir, &stem).is_none(), "fresh foreign lock must hold");
+        // ...until it goes stale: backdate it past STALE_LOCK and the
+        // next contender breaks it and wins.
+        let old = std::time::SystemTime::now() - (STALE_LOCK + Duration::from_secs(5));
+        std::fs::File::options()
+            .write(true)
+            .open(&lock_path)
+            .and_then(|f| f.set_times(std::fs::FileTimes::new().set_modified(old)))
+            .unwrap();
+        let lock = SpillLock::acquire(&dir, &stem).expect("stale lock must be broken");
+        drop(lock);
+        assert!(!lock_path.exists(), "lock release must unlink the sidecar");
+        // Sidecar files are invisible to occupancy accounting.
+        std::fs::write(dir.join("leftover.json.tmp"), b"x").unwrap();
+        std::fs::write(dir.join(format!("{stem}.lock")), b"").unwrap();
+        let sa2 = req(r#"{"op":"stats"}"#, &ba);
+        assert_eq!(get_num(&sa2, "spill_files"), 1.0, "sidecars must not count");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// ISSUE 10 satellite: fleet chaos. Three proxying TCP brokers share
+    /// one spill directory and one seeded fault plan (torn/failed/slow
+    /// spill IO, worker/claimant/handler panics, ≥200 injected).
+    /// Mid-replay one member is drained; after the replay it restarts
+    /// against the shared tier. Asserts: every client request is
+    /// answered (bounded retries across members), no served map is
+    /// invalid, per-fingerprint anytime curves stay monotone on every
+    /// member, per-broker and cross-broker counter-coherence laws hold
+    /// (including the shared `spill_files` ↔ disk agreement and the
+    /// quarantine bound), at least one request crossed the fleet, and
+    /// the restarted member restores from the shared spill tier.
+    /// Seeded via `EGRL_CHAOS_SEED` (CI matrix {1, 7, 99}).
+    #[test]
+    fn fleet_chaos_three_brokers_survive_member_restart() {
+        let seed: u64 = std::env::var("EGRL_CHAOS_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(1);
+        let dir = spill_dir(&format!("fleet-chaos{seed}"));
+        let listeners: Vec<TcpListener> =
+            (0..3).map(|_| TcpListener::bind("127.0.0.1:0").expect("bind")).collect();
+        let addrs: Vec<String> =
+            listeners.iter().map(|l| l.local_addr().unwrap().to_string()).collect();
+        let plan = faults::FaultPlan {
+            seed,
+            torn_spill_write: 0.25,
+            spill_io_error: 0.10,
+            slow_io: 0.15,
+            slow_io_ms: 1,
+            worker_panic: 0.25,
+            claimant_panic: 0.20,
+            handler_panic: 0.10,
+        };
+        let guard = faults::install(plan);
+        let mk_opts = |i: usize| {
+            let mut o = opts(1, 5, 6000);
+            o.cache_cap = 2; // 3 workloads over 2 slots: constant churn
+            o.spill_dir = Some(dir.clone());
+            o.peers = addrs.clone();
+            o.self_addr = addrs[i].clone();
+            o.proxy = true;
+            o
+        };
+        let brokers: Vec<Broker> = (0..3)
+            .map(|i| {
+                let mut b = Broker::open(mk_opts(i)).expect("fleet member opens");
+                b.faults = guard.hooks();
+                b
+            })
+            .collect();
+
+        const CLIENTS: usize = 6;
+        const ROUNDS: usize = 8;
+        let workloads = ["resnet50", "resnet101", "bert"];
+        let (collected, b1_pre) = std::thread::scope(|scope| {
+            let mut servers: Vec<_> = brokers
+                .iter()
+                .zip(listeners)
+                .map(|(b, l)| Some(scope.spawn(move || b.serve_tcp(l))))
+                .collect();
+            let addrs = &addrs;
+            // One connection per request, retrying across members: a
+            // member that died mid-request is routed around, so every
+            // request is eventually answered by SOME member.
+            let send_via = |primary: usize, line: &str| -> Option<Json> {
+                for attempt in 0..12 {
+                    let addr = &addrs[(primary + attempt) % addrs.len()];
+                    let Ok(stream) = TcpStream::connect(addr.as_str()) else {
+                        continue;
+                    };
+                    let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+                    let Ok(mut w) = stream.try_clone() else { continue };
+                    if writeln!(w, "{line}").is_err() {
+                        continue;
+                    }
+                    let mut r = BufReader::new(stream);
+                    let mut out = String::new();
+                    match r.read_line(&mut out) {
+                        Ok(n) if n > 0 => {
+                            if let Ok(j) = parse(out.trim_end()) {
+                                if j.get("error").and_then(Json::as_str)
+                                    == Some("overloaded")
+                                {
+                                    continue;
+                                }
+                                return Some(j);
+                            }
+                        }
+                        _ => continue,
+                    }
+                }
+                None
+            };
+            let send_via = &send_via;
+            let clients: Vec<_> = (0..CLIENTS)
+                .map(|ci| {
+                    scope.spawn(move || {
+                        let mut got = Vec::new();
+                        for round in 0..ROUNDS {
+                            for k in 0..workloads.len() {
+                                let w = workloads[(ci + round + k) % workloads.len()];
+                                let rm = if w == "resnet50" { "true" } else { "false" };
+                                let line = format!(
+                                    r#"{{"op":"map","workload":"{w}","return_map":{rm}}}"#
+                                );
+                                got.push(
+                                    send_via(ci % 3, &line)
+                                        .expect("request permanently unanswered"),
+                                );
+                            }
+                            got.push(
+                                send_via(ci % 3, "fleet chaos garbage")
+                                    .expect("garbage line unanswered"),
+                            );
+                            if round % 3 == ci % 3 {
+                                let w = workloads[(ci + round) % workloads.len()];
+                                let line = format!(r#"{{"op":"evict","workload":"{w}"}}"#);
+                                got.push(send_via(ci % 3, &line).expect("evict unanswered"));
+                            }
+                        }
+                        got
+                    })
+                })
+                .collect();
+
+            // Mid-replay: capture member 1's counters, then drain it.
+            std::thread::sleep(Duration::from_millis(200));
+            let b1_pre = {
+                let ctl = TcpStream::connect(addrs[1].as_str()).expect("control connect");
+                ctl.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+                let mut w = ctl.try_clone().unwrap();
+                let mut r = BufReader::new(ctl);
+                writeln!(w, r#"{{"op":"stats"}}"#).unwrap();
+                let mut line = String::new();
+                r.read_line(&mut line).unwrap();
+                let pre = parse(line.trim_end()).expect("stats parses");
+                line.clear();
+                writeln!(w, r#"{{"op":"drain"}}"#).unwrap();
+                r.read_line(&mut line).unwrap();
+                let ack = parse(line.trim_end()).expect("drain ack parses");
+                assert!(ack.get("draining").and_then(Json::as_bool).unwrap_or(false));
+                pre
+            };
+            servers[1].take().unwrap().join().expect("member 1 panicked").expect("member 1");
+
+            let collected: Vec<Vec<Json>> =
+                clients.into_iter().map(|c| c.join().expect("client panicked")).collect();
+
+            // Top up the fault floor with direct (loop-guarded) traffic
+            // on a surviving member.
+            brokers[0].stop.store(false, Ordering::SeqCst);
+            let mut extra = 0u32;
+            while guard.stats().total() < 200 && extra < 20_000 {
+                let _ = brokers[0]
+                    .handle(r#"{"op":"map","workload":"resnet101","forwarded":true}"#);
+                let _ = brokers[0].handle(r#"{"op":"evict","workload":"resnet101"}"#);
+                extra += 1;
+            }
+
+            // Guarantee a sound shared-tier artifact for the restart
+            // assertion: `spilled:true` implies a complete, renamed
+            // write (torn/failed draws report false and are retried).
+            let mut sound = false;
+            for _ in 0..200 {
+                let _ = brokers[0]
+                    .handle(r#"{"op":"map","workload":"resnet50","forwarded":true}"#);
+                let ev = parse(&brokers[0].handle(r#"{"op":"evict","workload":"resnet50"}"#))
+                    .expect("evict response parses");
+                if ev.get("spilled").and_then(Json::as_bool) == Some(true) {
+                    sound = true;
+                    break;
+                }
+            }
+            assert!(sound, "could not place a clean artifact in 200 attempts");
+
+            // Stop the surviving members over control connections.
+            for i in [0usize, 2] {
+                brokers[i].stop.store(false, Ordering::SeqCst);
+                let ctl = TcpStream::connect(addrs[i].as_str()).expect("control connect");
+                ctl.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+                let mut w = ctl.try_clone().unwrap();
+                let mut r = BufReader::new(ctl);
+                writeln!(w, r#"{{"op":"shutdown"}}"#).unwrap();
+                let mut line = String::new();
+                r.read_line(&mut line).unwrap();
+                servers[i].take().unwrap().join().expect("server panicked").expect("server");
+            }
+            (collected, b1_pre)
+        });
+
+        // Every request answered; no served map is ever invalid.
+        let (env, _) = brokers[0].env_for(Workload::ResNet50);
+        let mut answered = 0usize;
+        let mut served_maps = 0usize;
+        for responses in &collected {
+            answered += responses.len();
+            for resp in responses {
+                if let Some(actions) = resp.get("actions") {
+                    let map = MemoryMap::from_json(actions).expect("served map parses");
+                    assert_eq!(map.len(), env.num_nodes());
+                    assert!(
+                        env.compiler.is_valid(&env.graph, &env.liveness, &map),
+                        "served map violates capacity constraints"
+                    );
+                    served_maps += 1;
+                }
+            }
+        }
+        assert!(served_maps > 0, "return_map requests must have served maps");
+        let injected = guard.stats();
+        assert!(injected.total() >= 200, "fault floor: {injected:?}");
+
+        // Restart the drained member against the shared tier (fresh
+        // broker, fault-free — its startup scan quarantines any torn
+        // leftovers, then the first miss restores from disk).
+        let b1b = Broker::open(mk_opts(1)).expect("restarted member opens");
+        let restored =
+            parse(&b1b.handle(r#"{"op":"map","workload":"resnet50","forwarded":true}"#))
+                .unwrap();
+        assert_eq!(
+            get_str(&restored, "cache"),
+            "spill",
+            "restarted member must restore from the shared spill tier"
+        );
+
+        // Per-broker laws at quiescence, against the SHARED directory:
+        // every member's occupancy view must agree with the same disk.
+        // The drained member's Broker outlives its server thread, so its
+        // FINAL counters are still readable directly.
+        let s0 = parse(&brokers[0].handle(r#"{"op":"stats"}"#)).unwrap();
+        let s1 = parse(&brokers[1].handle(r#"{"op":"stats"}"#)).unwrap();
+        let s2 = parse(&brokers[2].handle(r#"{"op":"stats"}"#)).unwrap();
+        let s1b = parse(&b1b.handle(r#"{"op":"stats"}"#)).unwrap();
+        for s in [&s0, &s1, &s2, &s1b] {
+            assert_counter_coherence(s, Some(&dir));
+        }
+        // Fleet coherence law on every counter snapshot we hold —
+        // including the drained member's mid-chaos capture (`requests`
+        // is bumped before any outcome counter, so the inequality is
+        // valid even on an in-flight snapshot).
+        let mut forward_attempts = 0.0;
+        for s in [&s0, &s1, &s2, &s1b, &b1_pre] {
+            let routed = get_num(s, "moved")
+                + get_num(s, "forwarded")
+                + get_num(s, "hits")
+                + get_num(s, "misses");
+            assert!(
+                routed <= get_num(s, "requests"),
+                "fleet coherence violated: {s:?}"
+            );
+        }
+        for s in [&s0, &s1, &s2] {
+            forward_attempts += get_num(s, "forwarded") + get_num(s, "forward_errors");
+        }
+        assert!(
+            forward_attempts >= 1.0,
+            "three members × three workloads must cross the fleet at least once"
+        );
+        // No double-quarantine: files in the sidecar never exceed
+        // quarantine events across every broker that touched the dir.
+        let quarantine_on_disk = std::fs::read_dir(dir.join(QUARANTINE_DIR))
+            .map(|rd| rd.filter_map(|e| e.ok()).count())
+            .unwrap_or(0) as f64;
+        let quarantine_events: f64 =
+            [&s0, &s1, &s2, &s1b].iter().map(|s| get_num(s, "quarantined")).sum();
+        assert!(
+            quarantine_on_disk <= quarantine_events,
+            "more quarantined files ({quarantine_on_disk}) than events ({quarantine_events})"
+        );
+        // Anytime curves stay monotone on every member, fleet-wide.
+        for b in [&brokers[0], &brokers[1], &brokers[2], &b1b] {
+            for w in [Workload::ResNet50, Workload::ResNet101, Workload::Bert] {
+                let curve = b.cache.curve(b.fingerprint_of(w));
+                for pair in curve.windows(2) {
+                    assert!(
+                        pair[1].1 < pair[0].1 && pair[1].0 >= pair[0].0,
+                        "{}: anytime curve not monotone under fleet chaos: {curve:?}",
+                        w.name()
+                    );
+                }
+            }
+        }
+
+        // Machine-readable outcome for the CI chaos-smoke artifact.
+        let forwarded_total: f64 =
+            [&s0, &s1, &s2].iter().map(|s| get_num(s, "forwarded")).sum();
+        let forward_errors_total: f64 =
+            [&s0, &s1, &s2].iter().map(|s| get_num(s, "forward_errors")).sum();
+        let bench = Json::obj(vec![
+            ("bench", Json::str("fleet_chaos")),
+            ("seed", Json::Num(seed as f64)),
+            ("brokers", Json::Num(3.0)),
+            ("faults_injected", Json::Num(injected.total() as f64)),
+            ("answered", Json::Num(answered as f64)),
+            ("served_maps_validated", Json::Num(served_maps as f64)),
+            ("forwarded", Json::Num(forwarded_total)),
+            ("forward_errors", Json::Num(forward_errors_total)),
+            ("restart_spill_hit", Json::Bool(true)),
+            ("monotone_curves", Json::Bool(true)),
+            ("counter_coherence", Json::Bool(true)),
+        ]);
+        let _ = std::fs::write("BENCH_fleet.json", bench.to_string_pretty());
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

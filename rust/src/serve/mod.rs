@@ -22,6 +22,11 @@
 //! structured `overloaded` responses instead of queueing unboundedly,
 //! and a `drain` op flushes the hot cache to spill for rolling
 //! restarts — all exercised by the seeded [`faults`] chaos harness.
+//! N brokers form a fleet (DESIGN.md §17): fingerprints are sharded by
+//! deterministic rendezvous hashing ([`shard::ShardMap`]), non-owners
+//! answer a `moved` redirect or proxy to the owner over TCP, and the
+//! spill directory doubles as a shared cold tier under advisory
+//! per-fingerprint lock files.
 //!
 //! Layering: `serve` sits strictly *above* `env`/`agents` (it consumes
 //! the public engine API — `search_state`/`try_move_batch`/`commit_move`)
@@ -33,8 +38,10 @@ pub mod cache;
 pub mod refiner;
 pub mod broker;
 pub mod faults;
+pub mod shard;
 
 pub use broker::{Broker, ServeOptions};
 pub use cache::{CacheEntry, CacheStats, MapCache};
 pub use fingerprint::{fingerprint, Fingerprint};
 pub use refiner::AnytimeRefiner;
+pub use shard::ShardMap;

@@ -1,0 +1,274 @@
+//! Fingerprint-sharded fleet ownership via rendezvous hashing.
+//!
+//! A fleet of N brokers splits the fingerprint space so that exactly
+//! one member *owns* every workload (DESIGN.md §17). Ownership must be
+//! (a) computable by every member independently — no coordinator, no
+//! shared state beyond the static peer list — and (b) minimally
+//! disrupted by membership change: removing one of N peers may only
+//! remap the ~1/N of fingerprints that peer owned, and adding it back
+//! must restore the exact prior assignment. Rendezvous (highest-
+//! random-weight) hashing gives both properties for free: every
+//! (peer, fingerprint) pair gets a deterministic pseudo-random weight
+//! and the peer with the highest weight owns the fingerprint. A peer
+//! leaving only reassigns the fingerprints it was winning; everyone
+//! else's winner is unchanged.
+//!
+//! Weights come from the same `StableHasher` that produces the
+//! fingerprints themselves, so ownership is a pure function of
+//! `(membership, fingerprint)` — identical across processes, machines,
+//! and argument orderings. There is no consistent-hash ring and no
+//! virtual-node tuning; at fleet sizes of interest (single digits) the
+//! O(N) owner scan is noise next to a TCP round trip.
+
+use super::fingerprint::{Fingerprint, StableHasher};
+
+/// Domain tag folded into every weight hash so shard weights can never
+/// collide with workload fingerprints or artifact checksums.
+const SHARD_DOMAIN: u64 = 0x4547_524C_5348_0001; // "EGRLSH" v1
+
+/// Membership epochs are exposed on the wire as a JSON number; mask to
+/// 48 bits so the value survives an f64 round trip exactly.
+const EPOCH_MASK: u64 = (1 << 48) - 1;
+
+/// Deterministic fingerprint → owner map over a static peer list.
+///
+/// Membership is canonicalized on construction (trimmed, empties
+/// dropped, sorted, deduplicated), so two brokers configured with the
+/// same addresses in any order — and regardless of which of them is
+/// "self" — agree on every owner and on the epoch.
+#[derive(Debug, Clone)]
+pub struct ShardMap {
+    peers: Vec<String>,
+    self_addr: String,
+    epoch: u64,
+}
+
+impl ShardMap {
+    /// Build the shard map for one fleet member. `self_addr` is this
+    /// broker's own advertised address; it is always part of the
+    /// membership even if absent from `peers`.
+    pub fn new(self_addr: &str, peers: &[String]) -> ShardMap {
+        let mut members: Vec<String> = peers
+            .iter()
+            .map(|p| p.trim())
+            .chain(std::iter::once(self_addr.trim()))
+            .filter(|p| !p.is_empty())
+            .map(str::to_string)
+            .collect();
+        members.sort();
+        members.dedup();
+        let epoch = membership_epoch(&members);
+        ShardMap { peers: members, self_addr: self_addr.trim().to_string(), epoch }
+    }
+
+    /// Canonical membership (sorted, deduplicated, includes self).
+    pub fn peers(&self) -> &[String] {
+        &self.peers
+    }
+
+    /// This broker's own advertised address.
+    pub fn self_addr(&self) -> &str {
+        &self.self_addr
+    }
+
+    /// Deterministic membership epoch: a stable hash of the canonical
+    /// peer list. Two brokers disagree on an owner only if they
+    /// disagree on membership, and then their epochs differ too — the
+    /// `moved` response carries the epoch so clients (and operators
+    /// mid-rolling-restart) can detect a split-horizon fleet.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// The address that owns `fp` under the current membership.
+    pub fn owner(&self, fp: Fingerprint) -> &str {
+        debug_assert!(!self.peers.is_empty(), "membership always includes self");
+        let mut best = 0usize;
+        let mut best_w = weight(&self.peers[0], fp);
+        for (i, peer) in self.peers.iter().enumerate().skip(1) {
+            let w = weight(peer, fp);
+            // Strict `>` with a sorted peer list makes ties (never
+            // observed, but 2^-64 per pair) break toward the
+            // lexicographically smallest address on every member.
+            if w > best_w {
+                best = i;
+                best_w = w;
+            }
+        }
+        &self.peers[best]
+    }
+
+    /// Does this broker own `fp`?
+    pub fn owns(&self, fp: Fingerprint) -> bool {
+        self.owner(fp) == self.self_addr
+    }
+}
+
+/// The rendezvous weight of one (peer, fingerprint) pair: a pure
+/// stable hash, identical across processes.
+fn weight(peer: &str, fp: Fingerprint) -> u64 {
+    let mut h = StableHasher::new();
+    h.write_u64(SHARD_DOMAIN);
+    write_str(&mut h, peer);
+    h.write_u64(fp.0[0]);
+    h.write_u64(fp.0[1]);
+    h.finish().0[0]
+}
+
+fn membership_epoch(members: &[String]) -> u64 {
+    let mut h = StableHasher::new();
+    h.write_u64(SHARD_DOMAIN ^ 0xE50C);
+    h.write_u64(members.len() as u64);
+    for m in members {
+        write_str(&mut h, m);
+    }
+    h.finish().0[0] & EPOCH_MASK
+}
+
+/// Length-prefixed string hashing (the same 8-byte-chunk scheme the
+/// artifact checksum uses for workload names) so `["ab","c"]` and
+/// `["a","bc"]` can never collide.
+fn write_str(h: &mut StableHasher, s: &str) {
+    let bytes = s.as_bytes();
+    h.write_u64(bytes.len() as u64);
+    for chunk in bytes.chunks(8) {
+        let mut lane = [0u8; 8];
+        lane[..chunk.len()].copy_from_slice(chunk);
+        h.write_u64(u64::from_le_bytes(lane));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn addrs(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("10.0.0.{i}:7177")).collect()
+    }
+
+    /// 10k pseudo-random fingerprints, deterministic across runs.
+    fn random_fps(n: u64) -> Vec<Fingerprint> {
+        (0..n)
+            .map(|i| {
+                let mut h = StableHasher::new();
+                h.write_u64(0xF1E7 ^ i);
+                h.finish()
+            })
+            .collect()
+    }
+
+    /// ISSUE 10 satellite: ownership is a pure function of membership —
+    /// independent of peer-list order, of which member is "self", and
+    /// (by construction: no addresses, no HashMap iteration, only
+    /// `StableHasher`) of the process computing it. The epoch agrees
+    /// fleet-wide too.
+    #[test]
+    fn ownership_deterministic_across_members_and_argument_order() {
+        let peers = addrs(5);
+        let mut shuffled = peers.clone();
+        shuffled.reverse();
+        shuffled.swap(0, 2);
+        // Each member builds its own map, from differently-ordered
+        // lists that may or may not repeat self.
+        let a = ShardMap::new(&peers[0], &shuffled);
+        let b = ShardMap::new(&peers[3], &peers);
+        let c = ShardMap::new(&peers[4], &peers[..4].to_vec());
+        assert_eq!(a.peers(), b.peers());
+        assert_eq!(a.epoch(), b.epoch());
+        assert_eq!(b.epoch(), c.epoch());
+        for fp in random_fps(1000) {
+            let owner = a.owner(fp);
+            assert_eq!(owner, b.owner(fp));
+            assert_eq!(owner, c.owner(fp));
+            assert_eq!(a.owns(fp), owner == a.self_addr());
+        }
+    }
+
+    /// ISSUE 10 satellite: minimal disruption, measured. Removing one
+    /// of five peers remaps only the fingerprints that peer owned
+    /// (~1/5 of 10k; the binomial 5σ band is ±~200, we allow ±700),
+    /// every other fingerprint keeps its exact owner, and adding the
+    /// peer back restores the prior assignment fingerprint-for-
+    /// fingerprint.
+    #[test]
+    fn removing_one_peer_remaps_about_one_nth_and_readding_restores() {
+        let n = 5usize;
+        let peers = addrs(n);
+        let full = ShardMap::new(&peers[0], &peers);
+        let removed = &peers[2];
+        let reduced: Vec<String> = peers.iter().filter(|p| *p != removed).cloned().collect();
+        let shrunk = ShardMap::new(&peers[0], &reduced);
+        assert_ne!(full.epoch(), shrunk.epoch(), "membership change must change the epoch");
+
+        let fps = random_fps(10_000);
+        let before: Vec<String> = fps.iter().map(|&fp| full.owner(fp).to_string()).collect();
+        let mut moved = 0usize;
+        for (fp, owner_before) in fps.iter().zip(&before) {
+            let owner_after = shrunk.owner(*fp);
+            if owner_before == removed {
+                moved += 1;
+                assert_ne!(owner_after, removed);
+            } else {
+                // The rendezvous property: survivors keep every
+                // fingerprint they already owned.
+                assert_eq!(owner_after, owner_before, "non-evacuated fingerprint remapped");
+            }
+        }
+        let expected = fps.len() / n;
+        assert!(
+            moved.abs_diff(expected) < 700,
+            "remapped {moved} of {} fingerprints; expected ~{expected} (1/{n})",
+            fps.len()
+        );
+
+        let restored = ShardMap::new(&peers[0], &peers);
+        assert_eq!(restored.epoch(), full.epoch());
+        for (fp, owner_before) in fps.iter().zip(&before) {
+            assert_eq!(restored.owner(*fp), owner_before, "re-adding a peer must restore the exact prior assignment");
+        }
+    }
+
+    /// ISSUE 10 satellite: a single-peer fleet degenerates to
+    /// always-self — no fingerprint is ever remote.
+    #[test]
+    fn single_peer_fleet_owns_everything() {
+        let solo = ShardMap::new("127.0.0.1:7177", &[]);
+        assert_eq!(solo.peers(), ["127.0.0.1:7177"]);
+        let with_self_listed = ShardMap::new("127.0.0.1:7177", &["127.0.0.1:7177".to_string()]);
+        assert_eq!(solo.epoch(), with_self_listed.epoch());
+        for fp in random_fps(1000) {
+            assert!(solo.owns(fp));
+            assert_eq!(solo.owner(fp), "127.0.0.1:7177");
+        }
+    }
+
+    /// Ownership spreads: with 3 peers every peer owns a nontrivial
+    /// share of fingerprint space (no degenerate constant winner), and
+    /// whitespace/duplicate peer entries canonicalize away.
+    #[test]
+    fn ownership_is_spread_and_membership_canonicalizes() {
+        let peers = addrs(3);
+        let messy: Vec<String> =
+            vec![format!("  {}  ", peers[2]), peers[1].clone(), peers[1].clone(), String::new()];
+        let m = ShardMap::new(&peers[0], &messy);
+        assert_eq!(m.peers(), peers.as_slice());
+        let mut counts = vec![0usize; 3];
+        for fp in random_fps(3000) {
+            let owner = m.owner(fp);
+            counts[peers.iter().position(|p| p == owner).unwrap()] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(c > 500, "peer {i} owns only {c} of 3000 fingerprints: {counts:?}");
+        }
+    }
+
+    /// The epoch is wire-safe: masked to 48 bits so a JSON f64 round
+    /// trip is exact.
+    #[test]
+    fn epoch_survives_f64_round_trip() {
+        let m = ShardMap::new("a:1", &["b:2".to_string(), "c:3".to_string()]);
+        let e = m.epoch();
+        assert_eq!(e as f64 as u64, e);
+        assert!(e <= EPOCH_MASK);
+    }
+}
